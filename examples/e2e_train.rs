@@ -1,0 +1,118 @@
+//! End-to-end validation driver (DESIGN.md §6) — proves every layer
+//! composes on a real workload:
+//!
+//!   task gen → tokenizer → AOT artifacts → PJRT runtime → fused-generate
+//!   rollouts → verifier → group advantages → grad executable → rust Adam
+//!   → merge → eval ladder
+//!
+//! Pipeline: (1) pretrain the micro tier from scratch on the synthetic math
+//! corpus, logging the loss curve; (2) run a few hundred GRPO steps with
+//! the 13-parameter TinyLoRA adapter, logging reward / response length /
+//! train-vs-infer KL; (3) evaluate the full benchmark ladder before/after.
+//! Results land in results/e2e/*.jsonl and are summarised in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example e2e_train -- [--grpo-steps 200]
+
+use std::path::Path;
+
+use anyhow::Result;
+use tinylora_rl::config::{Args, Dirs};
+use tinylora_rl::coordinator::{pretrain, PretrainConfig};
+use tinylora_rl::eval::evaluate_suite_ladder;
+use tinylora_rl::experiments::{run, RunSpec};
+use tinylora_rl::metrics::RunLog;
+use tinylora_rl::weights::WeightSet;
+use tinylora_rl::Runtime;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let dirs = Dirs::from_args(&args);
+    let tier = args.str("tier", "micro");
+    let scheme = args.str("scheme", "tinylora_r2_u13_all");
+    let rt = Runtime::new(Path::new(&dirs.artifacts))?;
+    let t_total = tinylora_rl::util::Timer::start();
+    std::fs::create_dir_all(dirs.results.join("e2e"))?;
+
+    // ---- stage 1: pretraining ---------------------------------------------
+    let ckpt = WeightSet::ckpt_path(&dirs.ckpts, &tier);
+    if !ckpt.exists() || args.bool("force-pretrain") {
+        println!("== stage 1: pretraining {tier} from scratch ==");
+        let cfg = PretrainConfig {
+            steps: args.usize("pretrain-steps", 2000)?,
+            ..Default::default()
+        };
+        let mut log = RunLog::new(Some(&dirs.results.join("e2e/pretrain.jsonl")), true);
+        let res = pretrain(&rt, &tier, &cfg, &dirs.ckpts, &mut log)?;
+        println!("pretraining loss curve (step, loss):");
+        for (s, l) in &res.losses {
+            println!("  {s:>5} {l:.4}");
+        }
+    } else {
+        println!("== stage 1: using existing checkpoint {} ==", ckpt.display());
+    }
+    let base = WeightSet::load(&ckpt)?;
+
+    // ---- stage 2: baseline ladder ------------------------------------------
+    println!("\n== stage 2: baseline benchmark ladder ==");
+    let eval_n = args.usize("eval-n", 64)?;
+    let before = evaluate_suite_ladder(&rt, &tier, &base, eval_n, 777)?;
+    for (name, ev) in &before {
+        println!("  {:<14} acc {:.3} fmt {:.3} len {:>5.1}", name, ev.accuracy, ev.format_rate, ev.mean_response_len);
+    }
+
+    // ---- stage 3: GRPO with 13 trainable parameters -------------------------
+    println!("\n== stage 3: GRPO, scheme {scheme} ==");
+    let mut spec = RunSpec::new(&tier, &scheme, "grpo");
+    spec.steps = args.usize("grpo-steps", 200)?;
+    spec.eval_n = eval_n;
+    spec.lr = args.f32("lr", 0.0)?;
+    let mut log = RunLog::new(Some(&dirs.results.join("e2e/grpo.jsonl")), true);
+    let out = run(&rt, &base, &spec, &dirs.ckpts, &mut log)?;
+
+    // ---- stage 4: post-training ladder --------------------------------------
+    println!("\n== stage 4: post-training benchmark ladder ==");
+    let after = evaluate_suite_ladder(&rt, &tier, &out.merged, eval_n, 777)?;
+    println!("  {:<14} {:>8} {:>8} {:>8}", "suite", "before", "after", "Δ");
+    for ((name, b), (_, a)) in before.iter().zip(&after) {
+        println!(
+            "  {:<14} {:>8.3} {:>8.3} {:>+8.3}",
+            name,
+            b.accuracy,
+            a.accuracy,
+            a.accuracy - b.accuracy
+        );
+    }
+
+    // ---- summary -------------------------------------------------------------
+    println!("\n== e2e summary ==");
+    println!("tier {tier} | scheme {scheme} | {} trainable params | {} update bytes",
+        out.trainable_params, out.update_bytes);
+    println!("reward curve (every 10 steps):");
+    for r in out.steps.iter().step_by(10) {
+        println!(
+            "  step {:>4} reward {:.3} len {:>5.1} fmt {:.2} KL(train||infer) {:+.4}",
+            r.step, r.reward, r.response_len, r.format_rate, r.stats.kl_k1
+        );
+    }
+    if let Some(last) = out.steps.last() {
+        println!("final: reward {:.3} fmt {:.2}", last.reward, last.format_rate);
+    }
+    println!(
+        "accuracy {:.3} -> {:.3} (+{:.3}) in {:.0}s total",
+        out.baseline.accuracy,
+        out.final_eval.accuracy,
+        out.final_eval.accuracy - out.baseline.accuracy,
+        t_total.secs()
+    );
+    let rs = rt.stats();
+    println!(
+        "runtime totals: {} executable compiles ({:.1}s), {} dispatches ({:.1}s)",
+        rs.compiles,
+        rs.compile_ms / 1e3,
+        rs.runs,
+        rs.run_ms / 1e3
+    );
+    tinylora_rl::experiments::save_outcomes(&dirs.results.join("e2e/outcome.jsonl"), &[out])?;
+    Ok(())
+}

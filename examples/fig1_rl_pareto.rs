@@ -1,0 +1,81 @@
+//! Figure 1 — RL accuracy vs trainable-parameter count: the TinyLoRA →
+//! LoRA-XS → LoRA interpolation, plus untrained and full-FT dashed
+//! baselines.  Also prints Table 1's parameter-count columns for the tier.
+//!
+//!     cargo run --release --example fig1_rl_pareto -- [--steps 40] [--quick]
+
+use std::path::Path;
+
+use anyhow::Result;
+use tinylora_rl::config::{Args, Dirs};
+use tinylora_rl::coordinator::Policy;
+use tinylora_rl::experiments::{pareto_table, run_best_lr, save_outcomes, RunSpec};
+use tinylora_rl::metrics::RunLog;
+use tinylora_rl::Runtime;
+
+/// The micro-tier pareto grid: theta spans 1 .. full (Fig. 1's x-axis).
+pub const GRID: &[&str] = &[
+    "tinylora_r2_u1_all",   // 1 param
+    "tinylora_r2_u4_all",   // 4
+    "tinylora_r2_u13_all",  // 13 — the headline
+    "tinylora_r2_u64_all",  // 64
+    "tinylora_r2_u8_none",  // 168
+    "tinylora_r2_u24_none", // 504
+    "xs_r2",                // 84
+    "xs_r4",                // 336
+    "xs_r8",                // 1344
+    "lora_r1",              // 3264
+    "lora_r4",              // 13056
+    "full",                 // everything
+];
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let dirs = Dirs::from_args(&args);
+    let tier = args.str("tier", "micro");
+    let rt = Runtime::new(Path::new(&dirs.artifacts))?;
+    let base = Policy::load_base(&rt, &tier, &dirs.ckpts)?;
+    let mut log = RunLog::new(Some(&dirs.results.join("fig1.jsonl")), args.bool("echo"));
+
+    let steps = args.usize("steps", if args.bool("quick") { 25 } else { 40 })?;
+    let lrs = args.f32_list("lrs", &[0.0])?; // 0.0 => per-size default
+    let grid: Vec<String> = if args.bool("quick") {
+        ["tinylora_r2_u1_all", "tinylora_r2_u13_all", "xs_r2", "lora_r1", "full"]
+            .iter().map(|s| s.to_string()).collect()
+    } else {
+        args.str_list("schemes", GRID)
+    };
+
+    let mut outcomes = Vec::new();
+    for tag in &grid {
+        let mut spec = RunSpec::new(&tier, tag, "grpo");
+        spec.steps = steps;
+        spec.eval_n = args.usize("eval-n", 64)?;
+        let out = run_best_lr(&rt, &base, &spec, &lrs, &dirs.ckpts, &mut log)?;
+        println!(
+            "{:<24} params {:>7}  acc {:.3} -> {:.3}  ({:.0}s)",
+            tag, out.trainable_params, out.baseline.accuracy, out.final_eval.accuracy, out.wall_secs
+        );
+        outcomes.push(out);
+    }
+
+    println!("\n{}", pareto_table(&format!("Figure 1 — GRPO on gsm8k-syn ({tier})"), &outcomes));
+    if let Some(full) = outcomes.iter().find(|o| o.scheme_tag == "full") {
+        let full_acc = full.final_eval.accuracy;
+        println!("recovery of full-FT improvement (paper's headline metric):");
+        for o in &outcomes {
+            if o.scheme_tag != "full" {
+                println!(
+                    "  {:<24} {:>7} params: {:>5.0}%",
+                    o.scheme_tag,
+                    o.trainable_params,
+                    o.recovery(full_acc) * 100.0
+                );
+            }
+        }
+    }
+    save_outcomes(&dirs.results.join("fig1_outcomes.jsonl"), &outcomes)?;
+    println!("saved results/fig1_outcomes.jsonl");
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Figure 2 + §6.2 — SFT accuracy vs trainable-parameter count, and the
+//! RL-vs-SFT comparison at matched update sizes (the paper's central
+//! claim: RL learns in 13 parameters, SFT needs orders of magnitude more).
+//!
+//!     cargo run --release --example fig2_sft_pareto -- [--compare-rl]
+
+use std::path::Path;
+
+use anyhow::Result;
+use tinylora_rl::config::{Args, Dirs};
+use tinylora_rl::coordinator::Policy;
+use tinylora_rl::experiments::{pareto_table, run_best_lr, save_outcomes, RunSpec};
+use tinylora_rl::metrics::RunLog;
+use tinylora_rl::util::json::Value;
+use tinylora_rl::Runtime;
+
+/// SFT twin of the Fig-1 grid (the subset with lowered SFT artifacts).
+const GRID: &[&str] = &[
+    "tinylora_r2_u1_all",
+    "tinylora_r2_u13_all",
+    "tinylora_r2_u64_all",
+    "tinylora_r2_u8_none",
+    "xs_r2",
+    "xs_r4",
+    "xs_r8",
+    "lora_r1",
+    "lora_r4",
+    "full",
+];
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let dirs = Dirs::from_args(&args);
+    let tier = args.str("tier", "micro");
+    let rt = Runtime::new(Path::new(&dirs.artifacts))?;
+    let base = Policy::load_base(&rt, &tier, &dirs.ckpts)?;
+    let mut log = RunLog::new(Some(&dirs.results.join("fig2.jsonl")), args.bool("echo"));
+
+    let steps = args.usize("steps", if args.bool("quick") { 30 } else { 60 })?;
+    let lrs = args.f32_list("lrs", &[0.0])?;
+    let grid: Vec<String> = if args.bool("quick") {
+        ["tinylora_r2_u13_all", "xs_r4", "lora_r4", "full"].iter().map(|s| s.to_string()).collect()
+    } else {
+        args.str_list("schemes", GRID)
+    };
+
+    let mut outcomes = Vec::new();
+    for tag in &grid {
+        let mut spec = RunSpec::new(&tier, tag, "sft");
+        spec.steps = steps;
+        spec.eval_n = args.usize("eval-n", 64)?;
+        let out = run_best_lr(&rt, &base, &spec, &lrs, &dirs.ckpts, &mut log)?;
+        println!(
+            "{:<24} params {:>7}  acc {:.3} -> {:.3}",
+            tag, out.trainable_params, out.baseline.accuracy, out.final_eval.accuracy
+        );
+        outcomes.push(out);
+    }
+
+    println!("\n{}", pareto_table(&format!("Figure 2 — SFT on gsm8k-syn ({tier})"), &outcomes));
+    save_outcomes(&dirs.results.join("fig2_outcomes.jsonl"), &outcomes)?;
+
+    if args.bool("compare-rl") {
+        // join against fig1's saved outcomes at matching schemes (§6.2)
+        let path = dirs.results.join("fig1_outcomes.jsonl");
+        match std::fs::read_to_string(&path) {
+            Ok(text) => {
+                println!("\n§6.2 — RL vs SFT at matched update size:");
+                println!("{:<24} {:>8} {:>9} {:>9} {:>10}", "scheme", "params", "RL", "SFT", "RL-SFT");
+                for line in text.lines() {
+                    let v = Value::parse(line)?;
+                    let scheme = v.get("scheme")?.str()?.to_string();
+                    let rl = v.get("final_acc")?.f64()? as f32;
+                    if let Some(sft) = outcomes.iter().find(|o| o.scheme_tag == scheme) {
+                        println!(
+                            "{:<24} {:>8} {:>9.3} {:>9.3} {:>+10.3}",
+                            scheme,
+                            sft.trainable_params,
+                            rl,
+                            sft.final_eval.accuracy,
+                            rl - sft.final_eval.accuracy
+                        );
+                    }
+                }
+            }
+            Err(_) => println!("(run fig1_rl_pareto first for --compare-rl)"),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Figures 3 + 6 — backbone scaling: how many *absolute* parameters does
+//! each model size need to reach 95% of its full-FT improvement (Fig. 3),
+//! and per-scheme accuracy vs backbone size with untrained baselines
+//! (Fig. 6).  The paper's claim: larger models need *fewer* parameters.
+//!
+//!     cargo run --release --example fig3_backbone_scaling -- [--tiers nano,micro,small,base]
+
+use std::path::Path;
+
+use anyhow::Result;
+use tinylora_rl::config::{Args, Dirs};
+use tinylora_rl::coordinator::Policy;
+use tinylora_rl::experiments::{run_best_lr, save_outcomes, RunOutcome, RunSpec};
+use tinylora_rl::metrics::RunLog;
+use tinylora_rl::Runtime;
+
+/// Reduced scheme ladder per tier (sorted by params ascending).
+const SCHEMES: &[&str] = &[
+    "tinylora_r2_u1_all",
+    "tinylora_r2_u13_all",
+    "tinylora_r2_u8_none",
+    "xs_r2",
+    "lora_r4",
+    "full",
+];
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let dirs = Dirs::from_args(&args);
+    let rt = Runtime::new(Path::new(&dirs.artifacts))?;
+    let tiers = args.str_list("tiers", &["nano", "micro", "small", "base"]);
+    let steps = args.usize("steps", if args.bool("quick") { 25 } else { 40 })?;
+    let lrs = args.f32_list("lrs", &[0.0])?;
+    let mut log = RunLog::new(Some(&dirs.results.join("fig3.jsonl")), args.bool("echo"));
+
+    let mut all: Vec<RunOutcome> = Vec::new();
+    for tier in &tiers {
+        let base = match Policy::load_base(&rt, tier, &dirs.ckpts) {
+            Ok(b) => b,
+            Err(e) => {
+                println!("skipping tier {tier}: {e}");
+                continue;
+            }
+        };
+        for tag in SCHEMES {
+            let mut spec = RunSpec::new(tier, tag, "grpo");
+            spec.steps = steps;
+            spec.eval_n = args.usize("eval-n", 64)?;
+            let out = run_best_lr(&rt, &base, &spec, &lrs, &dirs.ckpts, &mut log)?;
+            println!(
+                "[{tier}] {:<22} params {:>7} acc {:.3} -> {:.3}",
+                tag, out.trainable_params, out.baseline.accuracy, out.final_eval.accuracy
+            );
+            all.push(out);
+        }
+    }
+
+    // Fig 6: accuracy vs backbone per scheme (+ dashed baselines)
+    println!("\nFigure 6 — accuracy across backbone sizes");
+    print!("{:<24}", "scheme");
+    for t in &tiers {
+        print!(" {:>10}", t);
+    }
+    println!();
+    print!("{:<24}", "(untrained)");
+    for t in &tiers {
+        let b = all.iter().find(|o| &o.tier == t).map(|o| o.baseline.accuracy).unwrap_or(f32::NAN);
+        print!(" {:>10.3}", b);
+    }
+    println!();
+    for tag in SCHEMES {
+        print!("{:<24}", tag);
+        for t in &tiers {
+            match all.iter().find(|o| &o.tier == t && &o.scheme_tag == tag) {
+                Some(o) => print!(" {:>10.3}", o.final_eval.accuracy),
+                None => print!(" {:>10}", "-"),
+            }
+        }
+        println!();
+    }
+
+    // Fig 3: min params to hit 95% of the full-FT gain, per tier
+    println!("\nFigure 3 — minimal update size to reach 95% of peak improvement");
+    println!("{:<8} {:>12} {:>16} {:>12}", "tier", "model params", "min adapter", "recovery");
+    for t in &tiers {
+        let Some(full) = all.iter().find(|o| &o.tier == t && o.scheme_tag == "full") else {
+            continue;
+        };
+        let peak = full.final_eval.accuracy;
+        let mut rows: Vec<&RunOutcome> =
+            all.iter().filter(|o| &o.tier == t && o.scheme_tag != "full").collect();
+        rows.sort_by_key(|o| o.trainable_params);
+        let hit = rows.iter().find(|o| o.recovery(peak) >= 0.95);
+        let model_params = rt.manifest.tier(t)?.n_params;
+        match hit {
+            Some(o) => println!(
+                "{:<8} {:>12} {:>16} {:>11.0}%",
+                t,
+                model_params,
+                o.trainable_params,
+                o.recovery(peak) * 100.0
+            ),
+            None => println!("{:<8} {:>12} {:>16} {:>12}", t, model_params, "(none hit 95%)", "-"),
+        }
+    }
+
+    save_outcomes(&dirs.results.join("fig3_outcomes.jsonl"), &all)?;
+    Ok(())
+}

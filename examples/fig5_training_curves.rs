@@ -1,0 +1,79 @@
+//! Figure 5 — training dynamics on the MATH-style mixture: mean reward,
+//! mean response length, and the train-vs-inference KL (the merged-weights
+//! + TIS diagnostic that must stay ~0) across steps, for several update
+//! sizes.
+//!
+//!     cargo run --release --example fig5_training_curves -- [--steps 60]
+
+use std::path::Path;
+
+use anyhow::Result;
+use tinylora_rl::config::{Args, Dirs};
+use tinylora_rl::coordinator::Policy;
+use tinylora_rl::experiments::{run, RunSpec};
+use tinylora_rl::metrics::RunLog;
+use tinylora_rl::Runtime;
+
+const SCHEMES: &[&str] = &["tinylora_r2_u16_all", "tinylora_r2_u8_none", "xs_r4"];
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let dirs = Dirs::from_args(&args);
+    let tier = args.str("tier", "micro");
+    let rt = Runtime::new(Path::new(&dirs.artifacts))?;
+    let base = Policy::load_base(&rt, &tier, &dirs.ckpts)?;
+    let steps = args.usize("steps", if args.bool("quick") { 30 } else { 60 })?;
+    let mut log = RunLog::new(Some(&dirs.results.join("fig5.jsonl")), args.bool("echo"));
+
+    let schemes: Vec<String> = args.str_list("schemes", SCHEMES);
+    let mut curves = Vec::new();
+    for tag in &schemes {
+        let mut spec = RunSpec::new(&tier, tag, "grpo");
+        spec.suite = "math-mix".into();
+        spec.eval_suite = "math500-syn".into();
+        spec.steps = steps;
+        spec.kl_coef = 0.001; // the paper's MATH setting
+        spec.eval_n = args.usize("eval-n", 64)?;
+        let out = run(&rt, &base, &spec, &dirs.ckpts, &mut log)?;
+        println!(
+            "{tag}: {} params, final acc {:.3}",
+            out.trainable_params, out.final_eval.accuracy
+        );
+        curves.push(out);
+    }
+
+    for (panel, get) in [
+        ("mean reward", 0usize),
+        ("mean response length", 1),
+        ("KL(train || inference)", 2),
+    ] {
+        println!("\nFigure 5 panel: {panel}");
+        print!("{:>6}", "step");
+        for o in &curves {
+            print!(" {:>22}", format!("{}({})", o.scheme_tag, o.trainable_params));
+        }
+        println!();
+        let n = curves.iter().map(|c| c.steps.len()).max().unwrap_or(0);
+        for i in (0..n).step_by(5) {
+            print!("{:>6}", i);
+            for o in &curves {
+                match o.steps.get(i) {
+                    Some(r) => {
+                        let v = match get {
+                            0 => r.reward,
+                            1 => r.response_len,
+                            _ => r.stats.kl_k1,
+                        };
+                        print!(" {:>22.4}", v);
+                    }
+                    None => print!(" {:>22}", "-"),
+                }
+            }
+            println!();
+        }
+    }
+    println!("\n(expect: larger updates earn reward faster; KL panel stays ~0 —");
+    println!(" the merged-weights rollout + TIS trick is numerically sound)");
+    Ok(())
+}

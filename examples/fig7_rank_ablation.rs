@@ -1,0 +1,51 @@
+//! Figure 7 — frozen SVD rank ablation: performance across r at fixed
+//! trainable budget (u=13, all-tied).  The paper finds r=2 best, with
+//! larger r *hurting* (more frozen degrees of freedom make the tiny v
+//! harder to optimize).
+//!
+//!     cargo run --release --example fig7_rank_ablation
+
+use std::path::Path;
+
+use anyhow::Result;
+use tinylora_rl::config::{Args, Dirs};
+use tinylora_rl::coordinator::Policy;
+use tinylora_rl::experiments::{run_best_lr, save_outcomes, RunSpec};
+use tinylora_rl::metrics::RunLog;
+use tinylora_rl::Runtime;
+
+const RANKS: &[(&str, usize)] = &[
+    ("tinylora_r1_u13_all", 1),
+    ("tinylora_r2_u13_all", 2),
+    ("tinylora_r4_u13_all", 4),
+    ("tinylora_r8_u13_all", 8),
+];
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let dirs = Dirs::from_args(&args);
+    let tier = args.str("tier", "micro");
+    let rt = Runtime::new(Path::new(&dirs.artifacts))?;
+    let base = Policy::load_base(&rt, &tier, &dirs.ckpts)?;
+    let steps = args.usize("steps", if args.bool("quick") { 25 } else { 40 })?;
+    let lrs = args.f32_list("lrs", &[0.0])?;
+    let mut log = RunLog::new(Some(&dirs.results.join("fig7.jsonl")), args.bool("echo"));
+
+    println!("Figure 7 — frozen rank r at fixed budget (u=13, all-tied), {tier}");
+    println!("{:>4} {:>8} {:>8} {:>8}", "r", "params", "base", "final");
+    let mut outcomes = Vec::new();
+    for (tag, r) in RANKS {
+        let mut spec = RunSpec::new(&tier, tag, "grpo");
+        spec.steps = steps;
+        spec.eval_n = args.usize("eval-n", 64)?;
+        let out = run_best_lr(&rt, &base, &spec, &lrs, &dirs.ckpts, &mut log)?;
+        println!(
+            "{:>4} {:>8} {:>8.3} {:>8.3}",
+            r, out.trainable_params, out.baseline.accuracy, out.final_eval.accuracy
+        );
+        outcomes.push(out);
+    }
+    save_outcomes(&dirs.results.join("fig7_outcomes.jsonl"), &outcomes)?;
+    Ok(())
+}

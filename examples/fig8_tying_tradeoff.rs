@@ -1,0 +1,74 @@
+//! Figures 8 + 9 — spending a fixed budget: per-module expressivity (u)
+//! vs weight tying (n_tie).  The paper's guideline: exhaust u before
+//! sharing; tiled sharing beats structured (by-type) sharing.
+//!
+//!     cargo run --release --example fig8_tying_tradeoff
+
+use std::path::Path;
+
+use anyhow::Result;
+use tinylora_rl::config::{Args, Dirs};
+use tinylora_rl::coordinator::Policy;
+use tinylora_rl::experiments::{run_best_lr, save_outcomes, RunSpec};
+use tinylora_rl::metrics::RunLog;
+use tinylora_rl::Runtime;
+
+/// (tag, u, tie label) — the u x tie grid lowered for the micro tier.
+const GRID: &[(&str, usize, &str)] = &[
+    ("tinylora_r2_u1_all", 1, "all"),
+    ("tinylora_r2_u4_all", 4, "all"),
+    ("tinylora_r2_u16_all", 16, "all"),
+    ("tinylora_r2_u1_tiled7", 1, "tiled:7"),
+    ("tinylora_r2_u4_tiled7", 4, "tiled:7"),
+    ("tinylora_r2_u16_tiled7", 16, "tiled:7"),
+    ("tinylora_r2_u1_structured3", 1, "structured:3"),
+    ("tinylora_r2_u4_structured3", 4, "structured:3"),
+    ("tinylora_r2_u16_structured3", 16, "structured:3"),
+    ("tinylora_r2_u16_none", 16, "none"),
+];
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let dirs = Dirs::from_args(&args);
+    let tier = args.str("tier", "micro");
+    let rt = Runtime::new(Path::new(&dirs.artifacts))?;
+    let base = Policy::load_base(&rt, &tier, &dirs.ckpts)?;
+    let steps = args.usize("steps", if args.bool("quick") { 25 } else { 40 })?;
+    let lrs = args.f32_list("lrs", &[0.0])?;
+    let mut log = RunLog::new(Some(&dirs.results.join("fig8.jsonl")), args.bool("echo"));
+
+    println!("Figures 8/9 — u vs tying grid ({tier})");
+    println!("{:>4} {:<14} {:>8} {:>8} {:>8}", "u", "tie", "params", "base", "final");
+    let mut outcomes = Vec::new();
+    for (tag, u, tie) in GRID {
+        let mut spec = RunSpec::new(&tier, tag, "grpo");
+        spec.steps = steps;
+        spec.eval_n = args.usize("eval-n", 64)?;
+        let out = run_best_lr(&rt, &base, &spec, &lrs, &dirs.ckpts, &mut log)?;
+        println!(
+            "{:>4} {:<14} {:>8} {:>8.3} {:>8.3}",
+            u, tie, out.trainable_params, out.baseline.accuracy, out.final_eval.accuracy
+        );
+        outcomes.push(out);
+    }
+
+    // the paper's guideline check: at matched params, prefer higher u
+    println!("\nmatched-parameter pairs (paper: spend on u before untying):");
+    let mut sorted = outcomes.clone();
+    sorted.sort_by_key(|o| o.trainable_params);
+    for w in sorted.windows(2) {
+        if w[0].trainable_params == w[1].trainable_params {
+            println!(
+                "  {} params: {} ({:.3}) vs {} ({:.3})",
+                w[0].trainable_params,
+                w[0].scheme_tag,
+                w[0].final_eval.accuracy,
+                w[1].scheme_tag,
+                w[1].final_eval.accuracy
+            );
+        }
+    }
+    save_outcomes(&dirs.results.join("fig8_outcomes.jsonl"), &outcomes)?;
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Table 2 — math-reasoning performance across update sizes, evaluated on
+//! the full benchmark ladder (the synthetic stand-ins for GSM8K / MATH500 /
+//! Minerva / Olympiad / AIME / AMC).  Rows: update sizes from (0) untrained
+//! through TinyLoRA / LoRA-XS / LoRA to full FT, trained on the math
+//! mixture (the paper's SimpleRL protocol, KL coef 0.001).
+//!
+//!     cargo run --release --example table2_suite -- [--steps 50]
+
+use std::path::Path;
+
+use anyhow::Result;
+use tinylora_rl::config::{Args, Dirs};
+use tinylora_rl::coordinator::Policy;
+use tinylora_rl::eval::{evaluate_suite_ladder, EvalResult};
+use tinylora_rl::experiments::{run, save_outcomes, RunSpec};
+use tinylora_rl::metrics::RunLog;
+use tinylora_rl::Runtime;
+
+const LADDER: &[&str] = &["gsm8k-syn", "math500-syn", "minerva-syn", "olympiad-syn", "aime-syn", "amc-syn"];
+
+/// Update-size ladder, mirroring the paper's 13 / 49 / 196 / ... rows.
+const SCHEMES: &[&str] = &[
+    "tinylora_r2_u13_all",  // 13
+    "tinylora_r2_u64_all",  // 64
+    "tinylora_r2_u8_none",  // 168
+    "xs_r4",                // 336
+    "lora_r1",              // 3264
+    "full",
+];
+
+fn print_row(label: &str, evs: &[(String, EvalResult)]) {
+    print!("{:>12}", label);
+    let mut sum = 0.0;
+    for s in LADDER {
+        let acc = evs.iter().find(|(n, _)| n == s).map(|(_, e)| e.accuracy).unwrap_or(f32::NAN);
+        print!(" {:>9.1}", acc * 100.0);
+        sum += acc;
+    }
+    println!(" {:>9.1}", sum / LADDER.len() as f32 * 100.0);
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let dirs = Dirs::from_args(&args);
+    let tier = args.str("tier", "micro");
+    let rt = Runtime::new(Path::new(&dirs.artifacts))?;
+    let base = Policy::load_base(&rt, &tier, &dirs.ckpts)?;
+    let steps = args.usize("steps", if args.bool("quick") { 30 } else { 50 })?;
+    let eval_n = args.usize("eval-n", 64)?;
+    let mut log = RunLog::new(Some(&dirs.results.join("table2.jsonl")), args.bool("echo"));
+
+    println!("Table 2 — {tier} tier, GRPO on math-mix (KL coef 0.001), accuracies x100\n");
+    print!("{:>12}", "# params");
+    for s in LADDER {
+        print!(" {:>9}", s.trim_end_matches("-syn"));
+    }
+    println!(" {:>9}", "avg");
+
+    // row (0): untrained baseline
+    let base_lad = evaluate_suite_ladder(&rt, &tier, &base, eval_n, 777)?;
+    print_row("(0)", &base_lad);
+
+    let schemes: Vec<String> = if args.bool("quick") {
+        ["tinylora_r2_u13_all", "full"].iter().map(|s| s.to_string()).collect()
+    } else {
+        args.str_list("schemes", SCHEMES)
+    };
+    let mut outcomes = Vec::new();
+    for tag in &schemes {
+        let mut spec = RunSpec::new(&tier, tag, "grpo");
+        spec.suite = "math-mix".into();
+        spec.eval_suite = "math500-syn".into();
+        spec.kl_coef = 0.001;
+        spec.steps = steps;
+        spec.eval_n = eval_n;
+        let out = run(&rt, &base, &spec, &dirs.ckpts, &mut log)?;
+        let lad = evaluate_suite_ladder(&rt, &tier, &out.merged, eval_n, 777)?;
+        let label = if tag == "full" {
+            format!("({})", out.trainable_params)
+        } else {
+            out.trainable_params.to_string()
+        };
+        print_row(&label, &lad);
+        outcomes.push(out);
+    }
+
+    save_outcomes(&dirs.results.join("table2_outcomes.jsonl"), &outcomes)?;
+    println!("\nsaved results/table2_outcomes.jsonl");
+    Ok(())
+}

@@ -1,0 +1,413 @@
+"""AOT lowering: jax entry points -> artifacts/*.hlo.txt + manifest.json.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Run via `make artifacts`; incremental — an artifact is re-lowered only when
+its spec hash changes.  Python runs only here, never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import (CHARS, BOS_ID, EOS_ID, MODULES, N_MODULES, PAD_ID,
+                      TIERS, VOCAB_SIZE, WEIGHT_NAMES, Scheme, Tier,
+                      factor_shapes, spec_hash)
+from . import model as M
+
+F32, S32 = "f32", "s32"
+
+# Baked batch geometry (mirrored in rust via the manifest).
+B_ROLL = 32    # rollout/eval batch (prefill + decode)
+B_TRAIN = 32   # GRPO/SFT/pretrain batch
+B_SERVE = 8    # serving-plane batch
+B_TEST = 4     # nano-tier integration-test batch
+
+
+@dataclasses.dataclass
+class Spec:
+    """One artifact to lower."""
+    name: str
+    tier: str
+    fn: str                      # prefill|decode|grpo|sft|pretrain|logprobs|merge
+    scheme: Optional[Scheme] = None
+    batch: int = 0
+    seq: int = 0
+    use_pallas: bool = False
+
+    def key(self) -> dict:
+        d = dict(name=self.name, tier=self.tier, fn=self.fn, batch=self.batch,
+                 seq=self.seq, use_pallas=self.use_pallas)
+        d["scheme"] = self.scheme.to_json() if self.scheme else None
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Input/output signatures.
+# ---------------------------------------------------------------------------
+
+def weight_inputs(tier: Tier):
+    return [(n, F32, list(s)) for n, s in tier.weight_shapes().items()]
+
+
+def factor_inputs(tier: Tier, r: int):
+    return [(n, F32, list(s)) for n, s in factor_shapes(tier, r)]
+
+
+def kv_shape(tier: Tier, b: int):
+    return [tier.n_layers, 2, b, tier.t_max, tier.n_heads, tier.head_dim]
+
+
+def signature(spec: Spec):
+    """(inputs, outputs) as (name, dtype, shape) lists, in argument order."""
+    tier = TIERS[spec.tier]
+    sch = spec.scheme
+    b, t = spec.batch, spec.seq
+    w = weight_inputs(tier)
+    if spec.fn == "prefill":
+        ins = w + [("tokens", S32, [b, tier.t_prefill]), ("prompt_len", S32, [b])]
+        outs = [("logits", F32, [b, VOCAB_SIZE]), ("kv", F32, kv_shape(tier, b))]
+    elif spec.fn == "decode":
+        ins = w + [("kv", F32, kv_shape(tier, b)), ("pos", S32, [b]),
+                   ("token", S32, [b])]
+        outs = [("logits", F32, [b, VOCAB_SIZE]), ("kv", F32, kv_shape(tier, b))]
+    elif spec.fn == "generate":
+        s = spec.seq  # number of sampled tokens
+        ins = w + [("prompt", S32, [b, tier.t_prefill]), ("prompt_len", S32, [b]),
+                   ("uniforms", F32, [b, s]), ("temp", F32, [])]
+        outs = [("tokens", S32, [b, s]), ("behavior_logp", F32, [b, s])]
+    elif spec.fn in ("grpo", "sft"):
+        ad = []
+        if sch.kind != "full":
+            if sch.needs_factors():
+                ad += factor_inputs(tier, sch.r)
+            ad += [("theta", F32, [sch.theta_size(tier)])]
+        batch = [("tokens", S32, [b, t]), ("target_mask", F32, [b, t - 1])]
+        if spec.fn == "grpo":
+            batch += [("behavior_logp", F32, [b, t - 1]), ("advantages", F32, [b]),
+                      ("clip_c", F32, []), ("kl_coef", F32, [])]
+        ins = w + ad + batch
+        if sch.kind == "full":
+            outs = [(f"d_{n}", F32, list(s)) for n, s in tier.weight_shapes().items()]
+        else:
+            outs = [("dtheta", F32, [sch.theta_size(tier)])]
+        outs += [("stats", F32, [M.N_STATS])]
+    elif spec.fn == "pretrain":
+        ins = w + [("tokens", S32, [b, t]), ("target_mask", F32, [b, t - 1])]
+        outs = [(f"d_{n}", F32, list(s)) for n, s in tier.weight_shapes().items()]
+        outs += [("stats", F32, [M.N_STATS])]
+    elif spec.fn == "logprobs":
+        ins = w + [("tokens", S32, [b, t])]
+        outs = [("logp", F32, [b, t - 1])]
+    elif spec.fn == "merge":
+        ins = [(n, F32, list(tier.weight_shapes()[n])) for n in M.ADAPTED_WEIGHT_NAMES]
+        if sch.needs_factors():
+            ins += factor_inputs(tier, sch.r)
+        ins += [("theta", F32, [sch.theta_size(tier)])]
+        outs = [(f"m_{n}", F32, list(tier.weight_shapes()[n]))
+                for n in M.ADAPTED_WEIGHT_NAMES]
+    else:
+        raise ValueError(spec.fn)
+    return ins, outs
+
+
+def builder(spec: Spec):
+    tier = TIERS[spec.tier]
+    if spec.fn == "prefill":
+        return M.make_prefill(tier)
+    if spec.fn == "decode":
+        return M.make_decode(tier)
+    if spec.fn == "generate":
+        return M.make_generate(tier)
+    if spec.fn == "grpo":
+        return M.make_grpo_grad(tier, spec.scheme, spec.use_pallas)
+    if spec.fn == "sft":
+        return M.make_sft_grad(tier, spec.scheme, spec.use_pallas)
+    if spec.fn == "pretrain":
+        return M.make_pretrain_grad(tier)
+    if spec.fn == "logprobs":
+        return M.make_logprobs(tier)
+    if spec.fn == "merge":
+        return M.make_merge(tier, spec.scheme)
+    raise ValueError(spec.fn)
+
+
+# ---------------------------------------------------------------------------
+# Lowering.
+# ---------------------------------------------------------------------------
+
+_DT = {F32: jnp.float32, S32: jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # CRITICAL: the default printer elides large constants as `{...}`, which
+    # the rust-side HLO text parser silently reads back as zeros — baked
+    # tensors (TinyLoRA's random projections P) would vanish.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # metadata carries source_end_line attrs the 0.5.1 parser rejects
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def lower_spec(spec: Spec) -> str:
+    ins, _ = signature(spec)
+    args = [jax.ShapeDtypeStruct(s, _DT[d]) for _, d, s in ins]
+    fn = builder(spec)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+# ---------------------------------------------------------------------------
+# Build matrix.
+# ---------------------------------------------------------------------------
+
+def scheme_grid_micro() -> list[Scheme]:
+    """Every adapter config the micro-tier experiments (Figs 1,2,4,7,8,9 and
+    the Table-2 analogue) need."""
+    g: list[Scheme] = []
+    # Fig 1/2 pareto: tinylora all-tied u sweep -> theta = u
+    for u in (1, 4, 13, 64):
+        g.append(Scheme("tinylora", r=2, u=u, tie="all"))
+    # untied tinylora fills the 100-1000 param band (theta = 21*u)
+    for u in (8, 24):
+        g.append(Scheme("tinylora", r=2, u=u, tie="none"))
+    # lora-xs band (theta = 21*r^2)
+    for r in (2, 4, 8):
+        g.append(Scheme("lora_xs", r=r))
+    # lora band
+    for r in (1, 4):
+        g.append(Scheme("lora", r=r))
+    g.append(Scheme("full"))
+    # Fig 7: frozen-rank ablation at fixed u
+    for r in (1, 4, 8):
+        g.append(Scheme("tinylora", r=r, u=13, tie="all"))
+    # Fig 8/9 + Fig 4: u x tie trade-off (incl. structured vs tiled)
+    for u in (1, 4, 16):
+        g.append(Scheme("tinylora", r=2, u=u, tie="tiled", n_tie=7))
+        g.append(Scheme("tinylora", r=2, u=u, tie="structured", n_tie=3))
+    g.append(Scheme("tinylora", r=2, u=16, tie="all"))
+    g.append(Scheme("tinylora", r=2, u=16, tie="none"))
+    # dedupe by tag
+    seen, out = set(), []
+    for s in g:
+        if s.tag() not in seen:
+            seen.add(s.tag())
+            out.append(s)
+    return out
+
+
+def scheme_grid_backbone() -> list[Scheme]:
+    """Reduced grid for the backbone-scaling figure (Figs 3/6)."""
+    return [
+        Scheme("tinylora", r=2, u=1, tie="all"),
+        Scheme("tinylora", r=2, u=13, tie="all"),
+        Scheme("tinylora", r=2, u=8, tie="none"),
+        Scheme("lora_xs", r=2),
+        Scheme("lora", r=4),
+        Scheme("full"),
+    ]
+
+
+# Schemes whose SFT twin is also lowered (Fig 2 / RL-vs-SFT comparison).
+SFT_TAGS = {"tinylora_r2_u1_all", "tinylora_r2_u13_all", "tinylora_r2_u64_all",
+            "tinylora_r2_u8_none", "xs_r2", "xs_r4", "xs_r8",
+            "lora_r1", "lora_r4", "full"}
+
+# Schemes lowered through the Pallas kernel path (the L1 hot-spot); the rest
+# use the jnp path, which XLA fuses to the same computation (verified by
+# tests/test_kernel.py). Keeping the sweep-grid artifacts on the jnp path
+# bounds `make artifacts` latency on the 1-core CPU image.
+PALLAS_TAGS = {"tinylora_r2_u13_all"}
+
+
+def build_specs() -> list[Spec]:
+    specs: list[Spec] = []
+
+    def shared(tier: str, b_roll: int, b_train: int):
+        t = TIERS[tier]
+        tt = t.t_train
+        n_gen = t.t_max - t.t_prefill  # sampled tokens per rollout
+        specs.append(Spec(f"{tier}.prefill_b{b_roll}", tier, "prefill", batch=b_roll))
+        specs.append(Spec(f"{tier}.decode_b{b_roll}", tier, "decode", batch=b_roll))
+        specs.append(Spec(f"{tier}.generate_b{b_roll}_s{n_gen}", tier, "generate",
+                          batch=b_roll, seq=n_gen))
+        specs.append(Spec(f"{tier}.pretrain_b{b_train}_t{tt}", tier, "pretrain",
+                          batch=b_train, seq=tt))
+        specs.append(Spec(f"{tier}.logprobs_b{b_train}_t{tt}", tier, "logprobs",
+                          batch=b_train, seq=tt))
+
+    def scheme_set(tier: str, schemes: list[Scheme], b_train: int, sft_tags=None):
+        t = TIERS[tier]
+        tt = t.t_train
+        for sch in schemes:
+            tag = sch.tag()
+            pallas = tag in PALLAS_TAGS
+            specs.append(Spec(f"{tier}.grpo.{tag}_b{b_train}_t{tt}", tier, "grpo",
+                              scheme=sch, batch=b_train, seq=tt, use_pallas=pallas))
+            if sft_tags is None or tag in sft_tags:
+                specs.append(Spec(f"{tier}.sft.{tag}_b{b_train}_t{tt}", tier, "sft",
+                                  scheme=sch, batch=b_train, seq=tt, use_pallas=pallas))
+            if sch.kind != "full":
+                specs.append(Spec(f"{tier}.merge.{tag}", tier, "merge", scheme=sch))
+
+    # main experiment tier
+    shared("micro", B_ROLL, B_TRAIN)
+    scheme_set("micro", scheme_grid_micro(), B_TRAIN, SFT_TAGS)
+    # serving plane (multi-adapter example + router benches)
+    specs.append(Spec(f"micro.prefill_b{B_SERVE}", "micro", "prefill", batch=B_SERVE))
+    specs.append(Spec(f"micro.decode_b{B_SERVE}", "micro", "decode", batch=B_SERVE))
+
+    # backbone-scaling tiers
+    for tier in ("nano", "small", "base"):
+        shared(tier, B_ROLL, B_TRAIN)
+        scheme_set(tier, scheme_grid_backbone(), B_TRAIN,
+                   sft_tags={"tinylora_r2_u13_all", "full"})
+
+    # nano-tier fast-test variants (integration tests run these)
+    t = TIERS["nano"]
+    specs.append(Spec(f"nano.prefill_b{B_TEST}", "nano", "prefill", batch=B_TEST))
+    specs.append(Spec(f"nano.decode_b{B_TEST}", "nano", "decode", batch=B_TEST))
+    specs.append(Spec(f"nano.generate_b{B_TEST}_s{t.t_max - t.t_prefill}", "nano",
+                      "generate", batch=B_TEST, seq=t.t_max - t.t_prefill))
+    specs.append(Spec(f"micro.generate_b{B_SERVE}_s{t.t_max - t.t_prefill}", "micro",
+                      "generate", batch=B_SERVE, seq=t.t_max - t.t_prefill))
+    specs.append(Spec(f"nano.pretrain_b{B_TEST}_t{t.t_train}", "nano", "pretrain",
+                      batch=B_TEST, seq=t.t_train))
+    specs.append(Spec(f"nano.logprobs_b{B_TEST}_t{t.t_train}", "nano", "logprobs",
+                      batch=B_TEST, seq=t.t_train))
+    test_sch = Scheme("tinylora", r=2, u=13, tie="all")
+    specs.append(Spec(f"nano.grpo.{test_sch.tag()}_b{B_TEST}_t{t.t_train}", "nano",
+                      "grpo", scheme=test_sch, batch=B_TEST, seq=t.t_train,
+                      use_pallas=True))
+    specs.append(Spec(f"nano.sft.{test_sch.tag()}_b{B_TEST}_t{t.t_train}", "nano",
+                      "sft", scheme=test_sch, batch=B_TEST, seq=t.t_train,
+                      use_pallas=True))
+
+    names = [s.name for s in specs]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Manifest.
+# ---------------------------------------------------------------------------
+
+def manifest_globals() -> dict:
+    tiers = {}
+    for name, t in TIERS.items():
+        tiers[name] = dict(
+            d=t.d, n_layers=t.n_layers, n_heads=t.n_heads, f=t.f,
+            t_max=t.t_max, t_prefill=t.t_prefill, t_train=t.t_train,
+            head_dim=t.head_dim, n_params=t.n_params(),
+            weights=[dict(name=n, shape=list(s),
+                          init=M.weight_init_spec(t)[n])
+                     for n, s in t.weight_shapes().items()],
+            module_dims={m: list(t.module_dims(m)) for m in MODULES},
+        )
+    return dict(
+        version=1,
+        vocab=dict(size=VOCAB_SIZE, chars=CHARS, pad=PAD_ID, bos=BOS_ID, eos=EOS_ID),
+        modules=list(MODULES),
+        weight_names=list(WEIGHT_NAMES),
+        n_stats=M.N_STATS,
+        batch=dict(roll=B_ROLL, train=B_TRAIN, serve=B_SERVE, test=B_TEST),
+        tiers=tiers,
+    )
+
+
+def exe_entry(spec: Spec, fname: str) -> dict:
+    tier = TIERS[spec.tier]
+    ins, outs = signature(spec)
+    e = dict(
+        file=fname, fn=spec.fn, tier=spec.tier, batch=spec.batch, seq=spec.seq,
+        use_pallas=spec.use_pallas,
+        inputs=[dict(name=n, dtype=d, shape=s) for n, d, s in ins],
+        outputs=[dict(name=n, dtype=d, shape=s) for n, d, s in outs],
+        spec_hash=spec_hash(spec.key()),
+    )
+    if spec.scheme is not None:
+        sch = spec.scheme
+        e["scheme"] = sch.to_json()
+        e["scheme_tag"] = sch.tag()
+        e["theta_size"] = sch.theta_size(tier)
+        e["theta_segments"] = sch.theta_segments(tier)
+        if sch.kind == "tinylora":
+            e["groups"] = sch.groups(tier)
+            e["p_seed"] = M.p_seed(tier, sch)
+    return e
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="substring filter on names")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    specs = build_specs()
+    if args.list:
+        for s in specs:
+            print(s.name)
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    man_path = os.path.join(args.out, "manifest.json")
+    old = {}
+    if os.path.exists(man_path) and not args.force:
+        with open(man_path) as f:
+            old = json.load(f).get("executables", {})
+
+    manifest = manifest_globals()
+    manifest["executables"] = {}
+    n_built = 0
+    t_total = time.time()
+    for spec in specs:
+        fname = spec.name + ".hlo.txt"
+        entry = exe_entry(spec, fname)
+        fpath = os.path.join(args.out, fname)
+        cached = (
+            not args.force
+            and os.path.exists(fpath)
+            and old.get(spec.name, {}).get("spec_hash") == entry["spec_hash"]
+        )
+        if args.only and args.only not in spec.name:
+            if cached:
+                manifest["executables"][spec.name] = entry
+            continue
+        if not cached:
+            t0 = time.time()
+            text = lower_spec(spec)
+            with open(fpath, "w") as f:
+                f.write(text)
+            n_built += 1
+            print(f"[{n_built}] {spec.name}: {len(text)/1024:.0f} KiB "
+                  f"in {time.time()-t0:.1f}s", flush=True)
+        manifest["executables"][spec.name] = entry
+
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"{len(specs)} artifacts ({n_built} lowered) in "
+          f"{time.time()-t_total:.1f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

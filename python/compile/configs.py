@@ -1,0 +1,224 @@
+"""Build-time configuration: model tiers, adapter schemes, vocab, theta layout.
+
+This module is the single source of truth for every shape that crosses the
+python -> rust boundary.  aot.py serialises the relevant parts into
+artifacts/manifest.json; the rust side reads the manifest and never
+re-derives shapes on its own (tokenizer charset is cross-checked by a test).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# Vocabulary (char-level math tokenizer). Mirrored by rust/src/tokenizer.
+# ---------------------------------------------------------------------------
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+CHARS = "0123456789abcdefghijklmnopqrstuvwxyz .,?+-*/=()#<>:'\n"
+VOCAB_SIZE = 64  # 3 specials + len(CHARS) = 56, padded to 64 for nice matmuls
+
+assert 3 + len(CHARS) <= VOCAB_SIZE
+
+# ---------------------------------------------------------------------------
+# Model size tiers.
+# ---------------------------------------------------------------------------
+
+# The seven adapted modules per transformer block (paper: q,k,v,o,up,gate,down).
+MODULES = ("q", "k", "v", "o", "up", "gate", "down")
+N_MODULES = len(MODULES)
+
+# Names + shapes of the weight pytree, in flattened (manifest) order.
+WEIGHT_NAMES = (
+    "tok_emb", "pos_emb", "ln1",
+    "attn_q", "attn_k", "attn_v", "attn_o",
+    "ln2", "mlp_up", "mlp_gate", "mlp_down",
+    "ln_f", "head",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Tier:
+    name: str
+    d: int          # model width
+    n_layers: int
+    n_heads: int
+    f: int          # mlp hidden width
+    t_max: int      # max sequence length (pos-emb length, kv-cache length)
+    t_prefill: int  # baked prefill prompt length (right-padded)
+    t_train: int    # baked training sequence length
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d % self.n_heads == 0
+        return self.d // self.n_heads
+
+    def weight_shapes(self) -> dict[str, tuple[int, ...]]:
+        d, L, f, v, t = self.d, self.n_layers, self.f, VOCAB_SIZE, self.t_max
+        return {
+            "tok_emb": (v, d),
+            "pos_emb": (t, d),
+            "ln1": (L, d),
+            "attn_q": (L, d, d),
+            "attn_k": (L, d, d),
+            "attn_v": (L, d, d),
+            "attn_o": (L, d, d),
+            "ln2": (L, d),
+            "mlp_up": (L, d, f),
+            "mlp_gate": (L, d, f),
+            "mlp_down": (L, f, d),
+            "ln_f": (d,),
+            "head": (d, v),
+        }
+
+    def module_dims(self, m: str) -> tuple[int, int]:
+        """(d_in, d_out) of adapted module `m`."""
+        d, f = self.d, self.f
+        return {
+            "q": (d, d), "k": (d, d), "v": (d, d), "o": (d, d),
+            "up": (d, f), "gate": (d, f), "down": (f, d),
+        }[m]
+
+    def n_params(self) -> int:
+        return sum(math.prod(s) for s in self.weight_shapes().values())
+
+
+TIERS: dict[str, Tier] = {
+    t.name: t
+    for t in (
+        Tier("nano", d=32, n_layers=2, n_heads=2, f=64, t_max=128, t_prefill=64, t_train=128),
+        Tier("micro", d=64, n_layers=3, n_heads=4, f=128, t_max=128, t_prefill=64, t_train=128),
+        Tier("small", d=96, n_layers=4, n_heads=4, f=192, t_max=128, t_prefill=64, t_train=128),
+        Tier("base", d=128, n_layers=4, n_heads=8, f=256, t_max=128, t_prefill=64, t_train=128),
+    )
+}
+
+# ---------------------------------------------------------------------------
+# Adapter schemes.
+# ---------------------------------------------------------------------------
+
+SCHEME_KINDS = ("tinylora", "lora_xs", "lora", "full")
+TIE_PLANS = ("none", "all", "tiled", "structured")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scheme:
+    """A fully-specified adapter parameterisation, baked at lowering time.
+
+    kind:
+      tinylora — W' = W + Us (sum_i v_i P_i) Vf^T, trainable v, fixed random P
+      lora_xs  — W' = W + Us R Vf^T, trainable R (r x r per module)
+      lora     — W' = W + s * A B, trainable A, B
+      full     — theta IS the weight pytree (full finetuning)
+    tie/n_tie (tinylora only): weight-tying plan across the L*7 modules.
+    """
+
+    kind: str
+    r: int = 2              # frozen SVD rank (tinylora/lora_xs) or lora rank
+    u: int = 1              # tinylora projection dim
+    tie: str = "none"       # tinylora tying plan
+    n_tie: int = 1          # modules sharing one v (tiled/structured plans)
+    lora_alpha: float = 2.0  # lora scale = alpha / r ... recorded, baked
+
+    def tag(self) -> str:
+        if self.kind == "tinylora":
+            t = {"none": "none", "all": "all"}.get(self.tie, f"{self.tie}{self.n_tie}")
+            return f"tinylora_r{self.r}_u{self.u}_{t}"
+        if self.kind == "lora_xs":
+            return f"xs_r{self.r}"
+        if self.kind == "lora":
+            return f"lora_r{self.r}"
+        return "full"
+
+    # -- group assignment (tinylora weight tying) ---------------------------
+
+    def groups(self, tier: Tier) -> list[int]:
+        """Flat module index (l * 7 + m) -> group id."""
+        n = tier.n_layers * N_MODULES
+        if self.kind != "tinylora":
+            return list(range(n))
+        if self.tie == "all":
+            return [0] * n
+        if self.tie == "none":
+            return list(range(n))
+        if self.tie == "tiled":
+            # nearby modules in depth order share, agnostic of type
+            return [i // self.n_tie for i in range(n)]
+        if self.tie == "structured":
+            # nearby modules of the same type share
+            n_per_type = -(-tier.n_layers // self.n_tie)  # ceil
+            out = []
+            for l in range(tier.n_layers):
+                for m in range(N_MODULES):
+                    out.append(m * n_per_type + l // self.n_tie)
+            return out
+        raise ValueError(self.tie)
+
+    def n_groups(self, tier: Tier) -> int:
+        return max(self.groups(tier)) + 1
+
+    # -- theta layout --------------------------------------------------------
+
+    def theta_segments(self, tier: Tier) -> list[dict]:
+        """Ordered flat-theta segment table: name, shape, init spec."""
+        L = tier.n_layers
+        segs: list[dict] = []
+        if self.kind == "tinylora":
+            g = self.n_groups(tier)
+            segs.append(dict(name="v", shape=[g, self.u], init=dict(kind="zeros")))
+        elif self.kind == "lora_xs":
+            for m in MODULES:
+                segs.append(dict(name=f"r_{m}", shape=[L, self.r, self.r], init=dict(kind="zeros")))
+        elif self.kind == "lora":
+            for m in MODULES:
+                d_in, d_out = tier.module_dims(m)
+                segs.append(dict(
+                    name=f"a_{m}", shape=[L, d_in, self.r],
+                    init=dict(kind="normal", std=1.0 / math.sqrt(d_in)),
+                ))
+                segs.append(dict(
+                    name=f"b_{m}", shape=[L, self.r, d_out],
+                    init=dict(kind="zeros"),
+                ))
+        elif self.kind == "full":
+            ws = tier.weight_shapes()
+            for nm in WEIGHT_NAMES:
+                segs.append(dict(name=nm, shape=list(ws[nm]), init=dict(kind="from_checkpoint")))
+        else:
+            raise ValueError(self.kind)
+        off = 0
+        for s in segs:
+            s["offset"] = off
+            s["len"] = math.prod(s["shape"])
+            off += s["len"]
+        return segs
+
+    def theta_size(self, tier: Tier) -> int:
+        return sum(s["len"] for s in self.theta_segments(tier))
+
+    def needs_factors(self) -> bool:
+        """Does this scheme take frozen SVD factors (Us, Vf) as inputs?"""
+        return self.kind in ("tinylora", "lora_xs")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def factor_shapes(tier: Tier, r: int) -> list[tuple[str, tuple[int, ...]]]:
+    """Frozen SVD factor inputs, in manifest order: us_m [L,d_in,r], vf_m [L,d_out,r]."""
+    out = []
+    for m in MODULES:
+        d_in, d_out = tier.module_dims(m)
+        out.append((f"us_{m}", (tier.n_layers, d_in, r)))
+        out.append((f"vf_{m}", (tier.n_layers, d_out, r)))
+    return out
+
+
+def spec_hash(obj) -> str:
+    return hashlib.sha256(json.dumps(obj, sort_keys=True).encode()).hexdigest()[:16]

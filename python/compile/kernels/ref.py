@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the fused adapted-matmul kernel.
+
+This is the CORE correctness reference: every Pallas kernel output (forward
+and backward) is checked against these functions by pytest/hypothesis.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def adapted_matmul_ref(x, w, a, m, bt):
+    """y = x @ w + ((x @ a) @ m) @ bt^T
+
+    x  [rows, d_in]     activation
+    w  [d_in, d_out]    frozen base weight
+    a  [d_in, r]        frozen Us = U*Sigma (tinylora/lora_xs) or trainable A (lora)
+    m  [r, r]           adapter code R (tinylora: sum_i v_i P_i; lora: identity)
+    bt [d_out, r]       frozen Vf = V (tinylora/lora_xs) or trainable B^T (lora)
+    """
+    return x @ w + ((x @ a) @ m) @ bt.T
+
+
+def adapted_matmul_grads_ref(x, w, a, m, bt, g):
+    """Cotangents of adapted_matmul_ref w.r.t. (x, a, m, bt) given dy = g."""
+    p = x @ a          # [rows, r]
+    q = g @ bt         # [rows, r]
+    dx = g @ w.T + (q @ m.T) @ a.T
+    da = x.T @ (q @ m.T)
+    dm = p.T @ q
+    dbt = g.T @ (p @ m)
+    return dx, da, dm, dbt
+
+
+def tinylora_code_ref(v_lm, p):
+    """R[l,m] = sum_i v_lm[l,m,i] * p[l,m,i]  -> [L, n_mod, r, r]."""
+    return jnp.einsum("lmu,lmurs->lmrs", v_lm, p)

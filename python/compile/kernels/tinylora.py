@@ -1,0 +1,135 @@
+"""L1 — Pallas kernel for the fused TinyLoRA-adapted matmul.
+
+The paper's compute hot-spot is the adapted linear layer
+
+    y = x @ W + ((x @ A) @ M) @ Bt^T
+
+where the rank-r bottleneck (r <= 8) must never materialise the d_in x d_out
+delta.  One kernel serves all three adapter families:
+
+    tinylora:  A = U*Sigma (frozen), M = sum_i v_i P_i, Bt = V (frozen)
+    lora_xs:   A = U*Sigma (frozen), M = R (trainable), Bt = V (frozen)
+    lora:      A (trainable),        M = I_r,           Bt = B^T (trainable)
+
+The same kernel implements the backward pass: dx is the fused form with
+transposed operands, and the small r-dimension cotangents (dM, dA, dBt) are
+cheap jnp contractions.
+
+Pallas is lowered with interpret=True (CPU image; real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot run).  The TPU mapping — VMEM
+residency of A/M/Bt across the grid, MXU base matmul with VPU rank-r
+correction — is documented in DESIGN.md §7 and EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row/col tile sizes. On TPU these would align to (8, 128) VPU lanes and the
+# 128x128 MXU tile; in interpret mode they only bound working-set size.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _adapted_matmul_kernel(x_ref, w_ref, a_ref, m_ref, bt_ref, o_ref):
+    """One (bm, bn) output tile: o = x @ w + ((x @ a) @ m) @ bt^T.
+
+    Per grid step the block specs give us:
+      x_ref  [bm, d_in]   — row tile, full reduction dim
+      w_ref  [d_in, bn]   — column tile of the frozen weight
+      a_ref  [d_in, r]    — whole bottleneck down-projection (VMEM-resident)
+      m_ref  [r, r]       — whole adapter code
+      bt_ref [bn, r]      — column tile of the bottleneck up-projection
+    """
+    x = x_ref[...]
+    base = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    # rank-r bottleneck: [bm, r] @ [r, r] @ [r, bn] — never materialises d x d
+    p = jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32)
+    corr = jnp.dot(jnp.dot(p, m_ref[...]), bt_ref[...].T,
+                   preferred_element_type=jnp.float32)
+    o_ref[...] = base + corr
+
+
+def _pad_to(v: int, b: int) -> int:
+    return -(-v // b) * b
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def adapted_matmul_pallas(x, w, a, m, bt, *, block_m: int = BLOCK_M,
+                          block_n: int = BLOCK_N):
+    """Fused adapted matmul via pallas_call (interpret mode).
+
+    Shapes: x [rows, d_in], w [d_in, d_out], a [d_in, r], m [r, r],
+    bt [d_out, r] -> y [rows, d_out].  Handles non-multiple shapes by
+    padding rows/cols up to the tile grid (zero padding is exact for this op).
+    """
+    rows, d_in = x.shape
+    d_out = w.shape[1]
+    bm = min(block_m, _pad_to(rows, 8))
+    bn = min(block_n, _pad_to(d_out, 8))
+    rows_p = _pad_to(rows, bm)
+    dout_p = _pad_to(d_out, bn)
+    xp = jnp.pad(x, ((0, rows_p - rows), (0, 0))) if rows_p != rows else x
+    wp = jnp.pad(w, ((0, 0), (0, dout_p - d_out))) if dout_p != d_out else w
+    btp = jnp.pad(bt, ((0, dout_p - d_out), (0, 0))) if dout_p != d_out else bt
+
+    grid = (rows_p // bm, dout_p // bn)
+    out = pl.pallas_call(
+        _adapted_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d_in), lambda i, j: (i, 0)),
+            pl.BlockSpec((d_in, bn), lambda i, j: (0, j)),
+            # bottleneck operands: constant index map -> VMEM-resident on TPU
+            pl.BlockSpec(a.shape, lambda i, j: (0, 0)),
+            pl.BlockSpec(m.shape, lambda i, j: (0, 0)),
+            pl.BlockSpec((bn, bt.shape[1]), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows_p, dout_p), jnp.float32),
+        interpret=True,
+    )(xp, wp, a, m, btp)
+    return out[:rows, :d_out]
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper. W is frozen (zero cotangent, DCE'd by XLA); the
+# backward pass reuses the same fused kernel for dx and cheap r-dim
+# contractions for (da, dm, dbt).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def adapted_matmul(x, w, a, m, bt, use_pallas: bool = True):
+    if use_pallas:
+        return adapted_matmul_pallas(x, w, a, m, bt)
+    return x @ w + ((x @ a) @ m) @ bt.T
+
+
+def _fwd(x, w, a, m, bt, use_pallas):
+    y = adapted_matmul(x, w, a, m, bt, use_pallas)
+    return y, (x, w, a, m, bt)
+
+
+def _bwd(use_pallas, res, g):
+    x, w, a, m, bt = res
+    # dx = g @ W^T + ((g @ Bt) @ M^T) @ A^T — the same fused form with
+    # (W^T, Bt, M^T, A) standing in for (W, A, M, Bt).
+    if use_pallas:
+        dx = adapted_matmul_pallas(g, w.T, bt, m.T, a)
+    else:
+        dx = g @ w.T + ((g @ bt) @ m.T) @ a.T
+    p = x @ a      # [rows, r]
+    q = g @ bt     # [rows, r]
+    dm = p.T @ q
+    da = x.T @ (q @ m.T)
+    dbt = g.T @ (p @ m)
+    dw = jnp.zeros_like(w)  # frozen; unused cotangent, DCE'd
+    return dx, dw, da, dm, dbt
+
+
+adapted_matmul.defvjp(_fwd, _bwd)

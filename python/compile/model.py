@@ -1,0 +1,545 @@
+"""L2 — the JAX model family and every training-step computation.
+
+Decoder-only transformer (RMSNorm, SwiGLU MLP, learned absolute positions),
+with the seven per-block linear modules (q,k,v,o,up,gate,down) optionally
+routed through the fused adapted-matmul kernel (L1).
+
+Entry points lowered by aot.py (python never runs at request time):
+
+    prefill        (weights, tokens[B,Tp], prompt_len[B]) -> (logits[B,V], kv)
+    decode         (weights, kv, pos[B], token[B])        -> (logits[B,V], kv')
+    grpo_grad      (weights, factors?, theta, batch...)   -> (dtheta, stats[8])
+    sft_grad       (weights, factors?, theta, batch...)   -> (dtheta, stats[8])
+    full grads     (weights, batch...)                    -> (dweights..., stats[8])
+    pretrain_grad  (weights, tokens, target_mask)         -> (dweights..., stats[8])
+    logprobs       (weights, tokens)                      -> logp[B,T-1]
+    merge          (adapted weights, factors?, theta)     -> 7 merged tensors
+
+Conventions: all float tensors are f32; all sequences are RIGHT-padded and
+positions are absolute in the padded frame, so rollout-time and train-time
+log-probs are computed in the same frame (the paper's merged-weights + TIS
+trick then only has to absorb numerical differences, not positional ones).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import (MODULES, N_MODULES, VOCAB_SIZE, WEIGHT_NAMES, Scheme,
+                      Tier, spec_hash)
+from .kernels.tinylora import adapted_matmul
+
+NEG_INF = -1e9
+N_STATS = 8
+
+
+# ---------------------------------------------------------------------------
+# Weight init (python mirror of rust's initializer; used by tests and aot
+# example-arg construction).
+# ---------------------------------------------------------------------------
+
+def weight_init_spec(tier: Tier) -> dict[str, dict]:
+    """Init spec per weight tensor — serialised into the manifest so the rust
+    pretrainer constructs the exact same distribution family."""
+    out_scale = 1.0 / np.sqrt(2 * tier.n_layers)
+    spec = {}
+    for name, shape in tier.weight_shapes().items():
+        if name in ("ln1", "ln2", "ln_f"):
+            spec[name] = dict(kind="ones")
+        elif name in ("tok_emb", "pos_emb"):
+            spec[name] = dict(kind="normal", std=0.02)
+        elif name in ("attn_o", "mlp_down"):
+            spec[name] = dict(kind="normal", std=float(out_scale / np.sqrt(shape[-2])))
+        else:
+            spec[name] = dict(kind="normal", std=float(1.0 / np.sqrt(shape[-2])))
+    return spec
+
+
+def init_weights(tier: Tier, seed: int = 0) -> dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    ws = {}
+    for name, shape in tier.weight_shapes().items():
+        s = weight_init_spec(tier)[name]
+        if s["kind"] == "ones":
+            ws[name] = jnp.ones(shape, jnp.float32)
+        else:
+            ws[name] = jnp.asarray(rng.normal(0.0, s["std"], shape), jnp.float32)
+    return ws
+
+
+# ---------------------------------------------------------------------------
+# Adapter expansion: flat theta -> per-module (A, M, Bt) operand stacks.
+# ---------------------------------------------------------------------------
+
+def p_seed(tier: Tier, scheme: Scheme) -> int:
+    """Deterministic seed for the fixed random projection tensors P."""
+    return int(spec_hash([tier.name, scheme.tag(), "P"])[:8], 16)
+
+
+def make_projections(tier: Tier, scheme: Scheme) -> np.ndarray:
+    """Fixed random P [L, n_mod, u, r, r], baked as HLO constants (tiny)."""
+    rng = np.random.default_rng(p_seed(tier, scheme))
+    shape = (tier.n_layers, N_MODULES, scheme.u, scheme.r, scheme.r)
+    return (rng.normal(0.0, 1.0, shape) / np.sqrt(scheme.u)).astype(np.float32)
+
+
+def unpack_theta(theta: jnp.ndarray, segments: list[dict]) -> dict[str, jnp.ndarray]:
+    out = {}
+    for s in segments:
+        out[s["name"]] = jax.lax.dynamic_slice_in_dim(
+            theta, s["offset"], s["len"]).reshape(s["shape"])
+    return out
+
+
+def expand_adapters(tier: Tier, scheme: Scheme, theta: jnp.ndarray,
+                    factors: Optional[dict[str, jnp.ndarray]]):
+    """Return {module: (A [L,d_in,r], M [L,r,r], Bt [L,d_out,r])} or None (full)."""
+    if scheme.kind == "full":
+        return None
+    segs = scheme.theta_segments(tier)
+    parts = unpack_theta(theta, segs)
+    L = tier.n_layers
+    adapters = {}
+    if scheme.kind == "tinylora":
+        groups = jnp.asarray(scheme.groups(tier), jnp.int32).reshape(L, N_MODULES)
+        v_lm = parts["v"][groups]                        # [L, m, u]
+        p = jnp.asarray(make_projections(tier, scheme))  # [L, m, u, r, r] const
+        code = jnp.einsum("lmu,lmurs->lmrs", v_lm, p)    # [L, m, r, r]
+        for mi, m in enumerate(MODULES):
+            adapters[m] = (factors[f"us_{m}"], code[:, mi], factors[f"vf_{m}"])
+    elif scheme.kind == "lora_xs":
+        for m in MODULES:
+            adapters[m] = (factors[f"us_{m}"], parts[f"r_{m}"], factors[f"vf_{m}"])
+    elif scheme.kind == "lora":
+        scale = scheme.lora_alpha / scheme.r
+        eye = jnp.broadcast_to(jnp.eye(scheme.r, dtype=jnp.float32) * scale,
+                               (L, scheme.r, scheme.r))
+        for m in MODULES:
+            bt = jnp.swapaxes(parts[f"b_{m}"], 1, 2)     # [L, d_out, r]
+            adapters[m] = (parts[f"a_{m}"], eye, bt)
+    else:
+        raise ValueError(scheme.kind)
+    return adapters
+
+
+# ---------------------------------------------------------------------------
+# Transformer blocks.
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, g, eps=1e-6):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def _linear(x2d, w, ad, use_pallas):
+    """x2d [rows, d_in] through base weight w with optional adapter (a, m, bt)."""
+    if ad is None:
+        return x2d @ w
+    a, m, bt = ad
+    return adapted_matmul(x2d, w, a, m, bt, use_pallas)
+
+
+def forward(tier: Tier, w: dict, adapters, tokens: jnp.ndarray,
+            use_pallas: bool = False) -> jnp.ndarray:
+    """Full-sequence causal forward. tokens [B, T] i32 -> logits [B, T, V]."""
+    B, T = tokens.shape
+    H, hd = tier.n_heads, tier.head_dim
+    h = w["tok_emb"][tokens] + w["pos_emb"][:T][None]
+    causal = jnp.tril(jnp.ones((T, T), jnp.float32))
+
+    # per-layer scanned weights
+    xs = {k: w[k] for k in ("ln1", "attn_q", "attn_k", "attn_v", "attn_o",
+                            "ln2", "mlp_up", "mlp_gate", "mlp_down")}
+    if adapters is not None:
+        for m in MODULES:
+            a, mm, bt = adapters[m]
+            xs[f"ad_a_{m}"], xs[f"ad_m_{m}"], xs[f"ad_bt_{m}"] = a, mm, bt
+
+    def get_ad(lw, m):
+        if adapters is None:
+            return None
+        return (lw[f"ad_a_{m}"], lw[f"ad_m_{m}"], lw[f"ad_bt_{m}"])
+
+    def block(h, lw):
+        x = rmsnorm(h, lw["ln1"])
+        x2 = x.reshape(B * T, tier.d)
+        q = _linear(x2, lw["attn_q"], get_ad(lw, "q"), use_pallas).reshape(B, T, H, hd)
+        k = _linear(x2, lw["attn_k"], get_ad(lw, "k"), use_pallas).reshape(B, T, H, hd)
+        v = _linear(x2, lw["attn_v"], get_ad(lw, "v"), use_pallas).reshape(B, T, H, hd)
+        scores = jnp.einsum("bthd,bshd->bhts", q, k) / np.sqrt(hd)
+        scores = scores + (1.0 - causal) * NEG_INF
+        probs = jax.nn.softmax(scores, axis=-1)
+        att = jnp.einsum("bhts,bshd->bthd", probs, v).reshape(B * T, tier.d)
+        h = h + _linear(att, lw["attn_o"], get_ad(lw, "o"), use_pallas).reshape(B, T, tier.d)
+
+        x = rmsnorm(h, lw["ln2"]).reshape(B * T, tier.d)
+        up = _linear(x, lw["mlp_up"], get_ad(lw, "up"), use_pallas)
+        gate = _linear(x, lw["mlp_gate"], get_ad(lw, "gate"), use_pallas)
+        y = jax.nn.silu(gate) * up
+        h = h + _linear(y, lw["mlp_down"], get_ad(lw, "down"), use_pallas).reshape(B, T, tier.d)
+        return h, None
+
+    h, _ = jax.lax.scan(block, h, xs)
+    h = rmsnorm(h, w["ln_f"])
+    return h @ w["head"]
+
+
+# ---------------------------------------------------------------------------
+# Inference plane: prefill + incremental decode with KV cache (merged
+# weights only — the adapter never appears on the request path).
+# ---------------------------------------------------------------------------
+
+def prefill(tier: Tier, w: dict, tokens: jnp.ndarray, prompt_len: jnp.ndarray):
+    """tokens [B, Tp] right-padded, prompt_len [B] i32.
+
+    Returns (logits [B, V] at the last real token, kv [L,2,B,Tmax,H,hd]).
+    Cache positions >= prompt_len hold garbage; the decode mask (pos-based)
+    guarantees they are never attended before being overwritten.
+    """
+    B, Tp = tokens.shape
+    H, hd = tier.n_heads, tier.head_dim
+    h = w["tok_emb"][tokens] + w["pos_emb"][:Tp][None]
+    causal = jnp.tril(jnp.ones((Tp, Tp), jnp.float32))
+    xs = {k: w[k] for k in ("ln1", "attn_q", "attn_k", "attn_v", "attn_o",
+                            "ln2", "mlp_up", "mlp_gate", "mlp_down")}
+
+    def block(h, lw):
+        x = rmsnorm(h, lw["ln1"])
+        q = (x @ lw["attn_q"]).reshape(B, Tp, H, hd)
+        k = (x @ lw["attn_k"]).reshape(B, Tp, H, hd)
+        v = (x @ lw["attn_v"]).reshape(B, Tp, H, hd)
+        scores = jnp.einsum("bthd,bshd->bhts", q, k) / np.sqrt(hd)
+        probs = jax.nn.softmax(scores + (1.0 - causal) * NEG_INF, axis=-1)
+        att = jnp.einsum("bhts,bshd->bthd", probs, v).reshape(B, Tp, tier.d)
+        h = h + att @ lw["attn_o"]
+        x = rmsnorm(h, lw["ln2"])
+        y = jax.nn.silu(x @ lw["mlp_gate"]) * (x @ lw["mlp_up"])
+        h = h + y @ lw["mlp_down"]
+        pad = ((0, 0), (0, tier.t_max - Tp), (0, 0), (0, 0))
+        kv_l = jnp.stack([jnp.pad(k, pad), jnp.pad(v, pad)])  # [2,B,Tmax,H,hd]
+        return h, kv_l
+
+    h, kv = jax.lax.scan(block, h, xs)
+    h = rmsnorm(h, w["ln_f"])
+    logits = h @ w["head"]                                    # [B, Tp, V]
+    last = jnp.clip(prompt_len - 1, 0, Tp - 1)
+    logits = jnp.take_along_axis(logits, last[:, None, None], axis=1)[:, 0]
+    return logits, kv
+
+
+def decode_step(tier: Tier, w: dict, kv: jnp.ndarray, pos: jnp.ndarray,
+                token: jnp.ndarray):
+    """One incremental decode step.
+
+    kv [L,2,B,Tmax,H,hd]; pos [B] i32 — the cache slot this token occupies;
+    token [B] i32.  Returns (logits [B, V], kv').
+    """
+    B = token.shape[0]
+    H, hd, Tmax = tier.n_heads, tier.head_dim, tier.t_max
+    h = w["tok_emb"][token] + w["pos_emb"][pos]               # [B, d]
+    valid = (jnp.arange(Tmax)[None, :] <= pos[:, None]).astype(jnp.float32)
+    xs = {k: w[k] for k in ("ln1", "attn_q", "attn_k", "attn_v", "attn_o",
+                            "ln2", "mlp_up", "mlp_gate", "mlp_down")}
+    xs["kv"] = kv
+
+    def write(cache, new, p):
+        # cache [Tmax,H,hd], new [H,hd]: write at slot p
+        return jax.lax.dynamic_update_slice(cache, new[None], (p, 0, 0))
+
+    def block(h, lw):
+        x = rmsnorm(h, lw["ln1"])
+        q = (x @ lw["attn_q"]).reshape(B, H, hd)
+        k = (x @ lw["attn_k"]).reshape(B, H, hd)
+        v = (x @ lw["attn_v"]).reshape(B, H, hd)
+        ck = jax.vmap(write)(lw["kv"][0], k, pos)             # [B,Tmax,H,hd]
+        cv = jax.vmap(write)(lw["kv"][1], v, pos)
+        scores = jnp.einsum("bhd,bshd->bhs", q, ck) / np.sqrt(hd)
+        scores = scores + (1.0 - valid[:, None, :]) * NEG_INF
+        probs = jax.nn.softmax(scores, axis=-1)
+        att = jnp.einsum("bhs,bshd->bhd", probs, cv).reshape(B, tier.d)
+        h = h + att @ lw["attn_o"]
+        x = rmsnorm(h, lw["ln2"])
+        y = jax.nn.silu(x @ lw["mlp_gate"]) * (x @ lw["mlp_up"])
+        h = h + y @ lw["mlp_down"]
+        return h, jnp.stack([ck, cv])
+
+    h, kv_new = jax.lax.scan(block, h, xs)
+    h = rmsnorm(h, w["ln_f"])
+    return h @ w["head"], kv_new
+
+
+# ---------------------------------------------------------------------------
+# Fused generation: the entire rollout loop in one executable.
+#
+# The xla 0.1.6 PJRT wrapper returns multi-output results as a single tuple
+# buffer that cannot be re-fed as an input, so chaining the KV cache on
+# device across per-step decode calls is impossible.  Instead the whole
+# sampling loop (prefill + S decode steps + inverse-CDF sampling) is lowered
+# into ONE executable; rust supplies the uniforms and the temperature and
+# gets back (tokens, behavior log-probs).  This is also the fast path: one
+# PJRT dispatch per rollout batch instead of S. See EXPERIMENTS.md §Perf.
+# ---------------------------------------------------------------------------
+
+def sample_token(logits, u, temp):
+    """Inverse-CDF categorical sample at temperature `temp`; greedy if temp<=0.
+
+    Returns (token [B] i32, behavior logp of that token under the actual
+    sampling distribution softmax(logits/temp), or the temp->0 limit 0.0
+    for greedy)."""
+    z = logits / jnp.maximum(temp, 1e-6)
+    lp = jax.nn.log_softmax(z, axis=-1)
+    cdf = jnp.cumsum(jnp.exp(lp), axis=-1)
+    samp = (cdf < u[:, None]).sum(-1).astype(jnp.int32)
+    samp = jnp.clip(samp, 0, logits.shape[-1] - 1)
+    greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+    tok = jnp.where(temp > 0, samp, greedy)
+    blp = jnp.take_along_axis(lp, tok[:, None], axis=1)[:, 0]
+    blp = jnp.where(temp > 0, blp, 0.0)
+    return tok, blp
+
+
+def generate(tier: Tier, w: dict, prompt: jnp.ndarray, prompt_len: jnp.ndarray,
+             uniforms: jnp.ndarray, temp: jnp.ndarray):
+    """prompt [B, Tp] right-padded; uniforms [B, S] in [0,1); temp scalar.
+
+    Returns (tokens [B, S] i32, behavior_logp [B, S] f32).  Token i of each
+    sequence occupies cache slot prompt_len + i; generation continues past
+    EOS (rust masks after the first EOS).  Requires Tp + S <= t_max.
+    """
+    S = uniforms.shape[1]
+    assert tier.t_prefill + S <= tier.t_max + 1
+    logits0, kv = prefill(tier, w, prompt, prompt_len)
+    tok0, blp0 = sample_token(logits0, uniforms[:, 0], temp)
+
+    def step(carry, u):
+        kv, pos, tok = carry
+        logits, kv2 = decode_step(tier, w, kv, pos, tok)
+        ntok, nblp = sample_token(logits, u, temp)
+        return (kv2, pos + 1, ntok), (ntok, nblp)
+
+    (_, _, _), (toks, blps) = jax.lax.scan(
+        step, (kv, prompt_len, tok0), uniforms[:, 1:].T)
+    out_toks = jnp.concatenate([tok0[:, None], toks.T], axis=1)
+    out_blps = jnp.concatenate([blp0[:, None], blps.T], axis=1)
+    return out_toks, out_blps
+
+
+# ---------------------------------------------------------------------------
+# Losses.
+# ---------------------------------------------------------------------------
+
+def token_logprobs(tier: Tier, w, adapters, tokens, use_pallas=False):
+    """Per-token log p(tokens[:,1:]) and the full log-softmax for stats."""
+    logits = forward(tier, w, adapters, tokens[:, :-1], use_pallas)
+    logp_full = jax.nn.log_softmax(logits, axis=-1)           # [B, T-1, V]
+    tgt = tokens[:, 1:]
+    logp = jnp.take_along_axis(logp_full, tgt[..., None], axis=-1)[..., 0]
+    return logp, logp_full
+
+
+def grpo_loss(tier: Tier, w, adapters, tokens, target_mask, behavior_logp,
+              advantages, clip_c, kl_coef, use_pallas=False):
+    """GRPO policy-gradient loss with truncated importance sampling.
+
+    tokens [B, T] i32 (right-padded prompt+response)
+    target_mask [B, T-1] — 1 where tokens[:, 1:][b, t] is a scored response token
+    behavior_logp [B, T-1] — log-prob of those tokens under the merged
+        (inference-plane) weights, recorded during rollout
+    advantages [B] — group-relative advantage per sequence
+    clip_c — TIS truncation constant; kl_coef — k3 KL penalty weight
+    """
+    logp, logp_full = token_logprobs(tier, w, adapters, tokens, use_pallas)
+    count = jnp.maximum(target_mask.sum(), 1.0)
+    delta = logp - behavior_logp
+    ratio = jnp.exp(delta)
+    w_is = jax.lax.stop_gradient(jnp.minimum(ratio, clip_c))
+    pg = -(w_is * logp * advantages[:, None] * target_mask).sum() / count
+    # k3 KL estimator of KL(pi || behavior) on sampled tokens
+    k3 = jnp.exp(-delta) + delta - 1.0
+    kl_pen = (k3 * target_mask).sum() / count
+    loss = pg + kl_coef * kl_pen
+    # diagnostics
+    kl_k1 = (delta * target_mask).sum() / count
+    frac_clip = (((ratio > clip_c).astype(jnp.float32)) * target_mask).sum() / count
+    ent = (-(jnp.exp(logp_full) * logp_full).sum(-1) * target_mask).sum() / count
+    mean_logp = (logp * target_mask).sum() / count
+    mean_ratio = (ratio * target_mask).sum() / count
+    stats = jnp.stack([loss, pg, kl_k1, kl_pen, mean_ratio, frac_clip, ent,
+                       mean_logp])
+    return loss, stats
+
+
+def sft_loss(tier: Tier, w, adapters, tokens, target_mask, use_pallas=False):
+    """Next-token CE on gold demonstrations, masked to response tokens."""
+    logp, logp_full = token_logprobs(tier, w, adapters, tokens, use_pallas)
+    count = jnp.maximum(target_mask.sum(), 1.0)
+    loss = -(logp * target_mask).sum() / count
+    pred = jnp.argmax(logp_full, axis=-1)
+    acc = ((pred == tokens[:, 1:]).astype(jnp.float32) * target_mask).sum() / count
+    ent = (-(jnp.exp(logp_full) * logp_full).sum(-1) * target_mask).sum() / count
+    stats = jnp.stack([loss, acc, ent, -loss, count, 0.0, 0.0, 0.0])
+    return loss, stats
+
+
+# ---------------------------------------------------------------------------
+# Entry-point factories (each returns a python callable over FLAT ordered
+# array arguments, ready for jax.jit(...).lower()).  aot.py derives the
+# manifest input/output tables from the same builders.
+# ---------------------------------------------------------------------------
+
+def weights_from_args(tier: Tier, args) -> dict:
+    return {n: a for n, a in zip(WEIGHT_NAMES, args)}
+
+
+def factor_names() -> list[str]:
+    names = []
+    for m in MODULES:
+        names += [f"us_{m}", f"vf_{m}"]
+    return names
+
+
+def factors_from_args(args) -> dict:
+    return {n: a for n, a in zip(factor_names(), args)}
+
+
+def make_prefill(tier: Tier):
+    def fn(*args):
+        nw = len(WEIGHT_NAMES)
+        w = weights_from_args(tier, args[:nw])
+        tokens, prompt_len = args[nw], args[nw + 1]
+        logits, kv = prefill(tier, w, tokens, prompt_len)
+        return (logits, kv)
+    return fn
+
+
+def make_decode(tier: Tier):
+    def fn(*args):
+        nw = len(WEIGHT_NAMES)
+        w = weights_from_args(tier, args[:nw])
+        kv, pos, token = args[nw], args[nw + 1], args[nw + 2]
+        logits, kv2 = decode_step(tier, w, kv, pos, token)
+        return (logits, kv2)
+    return fn
+
+
+def make_generate(tier: Tier):
+    def fn(*args):
+        nw = len(WEIGHT_NAMES)
+        w = weights_from_args(tier, args[:nw])
+        prompt, prompt_len, uniforms, temp = args[nw:nw + 4]
+        return generate(tier, w, prompt, prompt_len, uniforms, temp)
+    return fn
+
+
+def _adapter_args(tier: Tier, scheme: Scheme, args, nw):
+    """Split (factors?, theta) following the first nw args."""
+    if scheme.needs_factors():
+        nf = 2 * N_MODULES
+        factors = factors_from_args(args[nw:nw + nf])
+        theta = args[nw + nf]
+        rest = args[nw + nf + 1:]
+    else:
+        factors, theta, rest = None, args[nw], args[nw + 1:]
+    return factors, theta, rest
+
+
+def make_grpo_grad(tier: Tier, scheme: Scheme, use_pallas: bool):
+    nw = len(WEIGHT_NAMES)
+
+    if scheme.kind == "full":
+        def fn(*args):
+            w = weights_from_args(tier, args[:nw])
+            tokens, target_mask, behavior, adv, clip_c, kl_coef = args[nw:nw + 6]
+
+            def loss_fn(w):
+                return grpo_loss(tier, w, None, tokens, target_mask, behavior,
+                                 adv, clip_c, kl_coef, use_pallas)
+            grads, stats = jax.grad(loss_fn, has_aux=True)(w)
+            return tuple(grads[n] for n in WEIGHT_NAMES) + (stats,)
+        return fn
+
+    def fn(*args):
+        w = weights_from_args(tier, args[:nw])
+        factors, theta, rest = _adapter_args(tier, scheme, args, nw)
+        tokens, target_mask, behavior, adv, clip_c, kl_coef = rest[:6]
+
+        def loss_fn(theta):
+            ad = expand_adapters(tier, scheme, theta, factors)
+            return grpo_loss(tier, w, ad, tokens, target_mask, behavior,
+                             adv, clip_c, kl_coef, use_pallas)
+        dtheta, stats = jax.grad(loss_fn, has_aux=True)(theta)
+        return (dtheta, stats)
+    return fn
+
+
+def make_sft_grad(tier: Tier, scheme: Scheme, use_pallas: bool):
+    nw = len(WEIGHT_NAMES)
+
+    if scheme.kind == "full":
+        def fn(*args):
+            w = weights_from_args(tier, args[:nw])
+            tokens, target_mask = args[nw], args[nw + 1]
+
+            def loss_fn(w):
+                return sft_loss(tier, w, None, tokens, target_mask, use_pallas)
+            grads, stats = jax.grad(loss_fn, has_aux=True)(w)
+            return tuple(grads[n] for n in WEIGHT_NAMES) + (stats,)
+        return fn
+
+    def fn(*args):
+        w = weights_from_args(tier, args[:nw])
+        factors, theta, rest = _adapter_args(tier, scheme, args, nw)
+        tokens, target_mask = rest[0], rest[1]
+
+        def loss_fn(theta):
+            ad = expand_adapters(tier, scheme, theta, factors)
+            return sft_loss(tier, w, ad, tokens, target_mask, use_pallas)
+        dtheta, stats = jax.grad(loss_fn, has_aux=True)(theta)
+        return (dtheta, stats)
+    return fn
+
+
+def make_pretrain_grad(tier: Tier):
+    """Full-param next-token grad (also the full-FT SFT step)."""
+    return make_sft_grad(tier, Scheme(kind="full"), use_pallas=False)
+
+
+def make_logprobs(tier: Tier):
+    nw = len(WEIGHT_NAMES)
+
+    def fn(*args):
+        w = weights_from_args(tier, args[:nw])
+        tokens = args[nw]
+        logp, _ = token_logprobs(tier, w, None, tokens)
+        return (logp,)
+    return fn
+
+
+# Base weight tensors adapted by the schemes, in MODULES order.
+ADAPTED_WEIGHT_NAMES = ("attn_q", "attn_k", "attn_v", "attn_o",
+                        "mlp_up", "mlp_gate", "mlp_down")
+
+
+def make_merge(tier: Tier, scheme: Scheme):
+    """Fold the adapter into the 7 adapted weight tensors.
+
+    Inputs: 7 base tensors (ADAPTED_WEIGHT_NAMES order), factors?, theta.
+    Outputs: 7 merged tensors in the same order.
+    """
+    assert scheme.kind != "full"
+
+    def fn(*args):
+        base = {m: a for m, a in zip(MODULES, args[:N_MODULES])}
+        factors, theta, _ = _adapter_args(tier, scheme, args, N_MODULES)
+        ad = expand_adapters(tier, scheme, theta, factors)
+        out = []
+        for m in MODULES:
+            a, mm, bt = ad[m]
+            delta = jnp.einsum("lir,lrs,los->lio", a, mm, bt)
+            out.append(base[m] + delta)
+        return tuple(out)
+    return fn

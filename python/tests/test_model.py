@@ -1,0 +1,363 @@
+"""L2 model correctness: forward/prefill/decode consistency, adapter
+semantics (zero-init identity, merge == adapted forward), loss gradients
+(finite differences), and scheme bookkeeping (Table 1 formulas)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.configs import (MODULES, N_MODULES, TIERS, VOCAB_SIZE, Scheme)
+
+jax.config.update("jax_platform_name", "cpu")
+
+TIER = TIERS["nano"]
+
+
+def rand_tokens(rng, b, t):
+    return jnp.asarray(rng.integers(3, 56, (b, t)), jnp.int32)
+
+
+def make_factors(tier, r, seed=0, scale=0.3):
+    rng = np.random.default_rng(seed)
+    f = {}
+    for m in MODULES:
+        di, do = tier.module_dims(m)
+        f[f"us_{m}"] = jnp.asarray(rng.normal(0, scale, (tier.n_layers, di, r)), jnp.float32)
+        f[f"vf_{m}"] = jnp.asarray(rng.normal(0, scale, (tier.n_layers, do, r)), jnp.float32)
+    return f
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return M.init_weights(TIER, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Inference-plane consistency.
+# ---------------------------------------------------------------------------
+
+def test_prefill_matches_forward(weights):
+    rng = np.random.default_rng(1)
+    tokens = rand_tokens(rng, 3, 24)
+    plen = jnp.asarray([24, 10, 1], jnp.int32)
+    full = M.forward(TIER, weights, None, tokens)
+    logits, _ = M.prefill(TIER, weights, tokens, plen)
+    for b, p in enumerate([24, 10, 1]):
+        np.testing.assert_allclose(logits[b], full[b, p - 1], rtol=1e-4, atol=1e-4)
+
+
+def test_decode_chain_matches_forward(weights):
+    """Prefill then several decode steps == one full forward pass."""
+    rng = np.random.default_rng(2)
+    B, Tp, n_new = 2, 12, 6
+    prompt = rand_tokens(rng, B, Tp)
+    plen = jnp.asarray([Tp, 8], jnp.int32)
+    new_tokens = rng.integers(3, 56, (B, n_new)).astype(np.int32)
+
+    _, kv = M.prefill(TIER, weights, prompt, plen)
+    seqs = [list(np.asarray(prompt[b][: int(plen[b])])) for b in range(B)]
+    pos = np.asarray(plen).copy()
+    decode_logits = [[] for _ in range(B)]
+    for i in range(n_new):
+        tok = jnp.asarray(new_tokens[:, i])
+        logits, kv = M.decode_step(TIER, weights, kv, jnp.asarray(pos), tok)
+        for b in range(B):
+            seqs[b].append(int(new_tokens[b, i]))
+            decode_logits[b].append(np.asarray(logits[b]))
+        pos += 1
+
+    for b in range(B):
+        toks = jnp.asarray(seqs[b], jnp.int32)[None]
+        full = M.forward(TIER, weights, None, toks)[0]
+        for i in range(n_new):
+            t = int(plen[b]) + i
+            np.testing.assert_allclose(decode_logits[b][i], full[t], rtol=1e-3,
+                                       atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Adapter semantics.
+# ---------------------------------------------------------------------------
+
+SCHEMES = [
+    Scheme("tinylora", r=2, u=13, tie="all"),
+    Scheme("tinylora", r=2, u=4, tie="tiled", n_tie=7),
+    Scheme("tinylora", r=1, u=3, tie="structured", n_tie=2),
+    Scheme("lora_xs", r=2),
+    Scheme("lora", r=4),
+]
+
+
+@pytest.mark.parametrize("scheme", SCHEMES, ids=lambda s: s.tag())
+def test_zero_theta_is_base_model(weights, scheme):
+    rng = np.random.default_rng(3)
+    tokens = rand_tokens(rng, 2, 16)
+    factors = make_factors(TIER, scheme.r) if scheme.needs_factors() else None
+    theta = jnp.zeros(scheme.theta_size(TIER), jnp.float32)
+    # lora init has random A; zero theta still means zero delta because B = 0
+    ad = M.expand_adapters(TIER, scheme, theta, factors)
+    got = M.forward(TIER, weights, ad, tokens)
+    want = M.forward(TIER, weights, None, tokens)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES, ids=lambda s: s.tag())
+def test_merge_matches_adapted_forward(weights, scheme):
+    """Forward with merged weights == forward with live adapter (the paper's
+    merged-inference equivalence, Fig. 5's KL ~ 0 claim)."""
+    rng = np.random.default_rng(4)
+    tokens = rand_tokens(rng, 2, 16)
+    factors = make_factors(TIER, scheme.r) if scheme.needs_factors() else None
+    theta = jnp.asarray(rng.normal(0, 0.05, scheme.theta_size(TIER)), jnp.float32)
+
+    ad = M.expand_adapters(TIER, scheme, theta, factors)
+    live = M.forward(TIER, weights, ad, tokens)
+
+    merge = M.make_merge(TIER, scheme)
+    base = [weights[n] for n in M.ADAPTED_WEIGHT_NAMES]
+    fargs = [factors[n] for n in M.factor_names()] if factors else []
+    merged_mats = merge(*base, *fargs, theta)
+    w2 = dict(weights)
+    for n, mat in zip(M.ADAPTED_WEIGHT_NAMES, merged_mats):
+        w2[n] = mat
+    merged = M.forward(TIER, w2, None, tokens)
+    np.testing.assert_allclose(merged, live, rtol=2e-3, atol=2e-3)
+
+
+def test_tinylora_tying_reduces_distinct_codes(weights):
+    """All-tied scheme must produce identical R across modules."""
+    scheme = Scheme("tinylora", r=2, u=5, tie="all")
+    factors = make_factors(TIER, 2)
+    rng = np.random.default_rng(5)
+    theta = jnp.asarray(rng.normal(0, 1, scheme.theta_size(TIER)), jnp.float32)
+    v = theta.reshape(1, 5)
+    groups = np.asarray(scheme.groups(TIER))
+    assert (groups == 0).all()
+    # all modules read the same v; codes differ only through P
+    ad = M.expand_adapters(TIER, scheme, theta, factors)
+    for m in MODULES:
+        assert ad[m][1].shape == (TIER.n_layers, 2, 2)
+
+
+# ---------------------------------------------------------------------------
+# Loss gradients (finite differences through the full transformer).
+# ---------------------------------------------------------------------------
+
+def _grad_fd_check(loss_fn, theta, eps=1e-3, k=5, rtol=0.08):
+    g = jax.grad(loss_fn)(theta)
+    rng = np.random.default_rng(0)
+    idx = rng.choice(theta.shape[0], size=min(k, theta.shape[0]), replace=False)
+    for i in idx:
+        e = jnp.zeros_like(theta).at[i].set(eps)
+        fd = (loss_fn(theta + e) - loss_fn(theta - e)) / (2 * eps)
+        if abs(float(fd)) > 1e-4:
+            assert abs(float(g[i]) - float(fd)) <= rtol * abs(float(fd)) + 1e-4, (
+                f"idx {i}: analytic {float(g[i])} vs fd {float(fd)}")
+
+
+def test_grpo_grad_finite_diff(weights):
+    """The GRPO gradient stop-gradients the TIS weight w = min(ratio, c), so
+    the analytic gradient equals the FD gradient of the *surrogate* loss in
+    which w is frozen at theta0 (the standard policy-gradient surrogate)."""
+    scheme = Scheme("tinylora", r=2, u=13, tie="all")
+    factors = make_factors(TIER, 2)
+    rng = np.random.default_rng(6)
+    B, T = 2, 20
+    tokens = rand_tokens(rng, B, T)
+    mask = jnp.asarray(rng.integers(0, 2, (B, T - 1)), jnp.float32)
+    behavior = jnp.asarray(rng.normal(-2.0, 0.3, (B, T - 1)), jnp.float32)
+    adv = jnp.asarray([1.0, -0.5], jnp.float32)
+    theta0 = jnp.asarray(rng.normal(0, 0.02, scheme.theta_size(TIER)), jnp.float32)
+    clip_c = jnp.float32(5.0)
+
+    def logp_of(theta):
+        ad = M.expand_adapters(TIER, scheme, theta, factors)
+        logp, _ = M.token_logprobs(TIER, weights, ad, tokens)
+        return logp
+
+    w0 = jnp.minimum(jnp.exp(logp_of(theta0) - behavior), clip_c)
+    count = jnp.maximum(mask.sum(), 1.0)
+
+    def surrogate(theta):
+        return -(w0 * logp_of(theta) * adv[:, None] * mask).sum() / count
+
+    def grpo(theta):
+        ad = M.expand_adapters(TIER, scheme, theta, factors)
+        loss, _ = M.grpo_loss(TIER, weights, ad, tokens, mask, behavior, adv,
+                              clip_c, jnp.float32(0.0))
+        return loss
+
+    g = jax.grad(grpo)(theta0)
+    rng2 = np.random.default_rng(0)
+    eps = 1e-3
+    for i in rng2.choice(theta0.shape[0], size=5, replace=False):
+        e = jnp.zeros_like(theta0).at[i].set(eps)
+        fd = (surrogate(theta0 + e) - surrogate(theta0 - e)) / (2 * eps)
+        if abs(float(fd)) > 1e-4:
+            assert abs(float(g[i]) - float(fd)) <= 0.08 * abs(float(fd)) + 1e-4
+
+
+def test_sft_grad_finite_diff(weights):
+    scheme = Scheme("lora_xs", r=2)
+    factors = make_factors(TIER, 2)
+    rng = np.random.default_rng(7)
+    B, T = 2, 20
+    tokens = rand_tokens(rng, B, T)
+    mask = jnp.asarray(rng.integers(0, 2, (B, T - 1)), jnp.float32)
+    theta0 = jnp.asarray(rng.normal(0, 0.02, scheme.theta_size(TIER)), jnp.float32)
+
+    def loss_fn(theta):
+        ad = M.expand_adapters(TIER, scheme, theta, factors)
+        loss, _ = M.sft_loss(TIER, weights, ad, tokens, mask)
+        return loss
+
+    _grad_fd_check(loss_fn, theta0)
+
+
+def test_grpo_direction_increases_rewarded_logprob(weights):
+    """One ascent step along -grad must raise log-prob of positively-advantaged
+    sequences: the sign convention end-to-end."""
+    scheme = Scheme("tinylora", r=2, u=13, tie="all")
+    factors = make_factors(TIER, 2)
+    rng = np.random.default_rng(8)
+    B, T = 2, 16
+    tokens = rand_tokens(rng, B, T)
+    mask = jnp.ones((B, T - 1), jnp.float32)
+    adv = jnp.asarray([1.0, 0.0], jnp.float32)
+    theta = jnp.zeros(scheme.theta_size(TIER), jnp.float32)
+
+    def seq_logp(theta):
+        ad = M.expand_adapters(TIER, scheme, theta, factors)
+        logp, _ = M.token_logprobs(TIER, weights, ad, tokens)
+        return (logp[0] * mask[0]).sum()
+
+    def loss_fn(theta):
+        ad = M.expand_adapters(TIER, scheme, theta, factors)
+        behavior, _ = M.token_logprobs(TIER, weights, None, tokens)
+        loss, _ = M.grpo_loss(TIER, weights, ad, tokens, mask,
+                              jax.lax.stop_gradient(behavior), adv,
+                              jnp.float32(5.0), jnp.float32(0.0))
+        return loss
+
+    g = jax.grad(loss_fn)(theta)
+    before = seq_logp(theta)
+    after = seq_logp(theta - 0.05 * g / (jnp.linalg.norm(g) + 1e-9))
+    assert float(after) > float(before)
+
+
+# ---------------------------------------------------------------------------
+# Scheme bookkeeping — the paper's Table 1 parameter-count formulas.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(u=st.integers(1, 64), tie=st.sampled_from(["all", "none", "tiled", "structured"]),
+       n_tie=st.integers(1, 8), tier=st.sampled_from(list(TIERS)))
+def test_table1_tinylora_count(u, tie, n_tie, tier):
+    t = TIERS[tier]
+    s = Scheme("tinylora", r=2, u=u, tie=tie, n_tie=n_tie)
+    n_modules = t.n_layers * N_MODULES
+    got = s.theta_size(t)
+    if tie == "all":
+        assert got == u  # Table 1: down to u (=1) parameters
+    elif tie == "none":
+        assert got == n_modules * u  # O(n m u)
+    else:
+        assert got == s.n_groups(t) * u
+        assert got <= n_modules * u
+        # every module belongs to exactly one group
+        gs = s.groups(t)
+        assert len(gs) == n_modules
+        assert set(gs) == set(range(max(gs) + 1))
+
+
+@settings(max_examples=20, deadline=None)
+@given(r=st.integers(1, 8), tier=st.sampled_from(list(TIERS)))
+def test_table1_lora_xs_count(r, tier):
+    t = TIERS[tier]
+    assert Scheme("lora_xs", r=r).theta_size(t) == t.n_layers * N_MODULES * r * r
+
+
+@settings(max_examples=20, deadline=None)
+@given(r=st.integers(1, 8), tier=st.sampled_from(list(TIERS)))
+def test_table1_lora_count(r, tier):
+    t = TIERS[tier]
+    want = sum(t.n_layers * r * (di + do)
+               for di, do in (t.module_dims(m) for m in MODULES))
+    assert Scheme("lora", r=r).theta_size(t) == want
+
+
+def test_table1_full_count():
+    for t in TIERS.values():
+        assert Scheme("full").theta_size(t) == t.n_params()
+
+
+def test_theta_segments_are_contiguous():
+    for scheme in SCHEMES + [Scheme("full")]:
+        segs = scheme.theta_segments(TIER)
+        off = 0
+        for s in segs:
+            assert s["offset"] == off
+            off += s["len"]
+        assert off == scheme.theta_size(TIER)
+
+
+# ---------------------------------------------------------------------------
+# Fused generation (the in-HLO rollout loop).
+# ---------------------------------------------------------------------------
+
+def test_generate_greedy_matches_manual_decode(weights):
+    """generate(temp=0) must equal argmax decoding via prefill+decode_step."""
+    rng = np.random.default_rng(20)
+    B, S = 2, 6
+    tokens = rand_tokens(rng, B, TIER.t_prefill)
+    plen = jnp.asarray([12, 20], jnp.int32)
+    uniforms = jnp.asarray(rng.uniform(size=(B, S)), jnp.float32)
+    out_toks, out_lps = M.generate(TIER, weights, tokens, plen, uniforms,
+                                   jnp.float32(0.0))
+    # manual greedy
+    logits, kv = M.prefill(TIER, weights, tokens, plen)
+    pos = plen
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    manual = [tok]
+    for i in range(S - 1):
+        logits, kv = M.decode_step(TIER, weights, kv, pos, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        manual.append(tok)
+        pos = pos + 1
+    manual = jnp.stack(manual, 1)
+    np.testing.assert_array_equal(np.asarray(out_toks), np.asarray(manual))
+    # greedy behavior logp is defined as 0
+    np.testing.assert_allclose(np.asarray(out_lps), 0.0)
+
+
+def test_sample_token_distribution():
+    """Inverse-CDF sampling matches softmax probabilities."""
+    rng = np.random.default_rng(21)
+    logits = jnp.asarray([[2.0, 0.0, -1.0, 1.0] + [-1e9] * 60], jnp.float32)
+    probs = np.asarray(jax.nn.softmax(logits[0]))
+    n = 4000
+    counts = np.zeros(64)
+    us = rng.uniform(size=n).astype(np.float32)
+    for u in us:
+        tok, lp = M.sample_token(logits, jnp.asarray([u]), jnp.float32(1.0))
+        counts[int(tok[0])] += 1
+        # reported logp must match the sampling distribution
+        assert abs(float(lp[0]) - float(jnp.log(probs[int(tok[0])]))) < 1e-4
+    freq = counts / n
+    np.testing.assert_allclose(freq[:4], probs[:4], atol=0.03)
+
+
+def test_generate_respects_temperature():
+    """Higher temperature -> more diverse sampled tokens."""
+    w = M.init_weights(TIER, seed=0)
+    rng = np.random.default_rng(22)
+    B, S = 4, 16
+    tokens = rand_tokens(rng, B, TIER.t_prefill)
+    plen = jnp.full((B,), 16, jnp.int32)
+    uniforms = jnp.asarray(rng.uniform(size=(B, S)), jnp.float32)
+    cold, _ = M.generate(TIER, w, tokens, plen, uniforms, jnp.float32(0.05))
+    hot, _ = M.generate(TIER, w, tokens, plen, uniforms, jnp.float32(3.0))
+    assert len(np.unique(np.asarray(hot))) >= len(np.unique(np.asarray(cold)))

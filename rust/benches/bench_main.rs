@@ -1,0 +1,205 @@
+//! Benchmark harness (`cargo bench`) — criterion is unavailable in the
+//! offline image, so this is a self-contained harness: warmup + N timed
+//! iterations, reporting mean/min/max per benchmark.
+//!
+//! Covers the runtime hot paths behind every figure/table driver:
+//! prefill/decode/generate dispatch latency and rollout throughput, the
+//! GRPO gradient + merge step per scheme, and the pure-rust substrates
+//! (SVD, packing, task generation, verification, batcher, advantage).
+
+use std::path::Path;
+
+use tinylora_rl::adapters::factors::FactorSet;
+use tinylora_rl::adapters::packing::{pack, unpack, Precision};
+use tinylora_rl::adapters::svd::truncated_svd;
+use tinylora_rl::coordinator::advantage::group_advantages;
+use tinylora_rl::coordinator::policy::{GrpoHp, Policy};
+use tinylora_rl::coordinator::rollout::RolloutEngine;
+use tinylora_rl::serving::{DynamicBatcher, Request};
+use tinylora_rl::tasks::corpus::{pretrain_batch, prompt_batch};
+use tinylora_rl::tasks::generator::SUITES;
+use tinylora_rl::tasks::verifier::reward;
+use tinylora_rl::tensor::{Arg, TensorI32};
+use tinylora_rl::tokenizer::Tokenizer;
+use tinylora_rl::util::{timer::time_iters, Pcg64};
+use tinylora_rl::weights::WeightSet;
+use tinylora_rl::Runtime;
+
+struct Bench {
+    rows: Vec<(String, f64, f64, f64, String)>,
+}
+
+impl Bench {
+    fn run<F: FnMut()>(&mut self, name: &str, iters: usize, note: &str, mut f: F) {
+        f(); // warmup
+        let (mean, min, max) = time_iters(iters, &mut f);
+        println!("{name:<44} mean {mean:>9.3} ms  (min {min:>9.3}, max {max:>9.3})  {note}");
+        self.rows.push((name.to_string(), mean, min, max, note.to_string()));
+    }
+}
+
+fn main() {
+    let mut b = Bench { rows: Vec::new() };
+    println!("== tinylora-rl benchmarks (1 CPU core, PJRT CPU backend) ==\n");
+
+    // ---------------- pure-rust substrates ----------------
+    let mut rng = Pcg64::new(1);
+    let tok = Tokenizer::new();
+
+    b.run("tasks/generate gsm8k-syn problem", 2000, "", || {
+        std::hint::black_box(SUITES[0].generate(&mut rng));
+    });
+    let p = SUITES[0].generate(&mut Pcg64::new(2));
+    b.run("tasks/verify response", 5000, "", || {
+        std::hint::black_box(reward(&p.gold, p.answer));
+    });
+    b.run("tokenizer/encode+decode 60 chars", 5000, "", || {
+        let ids = tok.encode(&p.prompt);
+        std::hint::black_box(tok.decode(&ids));
+    });
+    let w: Vec<f32> = Pcg64::new(3).normal_vec(64 * 128, 1.0);
+    b.run("svd/truncated r=2 64x128", 20, "subspace iteration", || {
+        std::hint::black_box(truncated_svd(&w, 64, 128, 2, 7));
+    });
+    let theta: Vec<f32> = Pcg64::new(4).normal_vec(4096, 0.1);
+    b.run("packing/pack+unpack 4096 bf16", 2000, "", || {
+        let bytes = pack(&theta, Precision::Bf16);
+        std::hint::black_box(unpack(&bytes, Precision::Bf16));
+    });
+    let rewards: Vec<f32> = (0..256).map(|i| (i % 3 == 0) as u8 as f32).collect();
+    b.run("advantage/256 rewards group=4", 5000, "", || {
+        std::hint::black_box(group_advantages(&rewards, 4));
+    });
+    b.run("batcher/push+drain 256 reqs 8 tenants", 200, "", || {
+        let mut batcher = DynamicBatcher::new(8, 0.1);
+        for i in 0..256u64 {
+            batcher.push(Request {
+                id: i,
+                adapter: format!("t{}", i % 8),
+                prompt: String::new(),
+                arrival: i as f64 * 0.01,
+            });
+        }
+        let mut n = 0;
+        while let Some(batch) = batcher.next_batch(1e9) {
+            n += batch.requests.len();
+        }
+        assert_eq!(n, 256);
+    });
+
+    // ---------------- PJRT runtime paths ----------------
+    if !Path::new("artifacts/manifest.json").exists() {
+        println!("\nartifacts not built — skipping runtime benches");
+        return;
+    }
+    let rt = Runtime::new(Path::new("artifacts")).expect("runtime");
+    let tier = rt.manifest.tier("micro").unwrap().clone();
+    let ckpt = Path::new("ckpts").join("micro.ckpt");
+    let weights = if ckpt.exists() {
+        WeightSet::load(&ckpt).unwrap()
+    } else {
+        WeightSet::init(&tier, 0)
+    };
+    let mut rng = Pcg64::new(5);
+
+    // compile timings (one-time cost per executable)
+    let t0 = std::time::Instant::now();
+    let gen_exe_name = rt.manifest.generate_exe("micro", rt.manifest.batch.roll).unwrap().name.clone();
+    rt.load(&gen_exe_name).unwrap();
+    println!("\ncompile generate_b32: {:.0} ms (one-time)", t0.elapsed().as_secs_f64() * 1e3);
+
+    let engine = RolloutEngine::new(&rt, "micro", rt.manifest.batch.roll).unwrap();
+    let problems: Vec<_> = (0..8).map(|_| SUITES[0].generate(&mut rng)).collect();
+    let pb = prompt_batch(&problems, &tok, 4, engine.t_prefill);
+
+    let mut roll = None;
+    b.run("rollout/generate b32 s64 (fused loop)", 5, "2048 tokens/call", || {
+        roll = Some(engine.rollout(&rt, &weights, &pb, &tok, 1.0, &mut rng).unwrap());
+    });
+    let roll = roll.unwrap();
+    b.run("rollout/train-batch assembly b32", 200, "", || {
+        std::hint::black_box(engine.train_batch(&pb, &roll, tier.t_train));
+    });
+
+    // per-step decode path (serving plane; per-token dispatch)
+    let prefill_exe = rt
+        .load(&rt.manifest.find("prefill", |e| e.fn_kind == "prefill" && e.tier == "micro" && e.batch == 8).unwrap().name)
+        .unwrap();
+    let decode_exe = rt
+        .load(&rt.manifest.find("decode", |e| e.fn_kind == "decode" && e.tier == "micro" && e.batch == 8).unwrap().name)
+        .unwrap();
+    let mut args: Vec<Arg> = weights.args();
+    args.push(Arg::I32(TensorI32::from_vec(&[8, tier.t_prefill], vec![3; 8 * tier.t_prefill])));
+    args.push(Arg::I32(TensorI32::from_vec(&[8], vec![10; 8])));
+    let mut kv = None;
+    b.run("serving/prefill b8 t64", 10, "", || {
+        let out = rt.run(&prefill_exe, &args).unwrap();
+        kv = Some(out.f32(1).unwrap());
+    });
+    let kv = kv.unwrap();
+    let mut dargs: Vec<Arg> = weights.args();
+    dargs.push(Arg::F32(kv));
+    dargs.push(Arg::I32(TensorI32::from_vec(&[8], vec![10; 8])));
+    dargs.push(Arg::I32(TensorI32::from_vec(&[8], vec![5; 8])));
+    b.run("serving/decode step b8 (tuple-literal I/O)", 10, "see §Perf note", || {
+        std::hint::black_box(rt.run(&decode_exe, &dargs).unwrap());
+    });
+
+    // gradient + merge per scheme (the training hot path)
+    for tag in ["tinylora_r2_u13_all", "xs_r4", "lora_r1", "full"] {
+        let policy =
+            Policy::new(&rt, "micro", tag, "grpo", weights.clone(), 0, Path::new("ckpts")).unwrap();
+        let batch = engine.train_batch(&pb, &roll, tier.t_train);
+        let hp = GrpoHp { clip_c: 4.0, kl_coef: 0.0 };
+        b.run(
+            &format!("grpo/grad b32 t128 {tag}"),
+            3,
+            &format!("{} params", policy.trainable_params()),
+            || {
+                std::hint::black_box(policy.grad(&rt, &batch, hp).unwrap());
+            },
+        );
+    }
+    let mut policy =
+        Policy::new(&rt, "micro", "tinylora_r2_u13_all", "grpo", weights.clone(), 0, Path::new("ckpts"))
+            .unwrap();
+    b.run("adapter/merge 13-param tinylora", 10, "", || {
+        policy.remerge(&rt).unwrap();
+    });
+
+    // factors (SVD over the whole model)
+    b.run("factors/full-model SVD r=2 (micro)", 3, "21 modules", || {
+        std::hint::black_box(FactorSet::compute(&tier, &weights, 2).unwrap());
+    });
+
+    // pretrain grad
+    let pre_exe = rt
+        .load(&rt.manifest.find("pretrain", |e| e.fn_kind == "pretrain" && e.tier == "micro").unwrap().name)
+        .unwrap();
+    let (tokens, mask) =
+        pretrain_batch(&SUITES[0], &tok, &mut rng, rt.manifest.batch.train, tier.t_train);
+    let mut pargs: Vec<Arg> = weights.args();
+    pargs.push(Arg::I32(tokens));
+    pargs.push(Arg::F32(mask));
+    b.run("pretrain/grad b32 t128 (full params)", 3, "", || {
+        std::hint::black_box(rt.run(&pre_exe, &pargs).unwrap());
+    });
+
+    // throughput summary
+    let gen_ms = b.rows.iter().find(|r| r.0.starts_with("rollout/generate")).unwrap().1;
+    println!(
+        "\nrollout throughput: {:.0} tokens/s (32 seqs x 64 tokens / {:.0} ms)",
+        32.0 * 64.0 / (gen_ms / 1e3),
+        gen_ms
+    );
+    let grad_ms = b
+        .rows
+        .iter()
+        .find(|r| r.0.contains("tinylora_r2_u13_all") && r.0.starts_with("grpo"))
+        .unwrap()
+        .1;
+    println!(
+        "GRPO step budget (13 params): rollout {:.0} ms + grad {:.0} ms = {:.0} ms/step",
+        gen_ms, grad_ms, gen_ms + grad_ms
+    );
+}

@@ -1,0 +1,212 @@
+//! Table 1 — trainable-parameter formulas per method.
+//!
+//! These are the paper's closed forms, computed from a tier's geometry.
+//! An integration test asserts they agree with the manifest's `theta_size`
+//! for every lowered artifact (python computes sizes independently).
+
+use crate::manifest::TierInfo;
+
+pub const N_MODULES: usize = 7; // q,k,v,o,up,gate,down
+
+/// Full finetuning: every parameter.
+pub fn full(tier: &TierInfo) -> usize {
+    tier.n_params
+}
+
+/// LoRA at rank r over all adapted modules: sum of r*(d_in + d_out).
+pub fn lora(tier: &TierInfo, r: usize) -> usize {
+    tier.module_dims
+        .values()
+        .map(|&(di, dd)| tier.n_layers * r * (di + dd))
+        .sum()
+}
+
+/// LoRA-XS: one r x r code per module -> n * m * r^2.
+pub fn lora_xs(tier: &TierInfo, r: usize) -> usize {
+    tier.n_layers * N_MODULES * r * r
+}
+
+/// TinyLoRA: u per *group*; groups determined by the tying plan.
+pub fn tinylora(tier: &TierInfo, u: usize, tie: &str, n_tie: usize) -> usize {
+    n_groups(tier, tie, n_tie) * u
+}
+
+/// Number of distinct trainable vectors under a tying plan (mirrors
+/// `Scheme.groups` in python/compile/configs.py).
+pub fn n_groups(tier: &TierInfo, tie: &str, n_tie: usize) -> usize {
+    let n = tier.n_layers * N_MODULES;
+    match tie {
+        "all" => 1,
+        "none" => n,
+        "tiled" => n.div_ceil(n_tie),
+        "structured" => {
+            let per_type = tier.n_layers.div_ceil(n_tie);
+            N_MODULES * per_type
+        }
+        other => panic!("unknown tie plan {other}"),
+    }
+}
+
+/// Flat module index (l * 7 + m) -> group id; mirror of python's
+/// `Scheme.groups` (cross-checked against manifest `groups` in tests).
+pub fn group_assignment(tier: &TierInfo, tie: &str, n_tie: usize) -> Vec<usize> {
+    let n = tier.n_layers * N_MODULES;
+    match tie {
+        "all" => vec![0; n],
+        "none" => (0..n).collect(),
+        "tiled" => (0..n).map(|i| i / n_tie).collect(),
+        "structured" => {
+            let per_type = tier.n_layers.div_ceil(n_tie);
+            let mut out = Vec::with_capacity(n);
+            for l in 0..tier.n_layers {
+                for m in 0..N_MODULES {
+                    out.push(m * per_type + l / n_tie);
+                }
+            }
+            out
+        }
+        other => panic!("unknown tie plan {other}"),
+    }
+}
+
+/// Render the paper's Table 1 for a tier (used by the `info` CLI command).
+pub fn table1(tier: &TierInfo) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "Table 1 — trainable parameters ({}: d={}, L={}, m={})\n",
+        tier.name, tier.d, tier.n_layers, N_MODULES
+    ));
+    s.push_str(&format!("  {:<22} {:>12}\n", "method", "params"));
+    s.push_str(&format!("  {:<22} {:>12}\n", "full FT", full(tier)));
+    for r in [1, 8, 64] {
+        s.push_str(&format!("  {:<22} {:>12}\n", format!("LoRA r={r}"), lora(tier, r)));
+    }
+    for r in [1, 2, 8] {
+        s.push_str(&format!("  {:<22} {:>12}\n", format!("LoRA-XS r={r}"), lora_xs(tier, r)));
+    }
+    for (u, tie, n_tie, label) in [
+        (1usize, "none", 1usize, "TinyLoRA u=1 untied"),
+        (13, "all", 1, "TinyLoRA u=13 tied"),
+        (1, "all", 1, "TinyLoRA u=1 tied"),
+    ] {
+        s.push_str(&format!(
+            "  {:<22} {:>12}\n",
+            label,
+            tinylora(tier, u, tie, n_tie)
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::TierInfo;
+    use crate::testing::check;
+
+    fn tier(l: usize, d: usize, f: usize) -> TierInfo {
+        let mut module_dims = std::collections::BTreeMap::new();
+        for m in ["q", "k", "v", "o"] {
+            module_dims.insert(m.to_string(), (d, d));
+        }
+        module_dims.insert("up".into(), (d, f));
+        module_dims.insert("gate".into(), (d, f));
+        module_dims.insert("down".into(), (f, d));
+        TierInfo {
+            name: "t".into(),
+            d,
+            n_layers: l,
+            n_heads: 2,
+            f,
+            t_max: 8,
+            t_prefill: 4,
+            t_train: 8,
+            head_dim: d / 2,
+            n_params: 12345,
+            weights: vec![],
+            module_dims,
+        }
+    }
+
+    #[test]
+    fn minimums_match_paper_table1() {
+        let t = tier(3, 64, 128);
+        // TinyLoRA minimum is ONE parameter (full tying, u=1)
+        assert_eq!(tinylora(&t, 1, "all", 1), 1);
+        // LoRA-XS minimum is one per module: n*m
+        assert_eq!(lora_xs(&t, 1), 3 * 7);
+        // LoRA r=1 is sum over modules of (d_in + d_out)
+        assert_eq!(lora(&t, 1), 3 * (4 * 128 + 2 * 192 + 192));
+    }
+
+    #[test]
+    fn the_13_param_config() {
+        let t = tier(3, 64, 128);
+        assert_eq!(tinylora(&t, 13, "all", 1), 13);
+    }
+
+    #[test]
+    fn group_assignment_properties() {
+        check("groups partition modules", 200, |rng| {
+            let l = rng.range_i64(1, 8) as usize;
+            let t = tier(l, 32, 64);
+            let tie = *rng.choice(&["all", "none", "tiled", "structured"]);
+            let n_tie = rng.range_i64(1, 9) as usize;
+            let gs = group_assignment(&t, tie, n_tie);
+            if gs.len() != l * N_MODULES {
+                return Err("wrong length".into());
+            }
+            let max = *gs.iter().max().unwrap();
+            if max + 1 != n_groups(&t, tie, n_tie) {
+                return Err(format!("max {} vs n_groups {}", max, n_groups(&t, tie, n_tie)));
+            }
+            // group ids must be contiguous 0..=max
+            let mut seen = vec![false; max + 1];
+            for &g in &gs {
+                seen[g] = true;
+            }
+            if !seen.iter().all(|&b| b) {
+                return Err("non-contiguous group ids".into());
+            }
+            // tying monotonicity: larger n_tie never increases group count
+            if tie == "tiled" || tie == "structured" {
+                let g2 = n_groups(&t, tie, n_tie + 1);
+                if g2 > n_groups(&t, tie, n_tie) {
+                    return Err("n_tie+1 increased groups".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn structured_shares_within_type_only() {
+        let t = tier(4, 32, 64);
+        let gs = group_assignment(&t, "structured", 2);
+        // modules of different types never share a group
+        for l1 in 0..4 {
+            for l2 in 0..4 {
+                for m1 in 0..N_MODULES {
+                    for m2 in 0..N_MODULES {
+                        if m1 != m2 {
+                            assert_ne!(gs[l1 * 7 + m1], gs[l2 * 7 + m2]);
+                        }
+                    }
+                }
+            }
+        }
+        // layers 0,1 share; 2,3 share; 0,2 do not
+        assert_eq!(gs[0], gs[7]);
+        assert_ne!(gs[0], gs[14]);
+    }
+
+    #[test]
+    fn tiled_shares_across_types() {
+        let t = tier(2, 32, 64);
+        let gs = group_assignment(&t, "tiled", 7);
+        // first 7 modules (layer 0) share one group regardless of type
+        assert!(gs[..7].iter().all(|&g| g == gs[0]));
+        assert!(gs[7..14].iter().all(|&g| g == gs[7]));
+        assert_ne!(gs[0], gs[7]);
+    }
+}

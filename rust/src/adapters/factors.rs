@@ -1,0 +1,139 @@
+//! Frozen SVD factor sets: per adapted module, the truncated-SVD factors
+//! (Us = U·Σ, Vf = V) of the *pretrained* weight, stacked over layers in the
+//! manifest's order (us_q, vf_q, us_k, vf_k, ...).  Computed once per
+//! (checkpoint, rank) and cached on disk next to the checkpoint.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::adapters::svd::truncated_svd;
+use crate::manifest::TierInfo;
+use crate::tensor::{Arg, TensorF32};
+use crate::util::fnv1a;
+use crate::weights::WeightSet;
+
+/// The seven adapted modules, in manifest order, with their weight-tensor names.
+pub const MODULES: [(&str, &str); 7] = [
+    ("q", "attn_q"),
+    ("k", "attn_k"),
+    ("v", "attn_v"),
+    ("o", "attn_o"),
+    ("up", "mlp_up"),
+    ("gate", "mlp_gate"),
+    ("down", "mlp_down"),
+];
+
+#[derive(Clone)]
+pub struct FactorSet {
+    pub r: usize,
+    /// interleaved per module: [us_q, vf_q, us_k, vf_k, ...]
+    pub tensors: Vec<TensorF32>,
+}
+
+impl FactorSet {
+    /// Compute factors from pretrained weights at rank r.
+    pub fn compute(tier: &TierInfo, weights: &WeightSet, r: usize) -> Result<Self> {
+        let mut tensors = Vec::with_capacity(14);
+        for (mname, wname) in MODULES {
+            let w = weights.get(wname)?;
+            let &(d_in, d_out) = tier
+                .module_dims
+                .get(mname)
+                .ok_or_else(|| anyhow::anyhow!("no module dims for {mname}"))?;
+            if w.shape != vec![tier.n_layers, d_in, d_out] {
+                bail!("{wname}: unexpected shape {:?}", w.shape);
+            }
+            let mut us = TensorF32::zeros(&[tier.n_layers, d_in, r]);
+            let mut vf = TensorF32::zeros(&[tier.n_layers, d_out, r]);
+            for l in 0..tier.n_layers {
+                let mat = &w.data[l * d_in * d_out..(l + 1) * d_in * d_out];
+                let seed = fnv1a(format!("{}/{}/{}/{}", tier.name, mname, l, r).as_bytes());
+                let f = truncated_svd(mat, d_in, d_out, r, seed);
+                us.data[l * d_in * r..(l + 1) * d_in * r].copy_from_slice(&f.us);
+                vf.data[l * d_out * r..(l + 1) * d_out * r].copy_from_slice(&f.vf);
+            }
+            tensors.push(us);
+            tensors.push(vf);
+        }
+        Ok(Self { r, tensors })
+    }
+
+    /// Load from cache or compute + cache. Cache key includes a hash of the
+    /// adapted weights so stale factors are never reused.
+    pub fn cached(
+        tier: &TierInfo,
+        weights: &WeightSet,
+        r: usize,
+        cache_dir: &Path,
+    ) -> Result<Self> {
+        let mut h = 0u64;
+        for (_, wname) in MODULES {
+            let t = weights.get(wname)?;
+            let bytes = unsafe {
+                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+            };
+            h ^= fnv1a(bytes);
+        }
+        let path = cache_dir.join(format!("{}_r{}_{:016x}.factors", tier.name, r, h));
+        if path.exists() {
+            if let Ok(f) = Self::load(&path, tier, r) {
+                return Ok(f);
+            }
+        }
+        let f = Self::compute(tier, weights, r)?;
+        f.save(&path).ok(); // cache failure is not fatal
+        Ok(f)
+    }
+
+    fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = Vec::new();
+        for t in &self.tensors {
+            let bytes = unsafe {
+                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+            };
+            out.extend_from_slice(bytes);
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    fn load(path: &Path, tier: &TierInfo, r: usize) -> Result<Self> {
+        let bytes = std::fs::read(path)?;
+        let mut tensors = Vec::with_capacity(14);
+        let mut off = 0usize;
+        for (mname, _) in MODULES {
+            let &(d_in, d_out) = tier.module_dims.get(mname).unwrap();
+            for dim in [d_in, d_out] {
+                let shape = vec![tier.n_layers, dim, r];
+                let numel: usize = shape.iter().product();
+                let end = off + numel * 4;
+                if end > bytes.len() {
+                    bail!("factor cache truncated");
+                }
+                let mut data = vec![0f32; numel];
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        bytes[off..end].as_ptr(),
+                        data.as_mut_ptr() as *mut u8,
+                        numel * 4,
+                    );
+                }
+                tensors.push(TensorF32::from_vec(&shape, data));
+                off = end;
+            }
+        }
+        if off != bytes.len() {
+            bail!("factor cache has trailing bytes");
+        }
+        Ok(Self { r, tensors })
+    }
+
+    /// Factor tensors as runtime args (manifest order).
+    pub fn args(&self) -> Vec<Arg> {
+        self.tensors.iter().map(|t| Arg::F32(t.clone())).collect()
+    }
+}

@@ -1,0 +1,116 @@
+//! Adapter algebra: flat trainable vectors (theta), Table-1 parameter
+//! counting, byte-precision packing (Fig. 4), and the frozen SVD factors
+//! (Us, Vf) that TinyLoRA / LoRA-XS freeze.
+
+pub mod count;
+pub mod factors;
+pub mod packing;
+pub mod svd;
+
+use anyhow::{bail, Result};
+
+use crate::manifest::{ExeInfo, ThetaSegment};
+use crate::util::Pcg64;
+
+/// A flat trainable vector plus its segment table (from the manifest).
+#[derive(Clone, Debug)]
+pub struct Theta {
+    pub data: Vec<f32>,
+    pub segments: Vec<ThetaSegment>,
+}
+
+impl Theta {
+    /// Initialize from an executable's theta segment table: zeros / normal
+    /// per segment (LoRA A is random, B zero; tinylora/lora-xs start at 0 so
+    /// every scheme starts exactly at the base model).
+    pub fn init(exe: &ExeInfo, seed: u64) -> Result<Self> {
+        let Some(size) = exe.theta_size else {
+            bail!("{} has no theta (full-FT scheme?)", exe.name);
+        };
+        let mut rng = Pcg64::with_stream(seed, 0x7468657461);
+        let mut data = vec![0.0f32; size];
+        for seg in &exe.theta_segments {
+            match seg.init.kind.as_str() {
+                "zeros" => {}
+                "normal" => {
+                    for x in &mut data[seg.offset..seg.offset + seg.len] {
+                        *x = rng.normal() * seg.init.std;
+                    }
+                }
+                "from_checkpoint" => bail!("full scheme theta comes from the weight set"),
+                other => bail!("unknown init {other}"),
+            }
+        }
+        Ok(Self { data, segments: exe.theta_segments.clone() })
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Bytes of one update at a given storage precision (paper's Fig. 1/4
+    /// x-axis: update *size*).
+    pub fn update_bytes(&self, precision: packing::Precision) -> usize {
+        self.len() * precision.bytes()
+    }
+
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{ArgSpec, DType, InitSpec};
+
+    fn exe_with_segments(segs: Vec<ThetaSegment>) -> ExeInfo {
+        let size = segs.iter().map(|s| s.len).sum();
+        ExeInfo {
+            name: "test".into(),
+            file: String::new(),
+            fn_kind: "grpo".into(),
+            tier: "nano".into(),
+            batch: 1,
+            seq: 8,
+            use_pallas: false,
+            inputs: vec![ArgSpec { name: "x".into(), dtype: DType::F32, shape: vec![1] }],
+            outputs: vec![],
+            scheme: None,
+            scheme_tag: None,
+            theta_size: Some(size),
+            theta_segments: segs,
+            groups: vec![],
+        }
+    }
+
+    #[test]
+    fn init_zeros_and_normal() {
+        let exe = exe_with_segments(vec![
+            ThetaSegment {
+                name: "v".into(),
+                shape: vec![4],
+                offset: 0,
+                len: 4,
+                init: InitSpec { kind: "zeros".into(), std: 0.0 },
+            },
+            ThetaSegment {
+                name: "a".into(),
+                shape: vec![6],
+                offset: 4,
+                len: 6,
+                init: InitSpec { kind: "normal".into(), std: 0.1 },
+            },
+        ]);
+        let th = Theta::init(&exe, 1).unwrap();
+        assert_eq!(th.len(), 10);
+        assert!(th.data[..4].iter().all(|&x| x == 0.0));
+        assert!(th.data[4..].iter().any(|&x| x != 0.0));
+        // deterministic
+        assert_eq!(th.data, Theta::init(&exe, 1).unwrap().data);
+    }
+}

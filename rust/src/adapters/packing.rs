@@ -1,0 +1,249 @@
+//! Byte-precision packing of adapter updates (paper §6.5, Fig. 4).
+//!
+//! The experiment: when the constraint is the update size in *bytes* (e.g.
+//! communicating deltas in distributed training), which precision wins?
+//! We simulate storage/communication by quantize→dequantize round-trips:
+//! the optimizer state stays f32, but the *applied/communicated* update
+//! passes through the chosen precision.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    Bf16,
+    F16,
+}
+
+impl Precision {
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::Bf16 | Precision::F16 => 2,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f32" | "fp32" => Some(Precision::F32),
+            "bf16" => Some(Precision::Bf16),
+            "f16" | "fp16" => Some(Precision::F16),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "fp32",
+            Precision::Bf16 => "bf16",
+            Precision::F16 => "fp16",
+        }
+    }
+}
+
+/// f32 -> bf16 bits (round-to-nearest-even on the dropped mantissa).
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7fff + lsb);
+    (rounded >> 16) as u16
+}
+
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// f32 -> IEEE binary16 bits (round-to-nearest-even, with denormal and
+/// overflow handling).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x7f_ffff;
+
+    if exp == 255 {
+        // inf / nan
+        return sign | 0x7c00 | if mant != 0 { 0x200 } else { 0 };
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // normal range
+        let half_exp = ((unbiased + 15) as u16) << 10;
+        let half_mant = (mant >> 13) as u16;
+        let rem = mant & 0x1fff;
+        let mut h = sign | half_exp | half_mant;
+        if rem > 0x1000 || (rem == 0x1000 && (half_mant & 1) == 1) {
+            h = h.wrapping_add(1); // may carry into the exponent — correct
+        }
+        h
+    } else if unbiased >= -24 {
+        // denormal: value = mant_full * 2^(unbiased-23); half ulp = 2^-24,
+        // so half_mant = mant_full >> (-unbiased - 1)
+        let shift = (-unbiased - 1) as u32; // 14..23
+        let mant_full = mant | 0x80_0000;
+        let half_mant = (mant_full >> shift) as u16;
+        let rem = mant_full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut h = sign | half_mant;
+        if rem > half || (rem == half && (half_mant & 1) == 1) {
+            h = h.wrapping_add(1);
+        }
+        h
+    } else {
+        sign // underflow -> 0
+    }
+}
+
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // denormal: normalize (value = mant * 2^-24; after k left-shifts
+            // the leading bit sits at 0x400 and the exponent is -14 - k)
+            let mut e = 0i32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3ff;
+            sign | (((112 + e + 1) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Quantize a vector through `precision` and back (identity for f32).
+pub fn roundtrip(xs: &[f32], precision: Precision) -> Vec<f32> {
+    match precision {
+        Precision::F32 => xs.to_vec(),
+        Precision::Bf16 => xs.iter().map(|&x| bf16_bits_to_f32(f32_to_bf16_bits(x))).collect(),
+        Precision::F16 => xs.iter().map(|&x| f16_bits_to_f32(f32_to_f16_bits(x))).collect(),
+    }
+}
+
+/// Serialize to the wire format (what the paper counts as "update bytes").
+pub fn pack(xs: &[f32], precision: Precision) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * precision.bytes());
+    match precision {
+        Precision::F32 => {
+            for &x in xs {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Precision::Bf16 => {
+            for &x in xs {
+                out.extend_from_slice(&f32_to_bf16_bits(x).to_le_bytes());
+            }
+        }
+        Precision::F16 => {
+            for &x in xs {
+                out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+pub fn unpack(bytes: &[u8], precision: Precision) -> Vec<f32> {
+    match precision {
+        Precision::F32 => bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+        Precision::Bf16 => bytes
+            .chunks_exact(2)
+            .map(|c| bf16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+            .collect(),
+        Precision::F16 => bytes
+            .chunks_exact(2)
+            .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn f32_roundtrip_is_identity() {
+        let xs = [1.5, -2.25, 1e-8, 3e8];
+        assert_eq!(roundtrip(&xs, Precision::F32), xs.to_vec());
+    }
+
+    #[test]
+    fn bf16_known_values() {
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(1.0)), 1.0);
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(-2.0)), -2.0);
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(0.0)), 0.0);
+        // bf16 keeps f32 range
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(3e38)).is_finite());
+    }
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1.0)), 1.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-0.5)), -0.5);
+        assert_eq!(f16_bits_to_f32(0x3c00), 1.0);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // f16 max
+        assert_eq!(f32_to_f16_bits(1e6), 0x7c00); // overflow -> inf
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn relative_error_bounds() {
+        check("quantization error bounds", 300, |rng| {
+            let x = rng.normal() * 10f32.powi(rng.range_i64(-3, 3) as i32);
+            let bf = bf16_bits_to_f32(f32_to_bf16_bits(x));
+            let fh = f16_bits_to_f32(f32_to_f16_bits(x));
+            // bf16: 8 mantissa bits -> rel err <= 2^-8; f16: 11 bits, but
+            // denormals below ~6e-5 lose precision gradually.
+            if x.abs() > 1e-30 && (bf - x).abs() / x.abs() > 1.0 / 256.0 {
+                return Err(format!("bf16 err too big for {x}"));
+            }
+            if x.abs() > 1e-3 && (fh - x).abs() / x.abs() > 1.0 / 1024.0 {
+                return Err(format!("f16 err too big for {x}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        check("pack/unpack", 100, |rng| {
+            let n = rng.below(50) as usize + 1;
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            for p in [Precision::F32, Precision::Bf16, Precision::F16] {
+                let bytes = pack(&xs, p);
+                if bytes.len() != n * p.bytes() {
+                    return Err("wrong byte count".into());
+                }
+                let back = unpack(&bytes, p);
+                let direct = roundtrip(&xs, p);
+                if back != direct {
+                    return Err(format!("{p:?} mismatch"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn f16_denormals_roundtrip() {
+        for x in [6e-5f32, 1e-5, 6e-8, -3e-6] {
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert!((y - x).abs() <= 6e-8 + x.abs() * 0.01, "{x} -> {y}");
+        }
+    }
+}

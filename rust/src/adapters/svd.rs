@@ -1,0 +1,318 @@
+//! Truncated SVD via randomized subspace iteration — the substrate that
+//! produces TinyLoRA / LoRA-XS's frozen factors (Us = U·Σ, Vf = V) from the
+//! pretrained weights.  No LAPACK in the image, so this is built from
+//! scratch: power iteration for the range, then a Jacobi eigensolver on the
+//! small projected Gram matrix.
+//!
+//! Matrices are row-major flat `Vec<f32>`.
+
+use crate::util::Pcg64;
+
+/// Result of `truncated_svd`: w ≈ us · vf^T with us = U·Σ [m,r], vf = V [n,r].
+pub struct SvdFactors {
+    pub us: Vec<f32>, // [m, r]
+    pub vf: Vec<f32>, // [n, r]
+    pub singular_values: Vec<f32>,
+}
+
+/// y[m,k] = a[m,n] * b[n,k]
+fn matmul(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; m * k];
+    for i in 0..m {
+        for l in 0..n {
+            let av = a[i * n + l];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[l * k..(l + 1) * k];
+            let yrow = &mut y[i * k..(i + 1) * k];
+            for j in 0..k {
+                yrow[j] += av * brow[j];
+            }
+        }
+    }
+    y
+}
+
+/// y[n,k] = a^T[n,m] * b[m,k] where a is [m,n]
+fn matmul_tn(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; n * k];
+    for l in 0..m {
+        let arow = &a[l * n..(l + 1) * n];
+        let brow = &b[l * k..(l + 1) * k];
+        for i in 0..n {
+            let av = arow[i];
+            if av == 0.0 {
+                continue;
+            }
+            let yrow = &mut y[i * k..(i + 1) * k];
+            for j in 0..k {
+                yrow[j] += av * brow[j];
+            }
+        }
+    }
+    y
+}
+
+/// Orthonormalize the columns of y [m, q] in place: modified Gram-Schmidt
+/// with re-orthogonalization ("twice is enough", Kahan) — a single pass in
+/// f32 loses orthogonality catastrophically when the sketch hits a
+/// rank-deficient W and later columns become near-dependent.
+fn orthonormalize(y: &mut [f32], m: usize, q: usize) {
+    for j in 0..q {
+        for _pass in 0..2 {
+            for i in 0..j {
+                let mut dot = 0.0f32;
+                for row in 0..m {
+                    dot += y[row * q + i] * y[row * q + j];
+                }
+                for row in 0..m {
+                    y[row * q + j] -= dot * y[row * q + i];
+                }
+            }
+        }
+        let mut norm = 0.0f32;
+        for row in 0..m {
+            norm += y[row * q + j] * y[row * q + j];
+        }
+        let norm = norm.sqrt().max(1e-12);
+        for row in 0..m {
+            y[row * q + j] /= norm;
+        }
+    }
+}
+
+/// Cyclic Jacobi eigendecomposition of a small symmetric matrix s [q, q].
+/// Returns (eigenvalues desc, eigenvectors as columns of v [q, q]).
+pub fn jacobi_eigh(s: &[f32], q: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut a: Vec<f64> = s.iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; q * q];
+    for i in 0..q {
+        v[i * q + i] = 1.0;
+    }
+    for _sweep in 0..60 {
+        let mut off = 0.0f64;
+        for p in 0..q {
+            for r in (p + 1)..q {
+                off += a[p * q + r] * a[p * q + r];
+            }
+        }
+        if off < 1e-22 {
+            break;
+        }
+        for p in 0..q {
+            for r in (p + 1)..q {
+                let apq = a[p * q + r];
+                if apq.abs() < 1e-30 {
+                    continue;
+                }
+                // classic symmetric Jacobi rotation zeroing a[p][r]
+                let app = a[p * q + p];
+                let aqq = a[r * q + r];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let sn = t * c;
+                a[p * q + p] = app - t * apq;
+                a[r * q + r] = aqq + t * apq;
+                a[p * q + r] = 0.0;
+                a[r * q + p] = 0.0;
+                for k in 0..q {
+                    if k == p || k == r {
+                        continue;
+                    }
+                    let akp = a[k * q + p];
+                    let akq = a[k * q + r];
+                    a[k * q + p] = c * akp - sn * akq;
+                    a[p * q + k] = a[k * q + p];
+                    a[k * q + r] = sn * akp + c * akq;
+                    a[r * q + k] = a[k * q + r];
+                }
+                for k in 0..q {
+                    let vkp = v[k * q + p];
+                    let vkq = v[k * q + r];
+                    v[k * q + p] = c * vkp - sn * vkq;
+                    v[k * q + r] = sn * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut idx: Vec<usize> = (0..q).collect();
+    idx.sort_by(|&i, &j| a[j * q + j].partial_cmp(&a[i * q + i]).unwrap());
+    let evals: Vec<f32> = idx.iter().map(|&i| a[i * q + i].max(0.0) as f32).collect();
+    let mut evecs = vec![0.0f32; q * q];
+    for (new, &old) in idx.iter().enumerate() {
+        for k in 0..q {
+            evecs[k * q + new] = v[k * q + old] as f32;
+        }
+    }
+    (evals, evecs)
+}
+
+/// Randomized truncated SVD of w [m, n] to rank r.
+pub fn truncated_svd(w: &[f32], m: usize, n: usize, r: usize, seed: u64) -> SvdFactors {
+    assert_eq!(w.len(), m * n);
+    let r = r.min(m).min(n);
+    let oversample = 4.min(m.min(n) - r);
+    let q = r + oversample;
+    let iters = 6;
+
+    let mut rng = Pcg64::with_stream(seed, 0x737664);
+    // range finder: Y = W * G, then power iterations
+    let g = rng.normal_vec(n * q, 1.0);
+    let mut y = matmul(w, &g, m, n, q);
+    orthonormalize(&mut y, m, q);
+    for _ in 0..iters {
+        let mut z = matmul_tn(w, &y, m, n, q); // [n, q]
+        orthonormalize(&mut z, n, q);
+        y = matmul(w, &z, m, n, q); // [m, q]
+        orthonormalize(&mut y, m, q);
+    }
+    // b = Y^T W  [q, n]
+    let b = matmul_tn(&y, w, m, q, n);
+    // eigendecomposition of b b^T [q, q]
+    let mut bbt = vec![0.0f32; q * q];
+    for i in 0..q {
+        for j in 0..q {
+            let mut dot = 0.0f32;
+            for k in 0..n {
+                dot += b[i * n + k] * b[j * n + k];
+            }
+            bbt[i * q + j] = dot;
+        }
+    }
+    let (evals, u_small) = jacobi_eigh(&bbt, q);
+    let sv: Vec<f32> = evals.iter().take(r).map(|&e| e.sqrt()).collect();
+
+    // U = Y * U_small  [m, q] -> take r cols; us = U * diag(sv)
+    let u_full = matmul(&y, &u_small, m, q, q);
+    let mut us = vec![0.0f32; m * r];
+    for i in 0..m {
+        for j in 0..r {
+            us[i * r + j] = u_full[i * q + j] * sv[j];
+        }
+    }
+    // V^T = diag(1/sv) U_small^T B -> vf[n, r] = B^T U_small diag(1/sv)
+    let mut vf = vec![0.0f32; n * r];
+    for j in 0..r {
+        let inv = if sv[j] > 1e-8 { 1.0 / sv[j] } else { 0.0 };
+        for k in 0..n {
+            let mut dot = 0.0f32;
+            for i in 0..q {
+                dot += b[i * n + k] * u_small[i * q + j];
+            }
+            vf[k * r + j] = dot * inv;
+        }
+    }
+    SvdFactors { us, vf, singular_values: sv }
+}
+
+/// Frobenius norm of w - us vf^T (for tests / diagnostics).
+pub fn residual_fro(w: &[f32], us: &[f32], vf: &[f32], m: usize, n: usize, r: usize) -> f32 {
+    let mut acc = 0.0f64;
+    for i in 0..m {
+        for j in 0..n {
+            let mut rec = 0.0f32;
+            for k in 0..r {
+                rec += us[i * r + k] * vf[j * r + k];
+            }
+            let d = (w[i * n + j] - rec) as f64;
+            acc += d * d;
+        }
+    }
+    acc.sqrt() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    fn fro(w: &[f32]) -> f32 {
+        w.iter().map(|x| (x * x) as f64).sum::<f64>().sqrt() as f32
+    }
+
+    #[test]
+    fn exact_recovery_of_low_rank() {
+        check("svd recovers low-rank exactly", 20, |rng| {
+            let (m, n) = (rng.range_i64(6, 40) as usize, rng.range_i64(6, 40) as usize);
+            let true_r = rng.range_i64(1, 3) as usize;
+            // w = sum of true_r outer products
+            let mut w = vec![0.0f32; m * n];
+            for _ in 0..true_r {
+                let a = rng.normal_vec(m, 1.0);
+                let b = rng.normal_vec(n, 1.0);
+                for i in 0..m {
+                    for j in 0..n {
+                        w[i * n + j] += a[i] * b[j];
+                    }
+                }
+            }
+            let r = true_r + 1;
+            let f = truncated_svd(&w, m, n, r, 42);
+            let res = residual_fro(&w, &f.us, &f.vf, m, n, r.min(m).min(n));
+            if res > 1e-2 * fro(&w).max(1.0) {
+                return Err(format!("residual {res} vs |w| {}", fro(&w)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn singular_values_sorted_and_nonneg() {
+        let mut rng = Pcg64::new(1);
+        let w = rng.normal_vec(30 * 20, 1.0);
+        let f = truncated_svd(&w, 30, 20, 5, 7);
+        for pair in f.singular_values.windows(2) {
+            assert!(pair[0] >= pair[1] - 1e-4);
+        }
+        assert!(f.singular_values.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn residual_decreases_with_rank() {
+        let mut rng = Pcg64::new(2);
+        let (m, n) = (24, 16);
+        let w = rng.normal_vec(m * n, 1.0);
+        let mut prev = f32::INFINITY;
+        for r in [1, 2, 4, 8] {
+            let f = truncated_svd(&w, m, n, r, 3);
+            let res = residual_fro(&w, &f.us, &f.vf, m, n, r);
+            assert!(res <= prev + 1e-3, "rank {r}: {res} > {prev}");
+            prev = res;
+        }
+    }
+
+    #[test]
+    fn vf_columns_orthonormal() {
+        let mut rng = Pcg64::new(3);
+        let (m, n, r) = (20, 14, 4);
+        let w = rng.normal_vec(m * n, 1.0);
+        let f = truncated_svd(&w, m, n, r, 5);
+        for i in 0..r {
+            for j in 0..r {
+                let mut dot = 0.0f32;
+                for k in 0..n {
+                    dot += f.vf[k * r + i] * f.vf[k * r + j];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 2e-2, "v^T v [{i},{j}] = {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn near_optimal_on_random_matrix() {
+        // For an i.i.d. gaussian matrix, compare against the residual from
+        // re-running with a different sketch seed — both should agree to a
+        // few percent (randomized SVD with power iterations is near-exact).
+        let mut rng = Pcg64::new(4);
+        let (m, n, r) = (32, 24, 6);
+        let w = rng.normal_vec(m * n, 1.0);
+        let f1 = truncated_svd(&w, m, n, r, 1);
+        let f2 = truncated_svd(&w, m, n, r, 999);
+        let r1 = residual_fro(&w, &f1.us, &f1.vf, m, n, r);
+        let r2 = residual_fro(&w, &f2.us, &f2.vf, m, n, r);
+        assert!((r1 - r2).abs() / r1.max(1e-6) < 0.05, "{r1} vs {r2}");
+    }
+}

@@ -1,0 +1,165 @@
+//! Experiment configuration + a tiny CLI argument parser (clap is not
+//! available in the offline image).  Flags are `--key value` or `--flag`;
+//! positional args are collected in order.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let next_is_value = argv
+                    .get(i + 1)
+                    .map(|n| !n.starts_with("--") || n.parse::<f64>().is_ok())
+                    .unwrap_or(false);
+                if next_is_value {
+                    out.flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn req(&self, key: &str) -> Result<String> {
+        self.flags.get(key).cloned().with_context(|| format!("missing required --{key}"))
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?} is not an integer")),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?} is not an integer")),
+        }
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?} is not a number")),
+        }
+    }
+
+    pub fn f32_list(&self, key: &str, default: &[f32]) -> Result<Vec<f32>> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| x.trim().parse::<f32>().map_err(|e| anyhow::anyhow!("{e}")))
+                .collect(),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    pub fn str_list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.flags.get(key) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|x| x.trim().to_string()).collect(),
+        }
+    }
+}
+
+/// Standard directories used by all drivers, overridable via env/flags.
+#[derive(Clone, Debug)]
+pub struct Dirs {
+    pub artifacts: std::path::PathBuf,
+    pub ckpts: std::path::PathBuf,
+    pub results: std::path::PathBuf,
+}
+
+impl Dirs {
+    pub fn from_args(args: &Args) -> Self {
+        let art = args.str(
+            "artifacts",
+            &std::env::var("TINYLORA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+        );
+        Self {
+            artifacts: art.into(),
+            ckpts: args.str("ckpts", "ckpts").into(),
+            results: args.str("results", "results").into(),
+        }
+    }
+}
+
+/// Validate a scheme tag exists for a tier before spending time training.
+pub fn validate_scheme(manifest: &crate::manifest::Manifest, tier: &str, tag: &str, algo: &str) -> Result<()> {
+    if manifest.grad_exe(tier, algo, tag).is_err() {
+        let available: Vec<_> = manifest
+            .executables
+            .values()
+            .filter(|e| e.fn_kind == algo && e.tier == tier)
+            .filter_map(|e| e.scheme_tag.clone())
+            .collect();
+        bail!("no {algo} artifact for {tier}/{tag}; available: {available:?}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = parse(&["train", "--tier", "micro", "--echo", "--lr", "1e-3"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.str("tier", "x"), "micro");
+        assert!(a.bool("echo"));
+        assert_eq!(a.f32("lr", 0.0).unwrap(), 1e-3);
+        assert_eq!(a.usize("steps", 42).unwrap(), 42);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse(&["--x", "-3"]);
+        assert_eq!(a.f32("x", 0.0).unwrap(), -3.0);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--lrs", "1e-4,5e-4, 1e-3"]);
+        assert_eq!(a.f32_list("lrs", &[]).unwrap(), vec![1e-4, 5e-4, 1e-3]);
+        let b = parse(&["--tiers", "nano,micro"]);
+        assert_eq!(b.str_list("tiers", &["base"]), vec!["nano", "micro"]);
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["--lr", "abc"]);
+        assert!(a.f32("lr", 0.0).is_err());
+    }
+}

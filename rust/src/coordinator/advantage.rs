@@ -1,0 +1,92 @@
+//! Group-relative advantage estimation (the "GR" in GRPO).
+//!
+//! Rewards for the k samples of one prompt are normalised within the group:
+//! A_i = (r_i - mean(r)) / (std(r) + eps).  Degenerate groups (all same
+//! reward) get zero advantage — no gradient signal, exactly as in GRPO.
+
+use crate::util::{mean, std_dev};
+
+pub const ADV_EPS: f32 = 1e-4;
+
+/// rewards.len() must be a multiple of `group`; samples of one prompt are
+/// contiguous. Returns one advantage per sample.
+pub fn group_advantages(rewards: &[f32], group: usize) -> Vec<f32> {
+    assert!(group > 0 && rewards.len() % group == 0);
+    let mut adv = Vec::with_capacity(rewards.len());
+    for chunk in rewards.chunks(group) {
+        let m = mean(chunk);
+        let s = std_dev(chunk);
+        if s < ADV_EPS {
+            adv.extend(std::iter::repeat(0.0).take(group));
+        } else {
+            adv.extend(chunk.iter().map(|r| (r - m) / (s + ADV_EPS)));
+        }
+    }
+    adv
+}
+
+/// Fraction of groups that produce any learning signal (non-degenerate).
+pub fn frac_informative_groups(rewards: &[f32], group: usize) -> f32 {
+    let n = rewards.len() / group;
+    if n == 0 {
+        return 0.0;
+    }
+    let live = rewards
+        .chunks(group)
+        .filter(|c| std_dev(c) >= ADV_EPS)
+        .count();
+    live as f32 / n as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn degenerate_groups_get_zero() {
+        assert_eq!(group_advantages(&[1.0, 1.0, 1.0, 1.0], 4), vec![0.0; 4]);
+        assert_eq!(group_advantages(&[0.0, 0.0], 2), vec![0.0; 2]);
+    }
+
+    #[test]
+    fn mixed_group_is_centred_and_signed() {
+        let adv = group_advantages(&[1.0, 0.0, 0.0, 0.0], 4);
+        assert!(adv[0] > 0.0);
+        assert!(adv[1] < 0.0);
+        let sum: f32 = adv.iter().sum();
+        assert!(sum.abs() < 1e-4);
+    }
+
+    #[test]
+    fn properties_hold_for_random_rewards() {
+        check("advantages centred + unit-ish scale", 200, |rng| {
+            let group = rng.range_i64(2, 8) as usize;
+            let n_groups = rng.range_i64(1, 6) as usize;
+            let rewards: Vec<f32> =
+                (0..group * n_groups).map(|_| (rng.below(2)) as f32).collect();
+            let adv = group_advantages(&rewards, group);
+            for (g, chunk) in adv.chunks(group).enumerate() {
+                let s: f32 = chunk.iter().sum();
+                if s.abs() > 1e-3 {
+                    return Err(format!("group {g} not centred: {s}"));
+                }
+                let rchunk = &rewards[g * group..(g + 1) * group];
+                // advantage sign must match reward sign relative to the mean
+                let m = crate::util::mean(rchunk);
+                for (a, r) in chunk.iter().zip(rchunk) {
+                    if (r - m).abs() > 1e-6 && a * (r - m) <= 0.0 {
+                        return Err("sign mismatch".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn informative_fraction() {
+        let r = [1.0, 0.0, 1.0, 1.0, 0.0, 0.0, 1.0, 0.0];
+        assert_eq!(frac_informative_groups(&r, 2), 0.5);
+    }
+}

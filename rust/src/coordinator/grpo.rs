@@ -1,0 +1,162 @@
+//! The GRPO trainer: the paper's training loop (§5).
+//!
+//! Per step: sample a group-structured prompt batch, roll out with the
+//! *merged* inference weights, verify (exact-match reward), compute
+//! group-relative advantages, run the AOT gradient executable under
+//! truncated importance sampling, apply Adam in rust, re-merge.
+
+use anyhow::Result;
+
+use crate::coordinator::optimizer::{lr_at, Adam, AdamConfig};
+use crate::coordinator::policy::{GradStats, GrpoHp, Policy};
+use crate::coordinator::rollout::RolloutEngine;
+use crate::metrics::RunLog;
+use crate::runtime::Runtime;
+use crate::tasks::corpus::prompt_batch;
+use crate::tasks::generator::{suite, Problem, Suite, SUITES};
+use crate::tokenizer::Tokenizer;
+use crate::util::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct GrpoConfig {
+    /// training suite name, or "math-mix" for the SimpleRL-style mixture
+    pub suite: String,
+    pub group: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: u64,
+    pub temperature: f32,
+    pub clip_c: f32,
+    pub kl_coef: f32,
+    pub grad_clip: f32,
+    pub seed: u64,
+}
+
+impl Default for GrpoConfig {
+    fn default() -> Self {
+        Self {
+            suite: "gsm8k-syn".into(),
+            group: 4,
+            steps: 60,
+            lr: 2e-3,
+            warmup: 5,
+            temperature: 1.0,
+            clip_c: 4.0,
+            kl_coef: 0.0,
+            grad_clip: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub reward: f32,
+    pub response_len: f32,
+    pub format_rate: f32,
+    pub eos_rate: f32,
+    pub lr: f32,
+    pub stats: GradStats,
+    pub rollout_ms: f64,
+    pub grad_ms: f64,
+}
+
+/// Draw training problems, honouring the "math-mix" pseudo-suite.
+pub fn draw_problems(suite_name: &str, n: usize, rng: &mut Pcg64) -> Vec<Problem> {
+    (0..n)
+        .map(|_| {
+            let s: &Suite = if suite_name == "math-mix" {
+                // the harder tiers, mirroring SimpleRL's hardest-difficulty split
+                *rng.choice(&[&SUITES[1], &SUITES[2], &SUITES[3], &SUITES[4]])
+            } else {
+                suite(suite_name).unwrap_or(&SUITES[0])
+            };
+            s.generate(rng)
+        })
+        .collect()
+}
+
+pub struct GrpoTrainer {
+    pub cfg: GrpoConfig,
+    pub engine: RolloutEngine,
+    opt: Adam,
+    rng: Pcg64,
+    tok: Tokenizer,
+    step: usize,
+}
+
+impl GrpoTrainer {
+    pub fn new(rt: &Runtime, policy: &Policy, cfg: GrpoConfig) -> Result<Self> {
+        let engine = RolloutEngine::new(rt, &policy.tier.name, rt.manifest.batch.roll)?;
+        let opt = Adam::new(
+            policy.params().len(),
+            AdamConfig { lr: cfg.lr, grad_clip: cfg.grad_clip, ..Default::default() },
+        );
+        let rng = Pcg64::with_stream(cfg.seed, 0x6772706f);
+        Ok(Self { cfg, engine, opt, rng, tok: Tokenizer::new(), step: 0 })
+    }
+
+    /// One full GRPO step; returns the step record.
+    pub fn step(&mut self, rt: &Runtime, policy: &mut Policy) -> Result<StepRecord> {
+        let b = self.engine.batch;
+        assert!(b % self.cfg.group == 0);
+        let n_prompts = b / self.cfg.group;
+        let problems = draw_problems(&self.cfg.suite, n_prompts, &mut self.rng);
+        let pb = prompt_batch(&problems, &self.tok, self.cfg.group, self.engine.t_prefill);
+
+        let t0 = crate::util::Timer::start();
+        let roll = self.engine.rollout(
+            rt,
+            &policy.merged,
+            &pb,
+            &self.tok,
+            self.cfg.temperature,
+            &mut self.rng,
+        )?;
+        let rollout_ms = t0.millis();
+
+        let batch = self.engine.train_batch(&pb, &roll, policy.tier.t_train);
+        let hp = GrpoHp { clip_c: self.cfg.clip_c, kl_coef: self.cfg.kl_coef };
+        let t1 = crate::util::Timer::start();
+        let (grad, mut stats) = policy.grad(rt, &batch, hp)?;
+        let grad_ms = t1.millis();
+
+        self.opt.set_lr(lr_at(self.cfg.lr, self.cfg.warmup, self.step as u64));
+        let mut params = policy.params();
+        stats.grad_norm = self.opt.step(&mut params, &grad);
+        policy.set_params(rt, &params)?;
+
+        let rec = StepRecord {
+            step: self.step,
+            reward: roll.mean_reward(),
+            response_len: roll.mean_response_len(),
+            format_rate: roll.format_rate(),
+            eos_rate: crate::util::mean(
+                &roll.rows.iter().map(|r| if r.hit_eos { 1.0 } else { 0.0 }).collect::<Vec<_>>(),
+            ),
+            lr: self.opt.cfg.lr,
+            stats,
+            rollout_ms,
+            grad_ms,
+        };
+        self.step += 1;
+        Ok(rec)
+    }
+
+    /// Run the configured number of steps, logging as we go.
+    pub fn train(
+        &mut self,
+        rt: &Runtime,
+        policy: &mut Policy,
+        log: &mut RunLog,
+    ) -> Result<Vec<StepRecord>> {
+        let mut records = Vec::with_capacity(self.cfg.steps);
+        for _ in 0..self.cfg.steps {
+            let rec = self.step(rt, policy)?;
+            log.log_step("grpo", policy, &rec);
+            records.push(rec);
+        }
+        Ok(records)
+    }
+}

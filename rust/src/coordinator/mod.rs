@@ -1,0 +1,19 @@
+//! L3 coordinator — the paper's training system: rollout engine, GRPO/SFT
+//! trainers, group-relative advantages, optimizers, pretraining and the LR
+//! sweep protocol.  Python never appears here: every gradient/merge/sample
+//! is an AOT-compiled executable behind `runtime::Runtime`.
+
+pub mod advantage;
+pub mod grpo;
+pub mod optimizer;
+pub mod policy;
+pub mod pretrain;
+pub mod rollout;
+pub mod sft;
+pub mod sweep;
+
+pub use grpo::{GrpoConfig, GrpoTrainer};
+pub use policy::{GradStats, GrpoHp, Policy, TrainBatch};
+pub use pretrain::{pretrain, PretrainConfig};
+pub use rollout::{Rollout, RolloutEngine};
+pub use sft::{SftConfig, SftTrainer};

@@ -1,0 +1,253 @@
+//! A `Policy` bundles everything one trainable configuration needs:
+//! frozen base weights, frozen SVD factors, the flat trainable vector
+//! (theta), the merged inference-plane weights, and the AOT executables
+//! that compute gradients and merges.
+//!
+//! Invariant maintained by `remerge`: `merged` always equals the base model
+//! with the current adapter folded in — the inference plane never sees the
+//! adapter parameterisation (the paper's merged-weights trick; the
+//! numerical gap is absorbed by TIS in the GRPO loss).
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::adapters::factors::FactorSet;
+use crate::adapters::packing::{roundtrip, Precision};
+use crate::adapters::Theta;
+use crate::manifest::TierInfo;
+use crate::runtime::{Executable, Runtime};
+use crate::tensor::{Arg, TensorF32, TensorI32};
+use crate::weights::WeightSet;
+
+/// One GRPO/SFT training batch in executable layout.
+pub struct TrainBatch {
+    pub tokens: TensorI32,     // [B, T]
+    pub mask: TensorF32,       // [B, T-1]
+    pub behavior: TensorF32,   // [B, T-1] (grpo only)
+    pub advantages: TensorF32, // [B]      (grpo only)
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GrpoHp {
+    pub clip_c: f32,
+    pub kl_coef: f32,
+}
+
+/// Stats vector layout (mirrors model.py's jnp.stack order).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GradStats {
+    pub loss: f32,
+    pub aux1: f32, // grpo: pg loss | sft: accuracy
+    pub kl_k1: f32,
+    pub kl_k3: f32,
+    pub mean_ratio: f32,
+    pub frac_clipped: f32,
+    pub entropy: f32,
+    pub mean_logp: f32,
+    pub grad_norm: f32, // filled by the trainer
+}
+
+impl GradStats {
+    pub fn from_vec(v: &[f32]) -> Self {
+        Self {
+            loss: v[0],
+            aux1: v[1],
+            kl_k1: v[2],
+            kl_k3: v[3],
+            mean_ratio: v[4],
+            frac_clipped: v[5],
+            entropy: v[6],
+            mean_logp: v[7],
+            grad_norm: 0.0,
+        }
+    }
+}
+
+pub struct Policy {
+    pub tier: TierInfo,
+    pub scheme_tag: String,
+    pub algo: String, // "grpo" | "sft"
+    /// Frozen pretrained weights (adapter schemes). For "full", the live weights.
+    pub base: WeightSet,
+    /// Inference-plane weights (base with adapter folded in).
+    pub merged: WeightSet,
+    pub factors: Option<FactorSet>,
+    pub theta: Vec<f32>,
+    /// Precision the applied update is stored/communicated at (Fig. 4).
+    pub precision: Precision,
+    merge_exe: Option<Rc<Executable>>,
+    pub is_full: bool,
+}
+
+/// The seven adapted weight-tensor names, manifest order.
+pub const ADAPTED: [&str; 7] =
+    ["attn_q", "attn_k", "attn_v", "attn_o", "mlp_up", "mlp_gate", "mlp_down"];
+
+impl Policy {
+    pub fn new(
+        rt: &Runtime,
+        tier_name: &str,
+        scheme_tag: &str,
+        algo: &str,
+        base: WeightSet,
+        seed: u64,
+        cache_dir: &Path,
+    ) -> Result<Self> {
+        let tier = rt.manifest.tier(tier_name)?.clone();
+        if base.tier != tier_name {
+            bail!("checkpoint tier {} != requested {tier_name}", base.tier);
+        }
+        // validate the scheme + grab its theta layout (identical across the
+        // batch variants of the same scheme)
+        let grad_info = rt.manifest.grad_exe(tier_name, algo, scheme_tag)?.clone();
+        let is_full = scheme_tag == "full";
+
+        let (factors, theta, merge_exe) = if is_full {
+            (None, Vec::new(), None)
+        } else {
+            let scheme = grad_info
+                .scheme
+                .as_ref()
+                .context("adapter artifact missing scheme info")?;
+            let needs_factors = scheme.kind == "tinylora" || scheme.kind == "lora_xs";
+            let factors = if needs_factors {
+                Some(FactorSet::cached(&tier, &base, scheme.r, cache_dir)?)
+            } else {
+                None
+            };
+            let theta = Theta::init(&grad_info, seed)?.data;
+            let merge_exe = rt.load(&rt.manifest.merge_exe(tier_name, scheme_tag)?.name)?;
+            (factors, theta, Some(merge_exe))
+        };
+
+        let merged = base.clone();
+        let mut p = Self {
+            tier,
+            scheme_tag: scheme_tag.to_string(),
+            algo: algo.to_string(),
+            base,
+            merged,
+            factors,
+            theta,
+            precision: Precision::F32,
+            merge_exe,
+            is_full,
+        };
+        p.remerge(rt)?; // lora's random-A theta still merges to identity (B=0)
+        Ok(p)
+    }
+
+    /// Number of trained parameters (the paper's x-axis).
+    pub fn trainable_params(&self) -> usize {
+        if self.is_full {
+            self.base.n_params()
+        } else {
+            self.theta.len()
+        }
+    }
+
+    /// Update size in bytes at the configured precision.
+    pub fn update_bytes(&self) -> usize {
+        self.trainable_params() * self.precision.bytes()
+    }
+
+    /// Current flat trainable vector.
+    pub fn params(&self) -> Vec<f32> {
+        if self.is_full {
+            self.merged.flat()
+        } else {
+            self.theta.clone()
+        }
+    }
+
+    /// Install updated parameters, applying the storage-precision roundtrip
+    /// (f32 optimizer state is the caller's responsibility).
+    pub fn set_params(&mut self, rt: &Runtime, params: &[f32]) -> Result<()> {
+        let q = roundtrip(params, self.precision);
+        if self.is_full {
+            self.merged.set_flat(&q)?;
+        } else {
+            if q.len() != self.theta.len() {
+                bail!("param len mismatch");
+            }
+            self.theta = q;
+            self.remerge(rt)?;
+        }
+        Ok(())
+    }
+
+    /// Fold the adapter into `merged` (no-op for full).
+    pub fn remerge(&mut self, rt: &Runtime) -> Result<()> {
+        let Some(merge_exe) = &self.merge_exe else {
+            return Ok(());
+        };
+        let mut args: Vec<Arg> = Vec::new();
+        for name in ADAPTED {
+            args.push(Arg::F32(self.base.get(name)?.clone()));
+        }
+        if let Some(f) = &self.factors {
+            args.extend(f.args());
+        }
+        args.push(Arg::F32(TensorF32::from_vec(&[self.theta.len()], self.theta.clone())));
+        let out = rt.run(merge_exe, &args)?;
+        for (i, name) in ADAPTED.iter().enumerate() {
+            self.merged.set(name, out.f32(i)?)?;
+        }
+        Ok(())
+    }
+
+    /// Compute the gradient of the configured loss on a batch.  The grad
+    /// executable is resolved by the batch's leading dimension, so one
+    /// Policy serves both the train-batch and test-batch artifacts.
+    /// Returns (flat gradient, stats).
+    pub fn grad(&self, rt: &Runtime, batch: &TrainBatch, hp: GrpoHp) -> Result<(Vec<f32>, GradStats)> {
+        let b = batch.tokens.shape[0];
+        let grad_exe = rt.load(
+            &rt.manifest
+                .grad_exe_b(&self.tier.name, &self.algo, &self.scheme_tag, b)?
+                .name,
+        )?;
+        let mut args: Vec<Arg> = if self.is_full {
+            self.merged.args()
+        } else {
+            let mut a = self.base.args();
+            if let Some(f) = &self.factors {
+                a.extend(f.args());
+            }
+            a.push(Arg::F32(TensorF32::from_vec(&[self.theta.len()], self.theta.clone())));
+            a
+        };
+        args.push(Arg::I32(batch.tokens.clone()));
+        args.push(Arg::F32(batch.mask.clone()));
+        if self.algo == "grpo" {
+            args.push(Arg::F32(batch.behavior.clone()));
+            args.push(Arg::F32(batch.advantages.clone()));
+            args.push(Arg::Scalar(hp.clip_c));
+            args.push(Arg::Scalar(hp.kl_coef));
+        }
+        let out = rt.run(&grad_exe, &args)?;
+        let n_out = out.len();
+        let stats_t = out.f32(n_out - 1)?;
+        let stats = GradStats::from_vec(&stats_t.data);
+        let grad = if self.is_full {
+            let mut flat = Vec::with_capacity(self.base.n_params());
+            for i in 0..n_out - 1 {
+                flat.extend_from_slice(&out.f32(i)?.data);
+            }
+            flat
+        } else {
+            out.f32(0)?.data
+        };
+        Ok((grad, stats))
+    }
+
+    /// Pretrained-checkpoint convention used by all drivers.
+    pub fn load_base(rt: &Runtime, tier: &str, ckpt_dir: &Path) -> Result<WeightSet> {
+        let path = WeightSet::ckpt_path(ckpt_dir, tier);
+        WeightSet::load(&path).with_context(|| {
+            format!("no pretrained checkpoint for tier {tier:?} — run `tinylora-rl pretrain --tier {tier}` first")
+        })
+    }
+}

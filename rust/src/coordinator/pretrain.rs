@@ -1,0 +1,101 @@
+//! From-scratch pretraining of the base models (the substitution for the
+//! paper's Qwen/Llama checkpoints — DESIGN.md §2).
+//!
+//! LM loss over the synthetic corpus: word problems solved in a *mixture*
+//! of answer formats (only one of which the verifier rewards) plus
+//! arithmetic drills.  The result is a base model that owns the arithmetic
+//! capability but splits its probability mass across styles — the precise
+//! precondition for the paper's "RL elicits style" finding.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::optimizer::{lr_at, Adam, AdamConfig};
+use crate::metrics::RunLog;
+use crate::runtime::Runtime;
+use crate::tasks::corpus::pretrain_batch;
+use crate::tasks::generator::{suite, SUITES};
+use crate::tensor::Arg;
+use crate::tokenizer::Tokenizer;
+use crate::util::Pcg64;
+use crate::weights::WeightSet;
+
+#[derive(Clone, Debug)]
+pub struct PretrainConfig {
+    pub suite: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: u64,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for PretrainConfig {
+    fn default() -> Self {
+        Self { suite: "gsm8k-syn".into(), steps: 1500, lr: 3e-3, warmup: 50, seed: 0, log_every: 50 }
+    }
+}
+
+pub struct PretrainResult {
+    pub final_loss: f32,
+    pub losses: Vec<(usize, f32)>,
+}
+
+/// Pretrain a tier from scratch and save the checkpoint.
+pub fn pretrain(
+    rt: &Runtime,
+    tier_name: &str,
+    cfg: &PretrainConfig,
+    ckpt_dir: &Path,
+    log: &mut RunLog,
+) -> Result<PretrainResult> {
+    let tier = rt.manifest.tier(tier_name)?.clone();
+    let b = rt.manifest.batch.train;
+    let t = tier.t_train;
+    let exe = rt.load(
+        &rt.manifest
+            .find(&format!("pretrain {tier_name}"), |e| {
+                e.fn_kind == "pretrain" && e.tier == tier_name && e.batch == b
+            })?
+            .name,
+    )?;
+
+    let mut weights = WeightSet::init(&tier, cfg.seed);
+    let mut opt = Adam::new(weights.n_params(), AdamConfig { lr: cfg.lr, ..Default::default() });
+    let mut rng = Pcg64::with_stream(cfg.seed, 0x70726574);
+    let tok = Tokenizer::new();
+    let s = suite(&cfg.suite).unwrap_or(&SUITES[0]);
+
+    let mut losses = Vec::new();
+    let mut final_loss = f32::NAN;
+    for step in 0..cfg.steps {
+        // corpus mixes the training suite with the harder tiers so every
+        // eval suite's problem family appears in pretraining
+        let s_step = if rng.uniform() < 0.5 { s } else { *rng.choice(&SUITES.iter().collect::<Vec<_>>()) };
+        let (tokens, mask) = pretrain_batch(s_step, &tok, &mut rng, b, t);
+        let mut args: Vec<Arg> = weights.args();
+        args.push(Arg::I32(tokens));
+        args.push(Arg::F32(mask));
+        let out = rt.run(&exe, &args)?;
+        let stats = out.f32(out.len() - 1)?;
+        let loss = stats.data[0];
+        final_loss = loss;
+
+        let mut grad = Vec::with_capacity(weights.n_params());
+        for i in 0..out.len() - 1 {
+            grad.extend_from_slice(&out.f32(i)?.data);
+        }
+        opt.set_lr(lr_at(cfg.lr, cfg.warmup, step as u64));
+        let mut flat = weights.flat();
+        opt.step(&mut flat, &grad);
+        weights.set_flat(&flat)?;
+
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            losses.push((step, loss));
+            log.log_pretrain(tier_name, step, loss, stats.data[1]);
+        }
+    }
+    weights.save(&WeightSet::ckpt_path(ckpt_dir, tier_name))?;
+    Ok(PretrainResult { final_loss, losses })
+}

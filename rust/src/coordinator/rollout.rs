@@ -1,0 +1,210 @@
+//! Rollout engine: batched sampling through the fused `generate`
+//! executable, EOS handling, reward computation and train-batch assembly.
+//!
+//! The entire decode loop runs inside ONE executable call (see runtime
+//! docs); rust supplies the uniforms (so the sampling policy stays
+//! coordinator-owned and reproducible) and post-processes EOS cuts,
+//! verification and advantage estimation.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::coordinator::advantage::group_advantages;
+use crate::coordinator::policy::TrainBatch;
+use crate::runtime::{Executable, Runtime};
+use crate::tasks::corpus::PromptBatch;
+use crate::tasks::verifier;
+use crate::tensor::{Arg, TensorF32, TensorI32};
+use crate::tokenizer::{Tokenizer, EOS, PAD};
+use crate::util::Pcg64;
+use crate::weights::WeightSet;
+
+pub struct RolloutEngine {
+    gen_exe: Rc<Executable>,
+    pub batch: usize,
+    /// sampled tokens per sequence
+    pub n_gen: usize,
+    pub t_prefill: usize,
+}
+
+/// One sampled sequence, post EOS-cut.
+#[derive(Clone, Debug)]
+pub struct RolloutRow {
+    pub prompt_len: usize,
+    /// response tokens, including the terminating EOS when present
+    pub response: Vec<i32>,
+    /// behavior log-prob per response token (merged weights, sampling temp)
+    pub behavior: Vec<f32>,
+    pub text: String,
+    pub reward: f32,
+    pub hit_eos: bool,
+    pub has_format: bool,
+}
+
+pub struct Rollout {
+    pub rows: Vec<RolloutRow>,
+    pub group: usize,
+}
+
+impl Rollout {
+    pub fn mean_reward(&self) -> f32 {
+        crate::util::mean(&self.rows.iter().map(|r| r.reward).collect::<Vec<_>>())
+    }
+
+    pub fn mean_response_len(&self) -> f32 {
+        crate::util::mean(&self.rows.iter().map(|r| r.response.len() as f32).collect::<Vec<_>>())
+    }
+
+    pub fn format_rate(&self) -> f32 {
+        crate::util::mean(
+            &self.rows.iter().map(|r| if r.has_format { 1.0 } else { 0.0 }).collect::<Vec<_>>(),
+        )
+    }
+}
+
+impl RolloutEngine {
+    pub fn new(rt: &Runtime, tier: &str, batch: usize) -> Result<Self> {
+        let info = rt.manifest.generate_exe(tier, batch)?.clone();
+        let gen_exe = rt.load(&info.name)?;
+        let t = rt.manifest.tier(tier)?;
+        Ok(Self { gen_exe, batch: info.batch, n_gen: info.seq, t_prefill: t.t_prefill })
+    }
+
+    /// Sample one batch of rollouts from the merged weights.
+    pub fn rollout(
+        &self,
+        rt: &Runtime,
+        weights: &WeightSet,
+        pb: &PromptBatch,
+        tok: &Tokenizer,
+        temperature: f32,
+        rng: &mut Pcg64,
+    ) -> Result<Rollout> {
+        assert_eq!(pb.tokens.shape[0], self.batch, "prompt batch != exe batch");
+        let b = self.batch;
+        let uniforms = TensorF32::from_vec(&[b, self.n_gen], rng.uniform_vec(b * self.n_gen));
+        let mut args: Vec<Arg> = weights.args();
+        args.push(Arg::I32(pb.tokens.clone()));
+        args.push(Arg::I32(pb.prompt_len.clone()));
+        args.push(Arg::F32(uniforms));
+        args.push(Arg::Scalar(temperature));
+        let out = rt.run(&self.gen_exe, &args)?;
+        let tokens = out.i32(0)?;
+        let blp = out.f32(1)?;
+
+        let mut rows = Vec::with_capacity(b);
+        for i in 0..b {
+            let gen = &tokens.data[i * self.n_gen..(i + 1) * self.n_gen];
+            let lp = &blp.data[i * self.n_gen..(i + 1) * self.n_gen];
+            let cut = gen.iter().position(|&t| t == EOS).map(|p| p + 1);
+            let n = cut.unwrap_or(self.n_gen);
+            let response = gen[..n].to_vec();
+            let behavior = lp[..n].to_vec();
+            let text = tok.decode(&response);
+            let problem = &pb.problems[i];
+            let reward = verifier::reward(&text, problem.answer);
+            let has_format = verifier::has_canonical_format(&text);
+            rows.push(RolloutRow {
+                prompt_len: pb.prompt_len.data[i] as usize,
+                response,
+                behavior,
+                text,
+                reward,
+                hit_eos: cut.is_some(),
+                has_format,
+            });
+        }
+        Ok(Rollout { rows, group: pb.group })
+    }
+
+    /// Assemble the GRPO train batch for this engine's geometry.
+    pub fn train_batch(&self, pb: &PromptBatch, roll: &Rollout, t_train: usize) -> TrainBatch {
+        build_train_batch(pb, roll, self.t_prefill, t_train)
+    }
+}
+
+/// Assemble a GRPO train batch: prompt ++ response right-padded to t_train,
+/// loss mask + behavior log-probs aligned to response tokens, group-relative
+/// advantages per sequence.
+pub fn build_train_batch(
+    pb: &PromptBatch,
+    roll: &Rollout,
+    t_prefill: usize,
+    t_train: usize,
+) -> TrainBatch {
+    let b = roll.rows.len();
+    let mut tokens = vec![PAD; b * t_train];
+    let mut mask = vec![0.0f32; b * (t_train - 1)];
+    let mut behavior = vec![0.0f32; b * (t_train - 1)];
+    for (i, row) in roll.rows.iter().enumerate() {
+        let plen = row.prompt_len;
+        let prow = &pb.tokens.data[i * t_prefill..(i + 1) * t_prefill];
+        tokens[i * t_train..i * t_train + plen].copy_from_slice(&prow[..plen]);
+        let n = row.response.len().min(t_train - plen);
+        tokens[i * t_train + plen..i * t_train + plen + n].copy_from_slice(&row.response[..n]);
+        for j in 0..n {
+            // response token j sits at position plen + j, predicted at plen+j-1
+            let pos = plen + j - 1;
+            mask[i * (t_train - 1) + pos] = 1.0;
+            behavior[i * (t_train - 1) + pos] = row.behavior[j];
+        }
+    }
+    let rewards: Vec<f32> = roll.rows.iter().map(|r| r.reward).collect();
+    let adv = group_advantages(&rewards, roll.group);
+    TrainBatch {
+        tokens: TensorI32::from_vec(&[b, t_train], tokens),
+        mask: TensorF32::from_vec(&[b, t_train - 1], mask),
+        behavior: TensorF32::from_vec(&[b, t_train - 1], behavior),
+        advantages: TensorF32::from_vec(&[b], adv),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::corpus::prompt_batch;
+    use crate::tasks::generator::SUITES;
+
+    /// train_batch alignment without a runtime: hand-build a Rollout.
+    #[test]
+    fn train_batch_alignment() {
+        let tok = Tokenizer::new();
+        let mut rng = Pcg64::new(1);
+        let probs: Vec<_> = (0..2).map(|_| SUITES[0].generate(&mut rng)).collect();
+        let pb = prompt_batch(&probs, &tok, 2, 64);
+        let rows: Vec<RolloutRow> = (0..4)
+            .map(|i| {
+                let mut response = tok.encode("#### 7");
+                response.push(EOS);
+                RolloutRow {
+                    prompt_len: pb.prompt_len.data[i] as usize,
+                    behavior: vec![-0.5; response.len()],
+                    response,
+                    text: "#### 7".into(),
+                    reward: if i % 2 == 0 { 1.0 } else { 0.0 },
+                    hit_eos: true,
+                    has_format: true,
+                }
+            })
+            .collect();
+        let roll = Rollout { rows, group: 2 };
+        let tb = build_train_batch(&pb, &roll, 64, 128);
+        for i in 0..4 {
+            let plen = pb.prompt_len.data[i] as usize;
+            // prompt copied
+            assert_eq!(tb.tokens.data[i * 128], crate::tokenizer::BOS);
+            // first response position is masked-in and has behavior
+            assert_eq!(tb.mask.data[i * 127 + plen - 1], 1.0);
+            assert_eq!(tb.behavior.data[i * 127 + plen - 1], -0.5);
+            // position before response start is not scored
+            assert_eq!(tb.mask.data[i * 127 + plen - 2], 0.0);
+            // EOS is scored (model must learn to stop)
+            let n = roll.rows[i].response.len();
+            assert_eq!(tb.mask.data[i * 127 + plen + n - 2], 1.0);
+            assert_eq!(tb.mask.data[i * 127 + plen + n - 1], 0.0);
+        }
+        // group advantages: (1,0) groups -> +/-; centred
+        assert!(tb.advantages.data[0] > 0.0 && tb.advantages.data[1] < 0.0);
+    }
+}

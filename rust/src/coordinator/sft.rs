@@ -1,0 +1,110 @@
+//! The SFT trainer — the paper's comparison baseline (§6.2, Fig. 2).
+//! Next-token CE on gold canonical demonstrations, same adapter schemes and
+//! optimizer as GRPO so the *only* difference is the learning signal.
+
+use anyhow::Result;
+
+use crate::coordinator::optimizer::{lr_at, Adam, AdamConfig};
+use crate::coordinator::policy::{GradStats, GrpoHp, Policy, TrainBatch};
+use crate::metrics::RunLog;
+use crate::runtime::Runtime;
+use crate::tasks::corpus::sft_batch;
+use crate::tasks::generator::{suite, SUITES};
+use crate::tensor::{TensorF32, TensorI32};
+use crate::tokenizer::Tokenizer;
+use crate::util::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct SftConfig {
+    pub suite: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: u64,
+    pub grad_clip: f32,
+    pub seed: u64,
+}
+
+impl Default for SftConfig {
+    fn default() -> Self {
+        Self { suite: "gsm8k-syn".into(), steps: 60, lr: 2e-3, warmup: 5, grad_clip: 1.0, seed: 0 }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SftRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub token_acc: f32,
+    pub lr: f32,
+    pub stats: GradStats,
+}
+
+pub struct SftTrainer {
+    pub cfg: SftConfig,
+    opt: Adam,
+    rng: Pcg64,
+    tok: Tokenizer,
+    step: usize,
+    batch: usize,
+}
+
+impl SftTrainer {
+    pub fn new(rt: &Runtime, policy: &Policy, cfg: SftConfig) -> Result<Self> {
+        let opt = Adam::new(
+            policy.params().len(),
+            AdamConfig { lr: cfg.lr, grad_clip: cfg.grad_clip, ..Default::default() },
+        );
+        let rng = Pcg64::with_stream(cfg.seed, 0x736674);
+        Ok(Self { cfg, opt, rng, tok: Tokenizer::new(), step: 0, batch: rt.manifest.batch.train })
+    }
+
+    pub fn step(&mut self, rt: &Runtime, policy: &mut Policy) -> Result<SftRecord> {
+        let s = if self.cfg.suite == "math-mix" {
+            *self.rng.choice(&[&SUITES[1], &SUITES[2], &SUITES[3], &SUITES[4]])
+        } else {
+            suite(&self.cfg.suite).unwrap_or(&SUITES[0])
+        };
+        let (tokens, mask) =
+            sft_batch(s, &self.tok, &mut self.rng, self.batch, policy.tier.t_train);
+        let t = policy.tier.t_train;
+        let batch = TrainBatch {
+            tokens,
+            mask,
+            behavior: TensorF32::zeros(&[self.batch, t - 1]),
+            advantages: TensorF32::zeros(&[self.batch]),
+        };
+        let (grad, mut stats) = policy.grad(rt, &batch, GrpoHp::default())?;
+        self.opt.set_lr(lr_at(self.cfg.lr, self.cfg.warmup, self.step as u64));
+        let mut params = policy.params();
+        stats.grad_norm = self.opt.step(&mut params, &grad);
+        policy.set_params(rt, &params)?;
+        let rec = SftRecord {
+            step: self.step,
+            loss: stats.loss,
+            token_acc: stats.aux1,
+            lr: self.opt.cfg.lr,
+            stats,
+        };
+        self.step += 1;
+        Ok(rec)
+    }
+
+    pub fn train(
+        &mut self,
+        rt: &Runtime,
+        policy: &mut Policy,
+        log: &mut RunLog,
+    ) -> Result<Vec<SftRecord>> {
+        let mut records = Vec::with_capacity(self.cfg.steps);
+        for _ in 0..self.cfg.steps {
+            let rec = self.step(rt, policy)?;
+            log.log_sft_step(policy, &rec);
+            records.push(rec);
+        }
+        Ok(records)
+    }
+}
+
+// Unused import silencer for TensorI32 (used via corpus::sft_batch's types).
+#[allow(unused)]
+fn _types(_: TensorI32) {}

@@ -1,0 +1,117 @@
+//! LR sweep orchestration — the paper's protocol (§5.1): sweep learning
+//! rates per update size, keep the best by final eval accuracy, average
+//! over seeds.  Drives the pareto figures (1, 2, 3, 6).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::grpo::{GrpoConfig, GrpoTrainer};
+use crate::coordinator::policy::Policy;
+use crate::coordinator::sft::{SftConfig, SftTrainer};
+use crate::eval::{evaluate, EvalResult};
+use crate::metrics::RunLog;
+use crate::runtime::Runtime;
+use crate::weights::WeightSet;
+
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub tier: String,
+    pub scheme_tag: String,
+    pub algo: String, // "grpo" | "sft"
+    pub suite: String,
+    pub steps: usize,
+    pub lrs: Vec<f32>,
+    pub seeds: Vec<u64>,
+    pub eval_suite: String,
+    pub eval_n: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct SweepOutcome {
+    pub scheme_tag: String,
+    pub trainable_params: usize,
+    pub best_lr: f32,
+    /// accuracy at the best LR, averaged over seeds
+    pub accuracy: f32,
+    pub per_lr: Vec<(f32, f32)>,
+    pub baseline_accuracy: f32,
+    pub final_reward: f32,
+    pub format_rate: f32,
+}
+
+/// Train one (scheme, lr, seed) run and return final eval accuracy.
+pub fn run_once(
+    rt: &Runtime,
+    base: &WeightSet,
+    cfg: &SweepConfig,
+    lr: f32,
+    seed: u64,
+    ckpt_dir: &Path,
+    log: &mut RunLog,
+) -> Result<(EvalResult, f32, f32)> {
+    let mut policy = Policy::new(rt, &cfg.tier, &cfg.scheme_tag, &cfg.algo, base.clone(), seed, ckpt_dir)?;
+    let (reward, fmt) = match cfg.algo.as_str() {
+        "grpo" => {
+            let gcfg = GrpoConfig { suite: cfg.suite.clone(), steps: cfg.steps, lr, seed, ..Default::default() };
+            let mut tr = GrpoTrainer::new(rt, &policy, gcfg)?;
+            let recs = tr.train(rt, &mut policy, log)?;
+            let last = recs.iter().rev().take(5.min(recs.len())).collect::<Vec<_>>();
+            (
+                last.iter().map(|r| r.reward).sum::<f32>() / last.len() as f32,
+                last.iter().map(|r| r.format_rate).sum::<f32>() / last.len() as f32,
+            )
+        }
+        "sft" => {
+            let scfg = SftConfig { suite: cfg.suite.clone(), steps: cfg.steps, lr, seed, ..Default::default() };
+            let mut tr = SftTrainer::new(rt, &policy, scfg)?;
+            tr.train(rt, &mut policy, log)?;
+            (0.0, 0.0)
+        }
+        other => anyhow::bail!("unknown algo {other}"),
+    };
+    let ev = evaluate(rt, &policy.tier.name, &policy.merged, &cfg.eval_suite, cfg.eval_n, 777)?;
+    Ok((ev, reward, fmt))
+}
+
+/// Full sweep for one scheme: all LRs x seeds, best-LR selection.
+pub fn sweep_scheme(
+    rt: &Runtime,
+    base: &WeightSet,
+    cfg: &SweepConfig,
+    ckpt_dir: &Path,
+    log: &mut RunLog,
+) -> Result<SweepOutcome> {
+    let baseline = evaluate(rt, &cfg.tier, base, &cfg.eval_suite, cfg.eval_n, 777)?;
+    let mut per_lr = Vec::new();
+    let mut best = (0.0f32, f32::NEG_INFINITY, 0.0, 0.0); // (lr, acc, reward, fmt)
+    for &lr in &cfg.lrs {
+        let mut accs = Vec::new();
+        let mut rews = Vec::new();
+        let mut fmts = Vec::new();
+        for &seed in &cfg.seeds {
+            let (ev, rew, fmt) = run_once(rt, base, cfg, lr, seed, ckpt_dir, log)?;
+            accs.push(ev.accuracy);
+            rews.push(rew);
+            fmts.push(fmt);
+        }
+        let acc = crate::util::mean(&accs);
+        per_lr.push((lr, acc));
+        log.log_sweep_point(&cfg.scheme_tag, lr, acc);
+        if acc > best.1 {
+            best = (lr, acc, crate::util::mean(&rews), crate::util::mean(&fmts));
+        }
+    }
+    // trainable size from a probe policy
+    let probe = Policy::new(rt, &cfg.tier, &cfg.scheme_tag, &cfg.algo, base.clone(), 0, ckpt_dir)?;
+    Ok(SweepOutcome {
+        scheme_tag: cfg.scheme_tag.clone(),
+        trainable_params: probe.trainable_params(),
+        best_lr: best.0,
+        accuracy: best.1,
+        per_lr,
+        baseline_accuracy: baseline.accuracy,
+        final_reward: best.2,
+        format_rate: best.3,
+    })
+}

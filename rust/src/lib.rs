@@ -1,0 +1,32 @@
+//! `tinylora-rl` — reproduction of *Learning to Reason in 13 Parameters*.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!   * L1/L2 live in `python/compile/` and are AOT-lowered to HLO text
+//!     (`make artifacts`); python never runs at request time.
+//!   * L3 (this crate) owns everything with a lifecycle: the PJRT runtime,
+//!     pretraining, GRPO/SFT trainers, rollouts, evaluation, the
+//!     multi-adapter serving plane, metrics and the CLI.
+//!
+//! The build environment is fully offline, so small substrates that would
+//! normally be crates (JSON, RNG, CLI parsing, bench harness, property
+//! testing) are implemented in `util`/`testing`.
+
+pub mod adapters;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod experiments;
+pub mod manifest;
+pub mod metrics;
+pub mod runtime;
+pub mod sampler;
+pub mod serving;
+pub mod tasks;
+pub mod tensor;
+pub mod testing;
+pub mod tokenizer;
+pub mod util;
+pub mod weights;
+
+pub use manifest::Manifest;
+pub use runtime::Runtime;

@@ -1,0 +1,288 @@
+//! `tinylora-rl` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   pretrain   — train a base model tier from scratch, save checkpoint
+//!   train      — GRPO or SFT with an adapter scheme on a pretrained tier
+//!   eval       — run the benchmark ladder on a checkpoint (+ optional adapter)
+//!   sweep      — the paper's LR-sweep protocol for one scheme
+//!   serve-demo — multi-adapter serving simulation
+//!   info       — manifest summary + the paper's Table 1 per tier
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use tinylora_rl::adapters::count;
+use tinylora_rl::config::{validate_scheme, Args, Dirs};
+use tinylora_rl::coordinator::{
+    pretrain, GrpoConfig, GrpoTrainer, Policy, PretrainConfig, SftConfig, SftTrainer,
+};
+use tinylora_rl::eval::{evaluate, evaluate_suite_ladder};
+use tinylora_rl::metrics::RunLog;
+use tinylora_rl::weights::WeightSet;
+use tinylora_rl::Runtime;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "pretrain" => cmd_pretrain(&args),
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "sweep" => cmd_sweep(&args),
+        "serve-demo" => cmd_serve_demo(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "tinylora-rl — Learning to Reason in 13 Parameters (reproduction)
+
+USAGE: tinylora-rl <command> [--flags]
+
+COMMANDS
+  pretrain    --tier micro [--steps 1500] [--lr 3e-3] [--seed 0]
+  train       --tier micro --scheme tinylora_r2_u13_all [--algo grpo|sft]
+              [--steps 60] [--lr 2e-3] [--suite gsm8k-syn|math-mix]
+              [--group 4] [--kl-coef 0] [--clip-c 4] [--eval-n 64] [--seed 0]
+  eval        --tier micro [--suite gsm8k-syn | --ladder] [--n 64]
+  sweep       --tier micro --scheme <tag> [--algo grpo] [--lrs 5e-4,2e-3,8e-3]
+              [--seeds 0,1] [--steps 40]
+  serve-demo  --tier micro [--tenants 16] [--requests 64]
+  info        [--tier micro]
+
+Shared: --artifacts DIR --ckpts DIR --results DIR --echo"
+    );
+}
+
+fn runtime(dirs: &Dirs) -> Result<Runtime> {
+    Runtime::new(&dirs.artifacts)
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let dirs = Dirs::from_args(args);
+    let rt = runtime(&dirs)?;
+    let tier = args.str("tier", "micro");
+    let cfg = PretrainConfig {
+        suite: args.str("suite", "gsm8k-syn"),
+        steps: args.usize("steps", 1500)?,
+        lr: args.f32("lr", 3e-3)?,
+        warmup: args.u64("warmup", 50)?,
+        seed: args.u64("seed", 0)?,
+        log_every: args.usize("log-every", 50)?,
+    };
+    let mut log = RunLog::new(Some(&dirs.results.join(format!("pretrain_{tier}.jsonl"))), true);
+    let t = tinylora_rl::util::Timer::start();
+    let res = pretrain(&rt, &tier, &cfg, &dirs.ckpts, &mut log)?;
+    println!(
+        "pretrained {tier}: final loss {:.4} in {:.1}s -> {}",
+        res.final_loss,
+        t.secs(),
+        WeightSet::ckpt_path(&dirs.ckpts, &tier).display()
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dirs = Dirs::from_args(args);
+    let rt = runtime(&dirs)?;
+    let tier = args.str("tier", "micro");
+    let scheme = args.str("scheme", "tinylora_r2_u13_all");
+    let algo = args.str("algo", "grpo");
+    validate_scheme(&rt.manifest, &tier, &scheme, &algo)?;
+    let base = Policy::load_base(&rt, &tier, &dirs.ckpts)?;
+    let mut policy = Policy::new(&rt, &tier, &scheme, &algo, base, args.u64("seed", 0)?, &dirs.ckpts)?;
+    let mut log = RunLog::new(
+        Some(&dirs.results.join(format!("train_{tier}_{scheme}_{algo}.jsonl"))),
+        true,
+    );
+
+    let suite = args.str("suite", "gsm8k-syn");
+    let eval_suite = args.str("eval-suite", if suite == "math-mix" { "math500-syn" } else { &suite });
+    let eval_n = args.usize("eval-n", 64)?;
+    let before = evaluate(&rt, &tier, &policy.merged, &eval_suite, eval_n, 777)?;
+    println!(
+        "[{tier}/{scheme}] {} trainable params; baseline {eval_suite} accuracy {:.3}",
+        policy.trainable_params(),
+        before.accuracy
+    );
+
+    match algo.as_str() {
+        "grpo" => {
+            let cfg = GrpoConfig {
+                suite,
+                group: args.usize("group", 4)?,
+                steps: args.usize("steps", 60)?,
+                lr: args.f32("lr", 2e-3)?,
+                warmup: args.u64("warmup", 5)?,
+                temperature: args.f32("temperature", 1.0)?,
+                clip_c: args.f32("clip-c", 4.0)?,
+                kl_coef: args.f32("kl-coef", 0.0)?,
+                grad_clip: args.f32("grad-clip", 1.0)?,
+                seed: args.u64("seed", 0)?,
+            };
+            let mut tr = GrpoTrainer::new(&rt, &policy, cfg)?;
+            tr.train(&rt, &mut policy, &mut log)?;
+        }
+        "sft" => {
+            let cfg = SftConfig {
+                suite,
+                steps: args.usize("steps", 60)?,
+                lr: args.f32("lr", 2e-3)?,
+                warmup: args.u64("warmup", 5)?,
+                grad_clip: args.f32("grad-clip", 1.0)?,
+                seed: args.u64("seed", 0)?,
+            };
+            let mut tr = SftTrainer::new(&rt, &policy, cfg)?;
+            tr.train(&rt, &mut policy, &mut log)?;
+        }
+        other => anyhow::bail!("unknown algo {other}"),
+    }
+
+    let after = evaluate(&rt, &tier, &policy.merged, &eval_suite, eval_n, 777)?;
+    log.log_eval(&tier, &scheme, policy.trainable_params(), &eval_suite, after.accuracy);
+    println!(
+        "[{tier}/{scheme}] {eval_suite}: {:.3} -> {:.3} ({} params, {} bytes)",
+        before.accuracy,
+        after.accuracy,
+        policy.trainable_params(),
+        policy.update_bytes()
+    );
+    let rs = rt.stats();
+    println!(
+        "runtime: {} compiles ({:.0} ms), {} runs ({:.0} ms)",
+        rs.compiles, rs.compile_ms, rs.runs, rs.run_ms
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let dirs = Dirs::from_args(args);
+    let rt = runtime(&dirs)?;
+    let tier = args.str("tier", "micro");
+    let base = Policy::load_base(&rt, &tier, &dirs.ckpts)?;
+    let n = args.usize("n", 64)?;
+    if args.bool("ladder") {
+        println!("{:<16} {:>8} {:>8} {:>8}", "suite", "acc", "fmt", "len");
+        for (name, ev) in evaluate_suite_ladder(&rt, &tier, &base, n, 777)? {
+            println!(
+                "{:<16} {:>8.3} {:>8.3} {:>8.1}",
+                name, ev.accuracy, ev.format_rate, ev.mean_response_len
+            );
+        }
+    } else {
+        let suite = args.str("suite", "gsm8k-syn");
+        let ev = evaluate(&rt, &tier, &base, &suite, n, 777)?;
+        println!(
+            "{tier} on {suite}: accuracy {:.3} format {:.3} len {:.1} (n={})",
+            ev.accuracy, ev.format_rate, ev.mean_response_len, ev.n
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use tinylora_rl::coordinator::sweep::{sweep_scheme, SweepConfig};
+    let dirs = Dirs::from_args(args);
+    let rt = runtime(&dirs)?;
+    let tier = args.str("tier", "micro");
+    let scheme = args.str("scheme", "tinylora_r2_u13_all");
+    let algo = args.str("algo", "grpo");
+    validate_scheme(&rt.manifest, &tier, &scheme, &algo)?;
+    let base = Policy::load_base(&rt, &tier, &dirs.ckpts)?;
+    let cfg = SweepConfig {
+        tier: tier.clone(),
+        scheme_tag: scheme.clone(),
+        algo,
+        suite: args.str("suite", "gsm8k-syn"),
+        steps: args.usize("steps", 40)?,
+        lrs: args.f32_list("lrs", &[5e-4, 2e-3, 8e-3])?,
+        seeds: args
+            .str_list("seeds", &["0"])
+            .iter()
+            .map(|s| s.parse().unwrap())
+            .collect(),
+        eval_suite: args.str("eval-suite", "gsm8k-syn"),
+        eval_n: args.usize("eval-n", 64)?,
+    };
+    let mut log = RunLog::new(
+        Some(&dirs.results.join(format!("sweep_{tier}_{scheme}.jsonl"))),
+        args.bool("echo"),
+    );
+    let out = sweep_scheme(&rt, &base, &cfg, &dirs.ckpts, &mut log)?;
+    println!(
+        "{}: {} params | baseline {:.3} -> best {:.3} @ lr {:.1e}",
+        out.scheme_tag, out.trainable_params, out.baseline_accuracy, out.accuracy, out.best_lr
+    );
+    Ok(())
+}
+
+fn cmd_serve_demo(args: &Args) -> Result<()> {
+    use tinylora_rl::adapters::packing::Precision;
+    use tinylora_rl::serving::{AdapterStore, Router};
+    use tinylora_rl::tasks::generator::SUITES;
+    use tinylora_rl::util::Pcg64;
+
+    let dirs = Dirs::from_args(args);
+    let rt = runtime(&dirs)?;
+    let tier = args.str("tier", "micro");
+    let base = Policy::load_base(&rt, &tier, &dirs.ckpts)?;
+    let tenants = args.usize("tenants", 16)?;
+    let n_requests = args.usize("requests", 64)?;
+
+    let mut store = AdapterStore::new(&tier, args.usize("max-resident", 4)?);
+    let mut rng = Pcg64::new(11);
+    for i in 0..tenants {
+        let theta: Vec<f32> = (0..13).map(|_| rng.normal() * 0.01).collect();
+        store.register(&format!("tenant-{i}"), "tinylora_r2_u13_all", &theta, Precision::Bf16)?;
+    }
+    println!(
+        "{} adapters stored in {} bytes (one resident model: {} bytes)",
+        store.len(),
+        store.stored_bytes(),
+        store.resident_model_bytes(rt.manifest.tier(&tier)?.n_params)
+    );
+
+    let mut router = Router::new(&rt, store, base, rt.manifest.batch.serve, 0.2, dirs.ckpts.clone())?;
+    let t = tinylora_rl::util::Timer::start();
+    for i in 0..n_requests {
+        // zipf-ish tenant popularity
+        let tenant = (rng.uniform().powf(2.0) * tenants as f32) as usize % tenants;
+        let p = SUITES[0].generate(&mut rng);
+        router.submit(i as u64, &format!("tenant-{tenant}"), &p);
+        router.now += 0.01;
+        router.tick(&rt)?;
+    }
+    router.drain(&rt)?;
+    let mut stats = router.stats();
+    stats.wall_ms = t.millis();
+    println!(
+        "served {} requests in {} batches | occupancy {:.2} | latency mean {:.3}s p95 {:.3}s | merge hit-rate {:.2} | wall {:.0} ms",
+        stats.served, stats.batches, stats.mean_occupancy, stats.mean_latency, stats.p95_latency,
+        stats.merge_hit_rate, stats.wall_ms
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dirs = Dirs::from_args(args);
+    let rt = runtime(&dirs)?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts: {} executables", rt.manifest.executables.len());
+    for (name, t) in &rt.manifest.tiers {
+        println!(
+            "tier {name}: d={} L={} H={} f={} | {} params",
+            t.d, t.n_layers, t.n_heads, t.f, t.n_params
+        );
+    }
+    let tier = args.str("tier", "micro");
+    let t = rt.manifest.tier(&tier)?;
+    println!("\n{}", count::table1(t));
+    Ok(())
+}

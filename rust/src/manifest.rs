@@ -1,0 +1,319 @@
+//! Typed view over `artifacts/manifest.json` — the single source of truth
+//! for every shape/dtype that crosses the python→rust boundary.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum DType {
+    F32,
+    S32,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl ArgSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct InitSpec {
+    pub kind: String, // "normal" | "zeros" | "ones" | "from_checkpoint"
+    pub std: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct WeightSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: InitSpec,
+}
+
+#[derive(Clone, Debug)]
+pub struct TierInfo {
+    pub name: String,
+    pub d: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub f: usize,
+    pub t_max: usize,
+    pub t_prefill: usize,
+    pub t_train: usize,
+    pub head_dim: usize,
+    pub n_params: usize,
+    pub weights: Vec<WeightSpec>,
+    /// module name -> (d_in, d_out) for the seven adapted modules
+    pub module_dims: BTreeMap<String, (usize, usize)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct SchemeInfo {
+    pub kind: String, // tinylora | lora_xs | lora | full
+    pub r: usize,
+    pub u: usize,
+    pub tie: String,
+    pub n_tie: usize,
+    pub lora_alpha: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct ThetaSegment {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+    pub init: InitSpec,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExeInfo {
+    pub name: String,
+    pub file: String,
+    pub fn_kind: String, // prefill|decode|generate|grpo|sft|pretrain|logprobs|merge
+    pub tier: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub use_pallas: bool,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+    pub scheme: Option<SchemeInfo>,
+    pub scheme_tag: Option<String>,
+    pub theta_size: Option<usize>,
+    pub theta_segments: Vec<ThetaSegment>,
+    pub groups: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    pub size: usize,
+    pub chars: String,
+    pub pad: i32,
+    pub bos: i32,
+    pub eos: i32,
+}
+
+#[derive(Clone, Debug)]
+pub struct BatchGeometry {
+    pub roll: usize,
+    pub train: usize,
+    pub serve: usize,
+    pub test: usize,
+}
+
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: Vocab,
+    pub modules: Vec<String>,
+    pub weight_names: Vec<String>,
+    pub n_stats: usize,
+    pub batch: BatchGeometry,
+    pub tiers: BTreeMap<String, TierInfo>,
+    pub executables: BTreeMap<String, ExeInfo>,
+}
+
+fn parse_init(v: &Value) -> Result<InitSpec> {
+    Ok(InitSpec {
+        kind: v.get("kind")?.str()?.to_string(),
+        std: v.opt("std").map(|s| s.f64().unwrap_or(0.0) as f32).unwrap_or(0.0),
+    })
+}
+
+fn parse_args(v: &Value) -> Result<Vec<ArgSpec>> {
+    v.arr()?
+        .iter()
+        .map(|a| {
+            Ok(ArgSpec {
+                name: a.get("name")?.str()?.to_string(),
+                dtype: match a.get("dtype")?.str()? {
+                    "f32" => DType::F32,
+                    "s32" => DType::S32,
+                    other => bail!("unknown dtype {other}"),
+                },
+                shape: a.get("shape")?.usize_vec()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(art_dir: &Path) -> Result<Self> {
+        let path = art_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Value::parse(&text).context("parsing manifest.json")?;
+
+        let vo = v.get("vocab")?;
+        let vocab = Vocab {
+            size: vo.get("size")?.usize()?,
+            chars: vo.get("chars")?.str()?.to_string(),
+            pad: vo.get("pad")?.i64()? as i32,
+            bos: vo.get("bos")?.i64()? as i32,
+            eos: vo.get("eos")?.i64()? as i32,
+        };
+        let bo = v.get("batch")?;
+        let batch = BatchGeometry {
+            roll: bo.get("roll")?.usize()?,
+            train: bo.get("train")?.usize()?,
+            serve: bo.get("serve")?.usize()?,
+            test: bo.get("test")?.usize()?,
+        };
+
+        let mut tiers = BTreeMap::new();
+        for (name, t) in v.get("tiers")?.obj()? {
+            let mut weights = Vec::new();
+            for w in t.get("weights")?.arr()? {
+                weights.push(WeightSpec {
+                    name: w.get("name")?.str()?.to_string(),
+                    shape: w.get("shape")?.usize_vec()?,
+                    init: parse_init(w.get("init")?)?,
+                });
+            }
+            let mut module_dims = BTreeMap::new();
+            for (m, dims) in t.get("module_dims")?.obj()? {
+                let d = dims.usize_vec()?;
+                module_dims.insert(m.clone(), (d[0], d[1]));
+            }
+            tiers.insert(
+                name.clone(),
+                TierInfo {
+                    name: name.clone(),
+                    d: t.get("d")?.usize()?,
+                    n_layers: t.get("n_layers")?.usize()?,
+                    n_heads: t.get("n_heads")?.usize()?,
+                    f: t.get("f")?.usize()?,
+                    t_max: t.get("t_max")?.usize()?,
+                    t_prefill: t.get("t_prefill")?.usize()?,
+                    t_train: t.get("t_train")?.usize()?,
+                    head_dim: t.get("head_dim")?.usize()?,
+                    n_params: t.get("n_params")?.usize()?,
+                    weights,
+                    module_dims,
+                },
+            );
+        }
+
+        let mut executables = BTreeMap::new();
+        for (name, e) in v.get("executables")?.obj()? {
+            let scheme = match e.opt("scheme") {
+                Some(sv) => Some(SchemeInfo {
+                    kind: sv.get("kind")?.str()?.to_string(),
+                    r: sv.get("r")?.usize()?,
+                    u: sv.get("u")?.usize()?,
+                    tie: sv.get("tie")?.str()?.to_string(),
+                    n_tie: sv.get("n_tie")?.usize()?,
+                    lora_alpha: sv.get("lora_alpha")?.f64()? as f32,
+                }),
+                None => None,
+            };
+            let mut theta_segments = Vec::new();
+            if let Some(segs) = e.opt("theta_segments") {
+                for s in segs.arr()? {
+                    theta_segments.push(ThetaSegment {
+                        name: s.get("name")?.str()?.to_string(),
+                        shape: s.get("shape")?.usize_vec()?,
+                        offset: s.get("offset")?.usize()?,
+                        len: s.get("len")?.usize()?,
+                        init: parse_init(s.get("init")?)?,
+                    });
+                }
+            }
+            executables.insert(
+                name.clone(),
+                ExeInfo {
+                    name: name.clone(),
+                    file: e.get("file")?.str()?.to_string(),
+                    fn_kind: e.get("fn")?.str()?.to_string(),
+                    tier: e.get("tier")?.str()?.to_string(),
+                    batch: e.get("batch")?.usize()?,
+                    seq: e.get("seq")?.usize()?,
+                    use_pallas: e.get("use_pallas")?.boolean()?,
+                    inputs: parse_args(e.get("inputs")?)?,
+                    outputs: parse_args(e.get("outputs")?)?,
+                    scheme,
+                    scheme_tag: e.opt("scheme_tag").map(|s| s.str().unwrap().to_string()),
+                    theta_size: e.opt("theta_size").map(|s| s.usize().unwrap()),
+                    theta_segments,
+                    groups: e.opt("groups").map(|g| g.usize_vec().unwrap()).unwrap_or_default(),
+                },
+            );
+        }
+
+        Ok(Self {
+            dir: art_dir.to_path_buf(),
+            vocab,
+            modules: v.get("modules")?.arr()?.iter().map(|m| m.str().unwrap().to_string()).collect(),
+            weight_names: v
+                .get("weight_names")?
+                .arr()?
+                .iter()
+                .map(|m| m.str().unwrap().to_string())
+                .collect(),
+            n_stats: v.get("n_stats")?.usize()?,
+            batch,
+            tiers,
+            executables,
+        })
+    }
+
+    pub fn tier(&self, name: &str) -> Result<&TierInfo> {
+        self.tiers.get(name).with_context(|| format!("unknown tier {name:?}"))
+    }
+
+    pub fn exe(&self, name: &str) -> Result<&ExeInfo> {
+        self.executables
+            .get(name)
+            .with_context(|| format!("unknown executable {name:?} — re-run `make artifacts`?"))
+    }
+
+    /// Find the unique executable matching a predicate (used by trainers to
+    /// locate e.g. "the grpo grad for tier X scheme tag Y").
+    pub fn find<F: Fn(&ExeInfo) -> bool>(&self, what: &str, pred: F) -> Result<&ExeInfo> {
+        let hits: Vec<_> = self.executables.values().filter(|e| pred(e)).collect();
+        match hits.len() {
+            1 => Ok(hits[0]),
+            0 => bail!("no executable matches {what}"),
+            n => bail!("{n} executables match {what}"),
+        }
+    }
+
+    /// Grad executable for a (tier, algo, scheme) at the default train batch.
+    pub fn grad_exe(&self, tier: &str, algo: &str, tag: &str) -> Result<&ExeInfo> {
+        self.grad_exe_b(tier, algo, tag, self.batch.train)
+            .or_else(|_| self.find(&format!("{algo} grad {tier}/{tag} (any batch)"), |e| {
+                e.fn_kind == algo && e.tier == tier && e.scheme_tag.as_deref() == Some(tag)
+            }))
+    }
+
+    /// Grad executable at an explicit batch size.
+    pub fn grad_exe_b(&self, tier: &str, algo: &str, tag: &str, batch: usize) -> Result<&ExeInfo> {
+        self.find(&format!("{algo} grad {tier}/{tag} b{batch}"), |e| {
+            e.fn_kind == algo
+                && e.tier == tier
+                && e.scheme_tag.as_deref() == Some(tag)
+                && e.batch == batch
+        })
+    }
+
+    pub fn merge_exe(&self, tier: &str, tag: &str) -> Result<&ExeInfo> {
+        self.find(&format!("merge {tier}/{tag}"), |e| {
+            e.fn_kind == "merge" && e.tier == tier && e.scheme_tag.as_deref() == Some(tag)
+        })
+    }
+
+    pub fn generate_exe(&self, tier: &str, batch: usize) -> Result<&ExeInfo> {
+        self.find(&format!("generate {tier} b{batch}"), |e| {
+            e.fn_kind == "generate" && e.tier == tier && e.batch == batch
+        })
+    }
+}

@@ -1,0 +1,173 @@
+//! Metrics: JSONL run logs + console progress.  Every trainer step and
+//! sweep point lands in one append-only file so figures can be regenerated
+//! from logged data.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+
+use crate::coordinator::grpo::StepRecord;
+use crate::coordinator::policy::Policy;
+use crate::coordinator::sft::SftRecord;
+use crate::util::json::{num, obj, s, Value};
+
+pub struct RunLog {
+    file: Option<File>,
+    pub echo: bool,
+    pub rows: Vec<Value>,
+}
+
+impl RunLog {
+    pub fn new(path: Option<&Path>, echo: bool) -> Self {
+        let file = path.map(|p| {
+            if let Some(dir) = p.parent() {
+                std::fs::create_dir_all(dir).ok();
+            }
+            File::options().create(true).append(true).open(p).expect("open run log")
+        });
+        Self { file, echo, rows: Vec::new() }
+    }
+
+    pub fn null() -> Self {
+        Self { file: None, echo: false, rows: Vec::new() }
+    }
+
+    pub fn log(&mut self, row: Value) {
+        if let Some(f) = &mut self.file {
+            let _ = writeln!(f, "{}", row.to_string());
+        }
+        self.rows.push(row);
+    }
+
+    pub fn log_step(&mut self, algo: &str, policy: &Policy, rec: &StepRecord) {
+        if self.echo {
+            println!(
+                "[{algo} {}/{} p={}] step {:>4} reward {:.3} len {:>5.1} fmt {:.2} kl {:+.4} loss {:+.4} ({:.0}+{:.0} ms)",
+                policy.tier.name,
+                policy.scheme_tag,
+                policy.trainable_params(),
+                rec.step,
+                rec.reward,
+                rec.response_len,
+                rec.format_rate,
+                rec.stats.kl_k1,
+                rec.stats.loss,
+                rec.rollout_ms,
+                rec.grad_ms,
+            );
+        }
+        self.log(obj(vec![
+            ("kind", s("step")),
+            ("algo", s(algo)),
+            ("tier", s(&policy.tier.name)),
+            ("scheme", s(&policy.scheme_tag)),
+            ("params", num(policy.trainable_params() as f64)),
+            ("step", num(rec.step as f64)),
+            ("reward", num(rec.reward as f64)),
+            ("response_len", num(rec.response_len as f64)),
+            ("format_rate", num(rec.format_rate as f64)),
+            ("eos_rate", num(rec.eos_rate as f64)),
+            ("lr", num(rec.lr as f64)),
+            ("loss", num(rec.stats.loss as f64)),
+            ("kl_k1", num(rec.stats.kl_k1 as f64)),
+            ("kl_k3", num(rec.stats.kl_k3 as f64)),
+            ("mean_ratio", num(rec.stats.mean_ratio as f64)),
+            ("frac_clipped", num(rec.stats.frac_clipped as f64)),
+            ("entropy", num(rec.stats.entropy as f64)),
+            ("grad_norm", num(rec.stats.grad_norm as f64)),
+            ("rollout_ms", num(rec.rollout_ms)),
+            ("grad_ms", num(rec.grad_ms)),
+        ]));
+    }
+
+    pub fn log_sft_step(&mut self, policy: &Policy, rec: &SftRecord) {
+        if self.echo && rec.step % 10 == 0 {
+            println!(
+                "[sft {}/{} p={}] step {:>4} loss {:.4} tok-acc {:.3}",
+                policy.tier.name,
+                policy.scheme_tag,
+                policy.trainable_params(),
+                rec.step,
+                rec.loss,
+                rec.token_acc
+            );
+        }
+        self.log(obj(vec![
+            ("kind", s("step")),
+            ("algo", s("sft")),
+            ("tier", s(&policy.tier.name)),
+            ("scheme", s(&policy.scheme_tag)),
+            ("params", num(policy.trainable_params() as f64)),
+            ("step", num(rec.step as f64)),
+            ("loss", num(rec.loss as f64)),
+            ("token_acc", num(rec.token_acc as f64)),
+            ("lr", num(rec.lr as f64)),
+            ("grad_norm", num(rec.stats.grad_norm as f64)),
+        ]));
+    }
+
+    pub fn log_pretrain(&mut self, tier: &str, step: usize, loss: f32, acc: f32) {
+        if self.echo {
+            println!("[pretrain {tier}] step {step:>5} loss {loss:.4} tok-acc {acc:.3}");
+        }
+        self.log(obj(vec![
+            ("kind", s("pretrain")),
+            ("tier", s(tier)),
+            ("step", num(step as f64)),
+            ("loss", num(loss as f64)),
+            ("token_acc", num(acc as f64)),
+        ]));
+    }
+
+    pub fn log_sweep_point(&mut self, scheme: &str, lr: f32, acc: f32) {
+        if self.echo {
+            println!("[sweep {scheme}] lr {lr:.1e} -> accuracy {acc:.3}");
+        }
+        self.log(obj(vec![
+            ("kind", s("sweep_point")),
+            ("scheme", s(scheme)),
+            ("lr", num(lr as f64)),
+            ("accuracy", num(acc as f64)),
+        ]));
+    }
+
+    pub fn log_eval(&mut self, tier: &str, scheme: &str, params: usize, suite: &str, acc: f32) {
+        if self.echo {
+            println!("[eval {tier}/{scheme} p={params}] {suite}: {acc:.3}");
+        }
+        self.log(obj(vec![
+            ("kind", s("eval")),
+            ("tier", s(tier)),
+            ("scheme", s(scheme)),
+            ("params", num(params as f64)),
+            ("suite", s(suite)),
+            ("accuracy", num(acc as f64)),
+        ]));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_rows_parse_back() {
+        let dir = std::env::temp_dir().join("tlrl_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("log.jsonl");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut log = RunLog::new(Some(&path), false);
+            log.log_pretrain("nano", 0, 3.5, 0.1);
+            log.log_sweep_point("tinylora_r2_u13_all", 1e-3, 0.7);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for l in lines {
+            let v = Value::parse(l).unwrap();
+            assert!(v.get("kind").is_ok());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

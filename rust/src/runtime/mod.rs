@@ -1,0 +1,176 @@
+//! PJRT runtime: loads AOT artifacts (HLO text) and executes them on the
+//! CPU client. The rust binary is self-contained once `make artifacts` has
+//! produced `artifacts/*.hlo.txt` + `manifest.json`.
+//!
+//! Notes driven by the `xla` 0.1.6 wrapper's semantics (measured, see
+//! EXPERIMENTS.md §Perf):
+//!   * Results always come back as ONE tuple buffer (the client does not
+//!     untuple), so every entry point is invoked through `run`, which
+//!     decomposes the tuple into per-output literals on host.
+//!   * Tuple buffers cannot be re-fed as inputs, so loops that would chain
+//!     device state (KV caches) are fused *inside* single executables at
+//!     lowering time (`generate`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::{DType, ExeInfo, Manifest};
+use crate::tensor::{Arg, TensorF32, TensorI32};
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    art_dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    /// cumulative (compile_ms, run_ms, runs) for perf accounting
+    stats: RefCell<RuntimeStats>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeStats {
+    pub compile_ms: f64,
+    pub run_ms: f64,
+    pub runs: u64,
+    pub compiles: u64,
+}
+
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub info: ExeInfo,
+}
+
+/// Outputs of one execution, keyed by position (manifest order).
+pub struct Outputs {
+    lits: Vec<xla::Literal>,
+    info: ExeInfo,
+}
+
+impl Outputs {
+    pub fn f32(&self, idx: usize) -> Result<TensorF32> {
+        let spec = &self.info.outputs[idx];
+        if spec.dtype != DType::F32 {
+            bail!("output {idx} ({}) is not f32", spec.name);
+        }
+        TensorF32::from_literal(&self.lits[idx], &spec.shape)
+    }
+
+    pub fn i32(&self, idx: usize) -> Result<TensorI32> {
+        let spec = &self.info.outputs[idx];
+        if spec.dtype != DType::S32 {
+            bail!("output {idx} ({}) is not s32", spec.name);
+        }
+        TensorI32::from_literal(&self.lits[idx], &spec.shape)
+    }
+
+    pub fn len(&self) -> usize {
+        self.lits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lits.is_empty()
+    }
+
+    /// Find an output index by manifest name.
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.info
+            .outputs
+            .iter()
+            .position(|o| o.name == name)
+            .with_context(|| format!("no output named {name:?}"))
+    }
+}
+
+impl Runtime {
+    pub fn new(art_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(art_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            art_dir: art_dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Default artifact dir: $TINYLORA_ARTIFACTS or ./artifacts.
+    pub fn from_env() -> Result<Self> {
+        let dir = std::env::var("TINYLORA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::new(Path::new(&dir))
+    }
+
+    /// Load (compile) an executable by manifest name, with caching.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let info = self.manifest.exe(name)?.clone();
+        let path = self.art_dir.join(&info.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compile_ms += t0.elapsed().as_secs_f64() * 1e3;
+            s.compiles += 1;
+        }
+        let rc = Rc::new(Executable { exe, info });
+        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Execute with shape-checked args; returns per-output literals.
+    pub fn run(&self, exe: &Executable, args: &[Arg]) -> Result<Outputs> {
+        if args.len() != exe.info.inputs.len() {
+            bail!(
+                "{}: got {} args, want {}",
+                exe.info.name,
+                args.len(),
+                exe.info.inputs.len()
+            );
+        }
+        for (a, spec) in args.iter().zip(&exe.info.inputs) {
+            a.check(spec).with_context(|| exe.info.name.clone())?;
+        }
+        let lits: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let out = exe.exe.execute::<xla::Literal>(&lits)?;
+        let root = out[0][0].to_literal_sync()?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.run_ms += t0.elapsed().as_secs_f64() * 1e3;
+            s.runs += 1;
+        }
+        // aot.py lowers with return_tuple=True: root is always a tuple.
+        let mut root = root;
+        let lits = root.decompose_tuple()?;
+        if lits.len() != exe.info.outputs.len() {
+            bail!(
+                "{}: got {} outputs, want {}",
+                exe.info.name,
+                lits.len(),
+                exe.info.outputs.len()
+            );
+        }
+        Ok(Outputs { lits, info: exe.info.clone() })
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.borrow()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

@@ -1,0 +1,158 @@
+//! Host-side sampling policies.
+//!
+//! The rollout hot path samples *inside* the fused `generate` executable
+//! (rust supplies uniforms; see runtime docs), so this module serves the
+//! per-step decode path (serving plane) and is the reference the in-HLO
+//! sampler is validated against (integration test `generate_matches_host`).
+
+use crate::util::Pcg64;
+
+/// log-softmax of a logit row (numerically stable).
+pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = logits.iter().map(|&x| ((x - max) as f64).exp()).sum::<f64>().ln() as f32 + max;
+    logits.iter().map(|&x| x - lse).collect()
+}
+
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    log_softmax(logits).iter().map(|&x| x.exp()).collect()
+}
+
+pub fn argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SamplingParams {
+    /// <= 0.0 means greedy
+    pub temperature: f32,
+    /// 0 means no top-k filtering
+    pub top_k: usize,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        Self { temperature: 1.0, top_k: 0 }
+    }
+}
+
+/// Sample one token; returns (token, logp under the sampling distribution).
+/// Matches the in-HLO sampler: inverse-CDF over softmax(logits/temp) driven
+/// by a single uniform.
+pub fn sample(logits: &[f32], params: SamplingParams, u: f32) -> (usize, f32) {
+    if params.temperature <= 0.0 {
+        let t = argmax(logits);
+        return (t, 0.0);
+    }
+    let mut z: Vec<f32> = logits.iter().map(|&x| x / params.temperature).collect();
+    if params.top_k > 0 && params.top_k < z.len() {
+        let mut sorted: Vec<f32> = z.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let thresh = sorted[params.top_k - 1];
+        for x in &mut z {
+            if *x < thresh {
+                *x = f32::NEG_INFINITY;
+            }
+        }
+    }
+    let lp = log_softmax(&z);
+    let mut acc = 0.0f32;
+    let mut tok = lp.len() - 1;
+    for (i, &l) in lp.iter().enumerate() {
+        acc += l.exp();
+        if u < acc {
+            tok = i;
+            break;
+        }
+    }
+    (tok, lp[tok])
+}
+
+/// Convenience: sample with an RNG instead of an explicit uniform.
+pub fn sample_with_rng(logits: &[f32], params: SamplingParams, rng: &mut Pcg64) -> (usize, f32) {
+    sample(logits, params, rng.uniform())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        check("softmax normalized", 100, |rng| {
+            let n = rng.below(60) as usize + 2;
+            let logits: Vec<f32> = (0..n).map(|_| rng.normal() * 5.0).collect();
+            let s: f32 = softmax(&logits).iter().sum();
+            if (s - 1.0).abs() < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("sum {s}"))
+            }
+        });
+    }
+
+    #[test]
+    fn greedy_picks_max() {
+        let logits = vec![0.1, 3.0, -1.0, 2.9];
+        let (t, lp) = sample(&logits, SamplingParams { temperature: 0.0, top_k: 0 }, 0.5);
+        assert_eq!(t, 1);
+        assert_eq!(lp, 0.0);
+    }
+
+    #[test]
+    fn sampling_matches_distribution() {
+        // frequency of each token under repeated sampling ~ softmax probs
+        let logits = vec![1.0, 0.0, -1.0, 2.0];
+        let probs = softmax(&logits);
+        let mut rng = Pcg64::new(5);
+        let mut counts = [0usize; 4];
+        let n = 40_000;
+        for _ in 0..n {
+            let (t, _) = sample_with_rng(&logits, SamplingParams::default(), &mut rng);
+            counts[t] += 1;
+        }
+        for i in 0..4 {
+            let f = counts[i] as f32 / n as f32;
+            assert!((f - probs[i]).abs() < 0.01, "tok {i}: {f} vs {}", probs[i]);
+        }
+    }
+
+    #[test]
+    fn temperature_sharpens() {
+        let logits = vec![1.0, 0.0];
+        let mut rng = Pcg64::new(6);
+        let cold = SamplingParams { temperature: 0.2, top_k: 0 };
+        let hot = SamplingParams { temperature: 5.0, top_k: 0 };
+        let count = |p: SamplingParams, rng: &mut Pcg64| {
+            (0..5000).filter(|_| sample_with_rng(&logits, p, rng).0 == 0).count()
+        };
+        let c_cold = count(cold, &mut rng);
+        let c_hot = count(hot, &mut rng);
+        assert!(c_cold > c_hot, "cold {c_cold} vs hot {c_hot}");
+    }
+
+    #[test]
+    fn top_k_masks_tail() {
+        let logits = vec![3.0, 2.0, -5.0, -6.0];
+        let mut rng = Pcg64::new(7);
+        for _ in 0..500 {
+            let (t, _) =
+                sample_with_rng(&logits, SamplingParams { temperature: 1.0, top_k: 2 }, &mut rng);
+            assert!(t < 2, "sampled masked token {t}");
+        }
+    }
+
+    #[test]
+    fn reported_logp_is_correct() {
+        let logits = vec![0.5, 1.5, -0.5];
+        let lp_ref = log_softmax(&logits);
+        let (t, lp) = sample(&logits, SamplingParams::default(), 0.3);
+        assert!((lp - lp_ref[t]).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,126 @@
+//! Dynamic batcher: groups queued requests by adapter into fixed-size
+//! executable batches (the generate executables have baked batch sizes),
+//! trading latency for occupancy — the standard continuous-batching
+//! dial, scoped per adapter because a batch runs under ONE merged model.
+
+use std::collections::VecDeque;
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub adapter: String,
+    pub prompt: String,
+    /// virtual arrival time (the simulation clock, seconds)
+    pub arrival: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub adapter: String,
+    pub requests: Vec<Request>,
+}
+
+pub struct DynamicBatcher {
+    queue: VecDeque<Request>,
+    pub batch_size: usize,
+    /// flush a partial batch once its oldest request waited this long
+    pub max_wait: f64,
+}
+
+impl DynamicBatcher {
+    pub fn new(batch_size: usize, max_wait: f64) -> Self {
+        Self { queue: VecDeque::new(), batch_size, max_wait }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Form the next batch at virtual time `now`:
+    ///   1. prefer the adapter with a full batch waiting (occupancy);
+    ///   2. otherwise, if the oldest request exceeded max_wait, flush its
+    ///      adapter's partial batch (latency bound);
+    ///   3. otherwise return None (caller advances time / adds requests).
+    pub fn next_batch(&mut self, now: f64) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        // count per adapter, preserving FIFO order of first appearance
+        let mut order: Vec<String> = Vec::new();
+        for r in &self.queue {
+            if !order.contains(&r.adapter) {
+                order.push(r.adapter.clone());
+            }
+        }
+        let full = order.iter().find(|a| {
+            self.queue.iter().filter(|r| &r.adapter == *a).count() >= self.batch_size
+        });
+        let pick = match full {
+            Some(a) => Some(a.clone()),
+            None => {
+                let oldest = self.queue.front().unwrap();
+                (now - oldest.arrival >= self.max_wait).then(|| oldest.adapter.clone())
+            }
+        }?;
+        let mut requests = Vec::with_capacity(self.batch_size);
+        let mut i = 0;
+        while i < self.queue.len() && requests.len() < self.batch_size {
+            if self.queue[i].adapter == pick {
+                requests.push(self.queue.remove(i).unwrap());
+            } else {
+                i += 1;
+            }
+        }
+        Some(Batch { adapter: pick, requests })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, adapter: &str, arrival: f64) -> Request {
+        Request { id, adapter: adapter.into(), prompt: format!("p{id}"), arrival }
+    }
+
+    #[test]
+    fn full_batch_preferred() {
+        let mut b = DynamicBatcher::new(2, 10.0);
+        b.push(req(1, "a", 0.0));
+        b.push(req(2, "b", 0.1));
+        b.push(req(3, "b", 0.2));
+        let batch = b.next_batch(0.3).unwrap();
+        assert_eq!(batch.adapter, "b");
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn partial_batch_waits_then_flushes() {
+        let mut b = DynamicBatcher::new(4, 1.0);
+        b.push(req(1, "a", 0.0));
+        assert!(b.next_batch(0.5).is_none(), "should wait for more");
+        let batch = b.next_batch(1.5).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn fifo_within_adapter() {
+        let mut b = DynamicBatcher::new(2, 0.0);
+        b.push(req(1, "a", 0.0));
+        b.push(req(2, "a", 0.1));
+        b.push(req(3, "a", 0.2));
+        let batch = b.next_batch(0.2).unwrap();
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn empty_queue_yields_none() {
+        let mut b = DynamicBatcher::new(2, 0.0);
+        assert!(b.next_batch(100.0).is_none());
+    }
+}

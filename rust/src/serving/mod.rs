@@ -1,0 +1,12 @@
+//! Multi-adapter serving plane — the paper's deployment motivation:
+//! TinyLoRA adapters are small enough (26 bytes!) to store thousands of
+//! tenants, with an LRU of activated (merged) models and per-adapter
+//! dynamic batching.
+
+pub mod batcher;
+pub mod router;
+pub mod store;
+
+pub use batcher::{Batch, DynamicBatcher, Request};
+pub use router::{Router, RouterStats};
+pub use store::AdapterStore;

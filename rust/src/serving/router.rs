@@ -1,0 +1,163 @@
+//! Request router: ties the adapter store and the dynamic batcher to the
+//! rollout engine.  One scheduling round = pick a batch, activate its
+//! adapter (LRU-cached merge), run the fused generate executable, verify
+//! and record latency.  This is the vllm-router-shaped component of L3.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::rollout::RolloutEngine;
+use crate::serving::batcher::{Batch, DynamicBatcher, Request};
+use crate::serving::store::AdapterStore;
+use crate::tasks::corpus::prompt_batch;
+use crate::tasks::generator::Problem;
+use crate::tokenizer::Tokenizer;
+use crate::util::Pcg64;
+use crate::weights::WeightSet;
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub adapter: String,
+    pub text: String,
+    /// virtual seconds from arrival to completion
+    pub latency: f64,
+    pub batch_occupancy: f32,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RouterStats {
+    pub served: u64,
+    pub batches: u64,
+    pub mean_latency: f64,
+    pub p95_latency: f64,
+    pub mean_occupancy: f64,
+    pub wall_ms: f64,
+    pub merge_hit_rate: f32,
+}
+
+pub struct Router {
+    pub store: AdapterStore,
+    pub batcher: DynamicBatcher,
+    engine: RolloutEngine,
+    base: WeightSet,
+    tok: Tokenizer,
+    ckpt_dir: PathBuf,
+    latencies: Vec<f64>,
+    occupancies: Vec<f32>,
+    pub responses: Vec<Response>,
+    rng: Pcg64,
+    /// virtual clock (seconds); advanced by the caller and by batch service
+    pub now: f64,
+    /// virtual service time per batch (models device occupancy)
+    pub service_time: f64,
+}
+
+impl Router {
+    pub fn new(
+        rt: &crate::runtime::Runtime,
+        store: AdapterStore,
+        base: WeightSet,
+        batch_size: usize,
+        max_wait: f64,
+        ckpt_dir: PathBuf,
+    ) -> Result<Self> {
+        let engine = RolloutEngine::new(rt, &store.tier, batch_size)?;
+        Ok(Self {
+            store,
+            batcher: DynamicBatcher::new(batch_size, max_wait),
+            engine,
+            base,
+            tok: Tokenizer::new(),
+            ckpt_dir,
+            latencies: Vec::new(),
+            occupancies: Vec::new(),
+            responses: Vec::new(),
+            rng: Pcg64::new(0),
+            now: 0.0,
+            service_time: 0.05,
+        })
+    }
+
+    pub fn submit(&mut self, id: u64, adapter: &str, problem: &Problem) {
+        self.batcher.push(Request {
+            id,
+            adapter: adapter.to_string(),
+            prompt: problem.prompt.clone(),
+            arrival: self.now,
+        });
+    }
+
+    /// Serve at most one batch; returns how many requests completed.
+    pub fn tick(&mut self, rt: &crate::runtime::Runtime) -> Result<usize> {
+        let Some(batch) = self.batcher.next_batch(self.now) else {
+            return Ok(0);
+        };
+        let n = self.serve_batch(rt, batch)?;
+        Ok(n)
+    }
+
+    fn serve_batch(&mut self, rt: &crate::runtime::Runtime, batch: Batch) -> Result<usize> {
+        let weights = self.store.activate(rt, &self.base, &batch.adapter, &self.ckpt_dir)?;
+        // pad the prompt list to the executable's baked batch size
+        let mut problems: Vec<Problem> = batch
+            .requests
+            .iter()
+            .map(|r| Problem { prompt: r.prompt.clone(), gold: String::new(), answer: 0, suite: "serving" })
+            .collect();
+        let n_real = problems.len();
+        while problems.len() < self.engine.batch {
+            problems.push(problems[problems.len() - 1].clone());
+        }
+        let pb = prompt_batch(&problems, &self.tok, 1, self.engine.t_prefill);
+        let roll = self.engine.rollout(rt, &weights, &pb, &self.tok, 0.0, &mut self.rng)?;
+        self.now += self.service_time;
+        let occ = n_real as f32 / self.engine.batch as f32;
+        for (req, row) in batch.requests.iter().zip(roll.rows.iter()) {
+            let latency = self.now - req.arrival;
+            self.latencies.push(latency);
+            self.responses.push(Response {
+                id: req.id,
+                adapter: req.adapter.clone(),
+                text: row.text.clone(),
+                latency,
+                batch_occupancy: occ,
+            });
+        }
+        self.occupancies.push(occ);
+        Ok(n_real)
+    }
+
+    /// Drain the queue completely.
+    pub fn drain(&mut self, rt: &crate::runtime::Runtime) -> Result<()> {
+        loop {
+            if self.batcher.pending() == 0 {
+                return Ok(());
+            }
+            if self.tick(rt)? == 0 {
+                // nothing flushable yet: advance virtual time to force it
+                self.now += self.batcher.max_wait.max(1e-3);
+            }
+        }
+    }
+
+    pub fn stats(&self) -> RouterStats {
+        let mut lat = self.latencies.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p95 = if lat.is_empty() { 0.0 } else { lat[(lat.len() * 95 / 100).min(lat.len() - 1)] };
+        RouterStats {
+            served: self.responses.len() as u64,
+            batches: self.occupancies.len() as u64,
+            mean_latency: if lat.is_empty() { 0.0 } else { lat.iter().sum::<f64>() / lat.len() as f64 },
+            p95_latency: p95,
+            mean_occupancy: if self.occupancies.is_empty() {
+                0.0
+            } else {
+                self.occupancies.iter().map(|&x| x as f64).sum::<f64>() / self.occupancies.len() as f64
+            },
+            wall_ms: 0.0,
+            merge_hit_rate: self.store.hit_rate(),
+        }
+    }
+}

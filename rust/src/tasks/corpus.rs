@@ -1,0 +1,280 @@
+//! Batch builders: pretraining corpus, SFT demonstrations and rollout
+//! prompt batches.  This module owns the sequence-layout conventions shared
+//! by every trainer:
+//!
+//!   prompt tokens   = [BOS] + encode(prompt + "\n")
+//!   response tokens = encode(solution) + [EOS]
+//!   training doc    = prompt ++ response, right-padded with PAD
+//!   target_mask[t]  = 1 iff tokens[t+1] is a token the loss should score
+//!
+//! The pretraining corpus deliberately mixes *answer formats* (only one of
+//! which the verifier rewards) so that the base model has the capability
+//! but not the style — the situation the paper's RL-elicitation story
+//! requires (DESIGN.md §2).
+
+use crate::tasks::generator::{Problem, Suite};
+use crate::tensor::{TensorF32, TensorI32};
+use crate::tokenizer::{Tokenizer, BOS, EOS, PAD};
+use crate::util::Pcg64;
+
+/// Share of pretraining docs that are bare arithmetic drills.
+const DRILL_FRAC: f32 = 0.3;
+/// Answer-format mixture for pretraining docs: (canonical ####, "= n", bare).
+pub const FORMAT_MIX: [f32; 3] = [0.35, 0.40, 0.25];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AnswerFormat {
+    Canonical, // "#### 42"  — the only format the verifier rewards
+    Equals,    // ">> = 42"
+    Bare,      // "42"
+}
+
+/// Render a problem's solution in a given format (scratchpad + answer line).
+pub fn render_solution(p: &Problem, fmt: AnswerFormat) -> String {
+    let scratch: Vec<&str> = p.gold.lines().filter(|l| !l.starts_with("####")).collect();
+    let mut s = scratch.join("\n");
+    if !s.is_empty() {
+        s.push('\n');
+    }
+    match fmt {
+        AnswerFormat::Canonical => s.push_str(&format!("#### {}", p.answer)),
+        AnswerFormat::Equals => s.push_str(&format!("= {}", p.answer)),
+        AnswerFormat::Bare => s.push_str(&format!("{}", p.answer)),
+    }
+    s
+}
+
+pub fn prompt_tokens(tok: &Tokenizer, prompt: &str) -> Vec<i32> {
+    let mut ids = vec![BOS];
+    ids.extend(tok.encode(prompt));
+    ids.extend(tok.encode("\n"));
+    ids
+}
+
+pub fn response_tokens(tok: &Tokenizer, solution: &str) -> Vec<i32> {
+    let mut ids = tok.encode(solution);
+    ids.push(EOS);
+    ids
+}
+
+/// One pretraining document (token ids, unpadded).
+fn pretrain_doc(suite: &Suite, tok: &Tokenizer, rng: &mut Pcg64, budget: usize) -> Vec<i32> {
+    if rng.uniform() < DRILL_FRAC {
+        // arithmetic drill: lines of "a+b=c" / "a*b=c" until budget
+        let mut ids = vec![BOS];
+        while ids.len() + 10 < budget {
+            let a = rng.range_i64(2, 99);
+            let line = if rng.uniform() < 0.3 {
+                let b = rng.range_i64(2, 9);
+                format!("{a}*{b}={}\n", a * b)
+            } else if rng.uniform() < 0.5 {
+                let b = rng.range_i64(2, 99);
+                format!("{a}+{b}={}\n", a + b)
+            } else {
+                let b = rng.range_i64(1, a);
+                format!("{a}-{b}={}\n", a - b)
+            };
+            ids.extend(tok.encode(&line));
+        }
+        ids.push(EOS);
+        ids.truncate(budget);
+        return ids;
+    }
+    let p = suite.generate(rng);
+    let u = rng.uniform();
+    let fmt = if u < FORMAT_MIX[0] {
+        AnswerFormat::Canonical
+    } else if u < FORMAT_MIX[0] + FORMAT_MIX[1] {
+        AnswerFormat::Equals
+    } else {
+        AnswerFormat::Bare
+    };
+    let mut ids = prompt_tokens(tok, &p.prompt);
+    ids.extend(response_tokens(tok, &render_solution(&p, fmt)));
+    ids.truncate(budget);
+    ids
+}
+
+/// Pad a doc to length `t` and derive the all-token target mask.
+fn pad_and_mask(mut ids: Vec<i32>, t: usize) -> (Vec<i32>, Vec<f32>) {
+    ids.truncate(t);
+    let real = ids.len();
+    ids.resize(t, PAD);
+    // mask[j] scores the prediction of tokens[j+1]
+    let mut mask = vec![0.0f32; t - 1];
+    for j in 0..real.saturating_sub(1).min(t - 1) {
+        mask[j] = 1.0;
+    }
+    (ids, mask)
+}
+
+/// Pretraining batch: [b, t] tokens + [b, t-1] mask (LM loss on all tokens).
+pub fn pretrain_batch(
+    suite: &Suite,
+    tok: &Tokenizer,
+    rng: &mut Pcg64,
+    b: usize,
+    t: usize,
+) -> (TensorI32, TensorF32) {
+    let mut tokens = Vec::with_capacity(b * t);
+    let mut mask = Vec::with_capacity(b * (t - 1));
+    for _ in 0..b {
+        let (ids, m) = pad_and_mask(pretrain_doc(suite, tok, rng, t), t);
+        tokens.extend(ids);
+        mask.extend(m);
+    }
+    (
+        TensorI32::from_vec(&[b, t], tokens),
+        TensorF32::from_vec(&[b, t - 1], mask),
+    )
+}
+
+/// SFT batch: gold canonical demonstrations, loss masked to response tokens
+/// only (the paper's SFT baseline).
+pub fn sft_batch(
+    suite: &Suite,
+    tok: &Tokenizer,
+    rng: &mut Pcg64,
+    b: usize,
+    t: usize,
+) -> (TensorI32, TensorF32) {
+    let mut tokens = Vec::with_capacity(b * t);
+    let mut mask = Vec::with_capacity(b * (t - 1));
+    for _ in 0..b {
+        let p = suite.generate(rng);
+        let pt = prompt_tokens(tok, &p.prompt);
+        let rt = response_tokens(tok, &render_solution(&p, AnswerFormat::Canonical));
+        let plen = pt.len();
+        let mut ids = pt;
+        ids.extend(rt);
+        ids.truncate(t);
+        let real = ids.len();
+        ids.resize(t, PAD);
+        let mut m = vec![0.0f32; t - 1];
+        // score only predictions of response tokens: positions plen..real
+        for j in plen.saturating_sub(1)..real.saturating_sub(1).min(t - 1) {
+            m[j] = 1.0;
+        }
+        tokens.extend(ids);
+        mask.extend(m);
+    }
+    (
+        TensorI32::from_vec(&[b, t], tokens),
+        TensorF32::from_vec(&[b, t - 1], mask),
+    )
+}
+
+/// A rollout prompt batch: `n_prompts` problems, each repeated `group`
+/// times (GRPO's per-prompt groups), right-padded to t_prefill.
+pub struct PromptBatch {
+    pub problems: Vec<Problem>,
+    /// [b, t_prefill] right-padded prompt tokens
+    pub tokens: TensorI32,
+    /// [b] true prompt lengths
+    pub prompt_len: TensorI32,
+    pub group: usize,
+}
+
+pub fn prompt_batch(
+    problems: &[Problem],
+    tok: &Tokenizer,
+    group: usize,
+    t_prefill: usize,
+) -> PromptBatch {
+    let b = problems.len() * group;
+    let mut tokens = Vec::with_capacity(b * t_prefill);
+    let mut plen = Vec::with_capacity(b);
+    let mut flat = Vec::with_capacity(b);
+    for p in problems {
+        let mut ids = prompt_tokens(tok, &p.prompt);
+        ids.truncate(t_prefill);
+        let real = ids.len();
+        ids.resize(t_prefill, PAD);
+        for _ in 0..group {
+            tokens.extend_from_slice(&ids);
+            plen.push(real as i32);
+            flat.push(p.clone());
+        }
+    }
+    PromptBatch {
+        problems: flat,
+        tokens: TensorI32::from_vec(&[b, t_prefill], tokens),
+        prompt_len: TensorI32::from_vec(&[b], plen),
+        group,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::generator::SUITES;
+    use crate::tasks::verifier::extract_answer;
+
+    #[test]
+    fn format_rendering() {
+        let mut rng = Pcg64::new(1);
+        let p = SUITES[0].generate(&mut rng);
+        assert!(render_solution(&p, AnswerFormat::Canonical).contains("####"));
+        assert!(render_solution(&p, AnswerFormat::Equals).ends_with(&format!("= {}", p.answer)));
+        assert!(!render_solution(&p, AnswerFormat::Equals).contains("####"));
+        assert_eq!(
+            extract_answer(&render_solution(&p, AnswerFormat::Canonical)),
+            Some(p.answer)
+        );
+    }
+
+    #[test]
+    fn pretrain_batch_shapes_and_mask() {
+        let tok = Tokenizer::new();
+        let mut rng = Pcg64::new(2);
+        let (tokens, mask) = pretrain_batch(&SUITES[0], &tok, &mut rng, 4, 64);
+        assert_eq!(tokens.shape, vec![4, 64]);
+        assert_eq!(mask.shape, vec![4, 63]);
+        for b in 0..4 {
+            assert_eq!(tokens.data[b * 64], BOS);
+            // mask is 1 exactly while the *next* token is real
+            for j in 0..63 {
+                let next_real = tokens.data[b * 64 + j + 1] != PAD;
+                assert_eq!(mask.data[b * 63 + j] == 1.0, next_real, "b={b} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn sft_mask_covers_response_only() {
+        let tok = Tokenizer::new();
+        let mut rng = Pcg64::new(3);
+        let (tokens, mask) = sft_batch(&SUITES[0], &tok, &mut rng, 2, 96);
+        for b in 0..2 {
+            // find the newline ending the prompt (first \n token after BOS)
+            let nl = tok.encode("\n")[0];
+            let row = &tokens.data[b * 96..(b + 1) * 96];
+            let prompt_end = row.iter().position(|&x| x == nl).unwrap();
+            // no scored position before the prompt's final token
+            for j in 0..prompt_end.saturating_sub(1) {
+                assert_eq!(mask.data[b * 95 + j], 0.0, "b={b} j={j}");
+            }
+            // at least one scored position afterwards
+            assert!(mask.data[b * 95..].iter().any(|&m| m == 1.0));
+        }
+    }
+
+    #[test]
+    fn prompt_batch_repeats_groups() {
+        let tok = Tokenizer::new();
+        let mut rng = Pcg64::new(4);
+        let probs: Vec<_> = (0..3).map(|_| SUITES[0].generate(&mut rng)).collect();
+        let pb = prompt_batch(&probs, &tok, 4, 64);
+        assert_eq!(pb.tokens.shape, vec![12, 64]);
+        assert_eq!(pb.problems.len(), 12);
+        // rows within a group are identical
+        for g in 0..3 {
+            let base = &pb.tokens.data[g * 4 * 64..(g * 4 + 1) * 64];
+            for k in 1..4 {
+                let row = &pb.tokens.data[(g * 4 + k) * 64..(g * 4 + k + 1) * 64];
+                assert_eq!(base, row);
+                assert_eq!(pb.problems[g * 4 + k].prompt, pb.problems[g * 4].prompt);
+            }
+        }
+    }
+}

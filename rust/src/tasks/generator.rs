@@ -1,0 +1,258 @@
+//! Templated problem generators over a difficulty ladder.
+//!
+//! Each suite mirrors one of the paper's evaluation datasets in *relative
+//! difficulty* (steps, operand size, operation mix).  Prompts are compact
+//! word problems; gold solutions are scratchpad lines (`a+b=c`) ending with
+//! the canonical `#### answer` line the verifier rewards.
+
+use crate::util::Pcg64;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Problem {
+    pub prompt: String,
+    /// Gold scratchpad + `#### answer` (canonical format A).
+    pub gold: String,
+    pub answer: i64,
+    pub suite: &'static str,
+}
+
+#[derive(Clone, Copy)]
+pub struct Suite {
+    pub name: &'static str,
+    /// which paper benchmark this tier stands in for
+    pub stands_in_for: &'static str,
+    pub min_steps: usize,
+    pub max_steps: usize,
+    pub max_operand: i64,
+    pub allow_mul: bool,
+    pub allow_expr: bool,
+}
+
+pub const SUITES: &[Suite] = &[
+    Suite { name: "gsm8k-syn", stands_in_for: "GSM8K", min_steps: 1, max_steps: 2, max_operand: 99, allow_mul: false, allow_expr: false },
+    Suite { name: "math500-syn", stands_in_for: "MATH500", min_steps: 2, max_steps: 2, max_operand: 99, allow_mul: true, allow_expr: false },
+    Suite { name: "minerva-syn", stands_in_for: "Minerva Math", min_steps: 2, max_steps: 3, max_operand: 99, allow_mul: true, allow_expr: false },
+    Suite { name: "olympiad-syn", stands_in_for: "OlympiadBench", min_steps: 3, max_steps: 3, max_operand: 99, allow_mul: true, allow_expr: true },
+    Suite { name: "aime-syn", stands_in_for: "AIME24", min_steps: 3, max_steps: 4, max_operand: 99, allow_mul: true, allow_expr: false },
+    Suite { name: "amc-syn", stands_in_for: "AMC23", min_steps: 2, max_steps: 3, max_operand: 50, allow_mul: true, allow_expr: true },
+];
+
+pub fn suite(name: &str) -> Option<&'static Suite> {
+    SUITES.iter().find(|s| s.name == name)
+}
+
+const NAMES: &[&str] = &["ann", "ben", "tom", "sam", "kim", "leo", "mia", "dan"];
+const ITEMS: &[&str] = &["pens", "cups", "nuts", "coins", "books", "cards", "kites", "stars"];
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Op {
+    Add,
+    Sub,
+    Mul,
+}
+
+impl Suite {
+    pub fn generate(&self, rng: &mut Pcg64) -> Problem {
+        if self.allow_expr && rng.uniform() < 0.35 {
+            return self.gen_expression(rng);
+        }
+        if self.max_steps <= 2 && rng.uniform() < 0.6 {
+            self.gen_word_problem(rng)
+        } else {
+            self.gen_chain(rng)
+        }
+    }
+
+    fn pick_op(&self, rng: &mut Pcg64) -> Op {
+        if self.allow_mul && rng.uniform() < 0.3 {
+            Op::Mul
+        } else if rng.uniform() < 0.5 {
+            Op::Add
+        } else {
+            Op::Sub
+        }
+    }
+
+    /// Apply `op` to acc with a fresh operand, keeping 0 <= result <= 999.
+    /// Falls back to a safe operation when `op` would leave the range.
+    fn step(&self, rng: &mut Pcg64, acc: i64, op: Op) -> (i64, i64, char) {
+        let op = match op {
+            Op::Mul if acc < 2 || acc * 2 > 999 => Op::Sub,
+            Op::Add if acc + 2 > 999 => Op::Sub,
+            o => o,
+        };
+        let op = if acc < 1 && op == Op::Sub { Op::Add } else { op };
+        match op {
+            Op::Add => {
+                let b = rng.range_i64(2, self.max_operand.min(999 - acc));
+                (acc + b, b, '+')
+            }
+            Op::Sub => {
+                let b = rng.range_i64(1, acc);
+                (acc - b, b, '-')
+            }
+            Op::Mul => {
+                let cap = (999 / acc).min(9);
+                let b = rng.range_i64(2, cap);
+                (acc * b, b, '*')
+            }
+        }
+    }
+
+    /// One/two-step natural-language word problems (gsm8k style).
+    fn gen_word_problem(&self, rng: &mut Pcg64) -> Problem {
+        let who = *rng.choice(NAMES);
+        let who2 = *rng.choice(NAMES);
+        let item = *rng.choice(ITEMS);
+        let a = rng.range_i64(2, self.max_operand);
+        let mut lines = Vec::new();
+        let (prompt, answer) = match rng.below(4) {
+            0 => {
+                let b = rng.range_i64(2, self.max_operand);
+                lines.push(format!("{a}+{b}={}", a + b));
+                (format!("{who} has {a} {item}. {who2} gives her {b} more. how many now?"), a + b)
+            }
+            1 => {
+                let b = rng.range_i64(1, a);
+                lines.push(format!("{a}-{b}={}", a - b));
+                (format!("{who} had {a} {item} and lost {b}. how many left?"), a - b)
+            }
+            2 if self.allow_mul => {
+                let b = rng.range_i64(2, 9);
+                lines.push(format!("{a}*{b}={}", a * b));
+                (format!("a box holds {a} {item}. how many in {b} boxes?"), a * b)
+            }
+            _ => {
+                let b = rng.range_i64(2, self.max_operand);
+                let c = rng.range_i64(1, a + b);
+                lines.push(format!("{a}+{b}={}", a + b));
+                lines.push(format!("{}-{c}={}", a + b, a + b - c));
+                (
+                    format!("{who} got {a} {item}, then {b} more, then lost {c}. total?"),
+                    a + b - c,
+                )
+            }
+        };
+        lines.push(format!("#### {answer}"));
+        Problem { prompt, gold: lines.join("\n"), answer, suite: self.name }
+    }
+
+    /// Multi-step imperative chains ("start with a. add b. ...").
+    fn gen_chain(&self, rng: &mut Pcg64) -> Problem {
+        let n_steps = rng.range_i64(self.min_steps as i64, self.max_steps as i64) as usize;
+        let mut acc = rng.range_i64(2, self.max_operand);
+        let mut prompt = format!("start with {acc}.");
+        let mut lines = Vec::new();
+        for _ in 0..n_steps {
+            let op = self.pick_op(rng);
+            let prev = acc;
+            let (next, b, sym) = self.step(rng, acc, op);
+            acc = next;
+            let verb = match sym {
+                '+' => format!(" add {b}."),
+                '-' => format!(" sub {b}."),
+                _ => format!(" times {b}."),
+            };
+            prompt.push_str(&verb);
+            lines.push(format!("{prev}{sym}{b}={acc}"));
+        }
+        prompt.push_str(" result?");
+        lines.push(format!("#### {acc}"));
+        Problem { prompt, gold: lines.join("\n"), answer: acc, suite: self.name }
+    }
+
+    /// Parenthesised expression evaluation (amc/olympiad style).
+    fn gen_expression(&self, rng: &mut Pcg64) -> Problem {
+        let a = rng.range_i64(2, self.max_operand.min(50));
+        let b = rng.range_i64(2, self.max_operand.min(50));
+        let c = rng.range_i64(2, 9);
+        let d = rng.range_i64(1, 99);
+        let (prompt, lines, answer) = if rng.uniform() < 0.5 {
+            let s1 = a + b;
+            let s2 = s1 * c;
+            let ans = s2 - d.min(s2);
+            let d = d.min(s2);
+            (
+                format!("what is ({a}+{b})*{c}-{d}?"),
+                vec![
+                    format!("{a}+{b}={s1}"),
+                    format!("{s1}*{c}={s2}"),
+                    format!("{s2}-{d}={ans}"),
+                ],
+                ans,
+            )
+        } else {
+            let s1 = a * c;
+            let ans = s1 + b;
+            (
+                format!("what is {a}*{c}+{b}?"),
+                vec![format!("{a}*{c}={s1}"), format!("{s1}+{b}={ans}")],
+                ans,
+            )
+        };
+        let mut lines = lines;
+        lines.push(format!("#### {answer}"));
+        Problem { prompt, gold: lines.join("\n"), answer, suite: self.name }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_lookup() {
+        assert_eq!(suite("gsm8k-syn").unwrap().name, "gsm8k-syn");
+        assert!(suite("nope").is_none());
+    }
+
+    #[test]
+    fn chains_respect_value_bounds() {
+        let mut rng = Pcg64::new(11);
+        for s in SUITES {
+            for _ in 0..200 {
+                let p = s.generate(&mut rng);
+                assert!(p.answer >= 0 && p.answer <= 999, "{:?}", p);
+                // every intermediate on each line must be in bounds
+                for line in p.gold.lines() {
+                    if let Some((_, rhs)) = line.split_once('=') {
+                        let v: i64 = rhs.parse().unwrap();
+                        assert!((0..=999).contains(&v), "line {line} in {:?}", p);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gold_scratchpad_is_arithmetically_correct() {
+        let mut rng = Pcg64::new(13);
+        for s in SUITES {
+            for _ in 0..100 {
+                let p = s.generate(&mut rng);
+                for line in p.gold.lines() {
+                    if let Some((lhs, rhs)) = line.split_once('=') {
+                        let want: i64 = rhs.parse().unwrap();
+                        let got = eval_binary(lhs).unwrap_or_else(|| panic!("bad line {line}"));
+                        assert_eq!(got, want, "{line} in {:?}", p.gold);
+                    }
+                }
+            }
+        }
+    }
+
+    fn eval_binary(expr: &str) -> Option<i64> {
+        for (i, c) in expr.char_indices().skip(1) {
+            if c == '+' || c == '-' || c == '*' {
+                let a: i64 = expr[..i].parse().ok()?;
+                let b: i64 = expr[i + 1..].parse().ok()?;
+                return Some(match c {
+                    '+' => a + b,
+                    '-' => a - b,
+                    _ => a * b,
+                });
+            }
+        }
+        None
+    }
+}

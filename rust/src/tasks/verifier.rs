@@ -1,0 +1,76 @@
+//! Exact-match answer verification (the paper's RLVR reward).
+//!
+//! The model earns reward 1.0 iff its response contains the canonical
+//! `#### <integer>` line whose value equals the gold answer — format *and*
+//! arithmetic both matter, exactly as in the paper's GSM8K protocol.
+
+/// Extract the answer from the LAST `####` marker (models sometimes emit
+/// several; graders take the final one).
+pub fn extract_answer(text: &str) -> Option<i64> {
+    let idx = text.rfind("####")?;
+    let rest = text[idx + 4..].trim_start();
+    let mut end = 0;
+    let bytes = rest.as_bytes();
+    if end < bytes.len() && (bytes[end] == b'-' || bytes[end] == b'+') {
+        end += 1;
+    }
+    while end < bytes.len() && bytes[end].is_ascii_digit() {
+        end += 1;
+    }
+    if end == 0 || (end == 1 && !bytes[0].is_ascii_digit()) {
+        return None;
+    }
+    rest[..end].parse().ok()
+}
+
+/// Binary exact-match reward.
+pub fn reward(response: &str, gold_answer: i64) -> f32 {
+    match extract_answer(response) {
+        Some(a) if a == gold_answer => 1.0,
+        _ => 0.0,
+    }
+}
+
+/// Diagnostic: does the response use the rewarded format at all?
+/// (Used by the elicitation analysis — RL mostly shifts *format*.)
+pub fn has_canonical_format(response: &str) -> bool {
+    extract_answer(response).is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extracts_canonical() {
+        assert_eq!(extract_answer("12+3=15\n#### 15"), Some(15));
+        assert_eq!(extract_answer("#### -7"), Some(-7));
+        assert_eq!(extract_answer("####42"), Some(42));
+    }
+
+    #[test]
+    fn takes_last_marker() {
+        assert_eq!(extract_answer("#### 1\nwait\n#### 2"), Some(2));
+    }
+
+    #[test]
+    fn rejects_missing_or_malformed() {
+        assert_eq!(extract_answer("the answer is 5"), None);
+        assert_eq!(extract_answer("#### abc"), None);
+        assert_eq!(extract_answer(""), None);
+        assert_eq!(extract_answer("####"), None);
+    }
+
+    #[test]
+    fn reward_requires_format_and_value() {
+        assert_eq!(reward("5+5=10\n#### 10", 10), 1.0);
+        assert_eq!(reward("5+5=10\n= 10", 10), 0.0); // right value, wrong format
+        assert_eq!(reward("#### 11", 10), 0.0); // wrong value
+    }
+
+    #[test]
+    fn format_diagnostic() {
+        assert!(has_canonical_format("#### 3"));
+        assert!(!has_canonical_format("3"));
+    }
+}

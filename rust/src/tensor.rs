@@ -1,0 +1,136 @@
+//! Host-side tensors: a flat buffer + shape, with conversions to/from the
+//! `xla` crate's `Literal`. All device I/O goes through these.
+
+use anyhow::{bail, Result};
+
+use crate::manifest::{ArgSpec, DType};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Self> {
+        let data = lit.to_vec::<f32>()?;
+        if data.len() != shape.iter().product::<usize>() {
+            bail!("literal numel {} != shape {:?}", data.len(), shape);
+        }
+        Ok(Self { shape: shape.to_vec(), data })
+    }
+
+    /// L2 norm (used for grad-norm metrics and optimizer tests).
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Self> {
+        let data = lit.to_vec::<i32>()?;
+        if data.len() != shape.iter().product::<usize>() {
+            bail!("literal numel {} != shape {:?}", data.len(), shape);
+        }
+        Ok(Self { shape: shape.to_vec(), data })
+    }
+}
+
+/// A runtime argument: either dtype, shape-checked against an `ArgSpec`.
+#[derive(Clone, Debug)]
+pub enum Arg {
+    F32(TensorF32),
+    I32(TensorI32),
+    /// f32 scalar (shape [])
+    Scalar(f32),
+}
+
+impl Arg {
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Arg::F32(t) => t.to_literal(),
+            Arg::I32(t) => t.to_literal(),
+            Arg::Scalar(x) => Ok(xla::Literal::from(*x)),
+        }
+    }
+
+    pub fn check(&self, spec: &ArgSpec) -> Result<()> {
+        match self {
+            Arg::F32(t) => {
+                if spec.dtype != DType::F32 || t.shape != spec.shape {
+                    bail!("arg {}: want f32{:?}, got f32{:?}", spec.name, spec.shape, t.shape);
+                }
+            }
+            Arg::I32(t) => {
+                if spec.dtype != DType::S32 || t.shape != spec.shape {
+                    bail!("arg {}: want s32{:?}, got s32{:?}", spec.name, spec.shape, t.shape);
+                }
+            }
+            Arg::Scalar(_) => {
+                if spec.dtype != DType::F32 || !spec.shape.is_empty() {
+                    bail!("arg {}: want {:?}{:?}, got f32 scalar", spec.name, spec.dtype, spec.shape);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = TensorF32::zeros(&[2, 3]);
+        assert_eq!(t.numel(), 6);
+        let spec = ArgSpec { name: "x".into(), dtype: DType::F32, shape: vec![2, 3] };
+        Arg::F32(t).check(&spec).unwrap();
+        let bad = Arg::F32(TensorF32::zeros(&[3, 2]));
+        assert!(bad.check(&spec).is_err());
+    }
+
+    #[test]
+    fn norm() {
+        let t = TensorF32::from_vec(&[2], vec![3.0, 4.0]);
+        assert!((t.norm() - 5.0).abs() < 1e-6);
+    }
+}

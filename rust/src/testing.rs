@@ -1,0 +1,50 @@
+//! Minimal property-based testing harness (proptest is unavailable in the
+//! offline image). `check` runs a predicate over many seeded random cases
+//! and reports the first failing seed so failures are reproducible.
+
+use crate::util::Pcg64;
+
+/// Run `prop` over `cases` seeded RNGs; panic with the failing seed.
+pub fn check<F: FnMut(&mut Pcg64) -> Result<(), String>>(name: &str, cases: u64, mut prop: F) {
+    for seed in 0..cases {
+        let mut rng = Pcg64::with_stream(seed, 0x70726f70);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert |a - b| <= atol + rtol * |b| elementwise.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "{ctx}: idx {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("uniform in [0,1)", 50, |rng| {
+            let x = rng.uniform();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed")]
+    fn check_reports_failure() {
+        check("always fails", 3, |_| Err("nope".into()));
+    }
+}

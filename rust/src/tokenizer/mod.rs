@@ -1,0 +1,127 @@
+//! Char-level math tokenizer — the rust mirror of `python/compile/configs.py`.
+//!
+//! The charset constant is duplicated here (the tokenizer must work before
+//! artifacts exist, e.g. for corpus generation in unit tests); an
+//! integration test cross-checks it against `manifest.json` so the two
+//! sides can never drift.
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const CHARS: &str = "0123456789abcdefghijklmnopqrstuvwxyz .,?+-*/=()#<>:'\n";
+pub const VOCAB_SIZE: usize = 64;
+
+#[derive(Clone)]
+pub struct Tokenizer {
+    to_id: [i32; 256],
+    to_char: Vec<char>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Self {
+        let mut to_id = [-1i32; 256];
+        let mut to_char = vec!['\0'; 3];
+        for (i, c) in CHARS.chars().enumerate() {
+            debug_assert!(c.is_ascii());
+            to_id[c as usize] = (3 + i) as i32;
+            to_char.push(c);
+        }
+        Self { to_id, to_char }
+    }
+
+    /// Encode text; unknown characters are skipped after lowercasing.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.chars()
+            .flat_map(|c| c.to_lowercase())
+            .filter_map(|c| {
+                if c.is_ascii() {
+                    let id = self.to_id[c as usize];
+                    (id >= 0).then_some(id)
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
+    /// Decode ids; PAD/BOS vanish, EOS terminates.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut s = String::new();
+        for &id in ids {
+            if id == EOS {
+                break;
+            }
+            if id <= BOS {
+                continue;
+            }
+            if let Some(&c) = self.to_char.get(id as usize) {
+                s.push(c);
+            }
+        }
+        s
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        VOCAB_SIZE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::check;
+
+    #[test]
+    fn roundtrip_ascii_math() {
+        let t = Tokenizer::new();
+        let s = "what is 23 + 45? #### 68\n";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn lowercases_and_skips_unknown() {
+        let t = Tokenizer::new();
+        assert_eq!(t.decode(&t.encode("AbC~!@")), "abc");
+    }
+
+    #[test]
+    fn eos_terminates_decode() {
+        let t = Tokenizer::new();
+        let mut ids = t.encode("12");
+        ids.push(EOS);
+        ids.extend(t.encode("34"));
+        assert_eq!(t.decode(&ids), "12");
+    }
+
+    #[test]
+    fn all_ids_in_vocab() {
+        let t = Tokenizer::new();
+        check("ids < vocab", 100, |rng| {
+            let n = rng.below(40) as usize;
+            let s: String = (0..n)
+                .map(|_| *rng.choice(&CHARS.chars().collect::<Vec<_>>()))
+                .collect();
+            let ids = t.encode(&s);
+            if ids.iter().all(|&i| (i as usize) < VOCAB_SIZE && i >= 3) {
+                Ok(())
+            } else {
+                Err(format!("bad ids for {s:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn charset_has_no_duplicates() {
+        let mut seen = std::collections::HashSet::new();
+        for c in CHARS.chars() {
+            assert!(seen.insert(c), "duplicate char {c:?}");
+        }
+        assert!(CHARS.len() + 3 <= VOCAB_SIZE);
+    }
+}

@@ -1,0 +1,46 @@
+//! Timing helpers shared by the trainers, metrics and the bench harness.
+
+use std::time::Instant;
+
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Run `f` `iters` times and return (mean_ms, min_ms, max_ms).
+pub fn time_iters<F: FnMut()>(iters: usize, mut f: F) -> (f64, f64, f64) {
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    (mean, min, max)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn time_iters_counts() {
+        let mut n = 0;
+        let (mean, min, max) = super::time_iters(5, || n += 1);
+        assert_eq!(n, 5);
+        assert!(min <= mean && mean <= max);
+    }
+}

@@ -1,0 +1,252 @@
+//! Model weight sets: ordered host tensors matching the manifest's weight
+//! table, with deterministic init (mirroring `model.weight_init_spec`) and a
+//! simple binary checkpoint format.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::TierInfo;
+use crate::tensor::{Arg, TensorF32};
+use crate::util::Pcg64;
+
+const MAGIC: &[u8; 8] = b"TLRLCKP1";
+
+#[derive(Clone)]
+pub struct WeightSet {
+    pub tier: String,
+    pub names: Vec<String>,
+    pub tensors: Vec<TensorF32>,
+}
+
+impl WeightSet {
+    /// Initialize from the manifest's init spec (same family as python's
+    /// `init_weights`; exact values differ — rust owns pretraining).
+    pub fn init(tier: &TierInfo, seed: u64) -> Self {
+        let mut rng = Pcg64::with_stream(seed, 0x77656967687473);
+        let mut names = Vec::new();
+        let mut tensors = Vec::new();
+        for w in &tier.weights {
+            let n: usize = w.shape.iter().product();
+            let data = match w.init.kind.as_str() {
+                "ones" => vec![1.0; n],
+                "zeros" => vec![0.0; n],
+                "normal" => rng.normal_vec(n, w.init.std),
+                other => panic!("unknown init kind {other}"),
+            };
+            names.push(w.name.clone());
+            tensors.push(TensorF32::from_vec(&w.shape, data));
+        }
+        Self { tier: tier.name.clone(), names, tensors }
+    }
+
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .with_context(|| format!("no weight named {name:?}"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&TensorF32> {
+        Ok(&self.tensors[self.index_of(name)?])
+    }
+
+    pub fn set(&mut self, name: &str, t: TensorF32) -> Result<()> {
+        let i = self.index_of(name)?;
+        if self.tensors[i].shape != t.shape {
+            bail!("shape mismatch for {name}: {:?} vs {:?}", self.tensors[i].shape, t.shape);
+        }
+        self.tensors[i] = t;
+        Ok(())
+    }
+
+    /// All weights as runtime args, in manifest order.
+    pub fn args(&self) -> Vec<Arg> {
+        self.tensors.iter().map(|t| Arg::F32(t.clone())).collect()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// Flatten all weights into one vector (full-FT theta view).
+    pub fn flat(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.n_params());
+        for t in &self.tensors {
+            v.extend_from_slice(&t.data);
+        }
+        v
+    }
+
+    /// Overwrite all weights from a flat vector (full-FT optimizer step).
+    pub fn set_flat(&mut self, flat: &[f32]) -> Result<()> {
+        if flat.len() != self.n_params() {
+            bail!("flat len {} != n_params {}", flat.len(), self.n_params());
+        }
+        let mut off = 0;
+        for t in &mut self.tensors {
+            let n = t.numel();
+            t.data.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        Ok(())
+    }
+
+    // -- checkpoints ---------------------------------------------------------
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        write_str(&mut f, &self.tier)?;
+        write_u32(&mut f, self.tensors.len() as u32)?;
+        for (name, t) in self.names.iter().zip(&self.tensors) {
+            write_str(&mut f, name)?;
+            write_u32(&mut f, t.shape.len() as u32)?;
+            for &d in &t.shape {
+                write_u32(&mut f, d as u32)?;
+            }
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+            };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening checkpoint {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad checkpoint magic in {path:?}");
+        }
+        let tier = read_str(&mut f)?;
+        let n = read_u32(&mut f)? as usize;
+        let mut names = Vec::with_capacity(n);
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = read_str(&mut f)?;
+            let ndim = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut f)? as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let mut data = vec![0f32; numel];
+            let bytes: &mut [u8] = unsafe {
+                std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4)
+            };
+            f.read_exact(bytes)?;
+            names.push(name);
+            tensors.push(TensorF32::from_vec(&shape, data));
+        }
+        Ok(Self { tier, names, tensors })
+    }
+
+    /// Conventional checkpoint path for a tier.
+    pub fn ckpt_path(dir: &Path, tier: &str) -> std::path::PathBuf {
+        dir.join(format!("{tier}.ckpt"))
+    }
+}
+
+fn write_u32<W: Write>(w: &mut W, x: u32) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn write_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    write_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str<R: Read>(r: &mut R) -> Result<String> {
+    let n = read_u32(r)? as usize;
+    if n > 1 << 20 {
+        bail!("implausible string length {n}");
+    }
+    let mut b = vec![0u8; n];
+    r.read_exact(&mut b)?;
+    Ok(String::from_utf8(b)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::{InitSpec, WeightSpec};
+
+    fn tiny_tier() -> TierInfo {
+        TierInfo {
+            name: "t".into(),
+            d: 4,
+            n_layers: 1,
+            n_heads: 1,
+            f: 8,
+            t_max: 8,
+            t_prefill: 4,
+            t_train: 8,
+            head_dim: 4,
+            n_params: 0,
+            weights: vec![
+                WeightSpec {
+                    name: "a".into(),
+                    shape: vec![2, 3],
+                    init: InitSpec { kind: "normal".into(), std: 0.5 },
+                },
+                WeightSpec {
+                    name: "g".into(),
+                    shape: vec![3],
+                    init: InitSpec { kind: "ones".into(), std: 0.0 },
+                },
+            ],
+            module_dims: Default::default(),
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_respects_spec() {
+        let t = tiny_tier();
+        let w1 = WeightSet::init(&t, 7);
+        let w2 = WeightSet::init(&t, 7);
+        assert_eq!(w1.tensors, w2.tensors);
+        assert_eq!(w1.get("g").unwrap().data, vec![1.0; 3]);
+        let w3 = WeightSet::init(&t, 8);
+        assert_ne!(w1.get("a").unwrap().data, w3.get("a").unwrap().data);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let t = tiny_tier();
+        let w = WeightSet::init(&t, 3);
+        let dir = std::env::temp_dir().join("tlrl_test_ckpt");
+        let path = dir.join("t.ckpt");
+        w.save(&path).unwrap();
+        let r = WeightSet::load(&path).unwrap();
+        assert_eq!(w.names, r.names);
+        assert_eq!(w.tensors, r.tensors);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let t = tiny_tier();
+        let mut w = WeightSet::init(&t, 3);
+        let mut flat = w.flat();
+        flat[0] = 42.0;
+        w.set_flat(&flat).unwrap();
+        assert_eq!(w.get("a").unwrap().data[0], 42.0);
+        assert!(w.set_flat(&flat[1..]).is_err());
+    }
+}

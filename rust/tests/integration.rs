@@ -1,0 +1,354 @@
+//! Integration tests over the real AOT artifacts + PJRT CPU runtime.
+//! Everything here exercises the python→HLO→rust boundary on the nano tier
+//! (fast artifacts baked at batch=4) plus cross-checks of the manifest
+//! against the rust-side mirrors.
+//!
+//! Requires `make artifacts` to have run (skipped gracefully otherwise).
+
+use std::path::Path;
+
+use tinylora_rl::adapters::{count, packing::Precision, Theta};
+use tinylora_rl::coordinator::policy::{GrpoHp, Policy, TrainBatch};
+use tinylora_rl::coordinator::rollout::RolloutEngine;
+use tinylora_rl::manifest::Manifest;
+use tinylora_rl::tasks::corpus::{pretrain_batch, prompt_batch, sft_batch};
+use tinylora_rl::tasks::generator::SUITES;
+use tinylora_rl::tensor::{Arg, TensorF32, TensorI32};
+use tinylora_rl::tokenizer::{Tokenizer, CHARS, EOS};
+use tinylora_rl::util::Pcg64;
+use tinylora_rl::weights::WeightSet;
+use tinylora_rl::Runtime;
+
+fn art_dir() -> &'static Path {
+    Path::new("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    art_dir().join("manifest.json").exists()
+}
+
+thread_local! {
+    // Runtime holds Rc/RefCell (single-threaded by design: one coordinator
+    // thread owns the device); tests each get a thread-local instance.
+    static RT: &'static Runtime =
+        Box::leak(Box::new(Runtime::new(art_dir()).expect("runtime")));
+}
+
+fn runtime() -> &'static Runtime {
+    RT.with(|rt| *rt)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+    };
+}
+
+#[test]
+fn manifest_matches_rust_mirrors() {
+    require_artifacts!();
+    let m = &runtime().manifest;
+    // tokenizer charset must be identical on both sides
+    assert_eq!(m.vocab.chars, CHARS);
+    assert_eq!(m.vocab.size, tinylora_rl::tokenizer::VOCAB_SIZE);
+    // Table 1 formulas must reproduce every artifact's theta_size
+    for exe in m.executables.values() {
+        let Some(scheme) = &exe.scheme else { continue };
+        let Some(ts) = exe.theta_size else { continue };
+        let tier = m.tier(&exe.tier).unwrap();
+        let want = match scheme.kind.as_str() {
+            "tinylora" => count::tinylora(tier, scheme.u, &scheme.tie, scheme.n_tie),
+            "lora_xs" => count::lora_xs(tier, scheme.r),
+            "lora" => count::lora(tier, scheme.r),
+            "full" => continue,
+            other => panic!("unknown scheme kind {other}"),
+        };
+        assert_eq!(ts, want, "theta size mismatch for {}", exe.name);
+        if scheme.kind == "tinylora" {
+            let groups = count::group_assignment(tier, &scheme.tie, scheme.n_tie);
+            assert_eq!(exe.groups, groups, "group assignment mismatch for {}", exe.name);
+        }
+    }
+}
+
+#[test]
+fn generate_runs_and_greedy_is_deterministic() {
+    require_artifacts!();
+    let rt = runtime();
+    let tier = rt.manifest.tier("nano").unwrap().clone();
+    let weights = WeightSet::init(&tier, 0);
+    let engine = RolloutEngine::new(rt, "nano", rt.manifest.batch.test).unwrap();
+    let tok = Tokenizer::new();
+    let mut rng = Pcg64::new(1);
+    let problems: Vec<_> = (0..4).map(|_| SUITES[0].generate(&mut rng)).collect();
+    let pb = prompt_batch(&problems, &tok, 1, engine.t_prefill);
+
+    let r1 = engine.rollout(rt, &weights, &pb, &tok, 0.0, &mut Pcg64::new(7)).unwrap();
+    let r2 = engine.rollout(rt, &weights, &pb, &tok, 0.0, &mut Pcg64::new(8)).unwrap();
+    // greedy decode ignores the uniforms: identical outputs
+    for (a, b) in r1.rows.iter().zip(&r2.rows) {
+        assert_eq!(a.response, b.response);
+    }
+    // sampled decode differs from greedy with overwhelming probability
+    let r3 = engine.rollout(rt, &weights, &pb, &tok, 1.0, &mut Pcg64::new(9)).unwrap();
+    assert!(r3.rows.iter().zip(&r1.rows).any(|(a, b)| a.response != b.response));
+    // behavior logps are <= 0 and finite at temp 1
+    for row in &r3.rows {
+        assert!(row.behavior.iter().all(|&l| l <= 1e-4 && l.is_finite()));
+    }
+}
+
+#[test]
+fn theta_zero_merge_is_identity_and_adapter_grad_flows() {
+    require_artifacts!();
+    let rt = runtime();
+    let tier = rt.manifest.tier("nano").unwrap().clone();
+    let base = WeightSet::init(&tier, 3);
+    let ckpt = std::env::temp_dir().join("tlrl_itest_factors");
+    let policy =
+        Policy::new(rt, "nano", "tinylora_r2_u13_all", "grpo", base.clone(), 0, &ckpt).unwrap();
+    assert_eq!(policy.trainable_params(), 13);
+    // theta starts at zero -> merged == base exactly
+    for name in tinylora_rl::coordinator::policy::ADAPTED {
+        let b = base.get(name).unwrap();
+        let m = policy.merged.get(name).unwrap();
+        for (x, y) in b.data.iter().zip(&m.data) {
+            assert!((x - y).abs() < 1e-5, "{name} changed at theta=0");
+        }
+    }
+    // gradient flows into all 13 params
+    let batch = synthetic_grpo_batch(&tier, rt.manifest.batch.test);
+    let (grad, stats) = policy.grad(rt, &batch, GrpoHp { clip_c: 4.0, kl_coef: 0.001 }).unwrap();
+    assert_eq!(grad.len(), 13);
+    assert!(grad.iter().all(|g| g.is_finite()));
+    assert!(grad.iter().any(|&g| g != 0.0));
+    assert!(stats.loss.is_finite());
+    // at theta=0 the adapter equals the base model; rollout logps came from
+    // elsewhere here, so just sanity-check ratio stat is finite
+    assert!(stats.mean_ratio.is_finite());
+}
+
+fn synthetic_grpo_batch(tier: &tinylora_rl::manifest::TierInfo, b: usize) -> TrainBatch {
+    let t = tier.t_train;
+    let mut rng = Pcg64::new(5);
+    let mut tokens = vec![0i32; b * t];
+    let mut mask = vec![0.0f32; b * (t - 1)];
+    let mut behavior = vec![0.0f32; b * (t - 1)];
+    for i in 0..b {
+        tokens[i * t] = 1; // BOS
+        for j in 1..40 {
+            tokens[i * t + j] = rng.range_i64(3, 55) as i32;
+        }
+        for j in 20..39 {
+            mask[i * (t - 1) + j] = 1.0;
+            behavior[i * (t - 1) + j] = -2.0;
+        }
+    }
+    let adv: Vec<f32> = (0..b).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    TrainBatch {
+        tokens: TensorI32::from_vec(&[b, t], tokens),
+        mask: TensorF32::from_vec(&[b, t - 1], mask),
+        behavior: TensorF32::from_vec(&[b, t - 1], behavior),
+        advantages: TensorF32::from_vec(&[b], adv),
+    }
+}
+
+#[test]
+fn merged_weights_match_live_adapter_logprobs() {
+    require_artifacts!();
+    // The paper's Fig-5 claim: training under the adapter parameterisation
+    // and sampling from merged weights are numerically equivalent.  We push
+    // a random theta into the policy, and compare logprobs(merged) with the
+    // SFT-grad's mean_logp... instead, directly: logprobs(merged tokens)
+    // must match logprobs recomputed after folding theta a second time
+    // (idempotence) and differ from the base model.
+    let rt = runtime();
+    let tier = rt.manifest.tier("nano").unwrap().clone();
+    let base = WeightSet::init(&tier, 3);
+    let ckpt = std::env::temp_dir().join("tlrl_itest_factors");
+    let mut policy =
+        Policy::new(rt, "nano", "tinylora_r2_u13_all", "grpo", base.clone(), 0, &ckpt).unwrap();
+    let mut rng = Pcg64::new(9);
+    let theta: Vec<f32> = (0..13).map(|_| rng.normal() * 0.2).collect();
+    policy.set_params(rt, &theta).unwrap();
+
+    let b = rt.manifest.batch.test;
+    let exe = rt
+        .load(&rt.manifest.find("nano logprobs", |e| e.fn_kind == "logprobs" && e.tier == "nano" && e.batch == b).unwrap().name)
+        .unwrap();
+    let t = tier.t_train;
+    let mut tokens = vec![0i32; b * t];
+    for i in 0..b {
+        tokens[i * t] = 1;
+        for j in 1..30 {
+            tokens[i * t + j] = rng.range_i64(3, 55) as i32;
+        }
+    }
+    let toks = TensorI32::from_vec(&[b, t], tokens);
+
+    let run_logp = |w: &WeightSet| -> Vec<f32> {
+        let mut args: Vec<Arg> = w.args();
+        args.push(Arg::I32(toks.clone()));
+        rt.run(&exe, &args).unwrap().f32(0).unwrap().data
+    };
+    let lp_merged = run_logp(&policy.merged);
+    let lp_base = run_logp(&base);
+    // non-trivial theta must move the distribution
+    let diff: f32 =
+        lp_merged.iter().zip(&lp_base).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+    assert!(diff > 1e-3, "theta had no effect ({diff})");
+    // remerging is idempotent
+    policy.remerge(rt).unwrap();
+    let lp_again = run_logp(&policy.merged);
+    for (a, b) in lp_merged.iter().zip(&lp_again) {
+        assert!((a - b).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn pretrain_step_reduces_loss() {
+    require_artifacts!();
+    let rt = runtime();
+    let tier = rt.manifest.tier("nano").unwrap().clone();
+    let b = rt.manifest.batch.test;
+    let exe = rt
+        .load(&rt.manifest.find("nano pretrain", |e| e.fn_kind == "pretrain" && e.tier == "nano" && e.batch == b).unwrap().name)
+        .unwrap();
+    let mut weights = WeightSet::init(&tier, 0);
+    let tok = Tokenizer::new();
+    let mut rng = Pcg64::new(2);
+    let mut opt = tinylora_rl::coordinator::optimizer::Adam::new(
+        weights.n_params(),
+        tinylora_rl::coordinator::optimizer::AdamConfig { lr: 3e-3, ..Default::default() },
+    );
+    // fixed batch: loss on it must drop markedly over 30 steps
+    let (tokens, mask) = pretrain_batch(&SUITES[0], &tok, &mut rng, b, tier.t_train);
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for step in 0..30 {
+        let mut args: Vec<Arg> = weights.args();
+        args.push(Arg::I32(tokens.clone()));
+        args.push(Arg::F32(mask.clone()));
+        let out = rt.run(&exe, &args).unwrap();
+        let loss = out.f32(out.len() - 1).unwrap().data[0];
+        if step == 0 {
+            first = loss;
+        }
+        last = loss;
+        let mut grad = Vec::with_capacity(weights.n_params());
+        for i in 0..out.len() - 1 {
+            grad.extend_from_slice(&out.f32(i).unwrap().data);
+        }
+        let mut flat = weights.flat();
+        opt.step(&mut flat, &grad);
+        weights.set_flat(&flat).unwrap();
+    }
+    assert!(last < first * 0.7, "loss {first} -> {last} did not drop");
+}
+
+#[test]
+fn sft_grad_runs_for_adapter_scheme() {
+    require_artifacts!();
+    let rt = runtime();
+    let tier = rt.manifest.tier("nano").unwrap().clone();
+    let base = WeightSet::init(&tier, 3);
+    let ckpt = std::env::temp_dir().join("tlrl_itest_factors");
+    let policy =
+        Policy::new(rt, "nano", "tinylora_r2_u13_all", "sft", base, 0, &ckpt).unwrap();
+    let tok = Tokenizer::new();
+    let mut rng = Pcg64::new(4);
+    let b = rt.manifest.batch.test;
+    let (tokens, mask) = sft_batch(&SUITES[0], &tok, &mut rng, b, tier.t_train);
+    let batch = TrainBatch {
+        tokens,
+        mask,
+        behavior: TensorF32::zeros(&[b, tier.t_train - 1]),
+        advantages: TensorF32::zeros(&[b]),
+    };
+    let (grad, stats) = policy.grad(rt, &batch, GrpoHp::default()).unwrap();
+    assert_eq!(grad.len(), 13);
+    assert!(stats.loss > 0.0 && stats.loss.is_finite());
+    assert!((0.0..=1.0).contains(&stats.aux1), "token acc {}", stats.aux1);
+}
+
+#[test]
+fn end_to_end_grpo_steps_run_on_nano() {
+    require_artifacts!();
+    // Tiny end-to-end smoke: untrained nano weights, 32-batch rollout via
+    // the micro executables is too slow here, so drive the full GRPO path
+    // manually at the test batch size.
+    let rt = runtime();
+    let tier = rt.manifest.tier("nano").unwrap().clone();
+    let base = WeightSet::init(&tier, 0);
+    let ckpt = std::env::temp_dir().join("tlrl_itest_factors");
+    let mut policy =
+        Policy::new(rt, "nano", "tinylora_r2_u13_all", "grpo", base, 0, &ckpt).unwrap();
+    let engine = RolloutEngine::new(rt, "nano", rt.manifest.batch.test).unwrap();
+    let tok = Tokenizer::new();
+    let mut rng = Pcg64::new(11);
+    let mut opt = tinylora_rl::coordinator::optimizer::Adam::new(
+        13,
+        tinylora_rl::coordinator::optimizer::AdamConfig::default(),
+    );
+    for _ in 0..2 {
+        let problems: Vec<_> = (0..2).map(|_| SUITES[0].generate(&mut rng)).collect();
+        let pb = prompt_batch(&problems, &tok, 2, engine.t_prefill);
+        let roll = engine.rollout(rt, &policy.merged, &pb, &tok, 1.0, &mut rng).unwrap();
+        let batch = engine.train_batch(&pb, &roll, tier.t_train);
+        let (grad, stats) = policy.grad(rt, &batch, GrpoHp { clip_c: 4.0, kl_coef: 0.0 }).unwrap();
+        assert!(stats.loss.is_finite());
+        let mut params = policy.params();
+        opt.step(&mut params, &grad);
+        policy.set_params(rt, &params).unwrap();
+    }
+    // TIS diagnostic: at theta ~ 0 the train/inference KL should be tiny —
+    // the merged-rollout trick is numerically sound (Fig. 5 bottom panel)
+    let problems: Vec<_> = (0..2).map(|_| SUITES[0].generate(&mut rng)).collect();
+    let pb = prompt_batch(&problems, &tok, 2, engine.t_prefill);
+    let roll = engine.rollout(rt, &policy.merged, &pb, &tok, 1.0, &mut rng).unwrap();
+    let batch = engine.train_batch(&pb, &roll, tier.t_train);
+    let (_, stats) = policy.grad(rt, &batch, GrpoHp { clip_c: 4.0, kl_coef: 0.0 }).unwrap();
+    assert!(
+        stats.kl_k1.abs() < 0.05,
+        "train/inference KL too large: {} (merged-weights equivalence broken?)",
+        stats.kl_k1
+    );
+    assert!((stats.mean_ratio - 1.0).abs() < 0.2, "mean ratio {}", stats.mean_ratio);
+}
+
+#[test]
+fn packed_theta_roundtrip_preserves_precision_semantics() {
+    require_artifacts!();
+    let rt = runtime();
+    let info = rt.manifest.grad_exe("nano", "grpo", "tinylora_r2_u13_all").unwrap();
+    let theta = Theta::init(info, 0).unwrap();
+    assert_eq!(theta.len(), 13);
+    assert_eq!(theta.update_bytes(Precision::Bf16), 26); // the paper's headline
+    assert_eq!(theta.update_bytes(Precision::F32), 52);
+}
+
+#[test]
+fn eos_cut_matches_tokenizer_semantics() {
+    require_artifacts!();
+    let rt = runtime();
+    let tier = rt.manifest.tier("nano").unwrap().clone();
+    let weights = WeightSet::init(&tier, 0);
+    let engine = RolloutEngine::new(rt, "nano", rt.manifest.batch.test).unwrap();
+    let tok = Tokenizer::new();
+    let mut rng = Pcg64::new(20);
+    let problems: Vec<_> = (0..4).map(|_| SUITES[0].generate(&mut rng)).collect();
+    let pb = prompt_batch(&problems, &tok, 1, engine.t_prefill);
+    let roll = engine.rollout(rt, &weights, &pb, &tok, 1.0, &mut rng).unwrap();
+    for row in &roll.rows {
+        if row.hit_eos {
+            assert_eq!(*row.response.last().unwrap(), EOS);
+            assert!(!row.text.contains('\u{0}'));
+        } else {
+            assert_eq!(row.response.len(), engine.n_gen);
+        }
+        assert_eq!(row.behavior.len(), row.response.len());
+    }
+}
