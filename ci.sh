@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Tier-1 gate (ROADMAP.md): build, tests, formatting. Run from repo root.
+#
+#   ./ci.sh           # full gate
+#   ./ci.sh --fast    # skip the release build (debug tests + fmt only)
+#
+# Integration tests and runtime benches skip themselves gracefully when
+# `make artifacts` hasn't produced artifacts/manifest.json; the pure-rust
+# suites (scheduler properties, batcher, adapters, tasks, ...) always run.
+
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+FAST=0
+[[ "${1:-}" == "--fast" ]] && FAST=1
+
+if [[ "$FAST" -eq 0 ]]; then
+  echo "== cargo build --release =="
+  cargo build --release
+fi
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "tier-1 gate: OK"

@@ -56,6 +56,7 @@ fn main() -> Result<()> {
     );
 
     // drive the workload
+    let workers = args.usize("workers", 1)?;
     let mut router = Router::new(&rt, store, base, rt.manifest.batch.serve, 0.2, dirs.ckpts.clone())?;
     let t = Timer::start();
     for i in 0..n_requests {
@@ -66,9 +67,14 @@ fn main() -> Result<()> {
         router.now += 0.01; // 100 req/s virtual arrival rate
         router.tick(&rt)?;
     }
-    router.drain(&rt)?;
-    let mut stats = router.stats();
-    stats.wall_ms = t.millis();
+    if workers > 1 {
+        // independent adapter batches decode concurrently (WorkerPool)
+        router.drain_parallel(&rt, workers)?;
+    } else {
+        router.drain(&rt)?;
+    }
+    let stats = router.stats(); // wall_ms measured inside the router now
+    let es = router.engine().stats();
 
     println!("\n== serving stats ==");
     println!("served requests     : {}", stats.served);
@@ -76,6 +82,8 @@ fn main() -> Result<()> {
     println!("mean occupancy      : {:.2}", stats.mean_occupancy);
     println!("virtual latency     : mean {:.3}s, p95 {:.3}s", stats.mean_latency, stats.p95_latency);
     println!("merge LRU hit-rate  : {:.2}", stats.merge_hit_rate);
-    println!("wall time           : {:.0} ms ({:.1} req/s real)", stats.wall_ms, stats.served as f64 / (stats.wall_ms / 1e3));
+    println!("serve wall time     : {:.0} ms ({:.1} req/s real)", stats.wall_ms, stats.served as f64 / (stats.wall_ms / 1e3));
+    println!("end-to-end wall     : {:.0} ms (workers={workers})", t.millis());
+    println!("engine              : {} generate calls, {} rows (+{} padding), {:.0} ms decode", es.batches, es.rows, es.padded_rows, es.gen_ms);
     Ok(())
 }

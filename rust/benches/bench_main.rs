@@ -15,6 +15,7 @@ use tinylora_rl::adapters::svd::truncated_svd;
 use tinylora_rl::coordinator::advantage::group_advantages;
 use tinylora_rl::coordinator::policy::{GrpoHp, Policy};
 use tinylora_rl::coordinator::rollout::RolloutEngine;
+use tinylora_rl::engine::scheduler::{QueuedRequest, SchedPolicy, Scheduler};
 use tinylora_rl::serving::{DynamicBatcher, Request};
 use tinylora_rl::tasks::corpus::{pretrain_batch, prompt_batch};
 use tinylora_rl::tasks::generator::SUITES;
@@ -27,6 +28,67 @@ use tinylora_rl::Runtime;
 
 struct Bench {
     rows: Vec<(String, f64, f64, f64, String)>,
+}
+
+/// Batch-formation at queue depth: the seed single-queue `DynamicBatcher`
+/// (rescans the whole queue per batch — O(n²)) against the engine's
+/// per-adapter-queue `Scheduler` (O(#adapters) per batch), same policy
+/// semantics (occupancy-first), 32 tenants, batch size 8.
+fn bench_scheduler(b: &mut Bench) {
+    const ADAPTERS: u64 = 32;
+    for &(n_req, iters) in &[(1_000u64, 20usize), (10_000u64, 3usize)] {
+        b.run(
+            &format!("batcher/single-queue drain {n_req} reqs"),
+            iters,
+            "seed baseline",
+            || {
+                let mut batcher = DynamicBatcher::new(8, 0.1);
+                for i in 0..n_req {
+                    batcher.push(Request {
+                        id: i,
+                        adapter: format!("t{}", i % ADAPTERS),
+                        prompt: String::new(),
+                        arrival: i as f64 * 1e-4,
+                    });
+                }
+                let mut n = 0u64;
+                while let Some(batch) = batcher.next_batch(1e9) {
+                    n += batch.requests.len() as u64;
+                }
+                assert_eq!(n, n_req);
+            },
+        );
+        b.run(
+            &format!("scheduler/per-adapter drain {n_req} reqs"),
+            iters,
+            "engine::Scheduler",
+            || {
+                let mut s = Scheduler::new(8, 0.1, SchedPolicy::OccupancyFirst);
+                for i in 0..n_req {
+                    s.push(QueuedRequest {
+                        id: i,
+                        adapter: format!("t{}", i % ADAPTERS),
+                        prompt: String::new(),
+                        arrival: i as f64 * 1e-4,
+                    });
+                }
+                let mut n = 0u64;
+                while let Some(batch) = s.next_batch(1e9) {
+                    n += batch.requests.len() as u64;
+                }
+                assert_eq!(n, n_req);
+            },
+        );
+    }
+    let old = b.rows.iter().find(|r| r.0.contains("single-queue drain 10000")).unwrap().1;
+    let new = b.rows.iter().find(|r| r.0.contains("per-adapter drain 10000")).unwrap().1;
+    println!(
+        "scheduler speedup @10k: {:.1}x (single-queue {:.2} ms -> per-adapter {:.2} ms)\n",
+        old / new,
+        old,
+        new
+    );
+    assert!(new < old, "per-adapter scheduler must beat the single-queue batcher at 10k");
 }
 
 impl Bench {
@@ -86,6 +148,8 @@ fn main() {
         }
         assert_eq!(n, 256);
     });
+
+    bench_scheduler(&mut b);
 
     // ---------------- PJRT runtime paths ----------------
     if !Path::new("artifacts/manifest.json").exists() {

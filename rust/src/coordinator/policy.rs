@@ -9,7 +9,7 @@
 //! numerical gap is absorbed by TIS in the GRPO loss).
 
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -77,7 +77,7 @@ pub struct Policy {
     pub theta: Vec<f32>,
     /// Precision the applied update is stored/communicated at (Fig. 4).
     pub precision: Precision,
-    merge_exe: Option<Rc<Executable>>,
+    merge_exe: Option<Arc<Executable>>,
     pub is_full: bool,
 }
 

@@ -1,74 +1,44 @@
-//! Rollout engine: batched sampling through the fused `generate`
-//! executable, EOS handling, reward computation and train-batch assembly.
-//!
-//! The entire decode loop runs inside ONE executable call (see runtime
-//! docs); rust supplies the uniforms (so the sampling policy stays
-//! coordinator-owned and reproducible) and post-processes EOS cuts,
-//! verification and advantage estimation.
-
-use std::rc::Rc;
+//! Rollout layer: a thin training-side client of `engine::InferenceEngine`
+//! (which owns the ONE canonical decode path — executable selection,
+//! uniforms, the fused `generate` call, EOS-cut/decode/verify). What stays
+//! here is what is *training-specific*: GRPO train-batch assembly
+//! (prompt ++ response layout, loss mask, behavior log-probs, group
+//! advantages).
 
 use anyhow::Result;
 
 use crate::coordinator::advantage::group_advantages;
 use crate::coordinator::policy::TrainBatch;
-use crate::runtime::{Executable, Runtime};
+use crate::engine::InferenceEngine;
+use crate::runtime::Runtime;
 use crate::tasks::corpus::PromptBatch;
-use crate::tasks::verifier;
-use crate::tensor::{Arg, TensorF32, TensorI32};
-use crate::tokenizer::{Tokenizer, EOS, PAD};
+use crate::tensor::{TensorF32, TensorI32};
+use crate::tokenizer::{Tokenizer, PAD};
 use crate::util::Pcg64;
 use crate::weights::WeightSet;
 
+// The decode-path types now live in `engine`; trainers keep their
+// historical names.
+pub use crate::engine::{GenRow as RolloutRow, Generation as Rollout};
+
 pub struct RolloutEngine {
-    gen_exe: Rc<Executable>,
+    engine: InferenceEngine,
     pub batch: usize,
     /// sampled tokens per sequence
     pub n_gen: usize,
     pub t_prefill: usize,
 }
 
-/// One sampled sequence, post EOS-cut.
-#[derive(Clone, Debug)]
-pub struct RolloutRow {
-    pub prompt_len: usize,
-    /// response tokens, including the terminating EOS when present
-    pub response: Vec<i32>,
-    /// behavior log-prob per response token (merged weights, sampling temp)
-    pub behavior: Vec<f32>,
-    pub text: String,
-    pub reward: f32,
-    pub hit_eos: bool,
-    pub has_format: bool,
-}
-
-pub struct Rollout {
-    pub rows: Vec<RolloutRow>,
-    pub group: usize,
-}
-
-impl Rollout {
-    pub fn mean_reward(&self) -> f32 {
-        crate::util::mean(&self.rows.iter().map(|r| r.reward).collect::<Vec<_>>())
-    }
-
-    pub fn mean_response_len(&self) -> f32 {
-        crate::util::mean(&self.rows.iter().map(|r| r.response.len() as f32).collect::<Vec<_>>())
-    }
-
-    pub fn format_rate(&self) -> f32 {
-        crate::util::mean(
-            &self.rows.iter().map(|r| if r.has_format { 1.0 } else { 0.0 }).collect::<Vec<_>>(),
-        )
-    }
-}
-
 impl RolloutEngine {
     pub fn new(rt: &Runtime, tier: &str, batch: usize) -> Result<Self> {
-        let info = rt.manifest.generate_exe(tier, batch)?.clone();
-        let gen_exe = rt.load(&info.name)?;
-        let t = rt.manifest.tier(tier)?;
-        Ok(Self { gen_exe, batch: info.batch, n_gen: info.seq, t_prefill: t.t_prefill })
+        let engine = InferenceEngine::new(rt, tier, batch)?;
+        let (batch, n_gen, t_prefill) = (engine.batch, engine.n_gen, engine.t_prefill);
+        Ok(Self { engine, batch, n_gen, t_prefill })
+    }
+
+    /// The shared engine (per-batch decode stats etc.).
+    pub fn engine(&self) -> &InferenceEngine {
+        &self.engine
     }
 
     /// Sample one batch of rollouts from the merged weights.
@@ -81,41 +51,7 @@ impl RolloutEngine {
         temperature: f32,
         rng: &mut Pcg64,
     ) -> Result<Rollout> {
-        assert_eq!(pb.tokens.shape[0], self.batch, "prompt batch != exe batch");
-        let b = self.batch;
-        let uniforms = TensorF32::from_vec(&[b, self.n_gen], rng.uniform_vec(b * self.n_gen));
-        let mut args: Vec<Arg> = weights.args();
-        args.push(Arg::I32(pb.tokens.clone()));
-        args.push(Arg::I32(pb.prompt_len.clone()));
-        args.push(Arg::F32(uniforms));
-        args.push(Arg::Scalar(temperature));
-        let out = rt.run(&self.gen_exe, &args)?;
-        let tokens = out.i32(0)?;
-        let blp = out.f32(1)?;
-
-        let mut rows = Vec::with_capacity(b);
-        for i in 0..b {
-            let gen = &tokens.data[i * self.n_gen..(i + 1) * self.n_gen];
-            let lp = &blp.data[i * self.n_gen..(i + 1) * self.n_gen];
-            let cut = gen.iter().position(|&t| t == EOS).map(|p| p + 1);
-            let n = cut.unwrap_or(self.n_gen);
-            let response = gen[..n].to_vec();
-            let behavior = lp[..n].to_vec();
-            let text = tok.decode(&response);
-            let problem = &pb.problems[i];
-            let reward = verifier::reward(&text, problem.answer);
-            let has_format = verifier::has_canonical_format(&text);
-            rows.push(RolloutRow {
-                prompt_len: pb.prompt_len.data[i] as usize,
-                response,
-                behavior,
-                text,
-                reward,
-                hit_eos: cut.is_some(),
-                has_format,
-            });
-        }
-        Ok(Rollout { rows, group: pb.group })
+        self.engine.generate(rt, weights, pb, tok, temperature, rng)
     }
 
     /// Assemble the GRPO train batch for this engine's geometry.
@@ -165,6 +101,7 @@ mod tests {
     use super::*;
     use crate::tasks::corpus::prompt_batch;
     use crate::tasks::generator::SUITES;
+    use crate::tokenizer::EOS;
 
     /// train_batch alignment without a runtime: hand-build a Rollout.
     #[test]

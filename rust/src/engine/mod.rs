@@ -1,0 +1,256 @@
+//! The inference engine — the ONE canonical decode path (see DESIGN.md §4).
+//!
+//! Before this subsystem existed, rollout (`coordinator/rollout.rs`), eval
+//! (`eval/`) and serving (`serving/router.rs`) each re-implemented their
+//! own drive loop over the fused `generate` executable: executable
+//! selection, prompt batching, uniform generation, EOS-cut/decode
+//! post-processing and batch padding all lived in three places.
+//! `InferenceEngine` owns all of it; those three layers are thin clients.
+//!
+//! Companion modules:
+//!   * `scheduler` — per-adapter request queues with pluggable policies
+//!     (replaces the O(n²) single-queue `DynamicBatcher` scan);
+//!   * `pool` — a `WorkerPool` that serves independent adapter batches on
+//!     N threads (`Runtime` is `Send + Sync`).
+
+pub mod pool;
+pub mod scheduler;
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{Executable, Runtime};
+use crate::tasks::corpus::{prompt_batch, PromptBatch};
+use crate::tasks::generator::Problem;
+use crate::tasks::verifier;
+use crate::tensor::{Arg, TensorF32};
+use crate::tokenizer::{Tokenizer, EOS};
+use crate::util::Pcg64;
+use crate::weights::WeightSet;
+
+/// Suite tag of the padding sentinel. Padded rows carry this tag (and an
+/// unsatisfiable answer) so they can never be confused with real traffic.
+pub const PADDING_SUITE: &str = "__padding__";
+
+/// Explicit padding sentinel for short batches (the generate executables
+/// have baked batch sizes). Replaces the old "clone the last request"
+/// hack, which made padded rows indistinguishable from real ones.
+pub fn padding_problem() -> Problem {
+    Problem {
+        prompt: String::new(),
+        gold: String::new(),
+        answer: i64::MIN, // no decoded text can ever match
+        suite: PADDING_SUITE,
+    }
+}
+
+pub fn is_padding(p: &Problem) -> bool {
+    p.suite == PADDING_SUITE
+}
+
+/// One sampled sequence, post EOS-cut.
+#[derive(Clone, Debug)]
+pub struct GenRow {
+    pub prompt_len: usize,
+    /// response tokens, including the terminating EOS when present
+    pub response: Vec<i32>,
+    /// behavior log-prob per response token (merged weights, sampling temp)
+    pub behavior: Vec<f32>,
+    pub text: String,
+    pub reward: f32,
+    pub hit_eos: bool,
+    pub has_format: bool,
+}
+
+/// A generated batch (rollout layers call this `Rollout`).
+pub struct Generation {
+    pub rows: Vec<GenRow>,
+    pub group: usize,
+}
+
+impl Generation {
+    pub fn mean_reward(&self) -> f32 {
+        crate::util::mean(&self.rows.iter().map(|r| r.reward).collect::<Vec<_>>())
+    }
+
+    pub fn mean_response_len(&self) -> f32 {
+        crate::util::mean(&self.rows.iter().map(|r| r.response.len() as f32).collect::<Vec<_>>())
+    }
+
+    pub fn format_rate(&self) -> f32 {
+        crate::util::mean(
+            &self.rows.iter().map(|r| if r.has_format { 1.0 } else { 0.0 }).collect::<Vec<_>>(),
+        )
+    }
+}
+
+/// Cumulative per-engine counters (thread-safe: pool workers share one
+/// engine).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    /// executable invocations
+    pub batches: u64,
+    /// real (non-padding) rows decoded
+    pub rows: u64,
+    /// padding rows wasted on partial batches (occupancy diagnostics)
+    pub padded_rows: u64,
+    /// wall time inside `generate` calls, ms
+    pub gen_ms: f64,
+}
+
+/// The shared inference engine: wraps executable selection for one
+/// (tier, batch) geometry, uniform generation, the fused-generate call and
+/// EOS-cut/decode/verify post-processing.
+pub struct InferenceEngine {
+    gen_exe: Arc<Executable>,
+    pub tier: String,
+    /// baked executable batch size
+    pub batch: usize,
+    /// sampled tokens per sequence
+    pub n_gen: usize,
+    pub t_prefill: usize,
+    stats: Mutex<EngineStats>,
+}
+
+impl InferenceEngine {
+    pub fn new(rt: &Runtime, tier: &str, batch: usize) -> Result<Self> {
+        let info = rt.manifest.generate_exe(tier, batch)?.clone();
+        let gen_exe = rt.load(&info.name)?;
+        let t = rt.manifest.tier(tier)?;
+        Ok(Self {
+            gen_exe,
+            tier: tier.to_string(),
+            batch: info.batch,
+            n_gen: info.seq,
+            t_prefill: t.t_prefill,
+            stats: Mutex::new(EngineStats::default()),
+        })
+    }
+
+    /// Sample one batch from the merged weights. The prompt batch must
+    /// match the executable's baked geometry exactly; use
+    /// [`InferenceEngine::generate_problems`] for arbitrary-length inputs.
+    pub fn generate(
+        &self,
+        rt: &Runtime,
+        weights: &WeightSet,
+        pb: &PromptBatch,
+        tok: &Tokenizer,
+        temperature: f32,
+        rng: &mut Pcg64,
+    ) -> Result<Generation> {
+        if pb.tokens.shape[0] != self.batch {
+            bail!("prompt batch {} != exe batch {}", pb.tokens.shape[0], self.batch);
+        }
+        let b = self.batch;
+        let uniforms = TensorF32::from_vec(&[b, self.n_gen], rng.uniform_vec(b * self.n_gen));
+        let mut args: Vec<Arg> = weights.args();
+        args.push(Arg::I32(pb.tokens.clone()));
+        args.push(Arg::I32(pb.prompt_len.clone()));
+        args.push(Arg::F32(uniforms));
+        args.push(Arg::Scalar(temperature));
+        let t0 = crate::util::Timer::start();
+        let out = rt.run(&self.gen_exe, &args)?;
+        let gen_ms = t0.millis();
+        let tokens = out.i32(0)?;
+        let blp = out.f32(1)?;
+
+        let mut rows = Vec::with_capacity(b);
+        let mut padded = 0u64;
+        for i in 0..b {
+            let gen = &tokens.data[i * self.n_gen..(i + 1) * self.n_gen];
+            let lp = &blp.data[i * self.n_gen..(i + 1) * self.n_gen];
+            let cut = gen.iter().position(|&t| t == EOS).map(|p| p + 1);
+            let n = cut.unwrap_or(self.n_gen);
+            let response = gen[..n].to_vec();
+            let behavior = lp[..n].to_vec();
+            let text = tok.decode(&response);
+            let problem = &pb.problems[i];
+            let pad = is_padding(problem);
+            if pad {
+                padded += 1;
+            }
+            // padding rows never earn reward/format credit
+            let reward = if pad { 0.0 } else { verifier::reward(&text, problem.answer) };
+            let has_format = !pad && verifier::has_canonical_format(&text);
+            rows.push(GenRow {
+                prompt_len: pb.prompt_len.data[i] as usize,
+                response,
+                behavior,
+                text,
+                reward,
+                hit_eos: cut.is_some(),
+                has_format,
+            });
+        }
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.batches += 1;
+            s.rows += b as u64 - padded;
+            s.padded_rows += padded;
+            s.gen_ms += gen_ms;
+        }
+        Ok(Generation { rows, group: pb.group })
+    }
+
+    /// Decode an arbitrary problem list: chunks it into executable-sized
+    /// batches, pads the final chunk with the explicit sentinel, and
+    /// returns exactly one row per real problem (padding rows dropped).
+    /// Empty input is an error, not a panic.
+    pub fn generate_problems(
+        &self,
+        rt: &Runtime,
+        weights: &WeightSet,
+        problems: &[Problem],
+        tok: &Tokenizer,
+        temperature: f32,
+        rng: &mut Pcg64,
+    ) -> Result<Vec<GenRow>> {
+        if problems.is_empty() {
+            bail!("generate_problems: empty problem list");
+        }
+        let b = self.batch;
+        let mut rows = Vec::with_capacity(problems.len());
+        for chunk in problems.chunks(b) {
+            let mut padded: Vec<Problem> = chunk.to_vec();
+            while padded.len() < b {
+                padded.push(padding_problem());
+            }
+            let pb = prompt_batch(&padded, tok, 1, self.t_prefill);
+            let gen = self.generate(rt, weights, &pb, tok, temperature, rng)?;
+            rows.extend(gen.rows.into_iter().take(chunk.len()));
+        }
+        Ok(rows)
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padding_sentinel_is_unmistakable() {
+        let p = padding_problem();
+        assert!(is_padding(&p));
+        assert_eq!(p.suite, PADDING_SUITE);
+        // the sentinel's answer can never be produced by the verifier on
+        // any decodable text (answers are parsed from short digit strings)
+        assert_eq!(p.answer, i64::MIN);
+        let mut rng = Pcg64::new(1);
+        let real = crate::tasks::generator::SUITES[0].generate(&mut rng);
+        assert!(!is_padding(&real));
+    }
+
+    #[test]
+    fn engine_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<InferenceEngine>();
+        assert_send_sync::<GenRow>();
+        assert_send_sync::<EngineStats>();
+    }
+}

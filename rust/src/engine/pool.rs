@@ -1,0 +1,125 @@
+//! Worker pool: serves independent adapter batches on N threads.
+//!
+//! `Runtime` is `Send + Sync` (Arc'd executable cache, Mutex'd counters,
+//! FFI sections serialised behind its internal `exec_lock`), so workers
+//! share ONE runtime and ONE `InferenceEngine` by reference via scoped
+//! threads — no cloning, no channels. Device execution serialises on that
+//! lock; what overlaps across workers is everything host-side: literal
+//! conversion, tuple decomposition, EOS-cut/decode/verify. Each job
+//! carries its own merged weights (activation/merging stays on the
+//! coordinating thread, where the `AdapterStore` LRU lives) and its own
+//! RNG stream seeded from the job id, so results are bit-identical to the
+//! single-threaded path regardless of which worker picks a job up or in
+//! what order (asserted in `tests/integration.rs`).
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+use crate::engine::{GenRow, InferenceEngine};
+use crate::runtime::Runtime;
+use crate::tasks::generator::Problem;
+use crate::tokenizer::Tokenizer;
+use crate::util::Pcg64;
+use crate::weights::WeightSet;
+
+/// RNG stream tag for per-job uniform draws ("pool").
+const POOL_STREAM: u64 = 0x706f6f6c;
+
+/// One unit of pool work: a batch of problems to decode under one
+/// adapter's merged weights.
+pub struct GenJob {
+    pub id: u64,
+    pub weights: WeightSet,
+    pub problems: Vec<Problem>,
+    pub temperature: f32,
+    /// per-job RNG seed (derive it from stable request data, NOT from a
+    /// shared mutable counter, to keep parallel == serial)
+    pub seed: u64,
+}
+
+pub struct GenJobResult {
+    pub id: u64,
+    pub rows: Vec<GenRow>,
+}
+
+pub struct WorkerPool {
+    pub workers: usize,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> Self {
+        Self { workers: workers.max(1) }
+    }
+
+    fn run_job(rt: &Runtime, engine: &InferenceEngine, job: &GenJob) -> Result<Vec<GenRow>> {
+        let tok = Tokenizer::new();
+        let mut rng = Pcg64::with_stream(job.seed, POOL_STREAM);
+        engine.generate_problems(rt, &job.weights, &job.problems, &tok, job.temperature, &mut rng)
+    }
+
+    /// Serve all jobs across the pool's threads; results come back sorted
+    /// by job id. Fails if any job failed (all errors reported).
+    pub fn serve(
+        &self,
+        rt: &Runtime,
+        engine: &InferenceEngine,
+        jobs: Vec<GenJob>,
+    ) -> Result<Vec<GenJobResult>> {
+        let n_jobs = jobs.len();
+        if n_jobs == 0 {
+            return Ok(Vec::new());
+        }
+        let queue: Mutex<VecDeque<GenJob>> = Mutex::new(jobs.into());
+        let results: Mutex<Vec<GenJobResult>> = Mutex::new(Vec::with_capacity(n_jobs));
+        let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for _ in 0..self.workers.min(n_jobs) {
+                s.spawn(|| loop {
+                    let job = queue.lock().unwrap().pop_front();
+                    let Some(job) = job else { break };
+                    match Self::run_job(rt, engine, &job) {
+                        Ok(rows) => {
+                            results.lock().unwrap().push(GenJobResult { id: job.id, rows })
+                        }
+                        Err(e) => errors.lock().unwrap().push(format!("job {}: {e:#}", job.id)),
+                    }
+                });
+            }
+        });
+        let errs = errors.into_inner().unwrap();
+        if !errs.is_empty() {
+            bail!("worker pool: {} job(s) failed: {}", errs.len(), errs.join("; "));
+        }
+        let mut out = results.into_inner().unwrap();
+        out.sort_by_key(|r| r.id);
+        Ok(out)
+    }
+
+    /// Reference single-threaded path (identical semantics to `serve`) —
+    /// the equivalence baseline for the concurrency tests.
+    pub fn serve_serial(
+        rt: &Runtime,
+        engine: &InferenceEngine,
+        jobs: &[GenJob],
+    ) -> Result<Vec<GenJobResult>> {
+        let mut out = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            out.push(GenJobResult { id: job.id, rows: Self::run_job(rt, engine, job)? });
+        }
+        out.sort_by_key(|r| r.id);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_clamps_to_at_least_one_worker() {
+        assert_eq!(WorkerPool::new(0).workers, 1);
+        assert_eq!(WorkerPool::new(4).workers, 4);
+    }
+}

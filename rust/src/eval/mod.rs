@@ -1,11 +1,15 @@
 //! Evaluation harness: greedy decoding over held-out problem sets, exact-
 //! match accuracy per suite (the paper's pass@1 protocol).
+//!
+//! A thin client of `engine::InferenceEngine`: chunking, sentinel padding
+//! of the final partial batch and EOS-cut/decode all happen in the engine;
+//! this module only owns the held-out problem streams and the accuracy
+//! aggregation.
 
 use anyhow::Result;
 
-use crate::coordinator::rollout::RolloutEngine;
+use crate::engine::InferenceEngine;
 use crate::runtime::Runtime;
-use crate::tasks::corpus::prompt_batch;
 use crate::tasks::generator::{suite, Problem, SUITES};
 use crate::tokenizer::Tokenizer;
 use crate::util::Pcg64;
@@ -36,35 +40,36 @@ pub fn evaluate(
     n: usize,
     seed: u64,
 ) -> Result<EvalResult> {
-    let engine = RolloutEngine::new(rt, tier, rt.manifest.batch.roll)?;
+    let engine = InferenceEngine::new(rt, tier, rt.manifest.batch.roll)?;
+    evaluate_with(rt, &engine, weights, suite_name, n, seed)
+}
+
+/// Same as [`evaluate`] but reusing a caller-owned engine (drivers that
+/// eval repeatedly avoid re-resolving the executable each call).
+pub fn evaluate_with(
+    rt: &Runtime,
+    engine: &InferenceEngine,
+    weights: &WeightSet,
+    suite_name: &str,
+    n: usize,
+    seed: u64,
+) -> Result<EvalResult> {
     let tok = Tokenizer::new();
     let problems = eval_problems(suite_name, n, seed);
     let mut rng = Pcg64::with_stream(seed, 0x65767231);
+    let rows = engine.generate_problems(rt, weights, &problems, &tok, 0.0, &mut rng)?;
 
-    let b = engine.batch;
     let mut correct = 0usize;
     let mut fmt = 0usize;
     let mut len_sum = 0f32;
-    let mut done = 0usize;
-    while done < problems.len() {
-        let take = (problems.len() - done).min(b);
-        let mut chunk: Vec<Problem> = problems[done..done + take].to_vec();
-        // pad the final batch to the executable's baked size
-        while chunk.len() < b {
-            chunk.push(chunk[chunk.len() - 1].clone());
+    for row in &rows {
+        if row.reward > 0.5 {
+            correct += 1;
         }
-        let pb = prompt_batch(&chunk, &tok, 1, engine.t_prefill);
-        let roll = engine.rollout(rt, weights, &pb, &tok, 0.0, &mut rng)?;
-        for row in roll.rows.iter().take(take) {
-            if row.reward > 0.5 {
-                correct += 1;
-            }
-            if row.has_format {
-                fmt += 1;
-            }
-            len_sum += row.response.len() as f32;
+        if row.has_format {
+            fmt += 1;
         }
-        done += take;
+        len_sum += row.response.len() as f32;
     }
     Ok(EvalResult {
         accuracy: correct as f32 / problems.len() as f32,
@@ -82,9 +87,15 @@ pub fn evaluate_suite_ladder(
     n_per_suite: usize,
     seed: u64,
 ) -> Result<Vec<(String, EvalResult)>> {
+    let engine = InferenceEngine::new(rt, tier, rt.manifest.batch.roll)?;
     SUITES
         .iter()
-        .map(|s| Ok((s.name.to_string(), evaluate(rt, tier, weights, s.name, n_per_suite, seed)?)))
+        .map(|s| {
+            Ok((
+                s.name.to_string(),
+                evaluate_with(rt, &engine, weights, s.name, n_per_suite, seed)?,
+            ))
+        })
         .collect()
 }
 

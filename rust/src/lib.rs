@@ -4,8 +4,11 @@
 //!   * L1/L2 live in `python/compile/` and are AOT-lowered to HLO text
 //!     (`make artifacts`); python never runs at request time.
 //!   * L3 (this crate) owns everything with a lifecycle: the PJRT runtime,
+//!     the shared thread-safe inference `engine` (the one canonical decode
+//!     path: `InferenceEngine` + per-adapter `Scheduler` + `WorkerPool`),
 //!     pretraining, GRPO/SFT trainers, rollouts, evaluation, the
-//!     multi-adapter serving plane, metrics and the CLI.
+//!     multi-adapter serving plane, metrics and the CLI. Rollout, eval and
+//!     serving are thin clients of `engine`.
 //!
 //! The build environment is fully offline, so small substrates that would
 //! normally be crates (JSON, RNG, CLI parsing, bench harness, property
@@ -14,6 +17,7 @@
 pub mod adapters;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod eval;
 pub mod experiments;
 pub mod manifest;
@@ -28,5 +32,6 @@ pub mod tokenizer;
 pub mod util;
 pub mod weights;
 
+pub use engine::InferenceEngine;
 pub use manifest::Manifest;
 pub use runtime::Runtime;

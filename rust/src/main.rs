@@ -54,7 +54,7 @@ COMMANDS
   eval        --tier micro [--suite gsm8k-syn | --ladder] [--n 64]
   sweep       --tier micro --scheme <tag> [--algo grpo] [--lrs 5e-4,2e-3,8e-3]
               [--seeds 0,1] [--steps 40]
-  serve-demo  --tier micro [--tenants 16] [--requests 64]
+  serve-demo  --tier micro [--tenants 16] [--requests 64] [--workers 1]
   info        [--tier micro]
 
 Shared: --artifacts DIR --ckpts DIR --results DIR --echo"
@@ -249,8 +249,8 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         store.resident_model_bytes(rt.manifest.tier(&tier)?.n_params)
     );
 
+    let workers = args.usize("workers", 1)?;
     let mut router = Router::new(&rt, store, base, rt.manifest.batch.serve, 0.2, dirs.ckpts.clone())?;
-    let t = tinylora_rl::util::Timer::start();
     for i in 0..n_requests {
         // zipf-ish tenant popularity
         let tenant = (rng.uniform().powf(2.0) * tenants as f32) as usize % tenants;
@@ -259,13 +259,21 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         router.now += 0.01;
         router.tick(&rt)?;
     }
-    router.drain(&rt)?;
-    let mut stats = router.stats();
-    stats.wall_ms = t.millis();
+    if workers > 1 {
+        router.drain_parallel(&rt, workers)?;
+    } else {
+        router.drain(&rt)?;
+    }
+    let stats = router.stats();
     println!(
         "served {} requests in {} batches | occupancy {:.2} | latency mean {:.3}s p95 {:.3}s | merge hit-rate {:.2} | wall {:.0} ms",
         stats.served, stats.batches, stats.mean_occupancy, stats.mean_latency, stats.p95_latency,
         stats.merge_hit_rate, stats.wall_ms
+    );
+    let es = router.engine().stats();
+    println!(
+        "engine: {} generate calls | {} rows (+{} padding) | {:.0} ms decode",
+        es.batches, es.rows, es.padded_rows, es.gen_ms
     );
     Ok(())
 }

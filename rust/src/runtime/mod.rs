@@ -10,11 +10,16 @@
 //!   * Tuple buffers cannot be re-fed as inputs, so loops that would chain
 //!     device state (KV caches) are fused *inside* single executables at
 //!     lowering time (`generate`).
+//!
+//! Thread-safety: `Runtime` is `Send + Sync`. The executable cache is an
+//! `RwLock` (reads dominate: one compile per name, then lock-free-ish
+//! lookups), perf counters sit behind a `Mutex`, and compiled executables
+//! are shared as `Arc<Executable>` so `engine::pool::WorkerPool` threads
+//! can run independent adapter batches concurrently against one client.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -26,10 +31,30 @@ pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
     art_dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    cache: RwLock<HashMap<String, Arc<Executable>>>,
+    /// Serialises every FFI section that touches PJRT objects (compile,
+    /// execute, device→host transfer). See the SAFETY note below: we do
+    /// NOT rely on the wrapper being internally thread-safe. Host-side
+    /// work (arg→literal conversion, tuple decomposition, decode/verify)
+    /// stays outside this lock, so `engine::pool` workers still overlap
+    /// usefully.
+    exec_lock: Mutex<()>,
     /// cumulative (compile_ms, run_ms, runs) for perf accounting
-    stats: RefCell<RuntimeStats>,
+    stats: Mutex<RuntimeStats>,
 }
+
+// SAFETY: `Runtime`/`Executable` lack the auto traits only because the
+// `xla` 0.1.6 wrapper holds non-Send handles to PJRT objects (they may be
+// internally reference-counted without atomics). We therefore make NO
+// assumption about the wrapper's internal thread-safety: every code path
+// that touches a PJRT object — `compile`, `execute`, `to_literal_sync` —
+// runs under `exec_lock`, so those handles are never accessed from two
+// threads at once. `xla::Literal` values are standalone host buffers with
+// no client handle and are only ever owned by one thread. All rust-side
+// mutability is behind RwLock/Mutex. Concurrency is exercised by the
+// `engine::pool` tests.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
 
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RuntimeStats {
@@ -43,6 +68,11 @@ pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     pub info: ExeInfo,
 }
+
+// SAFETY: see the `Runtime` impls above — loaded executables are immutable
+// after compilation and PJRT execution is thread-safe.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
 
 /// Outputs of one execution, keyed by position (manifest order).
 pub struct Outputs {
@@ -93,8 +123,9 @@ impl Runtime {
             client,
             manifest,
             art_dir: art_dir.to_path_buf(),
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(RuntimeStats::default()),
+            cache: RwLock::new(HashMap::new()),
+            exec_lock: Mutex::new(()),
+            stats: Mutex::new(RuntimeStats::default()),
         })
     }
 
@@ -105,8 +136,8 @@ impl Runtime {
     }
 
     /// Load (compile) an executable by manifest name, with caching.
-    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.read().unwrap().get(name) {
             return Ok(e.clone());
         }
         let info = self.manifest.exe(name)?.clone();
@@ -115,18 +146,22 @@ impl Runtime {
         let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
             .with_context(|| format!("loading HLO text {path:?}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
+        let exe = {
+            let _ffi = self.exec_lock.lock().unwrap();
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?
+        };
         {
-            let mut s = self.stats.borrow_mut();
+            let mut s = self.stats.lock().unwrap();
             s.compile_ms += t0.elapsed().as_secs_f64() * 1e3;
             s.compiles += 1;
         }
-        let rc = Rc::new(Executable { exe, info });
-        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
-        Ok(rc)
+        let arc = Arc::new(Executable { exe, info });
+        // two threads racing to compile the same exe both succeed; the
+        // second insert wins and the first Arc just drops when unreferenced
+        self.cache.write().unwrap().insert(name.to_string(), arc.clone());
+        Ok(arc)
     }
 
     /// Execute with shape-checked args; returns per-output literals.
@@ -145,10 +180,14 @@ impl Runtime {
         let lits: Vec<xla::Literal> =
             args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
         let t0 = Instant::now();
-        let out = exe.exe.execute::<xla::Literal>(&lits)?;
-        let root = out[0][0].to_literal_sync()?;
+        let root = {
+            // device section: execute + transfer both touch PJRT objects
+            let _ffi = self.exec_lock.lock().unwrap();
+            let out = exe.exe.execute::<xla::Literal>(&lits)?;
+            out[0][0].to_literal_sync()?
+        };
         {
-            let mut s = self.stats.borrow_mut();
+            let mut s = self.stats.lock().unwrap();
             s.run_ms += t0.elapsed().as_secs_f64() * 1e3;
             s.runs += 1;
         }
@@ -167,10 +206,26 @@ impl Runtime {
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        *self.stats.borrow()
+        *self.stats.lock().unwrap()
     }
 
     pub fn platform(&self) -> String {
+        let _ffi = self.exec_lock.lock().unwrap();
         self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Compile-time guarantee backing `engine::pool::WorkerPool`: sharing
+    /// `&Runtime` / `Arc<Executable>` across worker threads is sound.
+    #[test]
+    fn runtime_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Runtime>();
+        assert_send_sync::<Executable>();
+        assert_send_sync::<RuntimeStats>();
     }
 }

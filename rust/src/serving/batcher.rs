@@ -2,6 +2,12 @@
 //! executable batches (the generate executables have baked batch sizes),
 //! trading latency for occupancy — the standard continuous-batching
 //! dial, scoped per adapter because a batch runs under ONE merged model.
+//!
+//! LEGACY: the router now batches through `engine::scheduler::Scheduler`
+//! (per-adapter queues, O(#adapters) batch formation, pluggable policies).
+//! This single-queue implementation — `next_batch` rescans the whole queue
+//! per candidate adapter, O(n²) at depth — is kept as the baseline for
+//! `bench_main.rs::bench_scheduler` and for its original unit tests.
 
 use std::collections::VecDeque;
 

@@ -2,11 +2,18 @@
 //! TinyLoRA adapters are small enough (26 bytes!) to store thousands of
 //! tenants, with an LRU of activated (merged) models and per-adapter
 //! dynamic batching.
+//!
+//! Decode and batch formation live in the shared `engine` subsystem
+//! (`InferenceEngine`, `Scheduler`, `WorkerPool`); this module owns the
+//! serving-specific pieces: the adapter store and the router.
 
 pub mod batcher;
 pub mod router;
 pub mod store;
 
 pub use batcher::{Batch, DynamicBatcher, Request};
-pub use router::{Router, RouterStats};
+pub use router::{Response, Router, RouterStats};
 pub use store::AdapterStore;
+
+// convenience re-exports for serving clients
+pub use crate::engine::scheduler::{AdapterBatch, QueuedRequest, SchedPolicy, Scheduler};

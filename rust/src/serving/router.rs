@@ -1,19 +1,27 @@
-//! Request router: ties the adapter store and the dynamic batcher to the
-//! rollout engine.  One scheduling round = pick a batch, activate its
-//! adapter (LRU-cached merge), run the fused generate executable, verify
-//! and record latency.  This is the vllm-router-shaped component of L3.
+//! Request router: ties the adapter store and the per-adapter scheduler to
+//! the shared inference engine. One scheduling round = pick a batch,
+//! activate its adapter (LRU-cached merge), decode through
+//! `engine::InferenceEngine`, record latency. This is the
+//! vllm-router-shaped component of L3.
+//!
+//! The router owns no decode logic: padding sentinels, EOS cuts and the
+//! fused-generate call all live in `engine`. It owns the *serving policy*:
+//! which batch goes next (`engine::scheduler::Scheduler`), which merged
+//! model is resident (`AdapterStore`), and — via `drain_parallel` — how
+//! many independent adapter batches run concurrently
+//! (`engine::pool::WorkerPool`).
 
 use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::coordinator::rollout::RolloutEngine;
-use crate::serving::batcher::{Batch, DynamicBatcher, Request};
+use crate::engine::pool::{GenJob, WorkerPool};
+use crate::engine::scheduler::{AdapterBatch, QueuedRequest, SchedPolicy, Scheduler};
+use crate::engine::{GenRow, InferenceEngine};
 use crate::serving::store::AdapterStore;
-use crate::tasks::corpus::prompt_batch;
 use crate::tasks::generator::Problem;
 use crate::tokenizer::Tokenizer;
-use crate::util::Pcg64;
+use crate::util::{Pcg64, Timer};
 use crate::weights::WeightSet;
 
 #[derive(Clone, Debug)]
@@ -33,14 +41,15 @@ pub struct RouterStats {
     pub mean_latency: f64,
     pub p95_latency: f64,
     pub mean_occupancy: f64,
+    /// real wall time spent serving batches (merge + decode), ms
     pub wall_ms: f64,
     pub merge_hit_rate: f32,
 }
 
 pub struct Router {
     pub store: AdapterStore,
-    pub batcher: DynamicBatcher,
-    engine: RolloutEngine,
+    pub scheduler: Scheduler,
+    engine: InferenceEngine,
     base: WeightSet,
     tok: Tokenizer,
     ckpt_dir: PathBuf,
@@ -52,6 +61,8 @@ pub struct Router {
     pub now: f64,
     /// virtual service time per batch (models device occupancy)
     pub service_time: f64,
+    /// accumulated real wall time across serve calls, ms
+    wall_ms: f64,
 }
 
 impl Router {
@@ -63,10 +74,11 @@ impl Router {
         max_wait: f64,
         ckpt_dir: PathBuf,
     ) -> Result<Self> {
-        let engine = RolloutEngine::new(rt, &store.tier, batch_size)?;
+        let engine = InferenceEngine::new(rt, &store.tier, batch_size)?;
+        let batch = engine.batch;
         Ok(Self {
             store,
-            batcher: DynamicBatcher::new(batch_size, max_wait),
+            scheduler: Scheduler::new(batch, max_wait, SchedPolicy::OccupancyFirst),
             engine,
             base,
             tok: Tokenizer::new(),
@@ -77,11 +89,21 @@ impl Router {
             rng: Pcg64::new(0),
             now: 0.0,
             service_time: 0.05,
+            wall_ms: 0.0,
         })
     }
 
+    /// Swap the batch-formation policy (occupancy-first by default).
+    pub fn set_policy(&mut self, policy: SchedPolicy) {
+        self.scheduler.policy = policy;
+    }
+
+    pub fn engine(&self) -> &InferenceEngine {
+        &self.engine
+    }
+
     pub fn submit(&mut self, id: u64, adapter: &str, problem: &Problem) {
-        self.batcher.push(Request {
+        self.scheduler.push(QueuedRequest {
             id,
             adapter: adapter.to_string(),
             prompt: problem.prompt.clone(),
@@ -91,30 +113,32 @@ impl Router {
 
     /// Serve at most one batch; returns how many requests completed.
     pub fn tick(&mut self, rt: &crate::runtime::Runtime) -> Result<usize> {
-        let Some(batch) = self.batcher.next_batch(self.now) else {
+        let Some(batch) = self.scheduler.next_batch(self.now) else {
             return Ok(0);
         };
         let n = self.serve_batch(rt, batch)?;
         Ok(n)
     }
 
-    fn serve_batch(&mut self, rt: &crate::runtime::Runtime, batch: Batch) -> Result<usize> {
-        let weights = self.store.activate(rt, &self.base, &batch.adapter, &self.ckpt_dir)?;
-        // pad the prompt list to the executable's baked batch size
-        let mut problems: Vec<Problem> = batch
+    fn batch_problems(batch: &AdapterBatch) -> Vec<Problem> {
+        batch
             .requests
             .iter()
-            .map(|r| Problem { prompt: r.prompt.clone(), gold: String::new(), answer: 0, suite: "serving" })
-            .collect();
-        let n_real = problems.len();
-        while problems.len() < self.engine.batch {
-            problems.push(problems[problems.len() - 1].clone());
-        }
-        let pb = prompt_batch(&problems, &self.tok, 1, self.engine.t_prefill);
-        let roll = self.engine.rollout(rt, &weights, &pb, &self.tok, 0.0, &mut self.rng)?;
-        self.now += self.service_time;
-        let occ = n_real as f32 / self.engine.batch as f32;
-        for (req, row) in batch.requests.iter().zip(roll.rows.iter()) {
+            .map(|r| Problem {
+                prompt: r.prompt.clone(),
+                gold: String::new(),
+                answer: 0,
+                suite: "serving",
+            })
+            .collect()
+    }
+
+    /// Record completions for one served batch (virtual clock already
+    /// advanced to the completion time).
+    fn record(&mut self, batch: &AdapterBatch, rows: &[GenRow]) {
+        debug_assert_eq!(batch.requests.len(), rows.len());
+        let occ = rows.len() as f32 / self.engine.batch as f32;
+        for (req, row) in batch.requests.iter().zip(rows) {
             let latency = self.now - req.arrival;
             self.latencies.push(latency);
             self.responses.push(Response {
@@ -126,19 +150,84 @@ impl Router {
             });
         }
         self.occupancies.push(occ);
-        Ok(n_real)
     }
 
-    /// Drain the queue completely.
+    fn serve_batch(&mut self, rt: &crate::runtime::Runtime, batch: AdapterBatch) -> Result<usize> {
+        let t = Timer::start();
+        let weights = self.store.activate(rt, &self.base, &batch.adapter, &self.ckpt_dir)?;
+        let problems = Self::batch_problems(&batch);
+        // the engine pads short batches with the explicit sentinel and
+        // returns exactly one row per real request
+        let rows =
+            self.engine.generate_problems(rt, &weights, &problems, &self.tok, 0.0, &mut self.rng)?;
+        self.now += self.service_time;
+        self.record(&batch, &rows);
+        self.wall_ms += t.millis();
+        Ok(rows.len())
+    }
+
+    /// Drain the queue completely, one batch at a time.
     pub fn drain(&mut self, rt: &crate::runtime::Runtime) -> Result<()> {
         loop {
-            if self.batcher.pending() == 0 {
+            if self.scheduler.pending() == 0 {
                 return Ok(());
             }
             if self.tick(rt)? == 0 {
                 // nothing flushable yet: advance virtual time to force it
-                self.now += self.batcher.max_wait.max(1e-3);
+                self.now += self.scheduler.max_wait.max(1e-3);
             }
+        }
+    }
+
+    /// Drain the queue serving up to `workers` independent adapter batches
+    /// concurrently. Activation (merging) stays on this thread — it
+    /// mutates the LRU — while decode fans out across the pool. Greedy
+    /// serving decode plus per-job seeds keep decoded *texts* identical to
+    /// the sequential `drain`; virtual latencies reflect the parallelism
+    /// (waves complete in ceil(wave/workers) service intervals).
+    pub fn drain_parallel(&mut self, rt: &crate::runtime::Runtime, workers: usize) -> Result<()> {
+        let pool = WorkerPool::new(workers);
+        loop {
+            if self.scheduler.pending() == 0 {
+                return Ok(());
+            }
+            // collect one wave: every batch flushable at the current clock
+            let mut wave: Vec<AdapterBatch> = Vec::new();
+            while let Some(b) = self.scheduler.next_batch(self.now) {
+                wave.push(b);
+            }
+            if wave.is_empty() {
+                self.now += self.scheduler.max_wait.max(1e-3);
+                continue;
+            }
+            let t = Timer::start();
+            // dispatch the wave `workers` batches at a time: only that
+            // many merged models are materialized at once (the store's
+            // max_resident bound stays meaningful), and each chunk costs
+            // one virtual service interval — a wave of k batches takes
+            // ceil(k/workers) intervals, same as `drain` when workers==1
+            for chunk in wave.chunks(pool.workers) {
+                let mut jobs = Vec::with_capacity(chunk.len());
+                for (k, b) in chunk.iter().enumerate() {
+                    let weights =
+                        self.store.activate(rt, &self.base, &b.adapter, &self.ckpt_dir)?;
+                    jobs.push(GenJob {
+                        id: k as u64,
+                        weights,
+                        problems: Self::batch_problems(b),
+                        temperature: 0.0,
+                        // stable per-batch seed (greedy decode ignores it,
+                        // but keep parallel == serial regardless)
+                        seed: b.requests.first().map(|r| r.id).unwrap_or(0),
+                    });
+                }
+                let results = pool.serve(rt, &self.engine, jobs)?;
+                self.now += self.service_time;
+                for (b, res) in chunk.iter().zip(&results) {
+                    self.record(b, &res.rows);
+                }
+            }
+            self.wall_ms += t.millis();
         }
     }
 
@@ -156,7 +245,7 @@ impl Router {
             } else {
                 self.occupancies.iter().map(|&x| x as f64).sum::<f64>() / self.occupancies.len() as f64
             },
-            wall_ms: 0.0,
+            wall_ms: self.wall_ms,
             merge_hit_rate: self.store.hit_rate(),
         }
     }

@@ -6,10 +6,13 @@
 //! Requires `make artifacts` to have run (skipped gracefully otherwise).
 
 use std::path::Path;
+use std::sync::OnceLock;
 
 use tinylora_rl::adapters::{count, packing::Precision, Theta};
 use tinylora_rl::coordinator::policy::{GrpoHp, Policy, TrainBatch};
 use tinylora_rl::coordinator::rollout::RolloutEngine;
+use tinylora_rl::engine::pool::{GenJob, WorkerPool};
+use tinylora_rl::engine::InferenceEngine;
 use tinylora_rl::manifest::Manifest;
 use tinylora_rl::tasks::corpus::{pretrain_batch, prompt_batch, sft_batch};
 use tinylora_rl::tasks::generator::SUITES;
@@ -27,15 +30,12 @@ fn have_artifacts() -> bool {
     art_dir().join("manifest.json").exists()
 }
 
-thread_local! {
-    // Runtime holds Rc/RefCell (single-threaded by design: one coordinator
-    // thread owns the device); tests each get a thread-local instance.
-    static RT: &'static Runtime =
-        Box::leak(Box::new(Runtime::new(art_dir()).expect("runtime")));
-}
+// Runtime is Send + Sync (Arc'd executable cache, Mutex'd counters): one
+// shared instance serves every test thread, including the pool tests.
+static RT: OnceLock<Runtime> = OnceLock::new();
 
 fn runtime() -> &'static Runtime {
-    RT.with(|rt| *rt)
+    RT.get_or_init(|| Runtime::new(art_dir()).expect("runtime"))
 }
 
 macro_rules! require_artifacts {
@@ -45,6 +45,60 @@ macro_rules! require_artifacts {
             return;
         }
     };
+}
+
+/// ISSUE 1 acceptance: the runtime must be shareable across engine pool
+/// workers. Pure compile-time check — no artifacts needed.
+#[test]
+fn runtime_is_send_sync() {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Runtime>();
+    assert_send_sync::<InferenceEngine>();
+    assert_send_sync::<WorkerPool>();
+}
+
+/// ISSUE 1 acceptance: ≥2 adapter batches served from concurrent threads
+/// produce results identical to the single-threaded path. Two weight sets
+/// stand in for two activated adapters; jobs of 3 problems on a batch-4
+/// executable also exercise the sentinel padding path, and temperature 1.0
+/// makes the per-job RNG streams load-bearing (not just greedy argmax).
+#[test]
+fn worker_pool_parallel_matches_serial() {
+    require_artifacts!();
+    let rt = runtime();
+    let tier = rt.manifest.tier("nano").unwrap().clone();
+    let engine = InferenceEngine::new(rt, "nano", rt.manifest.batch.test).unwrap();
+    let adapters = [WeightSet::init(&tier, 0), WeightSet::init(&tier, 3)];
+
+    let make_jobs = || -> Vec<GenJob> {
+        (0..4u64)
+            .map(|id| {
+                let mut rng = Pcg64::with_stream(100 + id, 0x6a6f6273);
+                GenJob {
+                    id,
+                    weights: adapters[(id % 2) as usize].clone(),
+                    problems: (0..3).map(|_| SUITES[0].generate(&mut rng)).collect(),
+                    temperature: 1.0,
+                    seed: 40 + id,
+                }
+            })
+            .collect()
+    };
+
+    let serial = WorkerPool::serve_serial(rt, &engine, &make_jobs()).unwrap();
+    let parallel = WorkerPool::new(2).serve(rt, &engine, make_jobs()).unwrap();
+    assert_eq!(serial.len(), 4);
+    assert_eq!(parallel.len(), 4);
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(s.id, p.id);
+        assert_eq!(s.rows.len(), 3, "padding rows must be dropped");
+        assert_eq!(p.rows.len(), 3);
+        for (a, b) in s.rows.iter().zip(&p.rows) {
+            assert_eq!(a.response, b.response, "job {} diverged across threads", s.id);
+            assert_eq!(a.text, b.text);
+            assert_eq!(a.behavior, b.behavior);
+        }
+    }
 }
 
 #[test]
