@@ -22,6 +22,13 @@ fi
 echo "== cargo test -q =="
 cargo test -q
 
+if cargo clippy --version >/dev/null 2>&1; then
+  echo "== cargo clippy --all-targets -- -D warnings =="
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "== clippy component unavailable — skipped =="
+fi
+
 echo "== cargo fmt --check =="
 cargo fmt --check
 

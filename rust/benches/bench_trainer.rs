@@ -1,0 +1,174 @@
+//! Trainer-subsystem benchmarks (`cargo bench --bench bench_trainer`).
+//!
+//! Pure-rust parts always run: `TrainState` checkpoint roundtrips at the
+//! 13-param headline and full-model sizes, and the adapter store's
+//! access-ordered LRU against the seed's `Vec`-scan residency (the O(1)
+//! touch/evict satellite). With artifacts built, the headline comparison
+//! runs: serial vs multi-tenant GRPO training throughput at 4 and 16
+//! tenants sharing one backbone — the wave decode fans across a
+//! `WorkerPool` while grad/Adam stay per-tenant.
+
+use std::path::Path;
+
+use tinylora_rl::adapters::packing::Precision;
+use tinylora_rl::coordinator::grpo::GrpoConfig;
+use tinylora_rl::coordinator::optimizer::AdamState;
+use tinylora_rl::metrics::RunLog;
+use tinylora_rl::serving::ResidentLru;
+use tinylora_rl::trainer::{TenantSpec, TenantTrainer, TrainState, TRAIN_STATE_VERSION};
+use tinylora_rl::util::{timer::time_iters, Pcg64, Timer};
+use tinylora_rl::weights::WeightSet;
+use tinylora_rl::Runtime;
+
+struct Bench {
+    rows: Vec<(String, f64)>,
+}
+
+impl Bench {
+    fn run<F: FnMut()>(&mut self, name: &str, iters: usize, note: &str, mut f: F) {
+        f(); // warmup
+        let (mean, min, max) = time_iters(iters, &mut f);
+        println!("{name:<48} mean {mean:>9.3} ms  (min {min:>9.3}, max {max:>9.3})  {note}");
+        self.rows.push((name.to_string(), mean));
+    }
+}
+
+fn state_of_size(n: usize) -> TrainState {
+    let mut rng = Pcg64::new(1);
+    TrainState {
+        version: TRAIN_STATE_VERSION,
+        algo: "grpo".into(),
+        tier: "micro".into(),
+        scheme_tag: "tinylora_r2_u13_all".into(),
+        config: "suite=gsm8k-syn lr=0.002 seed=0".into(),
+        step: 40,
+        rng: [1, 2, 3, 4],
+        adam: AdamState { t: 40, m: rng.normal_vec(n, 0.1), v: rng.normal_vec(n, 0.1) },
+        params: rng.normal_vec(n, 0.1),
+    }
+}
+
+/// The seed's residency structure: a Vec scanned per touch, whole entries
+/// moved to the MRU end. Kept only as the bench baseline.
+fn vec_scan_lru(n_adapters: usize, touches: usize) {
+    let mut resident: Vec<(String, u64)> = Vec::new();
+    let max_resident = 8;
+    let mut rng = Pcg64::new(7);
+    for i in 0..touches {
+        let name = format!("t{}", rng.below(n_adapters as u64));
+        if let Some(pos) = resident.iter().position(|(n, _)| n == &name) {
+            let entry = resident.remove(pos);
+            resident.push(entry);
+        } else {
+            if resident.len() >= max_resident {
+                resident.remove(0);
+            }
+            resident.push((name, i as u64));
+        }
+    }
+    assert!(resident.len() <= max_resident);
+}
+
+fn access_ordered_lru(n_adapters: usize, touches: usize) {
+    let mut lru: ResidentLru<u64> = ResidentLru::new();
+    let max_resident = 8;
+    let mut rng = Pcg64::new(7);
+    for i in 0..touches {
+        let name = format!("t{}", rng.below(n_adapters as u64));
+        if lru.touch(&name).is_none() {
+            lru.insert(&name, i as u64, max_resident);
+        }
+    }
+    assert!(lru.len() <= max_resident);
+}
+
+fn bench_tenants(b: &mut Bench, rt: &Runtime, base: &WeightSet, g: usize, workers: usize) {
+    let specs: Vec<TenantSpec> = (0..g)
+        .map(|i| TenantSpec {
+            name: format!("tenant-{i}"),
+            scheme_tag: "tinylora_r2_u13_all".into(),
+            cfg: GrpoConfig {
+                steps: 2,
+                group: 2,
+                seed: i as u64,
+                ..Default::default()
+            },
+            precision: Precision::Bf16,
+        })
+        .collect();
+    let par_label = format!("{workers} workers");
+    for (label, parallel, w) in
+        [("serial", false, 1usize), (par_label.as_str(), true, workers)]
+    {
+        let mut tt = TenantTrainer::with_batch(
+            rt,
+            base,
+            specs.clone(),
+            w,
+            Path::new("ckpts"),
+            rt.manifest.batch.test,
+        )
+        .expect("tenant trainer");
+        let t0 = Timer::start();
+        tt.train(rt, &mut RunLog::null(), parallel).expect("train");
+        let ms = t0.millis();
+        println!(
+            "tenants/{g:>2} x 2 steps, {label:<10} {ms:>9.0} ms  ({:.1} tenant-steps/s)",
+            (g * 2) as f64 / (ms / 1e3)
+        );
+        b.rows.push((format!("tenants/{g}/{label}"), ms));
+    }
+}
+
+fn main() {
+    let mut b = Bench { rows: Vec::new() };
+    println!("== trainer subsystem benchmarks ==\n");
+
+    // ---------------- pure-rust substrates ----------------
+    let dir = std::env::temp_dir().join("tlrl_bench_trainer");
+    std::fs::create_dir_all(&dir).unwrap();
+    let tiny = state_of_size(13);
+    let tiny_path = dir.join("tiny.trainstate");
+    b.run("trainstate/save+load 13 params", 500, "26-byte update", || {
+        tiny.save(&tiny_path).unwrap();
+        std::hint::black_box(TrainState::load(&tiny_path).unwrap());
+    });
+    let full = state_of_size(139_000);
+    let full_path = dir.join("full.trainstate");
+    b.run("trainstate/save+load 139k params", 20, "full-FT scale", || {
+        full.save(&full_path).unwrap();
+        std::hint::black_box(TrainState::load(&full_path).unwrap());
+    });
+    std::fs::remove_dir_all(&dir).ok();
+
+    b.run("store/vec-scan lru 10k touches", 50, "seed baseline", || {
+        vec_scan_lru(32, 10_000);
+    });
+    b.run("store/access-ordered lru 10k touches", 50, "O(1) touch/evict", || {
+        access_ordered_lru(32, 10_000);
+    });
+
+    // ---------------- multi-tenant training (needs artifacts) ----------------
+    if !Path::new("artifacts/manifest.json").exists() {
+        println!("\nartifacts not built — skipping tenant-training benches");
+        return;
+    }
+    let rt = Runtime::new(Path::new("artifacts")).expect("runtime");
+    let tier = rt.manifest.tier("nano").expect("nano tier").clone();
+    let ckpt = Path::new("ckpts").join("nano.ckpt");
+    let base =
+        if ckpt.exists() { WeightSet::load(&ckpt).unwrap() } else { WeightSet::init(&tier, 0) };
+
+    println!();
+    bench_tenants(&mut b, &rt, &base, 4, 4);
+    bench_tenants(&mut b, &rt, &base, 16, 4);
+
+    for g in [4usize, 16] {
+        let serial = b.rows.iter().find(|r| r.0 == format!("tenants/{g}/serial")).unwrap().1;
+        let par = b.rows.iter().find(|r| r.0 == format!("tenants/{g}/4 workers")).unwrap().1;
+        println!(
+            "multi-tenant speedup @G={g}: {:.2}x (serial {serial:.0} ms -> pooled {par:.0} ms)",
+            serial / par
+        );
+    }
+}

@@ -42,6 +42,12 @@ impl Precision {
 /// f32 -> bf16 bits (round-to-nearest-even on the dropped mantissa).
 pub fn f32_to_bf16_bits(x: f32) -> u16 {
     let bits = x.to_bits();
+    if x.is_nan() {
+        // never round a NaN: carry out of the mantissa would turn a
+        // max-payload NaN into ±inf (or flip its sign bit). Truncate the
+        // payload and force a quiet bit so the mantissa stays non-zero.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
     let lsb = (bits >> 16) & 1;
     let rounded = bits.wrapping_add(0x7fff + lsb);
     (rounded >> 16) as u16
@@ -237,6 +243,78 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Pack→unpack must agree with the in-memory quantize roundtrip for
+    /// arbitrary bit patterns — including NaNs (any payload), infinities,
+    /// denormals and signed zeros — across every `Precision` variant.
+    /// Comparison is on bits, which is NaN-safe.
+    #[test]
+    fn pack_unpack_roundtrip_all_bit_patterns() {
+        check("pack/unpack arbitrary bits", 500, |rng| {
+            let n = rng.below(20) as usize + 1;
+            let xs: Vec<f32> = (0..n).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+            for p in [Precision::F32, Precision::Bf16, Precision::F16] {
+                let bytes = pack(&xs, p);
+                if bytes.len() != n * p.bytes() {
+                    return Err(format!("{p:?}: wrong byte count"));
+                }
+                let back = unpack(&bytes, p);
+                let direct = roundtrip(&xs, p);
+                for (i, (&b, &d)) in back.iter().zip(&direct).enumerate() {
+                    if b.to_bits() != d.to_bits() {
+                        return Err(format!(
+                            "{p:?} idx {i}: wire {b:?} != roundtrip {d:?} (src bits {:#010x})",
+                            xs[i].to_bits()
+                        ));
+                    }
+                }
+                // specials must survive quantization classwise
+                for (&x, &b) in xs.iter().zip(&back) {
+                    if x.is_nan() && !b.is_nan() {
+                        return Err(format!("{p:?}: NaN {:#010x} became {b}", x.to_bits()));
+                    }
+                    if x.is_infinite() && (!b.is_infinite() || b.signum() != x.signum()) {
+                        return Err(format!("{p:?}: {x} became {b}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Regression: max-payload NaNs used to round into ±inf / -0.0 in bf16.
+    #[test]
+    fn bf16_adversarial_nan_payloads_stay_nan() {
+        for bits in [0x7fff_ffffu32, 0xffff_ffff, 0x7f80_0001, 0xff80_ffff, 0x7fc0_0000] {
+            let x = f32::from_bits(bits);
+            assert!(x.is_nan());
+            let y = bf16_bits_to_f32(f32_to_bf16_bits(x));
+            assert!(y.is_nan(), "NaN {bits:#010x} became {y}");
+        }
+        // infinities are exact in bf16
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+    }
+
+    /// The paper's headline config: 13 params pack to exactly 26 bytes at
+    /// bf16, and NaN/inf theta values survive the wire format.
+    #[test]
+    fn headline_13_param_update_is_26_bytes_even_with_specials() {
+        let mut theta = [0.1f32; 13];
+        theta[3] = f32::NAN;
+        theta[7] = f32::INFINITY;
+        theta[11] = f32::NEG_INFINITY;
+        for p in [Precision::Bf16, Precision::F16] {
+            let bytes = pack(&theta, p);
+            assert_eq!(bytes.len(), 26, "{p:?}");
+            let back = unpack(&bytes, p);
+            assert_eq!(back.len(), 13);
+            assert!(back[3].is_nan());
+            assert_eq!(back[7], f32::INFINITY);
+            assert_eq!(back[11], f32::NEG_INFINITY);
+        }
+        assert_eq!(pack(&theta, Precision::F32).len(), 52);
     }
 
     #[test]

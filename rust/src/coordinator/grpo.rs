@@ -1,21 +1,34 @@
-//! The GRPO trainer: the paper's training loop (§5).
+//! The GRPO loop: the paper's training loss (§5), as a thin
+//! `trainer::TrainLoop` impl.
 //!
 //! Per step: sample a group-structured prompt batch, roll out with the
 //! *merged* inference weights, verify (exact-match reward), compute
 //! group-relative advantages, run the AOT gradient executable under
-//! truncated importance sampling, apply Adam in rust, re-merge.
+//! truncated importance sampling. Optimizer wiring, LR scheduling, grad
+//! clipping, logging and checkpointing all live in `trainer::TrainSession`
+//! — this module owns only what the GRPO loss *means*.
+//!
+//! The step is split into `plan` → rollout → `finish` so `TenantTrainer`
+//! can batch many tenants' rollout waves through the shared
+//! `engine::WorkerPool`: a plan carries the rollout seed, and both the
+//! in-loop and the pooled path derive the decode RNG from it on the same
+//! stream, so pooled results are bit-identical to serial ones.
 
 use anyhow::Result;
 
-use crate::coordinator::optimizer::{lr_at, Adam, AdamConfig};
 use crate::coordinator::policy::{GradStats, GrpoHp, Policy};
-use crate::coordinator::rollout::RolloutEngine;
+use crate::coordinator::rollout::{Rollout, RolloutEngine};
+use crate::engine::pool::POOL_STREAM;
 use crate::metrics::RunLog;
 use crate::runtime::Runtime;
-use crate::tasks::corpus::prompt_batch;
+use crate::tasks::corpus::{prompt_batch, PromptBatch};
 use crate::tasks::generator::{suite, Problem, Suite, SUITES};
 use crate::tokenizer::Tokenizer;
+use crate::trainer::{AuxMetrics, GradOutput, SessionConfig, TrainLoop, TrainSession};
 use crate::util::Pcg64;
+
+/// RNG stream tag for the GRPO session ("grpo" — historical).
+pub const GRPO_STREAM: u64 = 0x6772706f;
 
 #[derive(Clone, Debug)]
 pub struct GrpoConfig {
@@ -77,86 +90,200 @@ pub fn draw_problems(suite_name: &str, n: usize, rng: &mut Pcg64) -> Vec<Problem
         .collect()
 }
 
-pub struct GrpoTrainer {
-    pub cfg: GrpoConfig,
-    pub engine: RolloutEngine,
-    opt: Adam,
-    rng: Pcg64,
-    tok: Tokenizer,
-    step: usize,
+/// Phase-1 output of a GRPO step: everything the rollout needs, detached
+/// from the loop so it can be shipped to a worker pool. The decode RNG is
+/// derived from `seed` on `engine::pool::POOL_STREAM` in both the in-loop
+/// and the pooled path.
+pub struct RolloutPlan {
+    pub problems: Vec<Problem>,
+    pub pb: PromptBatch,
+    pub seed: u64,
 }
 
-impl GrpoTrainer {
-    pub fn new(rt: &Runtime, policy: &Policy, cfg: GrpoConfig) -> Result<Self> {
-        let engine = RolloutEngine::new(rt, &policy.tier.name, rt.manifest.batch.roll)?;
-        let opt = Adam::new(
-            policy.params().len(),
-            AdamConfig { lr: cfg.lr, grad_clip: cfg.grad_clip, ..Default::default() },
-        );
-        let rng = Pcg64::with_stream(cfg.seed, 0x6772706f);
-        Ok(Self { cfg, engine, opt, rng, tok: Tokenizer::new(), step: 0 })
+pub struct GrpoLoop {
+    pub cfg: GrpoConfig,
+    pub policy: Policy,
+    engine: RolloutEngine,
+    tok: Tokenizer,
+}
+
+impl GrpoLoop {
+    /// Training-plane geometry (`manifest.batch.roll`).
+    pub fn new(rt: &Runtime, policy: Policy, cfg: GrpoConfig) -> Result<Self> {
+        let batch = rt.manifest.batch.roll;
+        Self::with_batch(rt, policy, cfg, batch)
     }
 
-    /// One full GRPO step; returns the step record.
-    pub fn step(&mut self, rt: &Runtime, policy: &mut Policy) -> Result<StepRecord> {
-        let b = self.engine.batch;
-        assert!(b % self.cfg.group == 0);
-        let n_prompts = b / self.cfg.group;
-        let problems = draw_problems(&self.cfg.suite, n_prompts, &mut self.rng);
-        let pb = prompt_batch(&problems, &self.tok, self.cfg.group, self.engine.t_prefill);
+    /// Explicit decode geometry (tests and tiny tiers use `batch.test`).
+    pub fn with_batch(rt: &Runtime, policy: Policy, cfg: GrpoConfig, batch: usize) -> Result<Self> {
+        let engine = RolloutEngine::new(rt, &policy.tier.name, batch)?;
+        // user-reachable via --group: reject bad geometry here as an error
+        // (the assert in `plan` is then a pure internal invariant)
+        if cfg.group == 0 || engine.batch % cfg.group != 0 {
+            anyhow::bail!(
+                "group {} must divide the decode batch {}",
+                cfg.group,
+                engine.batch
+            );
+        }
+        Ok(Self { cfg, policy, engine, tok: Tokenizer::new() })
+    }
 
+    /// Decode batch size of this loop's engine.
+    pub fn batch(&self) -> usize {
+        self.engine.batch
+    }
+
+    /// Phase 1 (coordinator thread): draw the group-structured prompt batch
+    /// and the rollout seed from the session RNG.
+    pub fn plan(&self, rng: &mut Pcg64) -> RolloutPlan {
+        let b = self.engine.batch;
+        assert!(b % self.cfg.group == 0, "batch {b} not divisible by group {}", self.cfg.group);
+        let n_prompts = b / self.cfg.group;
+        let problems = draw_problems(&self.cfg.suite, n_prompts, rng);
+        let pb = prompt_batch(&problems, &self.tok, self.cfg.group, self.engine.t_prefill);
+        RolloutPlan { problems, pb, seed: rng.next_u64() }
+    }
+
+    /// Phase 2, in-loop variant: sample the planned batch from the merged
+    /// weights. `TenantTrainer` ships the same plan to the `WorkerPool`
+    /// instead; both derive the decode RNG identically. Returns the rollout
+    /// and its wall time.
+    pub fn rollout_planned(&self, rt: &Runtime, plan: &RolloutPlan) -> Result<(Rollout, f64)> {
         let t0 = crate::util::Timer::start();
+        let mut rng = Pcg64::with_stream(plan.seed, POOL_STREAM);
         let roll = self.engine.rollout(
             rt,
-            &policy.merged,
-            &pb,
+            &self.policy.merged,
+            &plan.pb,
             &self.tok,
             self.cfg.temperature,
-            &mut self.rng,
+            &mut rng,
         )?;
-        let rollout_ms = t0.millis();
+        Ok((roll, t0.millis()))
+    }
 
-        let batch = self.engine.train_batch(&pb, &roll, policy.tier.t_train);
+    /// Phase 3: assemble the train batch and run the gradient executable
+    /// under truncated importance sampling.
+    pub fn finish(
+        &self,
+        rt: &Runtime,
+        plan: &RolloutPlan,
+        roll: &Rollout,
+        rollout_ms: f64,
+    ) -> Result<GradOutput> {
+        let batch = self.engine.train_batch(&plan.pb, roll, self.policy.tier.t_train);
         let hp = GrpoHp { clip_c: self.cfg.clip_c, kl_coef: self.cfg.kl_coef };
         let t1 = crate::util::Timer::start();
-        let (grad, mut stats) = policy.grad(rt, &batch, hp)?;
+        let (grad, stats) = self.policy.grad(rt, &batch, hp)?;
         let grad_ms = t1.millis();
-
-        self.opt.set_lr(lr_at(self.cfg.lr, self.cfg.warmup, self.step as u64));
-        let mut params = policy.params();
-        stats.grad_norm = self.opt.step(&mut params, &grad);
-        policy.set_params(rt, &params)?;
-
-        let rec = StepRecord {
-            step: self.step,
-            reward: roll.mean_reward(),
-            response_len: roll.mean_response_len(),
-            format_rate: roll.format_rate(),
-            eos_rate: crate::util::mean(
-                &roll.rows.iter().map(|r| if r.hit_eos { 1.0 } else { 0.0 }).collect::<Vec<_>>(),
-            ),
-            lr: self.opt.cfg.lr,
+        let eos_rate = crate::util::mean(
+            &roll.rows.iter().map(|r| if r.hit_eos { 1.0 } else { 0.0 }).collect::<Vec<_>>(),
+        );
+        Ok(GradOutput {
+            grad,
             stats,
+            aux: AuxMetrics {
+                reward: roll.mean_reward(),
+                response_len: roll.mean_response_len(),
+                format_rate: roll.format_rate(),
+                eos_rate,
+            },
             rollout_ms,
             grad_ms,
-        };
-        self.step += 1;
-        Ok(rec)
+        })
+    }
+}
+
+impl TrainLoop for GrpoLoop {
+    type Record = StepRecord;
+
+    fn algo(&self) -> &'static str {
+        "grpo"
     }
 
-    /// Run the configured number of steps, logging as we go.
-    pub fn train(
-        &mut self,
-        rt: &Runtime,
-        policy: &mut Policy,
-        log: &mut RunLog,
-    ) -> Result<Vec<StepRecord>> {
-        let mut records = Vec::with_capacity(self.cfg.steps);
-        for _ in 0..self.cfg.steps {
-            let rec = self.step(rt, policy)?;
-            log.log_step("grpo", policy, &rec);
-            records.push(rec);
-        }
-        Ok(records)
+    fn tier(&self) -> &str {
+        &self.policy.tier.name
     }
+
+    fn scheme_tag(&self) -> &str {
+        &self.policy.scheme_tag
+    }
+
+    fn config_tag(&self) -> String {
+        let c = &self.cfg;
+        // batch is trajectory-shaping too: plan() draws batch/group prompts
+        // per step, so a state saved at batch.test must not resume at
+        // batch.roll
+        format!(
+            "suite={} batch={} group={} lr={} warmup={} temp={} clip_c={} kl={} grad_clip={} seed={}",
+            c.suite, self.engine.batch, c.group, c.lr, c.warmup, c.temperature, c.clip_c,
+            c.kl_coef, c.grad_clip, c.seed
+        )
+    }
+
+    fn n_params(&self) -> usize {
+        self.policy.trainable_params()
+    }
+
+    fn params(&self) -> Vec<f32> {
+        self.policy.params()
+    }
+
+    fn set_params(&mut self, rt: &Runtime, params: &[f32]) -> Result<()> {
+        self.policy.set_params(rt, params)
+    }
+
+    fn compute(&mut self, rt: &Runtime, _step: usize, rng: &mut Pcg64) -> Result<GradOutput> {
+        let plan = self.plan(rng);
+        let (roll, rollout_ms) = self.rollout_planned(rt, &plan)?;
+        self.finish(rt, &plan, &roll, rollout_ms)
+    }
+
+    fn record(
+        &self,
+        step: usize,
+        lr: f32,
+        out: &GradOutput,
+        grad_norm: f32,
+        log: &mut RunLog,
+    ) -> StepRecord {
+        let mut stats = out.stats;
+        stats.grad_norm = grad_norm;
+        let rec = StepRecord {
+            step,
+            reward: out.aux.reward,
+            response_len: out.aux.response_len,
+            format_rate: out.aux.format_rate,
+            eos_rate: out.aux.eos_rate,
+            lr,
+            stats,
+            rollout_ms: out.rollout_ms,
+            grad_ms: out.grad_ms,
+        };
+        log.log_step("grpo", &self.policy, &rec);
+        rec
+    }
+}
+
+/// Session hyperparameters for one GRPO config (checkpointing off; callers
+/// opt in via `session.cfg`).
+pub fn grpo_session_cfg(cfg: &GrpoConfig) -> SessionConfig {
+    SessionConfig {
+        steps: cfg.steps,
+        lr: cfg.lr,
+        warmup: cfg.warmup,
+        grad_clip: cfg.grad_clip,
+        seed: cfg.seed,
+        stream: GRPO_STREAM,
+        ckpt_every: 0,
+        ckpt_path: None,
+    }
+}
+
+/// Build a full GRPO training session (the former `GrpoTrainer::new` plus
+/// the optimizer wiring, now session-owned).
+pub fn grpo_session(rt: &Runtime, policy: Policy, cfg: GrpoConfig) -> Result<TrainSession<GrpoLoop>> {
+    let scfg = grpo_session_cfg(&cfg);
+    Ok(TrainSession::new(GrpoLoop::new(rt, policy, cfg)?, scfg))
 }

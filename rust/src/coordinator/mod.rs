@@ -1,7 +1,10 @@
-//! L3 coordinator — the paper's training system: rollout engine, GRPO/SFT
-//! trainers, group-relative advantages, optimizers, pretraining and the LR
-//! sweep protocol.  Python never appears here: every gradient/merge/sample
-//! is an AOT-compiled executable behind `runtime::Runtime`.
+//! L3 coordinator — the paper's training losses and protocols: rollout
+//! engine, the GRPO/SFT/pretrain `TrainLoop` impls, group-relative
+//! advantages, optimizers and the LR sweep protocol.  The shared step
+//! skeleton (optimizer wiring, LR schedule, logging, checkpoint/resume)
+//! lives in `crate::trainer`; this module owns what each loss *means*.
+//! Python never appears here: every gradient/merge/sample is an
+//! AOT-compiled executable behind `runtime::Runtime`.
 
 pub mod advantage;
 pub mod grpo;
@@ -12,8 +15,8 @@ pub mod rollout;
 pub mod sft;
 pub mod sweep;
 
-pub use grpo::{GrpoConfig, GrpoTrainer};
+pub use grpo::{grpo_session, GrpoConfig, GrpoLoop, StepRecord};
 pub use policy::{GradStats, GrpoHp, Policy, TrainBatch};
-pub use pretrain::{pretrain, PretrainConfig};
+pub use pretrain::{pretrain, pretrain_session, PretrainConfig, PretrainLoop};
 pub use rollout::{Rollout, RolloutEngine};
-pub use sft::{SftConfig, SftTrainer};
+pub use sft::{sft_session, SftConfig, SftLoop};

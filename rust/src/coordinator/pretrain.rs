@@ -1,5 +1,6 @@
 //! From-scratch pretraining of the base models (the substitution for the
-//! paper's Qwen/Llama checkpoints — DESIGN.md §2).
+//! paper's Qwen/Llama checkpoints — DESIGN.md §2), as a thin
+//! `trainer::TrainLoop` impl over the raw `WeightSet`.
 //!
 //! LM loss over the synthetic corpus: word problems solved in a *mixture*
 //! of answer formats (only one of which the verifier rewards) plus
@@ -8,18 +9,24 @@
 //! precondition for the paper's "RL elicits style" finding.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::optimizer::{lr_at, Adam, AdamConfig};
+use crate::coordinator::policy::GradStats;
+use crate::manifest::TierInfo;
 use crate::metrics::RunLog;
-use crate::runtime::Runtime;
+use crate::runtime::{Executable, Runtime};
 use crate::tasks::corpus::pretrain_batch;
 use crate::tasks::generator::{suite, SUITES};
 use crate::tensor::Arg;
 use crate::tokenizer::Tokenizer;
+use crate::trainer::{GradOutput, SessionConfig, TrainLoop, TrainSession};
 use crate::util::Pcg64;
 use crate::weights::WeightSet;
+
+/// RNG stream tag for the pretraining session ("pret" — historical).
+pub const PRETRAIN_STREAM: u64 = 0x70726574;
 
 #[derive(Clone, Debug)]
 pub struct PretrainConfig {
@@ -37,12 +44,146 @@ impl Default for PretrainConfig {
     }
 }
 
+#[derive(Clone, Copy, Debug)]
+pub struct PretrainRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub token_acc: f32,
+    pub lr: f32,
+    pub grad_norm: f32,
+}
+
 pub struct PretrainResult {
     pub final_loss: f32,
     pub losses: Vec<(usize, f32)>,
 }
 
-/// Pretrain a tier from scratch and save the checkpoint.
+pub struct PretrainLoop {
+    pub cfg: PretrainConfig,
+    pub weights: WeightSet,
+    tier: TierInfo,
+    exe: Arc<Executable>,
+    tok: Tokenizer,
+    batch: usize,
+}
+
+impl PretrainLoop {
+    pub fn new(rt: &Runtime, tier_name: &str, cfg: PretrainConfig) -> Result<Self> {
+        let tier = rt.manifest.tier(tier_name)?.clone();
+        let b = rt.manifest.batch.train;
+        let exe = rt.load(
+            &rt.manifest
+                .find(&format!("pretrain {tier_name}"), |e| {
+                    e.fn_kind == "pretrain" && e.tier == tier_name && e.batch == b
+                })?
+                .name,
+        )?;
+        let weights = WeightSet::init(&tier, cfg.seed);
+        Ok(Self { cfg, weights, tier, exe, tok: Tokenizer::new(), batch: b })
+    }
+}
+
+impl TrainLoop for PretrainLoop {
+    type Record = PretrainRecord;
+
+    fn algo(&self) -> &'static str {
+        "pretrain"
+    }
+
+    fn tier(&self) -> &str {
+        &self.tier.name
+    }
+
+    fn config_tag(&self) -> String {
+        let c = &self.cfg;
+        format!(
+            "suite={} batch={} lr={} warmup={} seed={}",
+            c.suite, self.batch, c.lr, c.warmup, c.seed
+        )
+    }
+
+    fn n_params(&self) -> usize {
+        self.weights.n_params()
+    }
+
+    fn params(&self) -> Vec<f32> {
+        self.weights.flat()
+    }
+
+    fn set_params(&mut self, _rt: &Runtime, params: &[f32]) -> Result<()> {
+        self.weights.set_flat(params)
+    }
+
+    fn compute(&mut self, rt: &Runtime, _step: usize, rng: &mut Pcg64) -> Result<GradOutput> {
+        // corpus mixes the training suite with the harder tiers so every
+        // eval suite's problem family appears in pretraining
+        let s = suite(&self.cfg.suite).unwrap_or(&SUITES[0]);
+        let s_step =
+            if rng.uniform() < 0.5 { s } else { *rng.choice(&SUITES.iter().collect::<Vec<_>>()) };
+        let (tokens, mask) = pretrain_batch(s_step, &self.tok, rng, self.batch, self.tier.t_train);
+        let mut args: Vec<Arg> = self.weights.args();
+        args.push(Arg::I32(tokens));
+        args.push(Arg::F32(mask));
+        let t1 = crate::util::Timer::start();
+        let out = rt.run(&self.exe, &args)?;
+        let grad_ms = t1.millis();
+        let stats_t = out.f32(out.len() - 1)?;
+        let mut grad = Vec::with_capacity(self.weights.n_params());
+        for i in 0..out.len() - 1 {
+            grad.extend_from_slice(&out.f32(i)?.data);
+        }
+        // the pretrain executable reports [loss, token_acc]
+        let stats = GradStats {
+            loss: stats_t.data[0],
+            aux1: stats_t.data[1],
+            ..Default::default()
+        };
+        Ok(GradOutput { grad, stats, aux: Default::default(), rollout_ms: 0.0, grad_ms })
+    }
+
+    fn record(
+        &self,
+        step: usize,
+        lr: f32,
+        out: &GradOutput,
+        grad_norm: f32,
+        log: &mut RunLog,
+    ) -> PretrainRecord {
+        if step % self.cfg.log_every == 0 || step + 1 == self.cfg.steps {
+            log.log_pretrain(&self.tier.name, step, out.stats.loss, out.stats.aux1);
+        }
+        PretrainRecord { step, loss: out.stats.loss, token_acc: out.stats.aux1, lr, grad_norm }
+    }
+}
+
+/// Session hyperparameters for one pretraining config.
+pub fn pretrain_session_cfg(cfg: &PretrainConfig) -> SessionConfig {
+    SessionConfig {
+        steps: cfg.steps,
+        lr: cfg.lr,
+        warmup: cfg.warmup,
+        // the seed wired pretraining through Adam's default clip (1.0)
+        grad_clip: 1.0,
+        seed: cfg.seed,
+        stream: PRETRAIN_STREAM,
+        ckpt_every: 0,
+        ckpt_path: None,
+    }
+}
+
+/// Build a full pretraining session.
+pub fn pretrain_session(
+    rt: &Runtime,
+    tier_name: &str,
+    cfg: PretrainConfig,
+) -> Result<TrainSession<PretrainLoop>> {
+    let scfg = pretrain_session_cfg(&cfg);
+    Ok(TrainSession::new(PretrainLoop::new(rt, tier_name, cfg)?, scfg))
+}
+
+/// Pretrain a tier from scratch and save the checkpoint (the historical
+/// driver entry point; drivers that want resume build the session
+/// themselves and set `cfg.ckpt_every`).
 pub fn pretrain(
     rt: &Runtime,
     tier_name: &str,
@@ -50,52 +191,15 @@ pub fn pretrain(
     ckpt_dir: &Path,
     log: &mut RunLog,
 ) -> Result<PretrainResult> {
-    let tier = rt.manifest.tier(tier_name)?.clone();
-    let b = rt.manifest.batch.train;
-    let t = tier.t_train;
-    let exe = rt.load(
-        &rt.manifest
-            .find(&format!("pretrain {tier_name}"), |e| {
-                e.fn_kind == "pretrain" && e.tier == tier_name && e.batch == b
-            })?
-            .name,
-    )?;
-
-    let mut weights = WeightSet::init(&tier, cfg.seed);
-    let mut opt = Adam::new(weights.n_params(), AdamConfig { lr: cfg.lr, ..Default::default() });
-    let mut rng = Pcg64::with_stream(cfg.seed, 0x70726574);
-    let tok = Tokenizer::new();
-    let s = suite(&cfg.suite).unwrap_or(&SUITES[0]);
-
-    let mut losses = Vec::new();
-    let mut final_loss = f32::NAN;
-    for step in 0..cfg.steps {
-        // corpus mixes the training suite with the harder tiers so every
-        // eval suite's problem family appears in pretraining
-        let s_step = if rng.uniform() < 0.5 { s } else { *rng.choice(&SUITES.iter().collect::<Vec<_>>()) };
-        let (tokens, mask) = pretrain_batch(s_step, &tok, &mut rng, b, t);
-        let mut args: Vec<Arg> = weights.args();
-        args.push(Arg::I32(tokens));
-        args.push(Arg::F32(mask));
-        let out = rt.run(&exe, &args)?;
-        let stats = out.f32(out.len() - 1)?;
-        let loss = stats.data[0];
-        final_loss = loss;
-
-        let mut grad = Vec::with_capacity(weights.n_params());
-        for i in 0..out.len() - 1 {
-            grad.extend_from_slice(&out.f32(i)?.data);
-        }
-        opt.set_lr(lr_at(cfg.lr, cfg.warmup, step as u64));
-        let mut flat = weights.flat();
-        opt.step(&mut flat, &grad);
-        weights.set_flat(&flat)?;
-
-        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
-            losses.push((step, loss));
-            log.log_pretrain(tier_name, step, loss, stats.data[1]);
-        }
-    }
-    weights.save(&WeightSet::ckpt_path(ckpt_dir, tier_name))?;
+    let mut session = pretrain_session(rt, tier_name, cfg.clone())?;
+    let records = session.run(rt, log)?;
+    let lp = session.into_loop();
+    lp.weights.save(&WeightSet::ckpt_path(ckpt_dir, tier_name))?;
+    let losses = records
+        .iter()
+        .filter(|r| r.step % cfg.log_every == 0 || r.step + 1 == cfg.steps)
+        .map(|r| (r.step, r.loss))
+        .collect();
+    let final_loss = records.last().map(|r| r.loss).unwrap_or(f32::NAN);
     Ok(PretrainResult { final_loss, losses })
 }

@@ -1,18 +1,22 @@
-//! The SFT trainer — the paper's comparison baseline (§6.2, Fig. 2).
-//! Next-token CE on gold canonical demonstrations, same adapter schemes and
-//! optimizer as GRPO so the *only* difference is the learning signal.
+//! The SFT loop — the paper's comparison baseline (§6.2, Fig. 2), as a
+//! thin `trainer::TrainLoop` impl. Next-token CE on gold canonical
+//! demonstrations, same adapter schemes and (session-owned) optimizer as
+//! GRPO so the *only* difference is the learning signal.
 
 use anyhow::Result;
 
-use crate::coordinator::optimizer::{lr_at, Adam, AdamConfig};
 use crate::coordinator::policy::{GradStats, GrpoHp, Policy, TrainBatch};
 use crate::metrics::RunLog;
 use crate::runtime::Runtime;
 use crate::tasks::corpus::sft_batch;
 use crate::tasks::generator::{suite, SUITES};
-use crate::tensor::{TensorF32, TensorI32};
+use crate::tensor::TensorF32;
 use crate::tokenizer::Tokenizer;
+use crate::trainer::{GradOutput, SessionConfig, TrainLoop, TrainSession};
 use crate::util::Pcg64;
+
+/// RNG stream tag for the SFT session ("sft" — historical).
+pub const SFT_STREAM: u64 = 0x736674;
 
 #[derive(Clone, Debug)]
 pub struct SftConfig {
@@ -39,72 +43,106 @@ pub struct SftRecord {
     pub stats: GradStats,
 }
 
-pub struct SftTrainer {
+pub struct SftLoop {
     pub cfg: SftConfig,
-    opt: Adam,
-    rng: Pcg64,
+    pub policy: Policy,
     tok: Tokenizer,
-    step: usize,
     batch: usize,
 }
 
-impl SftTrainer {
-    pub fn new(rt: &Runtime, policy: &Policy, cfg: SftConfig) -> Result<Self> {
-        let opt = Adam::new(
-            policy.params().len(),
-            AdamConfig { lr: cfg.lr, grad_clip: cfg.grad_clip, ..Default::default() },
-        );
-        let rng = Pcg64::with_stream(cfg.seed, 0x736674);
-        Ok(Self { cfg, opt, rng, tok: Tokenizer::new(), step: 0, batch: rt.manifest.batch.train })
+impl SftLoop {
+    pub fn new(rt: &Runtime, policy: Policy, cfg: SftConfig) -> Result<Self> {
+        Ok(Self { cfg, policy, tok: Tokenizer::new(), batch: rt.manifest.batch.train })
+    }
+}
+
+impl TrainLoop for SftLoop {
+    type Record = SftRecord;
+
+    fn algo(&self) -> &'static str {
+        "sft"
     }
 
-    pub fn step(&mut self, rt: &Runtime, policy: &mut Policy) -> Result<SftRecord> {
+    fn tier(&self) -> &str {
+        &self.policy.tier.name
+    }
+
+    fn scheme_tag(&self) -> &str {
+        &self.policy.scheme_tag
+    }
+
+    fn config_tag(&self) -> String {
+        let c = &self.cfg;
+        format!(
+            "suite={} batch={} lr={} warmup={} grad_clip={} seed={}",
+            c.suite, self.batch, c.lr, c.warmup, c.grad_clip, c.seed
+        )
+    }
+
+    fn n_params(&self) -> usize {
+        self.policy.trainable_params()
+    }
+
+    fn params(&self) -> Vec<f32> {
+        self.policy.params()
+    }
+
+    fn set_params(&mut self, rt: &Runtime, params: &[f32]) -> Result<()> {
+        self.policy.set_params(rt, params)
+    }
+
+    fn compute(&mut self, rt: &Runtime, _step: usize, rng: &mut Pcg64) -> Result<GradOutput> {
         let s = if self.cfg.suite == "math-mix" {
-            *self.rng.choice(&[&SUITES[1], &SUITES[2], &SUITES[3], &SUITES[4]])
+            *rng.choice(&[&SUITES[1], &SUITES[2], &SUITES[3], &SUITES[4]])
         } else {
             suite(&self.cfg.suite).unwrap_or(&SUITES[0])
         };
-        let (tokens, mask) =
-            sft_batch(s, &self.tok, &mut self.rng, self.batch, policy.tier.t_train);
-        let t = policy.tier.t_train;
+        let t = self.policy.tier.t_train;
+        let (tokens, mask) = sft_batch(s, &self.tok, rng, self.batch, t);
         let batch = TrainBatch {
             tokens,
             mask,
             behavior: TensorF32::zeros(&[self.batch, t - 1]),
             advantages: TensorF32::zeros(&[self.batch]),
         };
-        let (grad, mut stats) = policy.grad(rt, &batch, GrpoHp::default())?;
-        self.opt.set_lr(lr_at(self.cfg.lr, self.cfg.warmup, self.step as u64));
-        let mut params = policy.params();
-        stats.grad_norm = self.opt.step(&mut params, &grad);
-        policy.set_params(rt, &params)?;
-        let rec = SftRecord {
-            step: self.step,
-            loss: stats.loss,
-            token_acc: stats.aux1,
-            lr: self.opt.cfg.lr,
-            stats,
-        };
-        self.step += 1;
-        Ok(rec)
+        let t1 = crate::util::Timer::start();
+        let (grad, stats) = self.policy.grad(rt, &batch, GrpoHp::default())?;
+        let grad_ms = t1.millis();
+        Ok(GradOutput { grad, stats, aux: Default::default(), rollout_ms: 0.0, grad_ms })
     }
 
-    pub fn train(
-        &mut self,
-        rt: &Runtime,
-        policy: &mut Policy,
+    fn record(
+        &self,
+        step: usize,
+        lr: f32,
+        out: &GradOutput,
+        grad_norm: f32,
         log: &mut RunLog,
-    ) -> Result<Vec<SftRecord>> {
-        let mut records = Vec::with_capacity(self.cfg.steps);
-        for _ in 0..self.cfg.steps {
-            let rec = self.step(rt, policy)?;
-            log.log_sft_step(policy, &rec);
-            records.push(rec);
-        }
-        Ok(records)
+    ) -> SftRecord {
+        let mut stats = out.stats;
+        stats.grad_norm = grad_norm;
+        let rec = SftRecord { step, loss: stats.loss, token_acc: stats.aux1, lr, stats };
+        log.log_sft_step(&self.policy, &rec);
+        rec
     }
 }
 
-// Unused import silencer for TensorI32 (used via corpus::sft_batch's types).
-#[allow(unused)]
-fn _types(_: TensorI32) {}
+/// Session hyperparameters for one SFT config.
+pub fn sft_session_cfg(cfg: &SftConfig) -> SessionConfig {
+    SessionConfig {
+        steps: cfg.steps,
+        lr: cfg.lr,
+        warmup: cfg.warmup,
+        grad_clip: cfg.grad_clip,
+        seed: cfg.seed,
+        stream: SFT_STREAM,
+        ckpt_every: 0,
+        ckpt_path: None,
+    }
+}
+
+/// Build a full SFT training session.
+pub fn sft_session(rt: &Runtime, policy: Policy, cfg: SftConfig) -> Result<TrainSession<SftLoop>> {
+    let scfg = sft_session_cfg(&cfg);
+    Ok(TrainSession::new(SftLoop::new(rt, policy, cfg)?, scfg))
+}

@@ -1,17 +1,27 @@
 //! LR sweep orchestration — the paper's protocol (§5.1): sweep learning
 //! rates per update size, keep the best by final eval accuracy, average
 //! over seeds.  Drives the pareto figures (1, 2, 3, 6).
+//!
+//! A GRPO sweep is just N tenants with different hyperparameters: the
+//! whole lrs × seeds grid trains as one `trainer::TenantTrainer` against
+//! the shared backbone, rollout waves interleaved on the same
+//! fused-generate executables (and across `--workers` pool threads).
+//! SFT has no rollout wave to pool, so it sweeps serially per run.
 
 use std::path::Path;
 
 use anyhow::Result;
 
-use crate::coordinator::grpo::{GrpoConfig, GrpoTrainer};
+use crate::adapters::packing::Precision;
+use crate::coordinator::grpo::{grpo_session, GrpoConfig};
 use crate::coordinator::policy::Policy;
-use crate::coordinator::sft::{SftConfig, SftTrainer};
-use crate::eval::{evaluate, EvalResult};
+use crate::coordinator::sft::{sft_session, SftConfig};
+use crate::engine::InferenceEngine;
+use crate::eval::{evaluate, evaluate_with, EvalResult};
 use crate::metrics::RunLog;
 use crate::runtime::Runtime;
+use crate::trainer::{TenantSpec, TenantTrainer};
+use crate::util::json::{num, obj, s, Value};
 use crate::weights::WeightSet;
 
 #[derive(Clone, Debug)]
@@ -25,6 +35,11 @@ pub struct SweepConfig {
     pub seeds: Vec<u64>,
     pub eval_suite: String,
     pub eval_n: usize,
+    /// pool threads for the tenant rollout waves (grpo only; 1 = serial)
+    pub workers: usize,
+    /// decode-geometry override for the grpo tenant grid and its evals
+    /// (0 = `manifest.batch.roll`; integration tests use `batch.test`)
+    pub batch: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -40,6 +55,34 @@ pub struct SweepOutcome {
     pub format_rate: f32,
 }
 
+impl SweepOutcome {
+    /// Canonical JSON row (byte-identical across same-seed runs — asserted
+    /// in `tests/integration.rs`).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("kind", s("sweep_outcome")),
+            ("scheme", s(&self.scheme_tag)),
+            ("params", num(self.trainable_params as f64)),
+            ("best_lr", num(self.best_lr as f64)),
+            ("accuracy", num(self.accuracy as f64)),
+            ("baseline_acc", num(self.baseline_accuracy as f64)),
+            ("final_reward", num(self.final_reward as f64)),
+            ("format_rate", num(self.format_rate as f64)),
+            (
+                "per_lr",
+                Value::Arr(
+                    self.per_lr
+                        .iter()
+                        .map(|&(lr, acc)| {
+                            obj(vec![("lr", num(lr as f64)), ("acc", num(acc as f64))])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
 /// Train one (scheme, lr, seed) run and return final eval accuracy.
 pub fn run_once(
     rt: &Runtime,
@@ -50,23 +93,38 @@ pub fn run_once(
     ckpt_dir: &Path,
     log: &mut RunLog,
 ) -> Result<(EvalResult, f32, f32)> {
-    let mut policy = Policy::new(rt, &cfg.tier, &cfg.scheme_tag, &cfg.algo, base.clone(), seed, ckpt_dir)?;
-    let (reward, fmt) = match cfg.algo.as_str() {
+    let policy =
+        Policy::new(rt, &cfg.tier, &cfg.scheme_tag, &cfg.algo, base.clone(), seed, ckpt_dir)?;
+    let (policy, reward, fmt) = match cfg.algo.as_str() {
         "grpo" => {
-            let gcfg = GrpoConfig { suite: cfg.suite.clone(), steps: cfg.steps, lr, seed, ..Default::default() };
-            let mut tr = GrpoTrainer::new(rt, &policy, gcfg)?;
-            let recs = tr.train(rt, &mut policy, log)?;
+            let gcfg = GrpoConfig {
+                suite: cfg.suite.clone(),
+                steps: cfg.steps,
+                lr,
+                seed,
+                ..Default::default()
+            };
+            let mut sess = grpo_session(rt, policy, gcfg)?;
+            let recs = sess.run(rt, log)?;
             let last = recs.iter().rev().take(5.min(recs.len())).collect::<Vec<_>>();
+            let n = last.len().max(1) as f32;
             (
-                last.iter().map(|r| r.reward).sum::<f32>() / last.len() as f32,
-                last.iter().map(|r| r.format_rate).sum::<f32>() / last.len() as f32,
+                sess.into_loop().policy,
+                last.iter().map(|r| r.reward).sum::<f32>() / n,
+                last.iter().map(|r| r.format_rate).sum::<f32>() / n,
             )
         }
         "sft" => {
-            let scfg = SftConfig { suite: cfg.suite.clone(), steps: cfg.steps, lr, seed, ..Default::default() };
-            let mut tr = SftTrainer::new(rt, &policy, scfg)?;
-            tr.train(rt, &mut policy, log)?;
-            (0.0, 0.0)
+            let scfg = SftConfig {
+                suite: cfg.suite.clone(),
+                steps: cfg.steps,
+                lr,
+                seed,
+                ..Default::default()
+            };
+            let mut sess = sft_session(rt, policy, scfg)?;
+            sess.run(rt, log)?;
+            (sess.into_loop().policy, 0.0, 0.0)
         }
         other => anyhow::bail!("unknown algo {other}"),
     };
@@ -82,31 +140,85 @@ pub fn sweep_scheme(
     ckpt_dir: &Path,
     log: &mut RunLog,
 ) -> Result<SweepOutcome> {
-    let baseline = evaluate(rt, &cfg.tier, base, &cfg.eval_suite, cfg.eval_n, 777)?;
-    let mut per_lr = Vec::new();
-    let mut best = (0.0f32, f32::NEG_INFINITY, 0.0, 0.0); // (lr, acc, reward, fmt)
-    for &lr in &cfg.lrs {
-        let mut accs = Vec::new();
-        let mut rews = Vec::new();
-        let mut fmts = Vec::new();
-        for &seed in &cfg.seeds {
-            let (ev, rew, fmt) = run_once(rt, base, cfg, lr, seed, ckpt_dir, log)?;
-            accs.push(ev.accuracy);
-            rews.push(rew);
-            fmts.push(fmt);
+    if cfg.lrs.is_empty() || cfg.seeds.is_empty() {
+        anyhow::bail!("sweep needs at least one lr and one seed");
+    }
+    let batch = if cfg.batch > 0 { cfg.batch } else { rt.manifest.batch.roll };
+    let eval_engine = InferenceEngine::new(rt, &cfg.tier, batch)?;
+    let baseline = evaluate_with(rt, &eval_engine, base, &cfg.eval_suite, cfg.eval_n, 777)?;
+    // (lr, acc, reward, fmt) per grid point, lr-major like the spec grid
+    let mut grid: Vec<(f32, f32, f32, f32)> = Vec::with_capacity(cfg.lrs.len() * cfg.seeds.len());
+    let trainable_params;
+
+    if cfg.algo == "grpo" {
+        // the grid IS a tenant set: one adapter per (lr, seed) against the
+        // shared backbone
+        let mut specs = Vec::with_capacity(cfg.lrs.len() * cfg.seeds.len());
+        for &lr in &cfg.lrs {
+            for &seed in &cfg.seeds {
+                specs.push(TenantSpec {
+                    name: format!("{}_lr{lr:.1e}_s{seed}", cfg.scheme_tag),
+                    scheme_tag: cfg.scheme_tag.clone(),
+                    cfg: GrpoConfig {
+                        suite: cfg.suite.clone(),
+                        steps: cfg.steps,
+                        lr,
+                        seed,
+                        ..Default::default()
+                    },
+                    precision: Precision::F32,
+                });
+            }
         }
-        let acc = crate::util::mean(&accs);
+        let workers = cfg.workers.max(1);
+        let mut tt = TenantTrainer::with_batch(rt, base, specs, workers, ckpt_dir, batch)?;
+        let outcomes = tt.train(rt, log, workers > 1)?;
+        for (sess, out) in tt.sessions.iter().zip(&outcomes) {
+            let ev = evaluate_with(
+                rt,
+                &eval_engine,
+                &sess.lp.policy.merged,
+                &cfg.eval_suite,
+                cfg.eval_n,
+                777,
+            )?;
+            grid.push((out.lr, ev.accuracy, out.final_reward, out.final_format_rate));
+        }
+        trainable_params =
+            tt.sessions.first().map(|s| s.lp.policy.trainable_params()).unwrap_or(0);
+    } else {
+        for &lr in &cfg.lrs {
+            for &seed in &cfg.seeds {
+                let (ev, rew, fmt) = run_once(rt, base, cfg, lr, seed, ckpt_dir, log)?;
+                grid.push((lr, ev.accuracy, rew, fmt));
+            }
+        }
+        let probe =
+            Policy::new(rt, &cfg.tier, &cfg.scheme_tag, &cfg.algo, base.clone(), 0, ckpt_dir)?;
+        trainable_params = probe.trainable_params();
+    }
+
+    // aggregate over seeds per LR, then best-LR selection
+    let n_seeds = cfg.seeds.len().max(1);
+    let mut per_lr = Vec::with_capacity(cfg.lrs.len());
+    let mut best = (0.0f32, f32::NEG_INFINITY, 0.0, 0.0); // (lr, acc, reward, fmt)
+    for (i, &lr) in cfg.lrs.iter().enumerate() {
+        let rows = &grid[i * n_seeds..(i + 1) * n_seeds];
+        let acc = crate::util::mean(&rows.iter().map(|r| r.1).collect::<Vec<_>>());
         per_lr.push((lr, acc));
         log.log_sweep_point(&cfg.scheme_tag, lr, acc);
         if acc > best.1 {
-            best = (lr, acc, crate::util::mean(&rews), crate::util::mean(&fmts));
+            best = (
+                lr,
+                acc,
+                crate::util::mean(&rows.iter().map(|r| r.2).collect::<Vec<_>>()),
+                crate::util::mean(&rows.iter().map(|r| r.3).collect::<Vec<_>>()),
+            );
         }
     }
-    // trainable size from a probe policy
-    let probe = Policy::new(rt, &cfg.tier, &cfg.scheme_tag, &cfg.algo, base.clone(), 0, ckpt_dir)?;
     Ok(SweepOutcome {
         scheme_tag: cfg.scheme_tag.clone(),
-        trainable_params: probe.trainable_params(),
+        trainable_params,
         best_lr: best.0,
         accuracy: best.1,
         per_lr,

@@ -194,6 +194,32 @@ impl InferenceEngine {
         Ok(Generation { rows, group: pb.group })
     }
 
+    /// Group-structured decode for GRPO-style training: each problem is
+    /// expanded into `group` consecutive rows (prompt repeated, independent
+    /// samples). Training waves always fill the executable geometry
+    /// exactly, so a partial batch is an error, not a padding case.
+    pub fn generate_grouped(
+        &self,
+        rt: &Runtime,
+        weights: &WeightSet,
+        problems: &[Problem],
+        group: usize,
+        tok: &Tokenizer,
+        temperature: f32,
+        rng: &mut Pcg64,
+    ) -> Result<Generation> {
+        if problems.len() * group != self.batch {
+            bail!(
+                "grouped batch {}x{} != exe batch {}",
+                problems.len(),
+                group,
+                self.batch
+            );
+        }
+        let pb = prompt_batch(problems, tok, group, self.t_prefill);
+        self.generate(rt, weights, &pb, tok, temperature, rng)
+    }
+
     /// Decode an arbitrary problem list: chunks it into executable-sized
     /// batches, pads the final chunk with the explicit sentinel, and
     /// returns exactly one row per real problem (padding rows dropped).

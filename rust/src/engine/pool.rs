@@ -19,13 +19,16 @@ use anyhow::{bail, Result};
 
 use crate::engine::{GenRow, InferenceEngine};
 use crate::runtime::Runtime;
+use crate::tasks::corpus::PromptBatch;
 use crate::tasks::generator::Problem;
 use crate::tokenizer::Tokenizer;
 use crate::util::Pcg64;
 use crate::weights::WeightSet;
 
-/// RNG stream tag for per-job uniform draws ("pool").
-const POOL_STREAM: u64 = 0x706f6f6c;
+/// RNG stream tag for per-job uniform draws ("pool"). Public because the
+/// GRPO loop derives its in-loop rollout RNG on the same stream, so a
+/// pooled tenant rollout is bit-identical to a serial one.
+pub const POOL_STREAM: u64 = 0x706f6f6c;
 
 /// One unit of pool work: a batch of problems to decode under one
 /// adapter's merged weights.
@@ -33,6 +36,14 @@ pub struct GenJob {
     pub id: u64,
     pub weights: WeightSet,
     pub problems: Vec<Problem>,
+    /// rows per problem: 1 for serving/eval traffic; the GRPO group size
+    /// for training rollout waves (the batch must then fill the executable
+    /// geometry exactly)
+    pub group: usize,
+    /// prebuilt prompt batch (training waves ship the one the planner
+    /// already tokenized, so the worker skips re-assembly); must match
+    /// `problems`/`group` and the engine's exact geometry
+    pub pb: Option<PromptBatch>,
     pub temperature: f32,
     /// per-job RNG seed (derive it from stable request data, NOT from a
     /// shared mutable counter, to keep parallel == serial)
@@ -56,7 +67,30 @@ impl WorkerPool {
     fn run_job(rt: &Runtime, engine: &InferenceEngine, job: &GenJob) -> Result<Vec<GenRow>> {
         let tok = Tokenizer::new();
         let mut rng = Pcg64::with_stream(job.seed, POOL_STREAM);
-        engine.generate_problems(rt, &job.weights, &job.problems, &tok, job.temperature, &mut rng)
+        if let Some(pb) = &job.pb {
+            Ok(engine.generate(rt, &job.weights, pb, &tok, job.temperature, &mut rng)?.rows)
+        } else if job.group > 1 {
+            Ok(engine
+                .generate_grouped(
+                    rt,
+                    &job.weights,
+                    &job.problems,
+                    job.group,
+                    &tok,
+                    job.temperature,
+                    &mut rng,
+                )?
+                .rows)
+        } else {
+            engine.generate_problems(
+                rt,
+                &job.weights,
+                &job.problems,
+                &tok,
+                job.temperature,
+                &mut rng,
+            )
+        }
     }
 
     /// Serve all jobs across the pool's threads; results come back sorted

@@ -6,9 +6,12 @@
 //!   * L3 (this crate) owns everything with a lifecycle: the PJRT runtime,
 //!     the shared thread-safe inference `engine` (the one canonical decode
 //!     path: `InferenceEngine` + per-adapter `Scheduler` + `WorkerPool`),
-//!     pretraining, GRPO/SFT trainers, rollouts, evaluation, the
-//!     multi-adapter serving plane, metrics and the CLI. Rollout, eval and
-//!     serving are thin clients of `engine`.
+//!     the `trainer` subsystem (the one canonical training-step skeleton:
+//!     `TrainSession` + resumable `TrainState` + the multi-tenant
+//!     `TenantTrainer`), the pretrain/GRPO/SFT loss loops, rollouts,
+//!     evaluation, the multi-adapter serving plane, metrics and the CLI.
+//!     Rollout, eval and serving are thin clients of `engine`; the three
+//!     loss loops are thin `TrainLoop` impls driven by `trainer`.
 //!
 //! The build environment is fully offline, so small substrates that would
 //! normally be crates (JSON, RNG, CLI parsing, bench harness, property
@@ -29,6 +32,7 @@ pub mod tasks;
 pub mod tensor;
 pub mod testing;
 pub mod tokenizer;
+pub mod trainer;
 pub mod util;
 pub mod weights;
 

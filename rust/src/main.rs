@@ -2,9 +2,16 @@
 //!
 //! Subcommands:
 //!   pretrain   — train a base model tier from scratch, save checkpoint
-//!   train      — GRPO or SFT with an adapter scheme on a pretrained tier
+//!   train      — GRPO or SFT with an adapter scheme on a pretrained tier;
+//!                `--ckpt-every N` saves a resumable TrainState, and
+//!                `--resume <ckpt>` continues a killed run bit-identically
+//!   tenants    — the multi-tenant training plane: `--n G` GRPO tenants
+//!                train independent adapters against one shared backbone
+//!                (rollout waves pooled over `--workers` threads) and
+//!                register into the serving AdapterStore
 //!   eval       — run the benchmark ladder on a checkpoint (+ optional adapter)
-//!   sweep      — the paper's LR-sweep protocol for one scheme
+//!   sweep      — the paper's LR-sweep protocol for one scheme (runs as a
+//!                lrs × seeds tenant grid for GRPO)
 //!   serve-demo — multi-adapter serving simulation
 //!   info       — manifest summary + the paper's Table 1 per tier
 
@@ -14,11 +21,14 @@ use anyhow::Result;
 
 use tinylora_rl::adapters::count;
 use tinylora_rl::config::{validate_scheme, Args, Dirs};
+use tinylora_rl::coordinator::grpo::{grpo_session_cfg, GrpoLoop};
+use tinylora_rl::coordinator::sft::{sft_session_cfg, SftLoop};
 use tinylora_rl::coordinator::{
-    pretrain, GrpoConfig, GrpoTrainer, Policy, PretrainConfig, SftConfig, SftTrainer,
+    grpo_session, pretrain, sft_session, GrpoConfig, Policy, PretrainConfig, SftConfig,
 };
 use tinylora_rl::eval::{evaluate, evaluate_suite_ladder};
 use tinylora_rl::metrics::RunLog;
+use tinylora_rl::trainer::{TrainSession, TrainState};
 use tinylora_rl::weights::WeightSet;
 use tinylora_rl::Runtime;
 
@@ -29,6 +39,7 @@ fn main() -> Result<()> {
     match cmd {
         "pretrain" => cmd_pretrain(&args),
         "train" => cmd_train(&args),
+        "tenants" => cmd_tenants(&args),
         "eval" => cmd_eval(&args),
         "sweep" => cmd_sweep(&args),
         "serve-demo" => cmd_serve_demo(&args),
@@ -51,9 +62,13 @@ COMMANDS
   train       --tier micro --scheme tinylora_r2_u13_all [--algo grpo|sft]
               [--steps 60] [--lr 2e-3] [--suite gsm8k-syn|math-mix]
               [--group 4] [--kl-coef 0] [--clip-c 4] [--eval-n 64] [--seed 0]
+              [--ckpt-every 10] [--resume ckpts/<state>.trainstate]
+  tenants     --tier micro [--n 4] [--scheme tinylora_r2_u13_all]
+              [--steps 40] [--lr 2e-3] [--workers 4] [--precision bf16]
+              [--suite gsm8k-syn] [--seed 0] [--max-resident 4]
   eval        --tier micro [--suite gsm8k-syn | --ladder] [--n 64]
   sweep       --tier micro --scheme <tag> [--algo grpo] [--lrs 5e-4,2e-3,8e-3]
-              [--seeds 0,1] [--steps 40]
+              [--seeds 0,1] [--steps 40] [--workers 1]
   serve-demo  --tier micro [--tenants 16] [--requests 64] [--workers 1]
   info        [--tier micro]
 
@@ -97,7 +112,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let algo = args.str("algo", "grpo");
     validate_scheme(&rt.manifest, &tier, &scheme, &algo)?;
     let base = Policy::load_base(&rt, &tier, &dirs.ckpts)?;
-    let mut policy = Policy::new(&rt, &tier, &scheme, &algo, base, args.u64("seed", 0)?, &dirs.ckpts)?;
+    let policy = Policy::new(&rt, &tier, &scheme, &algo, base, args.u64("seed", 0)?, &dirs.ckpts)?;
     let mut log = RunLog::new(
         Some(&dirs.results.join(format!("train_{tier}_{scheme}_{algo}.jsonl"))),
         true,
@@ -113,7 +128,22 @@ fn cmd_train(args: &Args) -> Result<()> {
         before.accuracy
     );
 
-    match algo.as_str() {
+    // resumable-state plumbing: --ckpt-every N saves a TrainState as the
+    // run progresses; --resume <path> continues one bit-identically
+    let resume_state = match args.flags.get("resume") {
+        Some(p) => {
+            let st = TrainState::load(Path::new(p))?;
+            println!("resuming {} from step {} ({p})", st.algo, st.step);
+            Some(st)
+        }
+        None => None,
+    };
+    let ckpt_every = args.usize("ckpt-every", 0)?;
+    // seed-keyed so concurrent multi-seed runs don't clobber each other
+    let seed = args.u64("seed", 0)?;
+    let state_path = dirs.ckpts.join(format!("{tier}_{scheme}_{algo}_s{seed}.trainstate"));
+
+    let policy = match algo.as_str() {
         "grpo" => {
             let cfg = GrpoConfig {
                 suite,
@@ -127,8 +157,19 @@ fn cmd_train(args: &Args) -> Result<()> {
                 grad_clip: args.f32("grad-clip", 1.0)?,
                 seed: args.u64("seed", 0)?,
             };
-            let mut tr = GrpoTrainer::new(&rt, &policy, cfg)?;
-            tr.train(&rt, &mut policy, &mut log)?;
+            let mut sess = match &resume_state {
+                Some(st) => {
+                    let lp = GrpoLoop::new(&rt, policy, cfg.clone())?;
+                    TrainSession::resume(&rt, lp, grpo_session_cfg(&cfg), st)?
+                }
+                None => grpo_session(&rt, policy, cfg)?,
+            };
+            if ckpt_every > 0 {
+                sess.cfg.ckpt_every = ckpt_every;
+                sess.cfg.ckpt_path = Some(state_path.clone());
+            }
+            sess.run(&rt, &mut log)?;
+            sess.into_loop().policy
         }
         "sft" => {
             let cfg = SftConfig {
@@ -139,10 +180,24 @@ fn cmd_train(args: &Args) -> Result<()> {
                 grad_clip: args.f32("grad-clip", 1.0)?,
                 seed: args.u64("seed", 0)?,
             };
-            let mut tr = SftTrainer::new(&rt, &policy, cfg)?;
-            tr.train(&rt, &mut policy, &mut log)?;
+            let mut sess = match &resume_state {
+                Some(st) => {
+                    let lp = SftLoop::new(&rt, policy, cfg.clone())?;
+                    TrainSession::resume(&rt, lp, sft_session_cfg(&cfg), st)?
+                }
+                None => sft_session(&rt, policy, cfg)?,
+            };
+            if ckpt_every > 0 {
+                sess.cfg.ckpt_every = ckpt_every;
+                sess.cfg.ckpt_path = Some(state_path.clone());
+            }
+            sess.run(&rt, &mut log)?;
+            sess.into_loop().policy
         }
         other => anyhow::bail!("unknown algo {other}"),
+    };
+    if ckpt_every > 0 {
+        println!("train state: {}", state_path.display());
     }
 
     let after = evaluate(&rt, &tier, &policy.merged, &eval_suite, eval_n, 777)?;
@@ -158,6 +213,74 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!(
         "runtime: {} compiles ({:.0} ms), {} runs ({:.0} ms)",
         rs.compiles, rs.compile_ms, rs.runs, rs.run_ms
+    );
+    Ok(())
+}
+
+/// The multi-tenant training plane: G GRPO tenants train independent
+/// adapters against one shared backbone, rollout waves pooled across
+/// workers, finished adapters registered into the serving store.
+fn cmd_tenants(args: &Args) -> Result<()> {
+    use tinylora_rl::adapters::packing::Precision;
+    use tinylora_rl::serving::AdapterStore;
+    use tinylora_rl::trainer::{TenantSpec, TenantTrainer};
+
+    let dirs = Dirs::from_args(args);
+    let rt = runtime(&dirs)?;
+    let tier = args.str("tier", "micro");
+    let scheme = args.str("scheme", "tinylora_r2_u13_all");
+    validate_scheme(&rt.manifest, &tier, &scheme, "grpo")?;
+    let base = Policy::load_base(&rt, &tier, &dirs.ckpts)?;
+    let n = args.usize("n", 4)?.max(1);
+    let workers = args.usize("workers", n.min(4))?.max(1);
+    let seed0 = args.u64("seed", 0)?;
+    let precision = Precision::parse(&args.str("precision", "bf16"))
+        .ok_or_else(|| anyhow::anyhow!("bad --precision (f32|bf16|f16)"))?;
+    let proto = GrpoConfig {
+        suite: args.str("suite", "gsm8k-syn"),
+        group: args.usize("group", 4)?,
+        steps: args.usize("steps", 40)?,
+        lr: args.f32("lr", 2e-3)?,
+        kl_coef: args.f32("kl-coef", 0.0)?,
+        ..Default::default()
+    };
+    let specs: Vec<TenantSpec> = (0..n)
+        .map(|i| TenantSpec {
+            name: format!("tenant-{i}"),
+            scheme_tag: scheme.clone(),
+            cfg: GrpoConfig { seed: seed0 + i as u64, ..proto.clone() },
+            precision,
+        })
+        .collect();
+
+    let mut log = RunLog::new(
+        Some(&dirs.results.join(format!("tenants_{tier}_{scheme}.jsonl"))),
+        args.bool("echo"),
+    );
+    let mut tt = TenantTrainer::new(&rt, &base, specs, workers, &dirs.ckpts)?;
+    let t0 = tinylora_rl::util::Timer::start();
+    let outcomes = tt.train(&rt, &mut log, workers > 1)?;
+    let wall = t0.secs();
+
+    let mut store = AdapterStore::new(&tier, args.usize("max-resident", 4)?);
+    tt.register_into(&mut store)?;
+    println!(
+        "{n} tenants x {} steps in {wall:.1}s ({} workers) — {} adapters in {} bytes",
+        proto.steps,
+        workers,
+        store.len(),
+        store.stored_bytes()
+    );
+    for o in &outcomes {
+        println!(
+            "  {:<12} seed {:<3} lr {:.1e} | {} params | reward {:.3} fmt {:.3}",
+            o.name, o.seed, o.lr, o.trainable_params, o.final_reward, o.final_format_rate
+        );
+    }
+    let es = tt.engine().stats();
+    println!(
+        "engine: {} generate calls | {} rows (+{} padding) | {:.0} ms decode",
+        es.batches, es.rows, es.padded_rows, es.gen_ms
     );
     Ok(())
 }
@@ -210,6 +333,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             .collect(),
         eval_suite: args.str("eval-suite", "gsm8k-syn"),
         eval_n: args.usize("eval-n", 64)?,
+        workers: args.usize("workers", 1)?,
+        batch: args.usize("batch", 0)?,
     };
     let mut log = RunLog::new(
         Some(&dirs.results.join(format!("sweep_{tier}_{scheme}.jsonl"))),

@@ -13,7 +13,7 @@ pub mod store;
 
 pub use batcher::{Batch, DynamicBatcher, Request};
 pub use router::{Response, Router, RouterStats};
-pub use store::AdapterStore;
+pub use store::{AdapterStore, ResidentLru};
 
 // convenience re-exports for serving clients
 pub use crate::engine::scheduler::{AdapterBatch, QueuedRequest, SchedPolicy, Scheduler};

@@ -215,6 +215,8 @@ impl Router {
                         id: k as u64,
                         weights,
                         problems: Self::batch_problems(b),
+                        group: 1,
+                        pb: None,
                         temperature: 0.0,
                         // stable per-batch seed (greedy decode ignores it,
                         // but keep parallel == serial regardless)

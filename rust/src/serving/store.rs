@@ -5,7 +5,9 @@
 //! Adapters are stored *packed* (theta bytes at their storage precision —
 //! 26 bytes for the headline 13-param bf16 config).  Activation folds an
 //! adapter into full merged weights; merged models are expensive
-//! (n_params * 4 bytes), so only an LRU-bounded set stays resident.
+//! (n_params * 4 bytes), so only an LRU-bounded set stays resident, in an
+//! access-ordered map (O(1) touch/evict — the seed scanned a `Vec`, O(n)
+//! per touch with whole-`WeightSet` moves).
 
 use std::collections::HashMap;
 
@@ -30,11 +32,151 @@ impl AdapterEntry {
     }
 }
 
+const NIL: usize = usize::MAX;
+
+struct LruSlot<V> {
+    name: String,
+    /// `None` only while the slot sits on the free list (so an evicted
+    /// merged model is dropped at eviction time, not at slot reuse).
+    value: Option<V>,
+    prev: usize,
+    next: usize,
+}
+
+/// Access-ordered map with O(1) touch, insert and LRU evict: a `HashMap`
+/// from name to a slot in an index-linked list (LRU at `head`, MRU at
+/// `tail`).  Public only so `benches/bench_trainer.rs` can compare it to
+/// the seed's `Vec`-scan — serving code goes through `AdapterStore`.
+pub struct ResidentLru<V> {
+    map: HashMap<String, usize>,
+    slots: Vec<LruSlot<V>>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+}
+
+impl<V> Default for ResidentLru<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V> ResidentLru<V> {
+    pub fn new() -> Self {
+        Self { map: HashMap::new(), slots: Vec::new(), free: Vec::new(), head: NIL, tail: NIL }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.slots[prev].next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.slots[next].prev = prev;
+        }
+        self.slots[i].prev = NIL;
+        self.slots[i].next = NIL;
+    }
+
+    fn push_mru(&mut self, i: usize) {
+        self.slots[i].prev = self.tail;
+        self.slots[i].next = NIL;
+        if self.tail == NIL {
+            self.head = i;
+        } else {
+            self.slots[self.tail].next = i;
+        }
+        self.tail = i;
+    }
+
+    /// Look up and mark as most-recently used. O(1).
+    pub fn touch(&mut self, name: &str) -> Option<&V> {
+        let &i = self.map.get(name)?;
+        if self.tail != i {
+            self.unlink(i);
+            self.push_mru(i);
+        }
+        self.slots[i].value.as_ref()
+    }
+
+    /// Insert as most-recently used, evicting the LRU entry when above
+    /// `capacity`. Returns the evicted name, if any. O(1).
+    pub fn insert(&mut self, name: &str, value: V, capacity: usize) -> Option<String> {
+        if let Some(&i) = self.map.get(name) {
+            // overwrite existing entry and promote to MRU
+            self.slots[i].value = Some(value);
+            if self.tail != i {
+                self.unlink(i);
+                self.push_mru(i);
+            }
+            return None;
+        }
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] =
+                    LruSlot { name: name.to_string(), value: Some(value), prev: NIL, next: NIL };
+                i
+            }
+            None => {
+                self.slots.push(LruSlot {
+                    name: name.to_string(),
+                    value: Some(value),
+                    prev: NIL,
+                    next: NIL,
+                });
+                self.slots.len() - 1
+            }
+        };
+        self.map.insert(name.to_string(), i);
+        self.push_mru(i);
+        if self.map.len() > capacity.max(1) {
+            return self.evict_lru();
+        }
+        None
+    }
+
+    fn evict_lru(&mut self) -> Option<String> {
+        let i = self.head;
+        if i == NIL {
+            return None;
+        }
+        self.unlink(i);
+        let name = std::mem::take(&mut self.slots[i].name);
+        self.slots[i].value = None; // drop the resident model now
+        self.map.remove(&name);
+        self.free.push(i);
+        Some(name)
+    }
+
+    /// Names from LRU to MRU (test/diagnostic walk — O(n)).
+    pub fn order(&self) -> Vec<String> {
+        let mut out = Vec::with_capacity(self.map.len());
+        let mut i = self.head;
+        while i != NIL {
+            out.push(self.slots[i].name.clone());
+            i = self.slots[i].next;
+        }
+        out
+    }
+}
+
 pub struct AdapterStore {
     pub tier: String,
     entries: HashMap<String, AdapterEntry>,
-    /// LRU of activated (merged) models: (adapter name, weights)
-    resident: Vec<(String, WeightSet)>,
+    /// access-ordered residency of activated (merged) models
+    resident: ResidentLru<WeightSet>,
     pub max_resident: usize,
     pub activations: u64,
     pub hits: u64,
@@ -45,7 +187,7 @@ impl AdapterStore {
         Self {
             tier: tier.to_string(),
             entries: HashMap::new(),
-            resident: Vec::new(),
+            resident: ResidentLru::new(),
             max_resident: max_resident.max(1),
             activations: 0,
             hits: 0,
@@ -99,6 +241,11 @@ impl AdapterStore {
         n_params * 4
     }
 
+    /// Resident merged models from LRU to MRU (diagnostics/tests).
+    pub fn resident_order(&self) -> Vec<String> {
+        self.resident.order()
+    }
+
     /// Activate an adapter: return merged weights, merging on miss.
     /// `base` is the shared frozen base model.
     pub fn activate(
@@ -109,24 +256,22 @@ impl AdapterStore {
         ckpt_dir: &std::path::Path,
     ) -> Result<WeightSet> {
         self.activations += 1;
-        if let Some(pos) = self.resident.iter().position(|(n, _)| n == name) {
+        if let Some(w) = self.resident.touch(name) {
             self.hits += 1;
-            let entry = self.resident.remove(pos);
-            let w = entry.1.clone();
-            self.resident.push(entry); // move to MRU position
-            return Ok(w);
+            return Ok(w.clone());
         }
-        let e = self.entries.get(name).with_context(|| format!("unknown adapter {name:?}"))?.clone();
+        let e = self
+            .entries
+            .get(name)
+            .with_context(|| format!("unknown adapter {name:?}"))?
+            .clone();
         let theta = unpack(&e.packed, e.precision);
         let mut policy =
             Policy::new(rt, &self.tier, &e.scheme_tag, "grpo", base.clone(), 0, ckpt_dir)?;
         policy.theta = theta;
         policy.remerge(rt)?;
         let merged = policy.merged.clone();
-        if self.resident.len() >= self.max_resident {
-            self.resident.remove(0); // evict LRU
-        }
-        self.resident.push((name.to_string(), merged.clone()));
+        self.resident.insert(name, merged.clone(), self.max_resident);
         Ok(merged)
     }
 
@@ -168,5 +313,55 @@ mod tests {
         }
         assert_eq!(store.stored_bytes(), 26_000);
         assert!(store.stored_bytes() < store.resident_model_bytes(139_000) / 20);
+    }
+
+    fn dummy_weights() -> WeightSet {
+        WeightSet { tier: "t".into(), names: vec![], tensors: vec![] }
+    }
+
+    /// Eviction order must be access order, not insertion order.
+    #[test]
+    fn lru_evicts_in_access_order() {
+        let mut lru: ResidentLru<u32> = ResidentLru::new();
+        assert_eq!(lru.insert("a", 1, 3), None);
+        assert_eq!(lru.insert("b", 2, 3), None);
+        assert_eq!(lru.insert("c", 3, 3), None);
+        assert_eq!(lru.order(), vec!["a", "b", "c"]);
+        // touching "a" promotes it past "b" and "c"
+        assert_eq!(lru.touch("a"), Some(&1));
+        assert_eq!(lru.order(), vec!["b", "c", "a"]);
+        // inserting above capacity evicts the LRU entry: "b", not "a"
+        assert_eq!(lru.insert("d", 4, 3).as_deref(), Some("b"));
+        assert_eq!(lru.order(), vec!["c", "a", "d"]);
+        assert_eq!(lru.touch("b"), None);
+        // slot reuse: a new insert reuses b's freed slot and keeps order
+        assert_eq!(lru.insert("e", 5, 3).as_deref(), Some("c"));
+        assert_eq!(lru.order(), vec!["a", "d", "e"]);
+        assert_eq!(lru.len(), 3);
+    }
+
+    #[test]
+    fn lru_overwrite_promotes_without_evicting() {
+        let mut lru: ResidentLru<u32> = ResidentLru::new();
+        lru.insert("a", 1, 2);
+        lru.insert("b", 2, 2);
+        assert_eq!(lru.insert("a", 10, 2), None);
+        assert_eq!(lru.order(), vec!["b", "a"]);
+        assert_eq!(lru.touch("a"), Some(&10));
+        assert_eq!(lru.len(), 2);
+    }
+
+    /// Same behaviour through the store's activate-shaped surface: resident
+    /// order reflects touches (exercised without a runtime by driving the
+    /// LRU directly with weight sets).
+    #[test]
+    fn store_resident_order_is_access_ordered() {
+        let mut store = AdapterStore::new("t", 2);
+        store.resident.insert("x", dummy_weights(), store.max_resident);
+        store.resident.insert("y", dummy_weights(), store.max_resident);
+        store.resident.touch("x");
+        let evicted = store.resident.insert("z", dummy_weights(), store.max_resident);
+        assert_eq!(evicted.as_deref(), Some("y"));
+        assert_eq!(store.resident_order(), vec!["x", "z"]);
     }
 }

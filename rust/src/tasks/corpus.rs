@@ -166,6 +166,7 @@ pub fn sft_batch(
 
 /// A rollout prompt batch: `n_prompts` problems, each repeated `group`
 /// times (GRPO's per-prompt groups), right-padded to t_prefill.
+#[derive(Clone)]
 pub struct PromptBatch {
     pub problems: Vec<Problem>,
     /// [b, t_prefill] right-padded prompt tokens

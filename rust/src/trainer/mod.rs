@@ -1,0 +1,114 @@
+//! The trainer subsystem — the ONE canonical training-step skeleton
+//! (DESIGN.md §7), mirroring what `engine/` did for the decode paths.
+//!
+//! Before this subsystem existed, `pretrain.rs`, `grpo.rs` and `sft.rs`
+//! each hand-rolled optimizer wiring, LR scheduling, grad clipping,
+//! logging and ad-hoc checkpointing. Now:
+//!
+//!   * [`TrainLoop`] — what a *loss* must provide: assemble a batch and
+//!     compute a gradient, plus how to interpret the step's metrics. The
+//!     three loops (`PretrainLoop`, `GrpoLoop`, `SftLoop`) are thin impls.
+//!   * [`TrainSession`] — the shared step driver: LR schedule → Adam step
+//!     (with grad clip) → parameter install/re-merge → `RunLog` record →
+//!     periodic [`TrainState`] checkpoint. Owns the RNG stream, so a saved
+//!     state resumes bit-identically.
+//!   * [`TrainState`] — versioned binary checkpoint (params + Adam moments
+//!     + RNG stream + step counter) extending the `weights.rs` format.
+//!   * [`TenantTrainer`] — the multi-tenant training plane: G GRPO
+//!     sessions over independent TinyLoRA adapters sharing one backbone,
+//!     rollout waves batched through `engine::WorkerPool`, finished
+//!     adapters registered straight into the serving `AdapterStore`.
+//!
+//! Ownership rule: the trainer owns *how* a step runs; loops own *what*
+//! the loss means.
+
+pub mod session;
+pub mod state;
+pub mod tenant;
+
+use anyhow::Result;
+
+use crate::coordinator::policy::GradStats;
+use crate::metrics::RunLog;
+use crate::runtime::Runtime;
+use crate::util::Pcg64;
+
+pub use session::{SessionConfig, TrainSession};
+pub use state::{TrainState, TRAIN_STATE_VERSION};
+pub use tenant::{TenantOutcome, TenantSpec, TenantTrainer};
+
+/// Loop-specific scalar metrics for one step. GRPO fills all four; SFT and
+/// pretraining report through `GradStats` (loss / token accuracy) and leave
+/// these at their defaults.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AuxMetrics {
+    pub reward: f32,
+    pub response_len: f32,
+    pub format_rate: f32,
+    pub eos_rate: f32,
+}
+
+/// Everything one loop iteration hands back to the session: the flat
+/// gradient over the loop's parameter vector plus the step's diagnostics.
+pub struct GradOutput {
+    pub grad: Vec<f32>,
+    pub stats: GradStats,
+    pub aux: AuxMetrics,
+    pub rollout_ms: f64,
+    pub grad_ms: f64,
+}
+
+/// One trainable loss. Implementations own their parameter vessel (a
+/// `Policy` for the adapter trainers, a raw `WeightSet` for pretraining)
+/// and MUST NOT touch optimizers, LR schedules, logging plumbing or
+/// checkpoint files — that is [`TrainSession`]'s job.
+pub trait TrainLoop {
+    /// Per-step record type (kept distinct per loop so figure drivers see
+    /// the fields they always did).
+    type Record: Clone;
+
+    /// Algo tag recorded in checkpoints and logs ("pretrain"|"grpo"|"sft").
+    fn algo(&self) -> &'static str;
+
+    /// Backbone tier this loop trains against.
+    fn tier(&self) -> &str;
+
+    /// Adapter scheme tag ("-" when the loop trains raw weights).
+    fn scheme_tag(&self) -> &str {
+        "-"
+    }
+
+    /// Canonical fingerprint of every hyperparameter that shapes the
+    /// training trajectory (suite, lr, schedule, loss knobs, seed — NOT
+    /// the step count, so a finished run may be extended). Stored in the
+    /// `TrainState` and compared on resume: a mismatch would silently
+    /// break bit-identical resume, so it is a hard error instead.
+    fn config_tag(&self) -> String;
+
+    /// Length of the flat trainable vector.
+    fn n_params(&self) -> usize;
+
+    /// Current flat trainable vector (what the session's Adam steps over).
+    fn params(&self) -> Vec<f32>;
+
+    /// Install updated parameters; adapter loops re-merge here so the
+    /// inference plane always sees folded weights.
+    fn set_params(&mut self, rt: &Runtime, params: &[f32]) -> Result<()>;
+
+    /// Loss-specific work for one step: draw a batch from `rng` (the
+    /// session-owned stream — part of the resume state) and run the grad
+    /// executable against the current parameters.
+    fn compute(&mut self, rt: &Runtime, step: usize, rng: &mut Pcg64) -> Result<GradOutput>;
+
+    /// Interpret a completed step: build the loop's record and write it to
+    /// the run log (what the metrics *mean* is loop-owned; when a record is
+    /// taken is session-owned).
+    fn record(
+        &self,
+        step: usize,
+        lr: f32,
+        out: &GradOutput,
+        grad_norm: f32,
+        log: &mut RunLog,
+    ) -> Self::Record;
+}

@@ -1,0 +1,161 @@
+//! The shared training-step driver.
+//!
+//! `TrainSession` owns everything the three hand-rolled loops used to
+//! duplicate: the Adam optimizer, the warmup LR schedule, grad clipping,
+//! the session RNG stream, step counting, run-log records and periodic
+//! `TrainState` checkpoints. A loop only computes gradients
+//! ([`TrainLoop::compute`]) and interprets metrics ([`TrainLoop::record`]).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::optimizer::{lr_at, Adam, AdamConfig};
+use crate::metrics::RunLog;
+use crate::runtime::Runtime;
+use crate::trainer::state::{TrainState, TRAIN_STATE_VERSION};
+use crate::trainer::{GradOutput, TrainLoop};
+use crate::util::Pcg64;
+
+/// Session-owned hyperparameters — the step-skeleton knobs every loop
+/// shares. Loss-specific knobs (suite, group, clip_c, …) stay on the loop.
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// Total steps for the run (a resumed session continues up to this).
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: u64,
+    pub grad_clip: f32,
+    pub seed: u64,
+    /// RNG stream tag (one per algo, so the historical per-trainer streams
+    /// are preserved and eval streams stay disjoint by construction).
+    pub stream: u64,
+    /// Save a `TrainState` every N completed steps (0 = off).
+    pub ckpt_every: usize,
+    pub ckpt_path: Option<PathBuf>,
+}
+
+pub struct TrainSession<L: TrainLoop> {
+    pub cfg: SessionConfig,
+    pub lp: L,
+    pub(crate) opt: Adam,
+    pub(crate) rng: Pcg64,
+    pub(crate) step: usize,
+}
+
+impl<L: TrainLoop> TrainSession<L> {
+    pub fn new(lp: L, cfg: SessionConfig) -> Self {
+        let opt = Adam::new(
+            lp.n_params(),
+            AdamConfig { lr: cfg.lr, grad_clip: cfg.grad_clip, ..Default::default() },
+        );
+        let rng = Pcg64::with_stream(cfg.seed, cfg.stream);
+        Self { cfg, lp, opt, rng, step: 0 }
+    }
+
+    /// Rebuild a session from a saved [`TrainState`]. The continuation is
+    /// bit-identical to the uninterrupted run: parameters, Adam moments,
+    /// the RNG stream and the step counter all resume exactly.
+    pub fn resume(rt: &Runtime, mut lp: L, cfg: SessionConfig, st: &TrainState) -> Result<Self> {
+        if st.algo != lp.algo() {
+            bail!("train state is for algo {:?}, loop is {:?}", st.algo, lp.algo());
+        }
+        if st.tier != lp.tier() {
+            bail!("train state is for tier {:?}, loop is {:?}", st.tier, lp.tier());
+        }
+        // param counts collide across schemes (many 13-param placements),
+        // so the scheme tag must match exactly, not just the length
+        if st.scheme_tag != lp.scheme_tag() {
+            bail!(
+                "train state is for scheme {:?}, loop is {:?}",
+                st.scheme_tag,
+                lp.scheme_tag()
+            );
+        }
+        // a hyperparameter mismatch (suite, lr, schedule, seed, …) would
+        // silently break bit-identical resume — require the exact flags
+        if st.config != lp.config_tag() {
+            bail!(
+                "train state was saved with config [{}], loop has [{}] — \
+                 repeat the original flags to resume",
+                st.config,
+                lp.config_tag()
+            );
+        }
+        if st.params.len() != lp.n_params() {
+            bail!(
+                "train state has {} params, loop expects {} (scheme {:?} vs {:?})",
+                st.params.len(),
+                lp.n_params(),
+                st.scheme_tag,
+                lp.scheme_tag()
+            );
+        }
+        lp.set_params(rt, &st.params)?;
+        let mut opt = Adam::new(
+            lp.n_params(),
+            AdamConfig { lr: cfg.lr, grad_clip: cfg.grad_clip, ..Default::default() },
+        );
+        opt.restore(&st.adam);
+        Ok(Self { cfg, lp, opt, rng: Pcg64::from_state(st.rng), step: st.step as usize })
+    }
+
+    /// Steps completed so far.
+    pub fn completed_steps(&self) -> usize {
+        self.step
+    }
+
+    /// Snapshot the resumable state (see [`TrainState`]).
+    pub fn state(&self) -> TrainState {
+        TrainState {
+            version: TRAIN_STATE_VERSION,
+            algo: self.lp.algo().to_string(),
+            tier: self.lp.tier().to_string(),
+            scheme_tag: self.lp.scheme_tag().to_string(),
+            config: self.lp.config_tag(),
+            step: self.step as u64,
+            rng: self.rng.state(),
+            adam: self.opt.state(),
+            params: self.lp.params(),
+        }
+    }
+
+    /// One full step: loop-owned gradient, then the shared skeleton.
+    pub fn step_once(&mut self, rt: &Runtime, log: &mut RunLog) -> Result<L::Record> {
+        let out = self.lp.compute(rt, self.step, &mut self.rng)?;
+        self.apply(rt, out, log)
+    }
+
+    /// The optimizer/schedule/record/checkpoint half of a step — shared
+    /// with `TenantTrainer`, whose rollouts happen outside the loop (pooled
+    /// across tenants) before the gradient is applied here.
+    pub fn apply(&mut self, rt: &Runtime, out: GradOutput, log: &mut RunLog) -> Result<L::Record> {
+        self.opt.set_lr(lr_at(self.cfg.lr, self.cfg.warmup, self.step as u64));
+        let mut params = self.lp.params();
+        let grad_norm = self.opt.step(&mut params, &out.grad);
+        self.lp.set_params(rt, &params)?;
+        let rec = self.lp.record(self.step, self.opt.cfg.lr, &out, grad_norm, log);
+        self.step += 1;
+        if self.cfg.ckpt_every > 0 && self.step % self.cfg.ckpt_every == 0 {
+            if let Some(path) = &self.cfg.ckpt_path {
+                self.state().save(path)?;
+            }
+        }
+        Ok(rec)
+    }
+
+    /// Run (or continue) to the configured step count, logging as we go.
+    pub fn run(&mut self, rt: &Runtime, log: &mut RunLog) -> Result<Vec<L::Record>> {
+        let mut records = Vec::with_capacity(self.cfg.steps.saturating_sub(self.step));
+        while self.step < self.cfg.steps {
+            records.push(self.step_once(rt, log)?);
+        }
+        Ok(records)
+    }
+
+    /// Consume the session, handing back the loop (and with it the trained
+    /// policy/weights).
+    pub fn into_loop(self) -> L {
+        self.lp
+    }
+}

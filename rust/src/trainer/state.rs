@@ -1,0 +1,170 @@
+//! Versioned training-state checkpoints.
+//!
+//! A [`TrainState`] captures everything a [`super::TrainSession`] needs to
+//! continue bit-identically after a kill: the flat trainable vector, the
+//! Adam moments + step counter, the session RNG stream and the step index.
+//! The binary layout extends the `weights.rs` checkpoint format (same
+//! little-endian primitives, 8-byte magic, length-prefixed strings) with a
+//! version field so later sessions can evolve it without breaking resume.
+
+use std::io::{BufReader, BufWriter};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::optimizer::AdamState;
+use crate::weights::{
+    read_f32_vec, read_str, read_u32, read_u64, write_f32_slice, write_str, write_u32, write_u64,
+};
+
+const MAGIC: &[u8; 8] = b"TLRLTRN1";
+pub const TRAIN_STATE_VERSION: u32 = 1;
+
+/// Resumable snapshot of one training session.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainState {
+    pub version: u32,
+    pub algo: String,
+    pub tier: String,
+    pub scheme_tag: String,
+    /// The loop's `config_tag` — every trajectory-shaping hyperparameter;
+    /// resume refuses a mismatch (the flags must be repeated exactly).
+    pub config: String,
+    /// Steps already completed; the resumed session starts here.
+    pub step: u64,
+    /// Session RNG snapshot (`Pcg64::state` layout).
+    pub rng: [u64; 4],
+    pub adam: AdamState,
+    /// Flat trainable vector (adapter theta, or full weights for
+    /// pretraining / full-FT).
+    pub params: Vec<f32>,
+}
+
+impl TrainState {
+    /// Atomic save: write to `<path>.tmp`, flush, then rename over `path`,
+    /// so a kill mid-save (exactly the scenario resume exists for) never
+    /// destroys the previous good state.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = BufWriter::new(std::fs::File::create(&tmp)?);
+            use std::io::Write;
+            f.write_all(MAGIC)?;
+            write_u32(&mut f, self.version)?;
+            write_str(&mut f, &self.algo)?;
+            write_str(&mut f, &self.tier)?;
+            write_str(&mut f, &self.scheme_tag)?;
+            write_str(&mut f, &self.config)?;
+            write_u64(&mut f, self.step)?;
+            for &w in &self.rng {
+                write_u64(&mut f, w)?;
+            }
+            write_u64(&mut f, self.adam.t)?;
+            write_u32(&mut f, self.params.len() as u32)?;
+            write_f32_slice(&mut f, &self.adam.m)?;
+            write_f32_slice(&mut f, &self.adam.v)?;
+            write_f32_slice(&mut f, &self.params)?;
+            // surface full-disk errors here instead of silently in Drop
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening train state {path:?}"))?,
+        );
+        use std::io::Read;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad train-state magic in {path:?}");
+        }
+        let version = read_u32(&mut f)?;
+        if version != TRAIN_STATE_VERSION {
+            bail!("train state {path:?} has version {version}, expected {TRAIN_STATE_VERSION}");
+        }
+        let algo = read_str(&mut f)?;
+        let tier = read_str(&mut f)?;
+        let scheme_tag = read_str(&mut f)?;
+        let config = read_str(&mut f)?;
+        let step = read_u64(&mut f)?;
+        let mut rng = [0u64; 4];
+        for w in &mut rng {
+            *w = read_u64(&mut f)?;
+        }
+        let adam_t = read_u64(&mut f)?;
+        let n = read_u32(&mut f)? as usize;
+        if n > (1 << 28) {
+            bail!("implausible param count {n} in {path:?}");
+        }
+        let m = read_f32_vec(&mut f, n)?;
+        let v = read_f32_vec(&mut f, n)?;
+        let params = read_f32_vec(&mut f, n)?;
+        Ok(Self {
+            version,
+            algo,
+            tier,
+            scheme_tag,
+            config,
+            step,
+            rng,
+            adam: AdamState { t: adam_t, m, v },
+            params,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_state(n: usize) -> TrainState {
+        TrainState {
+            version: TRAIN_STATE_VERSION,
+            algo: "grpo".into(),
+            tier: "nano".into(),
+            scheme_tag: "tinylora_r2_u13_all".into(),
+            config: "suite=gsm8k-syn lr=0.002 seed=9".into(),
+            step: 17,
+            rng: [1, 2, 3, 4],
+            adam: AdamState {
+                t: 17,
+                m: (0..n).map(|i| i as f32 * 0.25).collect(),
+                v: (0..n).map(|i| i as f32 * 0.5 + 1.0).collect(),
+            },
+            params: (0..n).map(|i| (i as f32).sin()).collect(),
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_exact() {
+        let st = sample_state(13);
+        let dir = std::env::temp_dir().join("tlrl_trainstate_test");
+        let path = dir.join("grpo.trainstate");
+        st.save(&path).unwrap();
+        let back = TrainState::load(&path).unwrap();
+        assert_eq!(st, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_version() {
+        let dir = std::env::temp_dir().join("tlrl_trainstate_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.trainstate");
+        std::fs::write(&path, b"TLRLCKP1rest").unwrap();
+        assert!(TrainState::load(&path).is_err());
+        let mut st = sample_state(3);
+        st.version = 999;
+        // version is validated on load, not save
+        let vpath = dir.join("vers.trainstate");
+        st.save(&vpath).unwrap();
+        assert!(TrainState::load(&vpath).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

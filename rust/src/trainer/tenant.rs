@@ -1,0 +1,236 @@
+//! The multi-tenant adapter-training plane — the paper's headline as a
+//! *systems* claim: a 26-byte TinyLoRA update per tenant means G tenants
+//! can train concurrently against ONE shared backbone, their rollout waves
+//! interleaved on the same fused-generate executables (the same Punica-style
+//! multi-tenant economics that motivate the serving plane, §1).
+//!
+//! Each tenant is an independent `TrainSession<GrpoLoop>` (own adapter
+//! theta, own Adam moments, own RNG stream). Per global step the trainer
+//! plans every tenant's rollout on the coordinating thread (session RNGs
+//! are sequential state), fans the decode wave across `engine::WorkerPool`,
+//! then applies each tenant's gradient through its session. Plans carry
+//! their rollout seed, and the pool derives decode RNGs on the same stream
+//! as the in-loop path — so parallel results are bit-identical to serial
+//! ones, and a TenantTrainer run of G tenants equals G separate runs
+//! (asserted in `tests/integration.rs`).
+//!
+//! Finished tenants register straight into the serving `AdapterStore`,
+//! closing the train→serve loop.
+//!
+//! Known memory bound: each tenant's `Policy` currently clones the frozen
+//! base `WeightSet` (and waves clone merged weights into their `GenJob`s),
+//! so residency is O(G · n_params) — fine at the current tiers (~0.5 MB
+//! per copy), but the backbone should move behind `Arc` before tenant
+//! counts scale to the thousands the 26-byte storage argument invites.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::adapters::packing::Precision;
+use crate::coordinator::grpo::{grpo_session_cfg, GrpoConfig, GrpoLoop, StepRecord};
+use crate::coordinator::policy::Policy;
+use crate::engine::pool::{GenJob, WorkerPool};
+use crate::engine::InferenceEngine;
+use crate::metrics::RunLog;
+use crate::runtime::Runtime;
+use crate::serving::AdapterStore;
+use crate::trainer::TrainSession;
+use crate::util::Timer;
+use crate::weights::WeightSet;
+
+/// One tenant's full training configuration.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    /// Adapter name registered into the serving store.
+    pub name: String,
+    pub scheme_tag: String,
+    pub cfg: GrpoConfig,
+    /// Storage precision of the registered update (bf16 = the 26-byte
+    /// headline for the 13-param scheme).
+    pub precision: Precision,
+}
+
+/// What one tenant's run produced.
+#[derive(Clone, Debug)]
+pub struct TenantOutcome {
+    pub name: String,
+    pub scheme_tag: String,
+    pub lr: f32,
+    pub seed: u64,
+    pub trainable_params: usize,
+    /// mean reward / format rate over the last ≤5 steps
+    pub final_reward: f32,
+    pub final_format_rate: f32,
+    pub steps: Vec<StepRecord>,
+}
+
+pub struct TenantTrainer {
+    pub tier: String,
+    /// Shared decode engine for the pooled rollout waves (same executable
+    /// geometry as every tenant's in-loop engine).
+    engine: InferenceEngine,
+    pool: WorkerPool,
+    pub sessions: Vec<TrainSession<GrpoLoop>>,
+    specs: Vec<TenantSpec>,
+}
+
+impl TenantTrainer {
+    /// Training-plane geometry (`manifest.batch.roll`).
+    pub fn new(
+        rt: &Runtime,
+        base: &WeightSet,
+        specs: Vec<TenantSpec>,
+        workers: usize,
+        ckpt_dir: &Path,
+    ) -> Result<Self> {
+        let batch = rt.manifest.batch.roll;
+        Self::with_batch(rt, base, specs, workers, ckpt_dir, batch)
+    }
+
+    /// Explicit decode geometry (tests and tiny tiers use `batch.test`).
+    pub fn with_batch(
+        rt: &Runtime,
+        base: &WeightSet,
+        specs: Vec<TenantSpec>,
+        workers: usize,
+        ckpt_dir: &Path,
+        batch: usize,
+    ) -> Result<Self> {
+        if specs.is_empty() {
+            bail!("tenant trainer needs at least one tenant");
+        }
+        let steps0 = specs[0].cfg.steps;
+        if specs.iter().any(|s| s.cfg.steps != steps0) {
+            bail!("tenant step counts must match (waves are synchronized)");
+        }
+        let tier = base.tier.clone();
+        let engine = InferenceEngine::new(rt, &tier, batch)?;
+        let mut sessions = Vec::with_capacity(specs.len());
+        for spec in &specs {
+            let mut policy = Policy::new(
+                rt,
+                &tier,
+                &spec.scheme_tag,
+                "grpo",
+                base.clone(),
+                spec.cfg.seed,
+                ckpt_dir,
+            )?;
+            policy.precision = spec.precision;
+            let lp = GrpoLoop::with_batch(rt, policy, spec.cfg.clone(), batch)?;
+            let scfg = grpo_session_cfg(&spec.cfg);
+            sessions.push(TrainSession::new(lp, scfg));
+        }
+        Ok(Self { tier, engine, pool: WorkerPool::new(workers), sessions, specs })
+    }
+
+    /// Shared engine (pool occupancy / decode stats across all tenants).
+    pub fn engine(&self) -> &InferenceEngine {
+        &self.engine
+    }
+
+    /// One synchronized wave: plan every tenant's rollout on this thread,
+    /// decode the wave through the pool (or its serial reference path when
+    /// `parallel` is false — results are bit-identical), then run each
+    /// tenant's grad + optimizer step through its own session.
+    pub fn step_wave(
+        &mut self,
+        rt: &Runtime,
+        log: &mut RunLog,
+        parallel: bool,
+    ) -> Result<Vec<StepRecord>> {
+        let g = self.sessions.len();
+        let mut plans = Vec::with_capacity(g);
+        let mut jobs = Vec::with_capacity(g);
+        for (i, sess) in self.sessions.iter_mut().enumerate() {
+            let plan = sess.lp.plan(&mut sess.rng);
+            jobs.push(GenJob {
+                id: i as u64,
+                weights: sess.lp.policy.merged.clone(),
+                problems: Vec::new(),
+                group: sess.lp.cfg.group,
+                // ship the planner's already-tokenized batch; the worker
+                // decodes it directly instead of re-assembling
+                pb: Some(plan.pb.clone()),
+                temperature: sess.lp.cfg.temperature,
+                seed: plan.seed,
+            });
+            plans.push(plan);
+        }
+        let t0 = Timer::start();
+        let results = if parallel {
+            self.pool.serve(rt, &self.engine, jobs)?
+        } else {
+            WorkerPool::serve_serial(rt, &self.engine, &jobs)?
+        };
+        // results come back sorted by job id == tenant index
+        let wave_ms = t0.millis();
+        let per_tenant_ms = wave_ms / g as f64;
+        let mut records = Vec::with_capacity(g);
+        for ((sess, plan), res) in self.sessions.iter_mut().zip(&plans).zip(results) {
+            let roll =
+                crate::engine::Generation { rows: res.rows, group: sess.lp.cfg.group };
+            let out = sess.lp.finish(rt, plan, &roll, per_tenant_ms)?;
+            records.push(sess.apply(rt, out, log)?);
+        }
+        Ok(records)
+    }
+
+    /// Run every tenant to its configured step count in synchronized waves.
+    pub fn train(
+        &mut self,
+        rt: &Runtime,
+        log: &mut RunLog,
+        parallel: bool,
+    ) -> Result<Vec<TenantOutcome>> {
+        let steps = self.specs[0].cfg.steps;
+        let mut all: Vec<Vec<StepRecord>> = vec![Vec::with_capacity(steps); self.sessions.len()];
+        for _ in 0..steps {
+            for (i, rec) in self.step_wave(rt, log, parallel)?.into_iter().enumerate() {
+                all[i].push(rec);
+            }
+        }
+        Ok(self
+            .specs
+            .iter()
+            .zip(&self.sessions)
+            .zip(all)
+            .map(|((spec, sess), steps)| {
+                let tail: Vec<&StepRecord> =
+                    steps.iter().rev().take(5.min(steps.len())).collect();
+                let n = tail.len().max(1) as f32;
+                TenantOutcome {
+                    name: spec.name.clone(),
+                    scheme_tag: spec.scheme_tag.clone(),
+                    lr: spec.cfg.lr,
+                    seed: spec.cfg.seed,
+                    trainable_params: sess.lp.policy.trainable_params(),
+                    final_reward: tail.iter().map(|r| r.reward).sum::<f32>() / n,
+                    final_format_rate: tail.iter().map(|r| r.format_rate).sum::<f32>() / n,
+                    steps,
+                }
+            })
+            .collect())
+    }
+
+    /// Close the train→serve loop: pack every tenant's adapter at its
+    /// storage precision into the serving store.
+    pub fn register_into(&self, store: &mut AdapterStore) -> Result<()> {
+        for (spec, sess) in self.specs.iter().zip(&self.sessions) {
+            store.register(
+                &spec.name,
+                &sess.lp.policy.scheme_tag,
+                &sess.lp.policy.theta,
+                spec.precision,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Consume the trainer, handing back the per-tenant sessions (figure
+    /// drivers evaluate each tenant's merged weights from here).
+    pub fn into_sessions(self) -> Vec<TrainSession<GrpoLoop>> {
+        self.sessions
+    }
+}

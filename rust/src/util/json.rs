@@ -96,6 +96,9 @@ impl Value {
 
     // -- writer ---------------------------------------------------------------
 
+    // inherent by design: `Display` would invite `{}` formatting of huge
+    // nested values in hot logging paths; serialization is explicit here
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

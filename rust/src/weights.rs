@@ -155,24 +155,38 @@ impl WeightSet {
     }
 }
 
-fn write_u32<W: Write>(w: &mut W, x: u32) -> Result<()> {
+// Binary-format primitives, shared with `trainer::state` (the TrainState
+// checkpoint extends this format with optimizer/RNG/step sections).
+
+pub(crate) fn write_u32<W: Write>(w: &mut W, x: u32) -> Result<()> {
     w.write_all(&x.to_le_bytes())?;
     Ok(())
 }
 
-fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+pub(crate) fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
 }
 
-fn write_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
+pub(crate) fn write_u64<W: Write>(w: &mut W, x: u64) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+pub(crate) fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub(crate) fn write_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
     write_u32(w, s.len() as u32)?;
     w.write_all(s.as_bytes())?;
     Ok(())
 }
 
-fn read_str<R: Read>(r: &mut R) -> Result<String> {
+pub(crate) fn read_str<R: Read>(r: &mut R) -> Result<String> {
     let n = read_u32(r)? as usize;
     if n > 1 << 20 {
         bail!("implausible string length {n}");
@@ -180,6 +194,25 @@ fn read_str<R: Read>(r: &mut R) -> Result<String> {
     let mut b = vec![0u8; n];
     r.read_exact(&mut b)?;
     Ok(String::from_utf8(b)?)
+}
+
+/// Write a f32 slice as raw little-endian bytes (length written by caller).
+pub(crate) fn write_f32_slice<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+    // NOTE: written per-element (not via a raw-pointer cast) so the format
+    // is little-endian on every host, matching `read_f32_vec`.
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub(crate) fn read_f32_vec<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
 }
 
 #[cfg(test)]

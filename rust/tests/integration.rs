@@ -9,15 +9,19 @@ use std::path::Path;
 use std::sync::OnceLock;
 
 use tinylora_rl::adapters::{count, packing::Precision, Theta};
+use tinylora_rl::coordinator::grpo::{grpo_session_cfg, GrpoConfig, GrpoLoop};
 use tinylora_rl::coordinator::policy::{GrpoHp, Policy, TrainBatch};
 use tinylora_rl::coordinator::rollout::RolloutEngine;
+use tinylora_rl::coordinator::sweep::{sweep_scheme, SweepConfig};
 use tinylora_rl::engine::pool::{GenJob, WorkerPool};
 use tinylora_rl::engine::InferenceEngine;
-use tinylora_rl::manifest::Manifest;
+use tinylora_rl::metrics::RunLog;
+use tinylora_rl::serving::AdapterStore;
 use tinylora_rl::tasks::corpus::{pretrain_batch, prompt_batch, sft_batch};
 use tinylora_rl::tasks::generator::SUITES;
 use tinylora_rl::tensor::{Arg, TensorF32, TensorI32};
 use tinylora_rl::tokenizer::{Tokenizer, CHARS, EOS};
+use tinylora_rl::trainer::{TenantSpec, TenantTrainer, TrainSession, TrainState};
 use tinylora_rl::util::Pcg64;
 use tinylora_rl::weights::WeightSet;
 use tinylora_rl::Runtime;
@@ -78,6 +82,8 @@ fn worker_pool_parallel_matches_serial() {
                     id,
                     weights: adapters[(id % 2) as usize].clone(),
                     problems: (0..3).map(|_| SUITES[0].generate(&mut rng)).collect(),
+                    group: 1,
+                    pb: None,
                     temperature: 1.0,
                     seed: 40 + id,
                 }
@@ -382,6 +388,202 @@ fn packed_theta_roundtrip_preserves_precision_semantics() {
     assert_eq!(theta.len(), 13);
     assert_eq!(theta.update_bytes(Precision::Bf16), 26); // the paper's headline
     assert_eq!(theta.update_bytes(Precision::F32), 52);
+}
+
+// ---------------------------------------------------------------------------
+// ISSUE 2: trainer subsystem — checkpoint/resume, multi-tenant training and
+// sweep determinism.
+// ---------------------------------------------------------------------------
+
+fn test_grpo_cfg(steps: usize, lr: f32, seed: u64) -> GrpoConfig {
+    GrpoConfig { group: 2, steps, lr, warmup: 2, seed, ..Default::default() }
+}
+
+/// f32 fields of a step record as bit patterns (wall-time fields excluded —
+/// everything else must be bit-identical across resume/parallelism).
+fn rec_bits(r: &tinylora_rl::coordinator::StepRecord) -> Vec<u32> {
+    vec![
+        r.step as u32,
+        r.reward.to_bits(),
+        r.response_len.to_bits(),
+        r.format_rate.to_bits(),
+        r.eos_rate.to_bits(),
+        r.lr.to_bits(),
+        r.stats.loss.to_bits(),
+        r.stats.kl_k1.to_bits(),
+        r.stats.mean_ratio.to_bits(),
+        r.stats.entropy.to_bits(),
+        r.stats.grad_norm.to_bits(),
+    ]
+}
+
+/// ISSUE 2 acceptance: a killed-and-resumed GRPO run is bit-identical to an
+/// uninterrupted one, step-for-step and in the final adapter.
+#[test]
+fn resumed_grpo_run_matches_uninterrupted() {
+    require_artifacts!();
+    let rt = runtime();
+    let b = rt.manifest.batch.test;
+    let base = WeightSet::init(&rt.manifest.tier("nano").unwrap().clone(), 3);
+    let ckpt = std::env::temp_dir().join("tlrl_itest_factors");
+    let mk_session = |steps: usize| -> TrainSession<GrpoLoop> {
+        let policy =
+            Policy::new(rt, "nano", "tinylora_r2_u13_all", "grpo", base.clone(), 9, &ckpt).unwrap();
+        let cfg = test_grpo_cfg(steps, 5e-3, 9);
+        let mut scfg = grpo_session_cfg(&cfg);
+        scfg.steps = steps;
+        TrainSession::new(GrpoLoop::with_batch(rt, policy, cfg, b).unwrap(), scfg)
+    };
+
+    // uninterrupted: 4 steps straight through
+    let mut full = mk_session(4);
+    let full_recs = full.run(rt, &mut RunLog::null()).unwrap();
+    let full_theta = full.lp.policy.theta.clone();
+
+    // interrupted: 2 steps, save, "kill", reload, 2 more steps
+    let mut first_half = mk_session(2);
+    let half_recs = first_half.run(rt, &mut RunLog::null()).unwrap();
+    let state_path = std::env::temp_dir().join("tlrl_itest_resume.trainstate");
+    first_half.state().save(&state_path).unwrap();
+    drop(first_half);
+
+    let st = TrainState::load(&state_path).unwrap();
+    assert_eq!(st.step, 2);
+    assert_eq!(st.scheme_tag, "tinylora_r2_u13_all");
+    let policy =
+        Policy::new(rt, "nano", "tinylora_r2_u13_all", "grpo", base.clone(), 9, &ckpt).unwrap();
+    let cfg = test_grpo_cfg(4, 5e-3, 9);
+    let scfg = grpo_session_cfg(&cfg);
+    let lp = GrpoLoop::with_batch(rt, policy, cfg, b).unwrap();
+    let mut resumed = TrainSession::resume(rt, lp, scfg, &st).unwrap();
+    assert_eq!(resumed.completed_steps(), 2);
+    let resumed_recs = resumed.run(rt, &mut RunLog::null()).unwrap();
+    assert_eq!(resumed_recs.len(), 2);
+
+    for (a, x) in full_recs[..2].iter().zip(&half_recs) {
+        assert_eq!(rec_bits(a), rec_bits(x), "pre-kill step {} diverged", a.step);
+    }
+    for (a, x) in full_recs[2..].iter().zip(&resumed_recs) {
+        assert_eq!(rec_bits(a), rec_bits(x), "post-resume step {} diverged", a.step);
+    }
+    assert_eq!(
+        full_theta.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        resumed.lp.policy.theta.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "final adapter diverged after resume"
+    );
+    std::fs::remove_file(&state_path).ok();
+}
+
+/// ISSUE 2 acceptance: `TenantTrainer` with G=4 produces per-tenant results
+/// identical to 4 serial runs (and its pooled waves identical to its serial
+/// reference path), and registers all 4 adapters into the `AdapterStore`.
+#[test]
+fn tenant_trainer_matches_serial_runs_and_registers() {
+    require_artifacts!();
+    let rt = runtime();
+    let b = rt.manifest.batch.test;
+    let base = WeightSet::init(&rt.manifest.tier("nano").unwrap().clone(), 3);
+    let ckpt = std::env::temp_dir().join("tlrl_itest_factors");
+    let specs: Vec<TenantSpec> = (0..4u64)
+        .map(|i| TenantSpec {
+            name: format!("tenant-{i}"),
+            scheme_tag: "tinylora_r2_u13_all".into(),
+            cfg: test_grpo_cfg(3, 2e-3 + i as f32 * 1e-3, 20 + i),
+            precision: Precision::Bf16,
+        })
+        .collect();
+
+    // pooled (2 workers) vs the trainer's serial reference path
+    let mut tt_par =
+        TenantTrainer::with_batch(rt, &base, specs.clone(), 2, &ckpt, b).unwrap();
+    let out_par = tt_par.train(rt, &mut RunLog::null(), true).unwrap();
+    let mut tt_ser =
+        TenantTrainer::with_batch(rt, &base, specs.clone(), 1, &ckpt, b).unwrap();
+    let out_ser = tt_ser.train(rt, &mut RunLog::null(), false).unwrap();
+    assert_eq!(out_par.len(), 4);
+    assert_eq!(out_ser.len(), 4);
+    for ((p, s), (sp, ss)) in out_par
+        .iter()
+        .zip(&out_ser)
+        .zip(tt_par.sessions.iter().zip(&tt_ser.sessions))
+    {
+        assert_eq!(p.name, s.name);
+        for (a, c) in p.steps.iter().zip(&s.steps) {
+            assert_eq!(rec_bits(a), rec_bits(c), "{}: pooled != serial", p.name);
+        }
+        assert_eq!(
+            sp.lp.policy.theta.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            ss.lp.policy.theta.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "{}: theta diverged across pooling",
+            p.name
+        );
+    }
+
+    // ... and identical to 4 completely independent serial runs
+    for (i, spec) in specs.iter().enumerate() {
+        let mut policy = Policy::new(
+            rt,
+            "nano",
+            &spec.scheme_tag,
+            "grpo",
+            base.clone(),
+            spec.cfg.seed,
+            &ckpt,
+        )
+        .unwrap();
+        // match the tenant plane's storage precision (updates roundtrip
+        // through bf16 there)
+        policy.precision = spec.precision;
+        let mut sess = TrainSession::new(
+            GrpoLoop::with_batch(rt, policy, spec.cfg.clone(), b).unwrap(),
+            grpo_session_cfg(&spec.cfg),
+        );
+        let recs = sess.run(rt, &mut RunLog::null()).unwrap();
+        for (a, c) in recs.iter().zip(&out_ser[i].steps) {
+            assert_eq!(rec_bits(a), rec_bits(c), "tenant {i}: independent run != tenant run");
+        }
+        assert_eq!(
+            sess.lp.policy.theta.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            tt_ser.sessions[i].lp.policy.theta.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "tenant {i}: theta != independent run"
+        );
+    }
+
+    // train→serve registration closes the loop: 4 adapters, 26 bytes each
+    let mut store = AdapterStore::new("nano", 2);
+    tt_ser.register_into(&mut store).unwrap();
+    assert_eq!(store.len(), 4);
+    assert_eq!(store.names(), vec!["tenant-0", "tenant-1", "tenant-2", "tenant-3"]);
+    assert_eq!(store.stored_bytes(), 4 * 26, "13 bf16 params = 26 bytes per tenant");
+}
+
+/// ISSUE 2 acceptance: two sweeps with the same config produce byte-identical
+/// outcome JSON — including when the rollout waves run on pool threads.
+#[test]
+fn sweep_is_deterministic_across_runs_and_workers() {
+    require_artifacts!();
+    let rt = runtime();
+    let base = WeightSet::init(&rt.manifest.tier("nano").unwrap().clone(), 3);
+    let ckpt = std::env::temp_dir().join("tlrl_itest_factors");
+    let cfg = |workers: usize| SweepConfig {
+        tier: "nano".into(),
+        scheme_tag: "tinylora_r2_u13_all".into(),
+        algo: "grpo".into(),
+        suite: "gsm8k-syn".into(),
+        steps: 2,
+        lrs: vec![1e-3, 5e-3],
+        seeds: vec![0],
+        eval_suite: "gsm8k-syn".into(),
+        eval_n: 8,
+        workers,
+        batch: rt.manifest.batch.test,
+    };
+    let a = sweep_scheme(rt, &base, &cfg(1), &ckpt, &mut RunLog::null()).unwrap();
+    let b = sweep_scheme(rt, &base, &cfg(1), &ckpt, &mut RunLog::null()).unwrap();
+    let c = sweep_scheme(rt, &base, &cfg(2), &ckpt, &mut RunLog::null()).unwrap();
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    assert_eq!(a.to_json().to_string(), c.to_json().to_string(), "worker count changed results");
+    assert_eq!(a.per_lr.len(), 2);
 }
 
 #[test]
