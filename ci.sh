@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# Tier-1 gate (ROADMAP.md): build, tests, formatting. Run from repo root.
+# Tier-1 gate (ROADMAP.md): build, tests, docs, formatting. Run from repo
+# root.
 #
 #   ./ci.sh           # full gate
 #   ./ci.sh --fast    # skip the release build (debug tests + fmt only)
@@ -28,6 +29,9 @@ if cargo clippy --version >/dev/null 2>&1; then
 else
   echo "== clippy component unavailable — skipped =="
 fi
+
+echo "== cargo doc --no-deps (rustdoc warnings denied) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 echo "== cargo fmt --check =="
 cargo fmt --check

@@ -1,0 +1,149 @@
+//! Benchmark-subsystem benchmarks (`cargo bench --bench bench_eval`).
+//!
+//! Pure-rust parts always run: the unbiased pass@k estimator over the full
+//! (n, c, k) grid, majority voting, and grouped-row scoring over synthetic
+//! decode rows. With artifacts built, the headline comparison runs: serial
+//! vs pooled full-ladder runs at k ∈ {1, 4, 16} on the nano tier —
+//! recorded alongside `bench_trainer` / `bench_main` output.
+
+use std::path::Path;
+
+use tinylora_rl::engine::{GenRow, InferenceEngine};
+use tinylora_rl::eval::bench::{
+    majority_answer, pass_at_k, run_ladder_with, score_rows, BenchConfig,
+};
+use tinylora_rl::tasks::generator::{Problem, SUITES};
+use tinylora_rl::util::{timer::time_iters, Pcg64, Timer};
+use tinylora_rl::weights::WeightSet;
+use tinylora_rl::Runtime;
+
+struct Bench {
+    rows: Vec<(String, f64)>,
+}
+
+impl Bench {
+    fn run<F: FnMut()>(&mut self, name: &str, iters: usize, note: &str, mut f: F) {
+        f(); // warmup
+        let (mean, min, max) = time_iters(iters, &mut f);
+        println!("{name:<48} mean {mean:>9.3} ms  (min {min:>9.3}, max {max:>9.3})  {note}");
+        self.rows.push((name.to_string(), mean));
+    }
+}
+
+/// n_problems x k synthetic decode rows in the engine's grouped layout
+/// (every third sample correct, all in canonical format).
+fn synthetic_rows(n_problems: usize, k: usize) -> (Vec<Problem>, Vec<GenRow>) {
+    let mut rng = Pcg64::new(3);
+    let problems: Vec<Problem> = (0..n_problems).map(|_| SUITES[0].generate(&mut rng)).collect();
+    let mut rows = Vec::with_capacity(n_problems * k);
+    for p in &problems {
+        for j in 0..k {
+            let correct = j % 3 == 0;
+            let ans = if correct { p.answer } else { p.answer + 1 };
+            rows.push(GenRow {
+                prompt_len: 8,
+                response: vec![1; 12],
+                behavior: vec![],
+                text: format!("#### {ans}"),
+                reward: if correct { 1.0 } else { 0.0 },
+                hit_eos: true,
+                has_format: true,
+            });
+        }
+    }
+    (problems, rows)
+}
+
+fn main() {
+    let mut b = Bench { rows: Vec::new() };
+    println!("== benchmark subsystem benchmarks ==\n");
+
+    // ---------------- pure-rust estimators ----------------
+    b.run("pass@k estimator, full 16x16x16 grid", 200, "unbiased formula", || {
+        let mut acc = 0.0f64;
+        for n in 1..=16usize {
+            for c in 0..=n {
+                for k in 1..=n {
+                    acc += pass_at_k(n, c, k);
+                }
+            }
+        }
+        std::hint::black_box(acc);
+    });
+
+    let votes: Vec<Vec<Option<i64>>> = (0..1000)
+        .map(|i| {
+            (0..16).map(|j| if j % 5 == 4 { None } else { Some(((i + j) % 7) as i64) }).collect()
+        })
+        .collect();
+    b.run("maj@16 vote, 1k problems", 200, "first-seen tie-break", || {
+        let mut hits = 0usize;
+        for v in &votes {
+            if majority_answer(v).is_some() {
+                hits += 1;
+            }
+        }
+        std::hint::black_box(hits);
+    });
+
+    let (problems, rows) = synthetic_rows(1024, 4);
+    b.run("score_rows 1024 problems x k=4", 100, "grouped-row scoring", || {
+        std::hint::black_box(score_rows("gsm8k-syn", &problems, &rows, 4).unwrap());
+    });
+
+    // ---------------- ladder decode (needs artifacts) ----------------
+    if !Path::new("artifacts/manifest.json").exists() {
+        println!("\nartifacts not built — skipping ladder decode benches");
+        return;
+    }
+    let rt = Runtime::new(Path::new("artifacts")).expect("runtime");
+    let tier = rt.manifest.tier("nano").expect("nano tier").clone();
+    let ckpt = Path::new("ckpts").join("nano.ckpt");
+    let base =
+        if ckpt.exists() { WeightSet::load(&ckpt).unwrap() } else { WeightSet::init(&tier, 0) };
+
+    println!();
+    for k in [1usize, 4, 16] {
+        // prefer the rollout geometry, fall back to the test geometry;
+        // k must divide the baked batch
+        let batch = [rt.manifest.batch.roll, rt.manifest.batch.test]
+            .into_iter()
+            .find(|&bsz| bsz >= k && bsz % k == 0);
+        let Some(batch) = batch else {
+            println!("ladder/k={k:<2} no decode geometry divisible by k — skipped");
+            continue;
+        };
+        let engine = match InferenceEngine::new(&rt, "nano", batch) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("ladder/k={k:<2} no nano executable at batch {batch} — skipped ({e})");
+                continue;
+            }
+        };
+        for (label, workers) in [("serial", 1usize), ("4 workers", 4)] {
+            let mut cfg = BenchConfig::new("nano");
+            cfg.k = k;
+            cfg.n = 8;
+            cfg.temperature = 1.0;
+            cfg.seed = 5;
+            cfg.workers = workers;
+            cfg.batch = batch;
+            let t0 = Timer::start();
+            let run = run_ladder_with(&rt, &engine, &base, "base", 0, &cfg).expect("ladder");
+            let ms = t0.millis();
+            let samples: usize = run.scores.iter().map(|sc| sc.n * sc.k).sum();
+            println!(
+                "ladder/k={k:<2} {label:<10} {ms:>9.0} ms  ({} suites, {samples} samples, {:.1} samples/s)",
+                run.scores.len(),
+                samples as f64 / (ms / 1e3)
+            );
+            b.rows.push((format!("ladder/{k}/{label}"), ms));
+        }
+        let serial = b.rows.iter().find(|r| r.0 == format!("ladder/{k}/serial")).unwrap().1;
+        let par = b.rows.iter().find(|r| r.0 == format!("ladder/{k}/4 workers")).unwrap().1;
+        println!(
+            "pooled ladder speedup @k={k}: {:.2}x (serial {serial:.0} ms -> pooled {par:.0} ms)",
+            serial / par
+        );
+    }
+}

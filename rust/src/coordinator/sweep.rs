@@ -7,6 +7,11 @@
 //! the shared backbone, rollout waves interleaved on the same
 //! fused-generate executables (and across `--workers` pool threads).
 //! SFT has no rollout wave to pool, so it sweeps serially per run.
+//!
+//! [`sweep_scheme_full`] additionally hands back the winning run's merged
+//! weights, so post-training eval is one call: the `sweep --bench-k` CLI
+//! path feeds them straight into `eval::bench::run_ladder` for the
+//! pass@k/maj@k ladder and recovery-fraction reporting.
 
 use std::path::Path;
 
@@ -83,7 +88,9 @@ impl SweepOutcome {
     }
 }
 
-/// Train one (scheme, lr, seed) run and return final eval accuracy.
+/// Train one (scheme, lr, seed) run; returns the final eval, the tail
+/// reward/format rates and the trained merged weights (for downstream
+/// ladder benches).
 pub fn run_once(
     rt: &Runtime,
     base: &WeightSet,
@@ -92,7 +99,7 @@ pub fn run_once(
     seed: u64,
     ckpt_dir: &Path,
     log: &mut RunLog,
-) -> Result<(EvalResult, f32, f32)> {
+) -> Result<(EvalResult, f32, f32, WeightSet)> {
     let policy =
         Policy::new(rt, &cfg.tier, &cfg.scheme_tag, &cfg.algo, base.clone(), seed, ckpt_dir)?;
     let (policy, reward, fmt) = match cfg.algo.as_str() {
@@ -129,7 +136,7 @@ pub fn run_once(
         other => anyhow::bail!("unknown algo {other}"),
     };
     let ev = evaluate(rt, &policy.tier.name, &policy.merged, &cfg.eval_suite, cfg.eval_n, 777)?;
-    Ok((ev, reward, fmt))
+    Ok((ev, reward, fmt, policy.merged))
 }
 
 /// Full sweep for one scheme: all LRs x seeds, best-LR selection.
@@ -140,6 +147,19 @@ pub fn sweep_scheme(
     ckpt_dir: &Path,
     log: &mut RunLog,
 ) -> Result<SweepOutcome> {
+    Ok(sweep_scheme_full(rt, base, cfg, ckpt_dir, log)?.0)
+}
+
+/// [`sweep_scheme`] plus the merged weights of the winning run (best LR,
+/// first seed) — what `bench --k` ladder evals and the `sweep --bench-k`
+/// CLI path consume after training.
+pub fn sweep_scheme_full(
+    rt: &Runtime,
+    base: &WeightSet,
+    cfg: &SweepConfig,
+    ckpt_dir: &Path,
+    log: &mut RunLog,
+) -> Result<(SweepOutcome, WeightSet)> {
     if cfg.lrs.is_empty() || cfg.seeds.is_empty() {
         anyhow::bail!("sweep needs at least one lr and one seed");
     }
@@ -148,6 +168,10 @@ pub fn sweep_scheme(
     let baseline = evaluate_with(rt, &eval_engine, base, &cfg.eval_suite, cfg.eval_n, 777)?;
     // (lr, acc, reward, fmt) per grid point, lr-major like the spec grid
     let mut grid: Vec<(f32, f32, f32, f32)> = Vec::with_capacity(cfg.lrs.len() * cfg.seeds.len());
+    // merged weights per LR at the FIRST seed only — the returned winner
+    // is always (best lr, first seed), so retaining the other seeds'
+    // copies would be pure memory waste at full-FT scale
+    let mut merged: Vec<WeightSet> = Vec::with_capacity(cfg.lrs.len());
     let trainable_params;
 
     if cfg.algo == "grpo" {
@@ -173,7 +197,8 @@ pub fn sweep_scheme(
         let workers = cfg.workers.max(1);
         let mut tt = TenantTrainer::with_batch(rt, base, specs, workers, ckpt_dir, batch)?;
         let outcomes = tt.train(rt, log, workers > 1)?;
-        for (sess, out) in tt.sessions.iter().zip(&outcomes) {
+        let n_seeds = cfg.seeds.len();
+        for (p, (sess, out)) in tt.sessions.iter().zip(&outcomes).enumerate() {
             let ev = evaluate_with(
                 rt,
                 &eval_engine,
@@ -183,14 +208,20 @@ pub fn sweep_scheme(
                 777,
             )?;
             grid.push((out.lr, ev.accuracy, out.final_reward, out.final_format_rate));
+            if p % n_seeds == 0 {
+                merged.push(sess.lp.policy.merged.clone());
+            }
         }
         trainable_params =
             tt.sessions.first().map(|s| s.lp.policy.trainable_params()).unwrap_or(0);
     } else {
         for &lr in &cfg.lrs {
-            for &seed in &cfg.seeds {
-                let (ev, rew, fmt) = run_once(rt, base, cfg, lr, seed, ckpt_dir, log)?;
+            for (si, &seed) in cfg.seeds.iter().enumerate() {
+                let (ev, rew, fmt, w) = run_once(rt, base, cfg, lr, seed, ckpt_dir, log)?;
                 grid.push((lr, ev.accuracy, rew, fmt));
+                if si == 0 {
+                    merged.push(w);
+                }
             }
         }
         let probe =
@@ -202,6 +233,7 @@ pub fn sweep_scheme(
     let n_seeds = cfg.seeds.len().max(1);
     let mut per_lr = Vec::with_capacity(cfg.lrs.len());
     let mut best = (0.0f32, f32::NEG_INFINITY, 0.0, 0.0); // (lr, acc, reward, fmt)
+    let mut best_i = 0usize;
     for (i, &lr) in cfg.lrs.iter().enumerate() {
         let rows = &grid[i * n_seeds..(i + 1) * n_seeds];
         let acc = crate::util::mean(&rows.iter().map(|r| r.1).collect::<Vec<_>>());
@@ -214,16 +246,21 @@ pub fn sweep_scheme(
                 crate::util::mean(&rows.iter().map(|r| r.2).collect::<Vec<_>>()),
                 crate::util::mean(&rows.iter().map(|r| r.3).collect::<Vec<_>>()),
             );
+            best_i = i;
         }
     }
-    Ok(SweepOutcome {
-        scheme_tag: cfg.scheme_tag.clone(),
-        trainable_params,
-        best_lr: best.0,
-        accuracy: best.1,
-        per_lr,
-        baseline_accuracy: baseline.accuracy,
-        final_reward: best.2,
-        format_rate: best.3,
-    })
+    let best_merged = merged.swap_remove(best_i);
+    Ok((
+        SweepOutcome {
+            scheme_tag: cfg.scheme_tag.clone(),
+            trainable_params,
+            best_lr: best.0,
+            accuracy: best.1,
+            per_lr,
+            baseline_accuracy: baseline.accuracy,
+            final_reward: best.2,
+            format_rate: best.3,
+        },
+        best_merged,
+    ))
 }

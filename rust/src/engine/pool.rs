@@ -131,6 +131,23 @@ impl WorkerPool {
         Ok(out)
     }
 
+    /// Pooled or serial dispatch behind one call: the serial path is the
+    /// bit-identical reference, so callers (tenant waves, bench ladders)
+    /// toggle on a worker count without duplicating the demux logic.
+    pub fn serve_maybe(
+        &self,
+        rt: &Runtime,
+        engine: &InferenceEngine,
+        jobs: Vec<GenJob>,
+        parallel: bool,
+    ) -> Result<Vec<GenJobResult>> {
+        if parallel {
+            self.serve(rt, engine, jobs)
+        } else {
+            Self::serve_serial(rt, engine, &jobs)
+        }
+    }
+
     /// Reference single-threaded path (identical semantics to `serve`) —
     /// the equivalence baseline for the concurrency tests.
     pub fn serve_serial(

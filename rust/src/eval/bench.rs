@@ -1,0 +1,653 @@
+//! The benchmark subsystem: sampled k-way decoding over the difficulty
+//! ladder, with pass@k / maj@k scoring (the paper's Tables 1–3 protocol).
+//!
+//! Where the base `eval` module answers "greedy pass@1 on one suite", this
+//! module reproduces the paper's *evidence*: a [`LADDER`] of benchmark
+//! suites (GSM8K-like → AIME-like analogues, each with its own decode
+//! budget), k temperature-sampled completions per problem, and the
+//! unbiased [`pass_at_k`] / majority-vote [`maj@k`](majority_answer)
+//! estimators over them.
+//!
+//! Throughput comes from the engine subsystem: each problem's k samples
+//! are one *group* in a [`GenJob`] (the same grouped-row layout GRPO
+//! rollout waves use), and the whole ladder is built as one job list
+//! served across an [`engine::WorkerPool`](crate::engine::pool::WorkerPool)
+//! — workers stay saturated across suite boundaries instead of draining
+//! per suite. Per-job RNG seeds are derived from stable request data
+//! (suite name + chunk index), so a pooled ladder run is bit-identical to
+//! a serial one (asserted in `tests/integration.rs`).
+//!
+//! Results land in a [`BenchRun`]: deterministic JSON (via `util::json`;
+//! wall-clock time is deliberately excluded) plus a rendered markdown
+//! table (golden-tested). [`crate::eval::report::RecoveryReport`] stitches
+//! several runs into the paper's recovery-fraction table.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::engine::pool::{GenJob, WorkerPool};
+use crate::engine::{is_padding, padding_problem, GenRow, InferenceEngine};
+use crate::eval::eval_problems;
+use crate::runtime::Runtime;
+use crate::tasks::generator::Problem;
+use crate::tasks::verifier;
+use crate::util::json::{num, obj, s, Value};
+use crate::util::{fnv1a, Timer};
+use crate::weights::WeightSet;
+
+/// One rung of the benchmark ladder: a task-generator suite plus its
+/// decode budget (held-out problems per run) and sampling temperature.
+/// Harder suites get smaller budgets — the paper's suites shrink the same
+/// way (GSM8K's 1319 problems vs AIME's 30).
+#[derive(Clone, Copy, Debug)]
+pub struct BenchSuite {
+    /// Suite name in [`crate::tasks::generator::SUITES`] (which also
+    /// records the paper benchmark each suite stands in for — single
+    /// source of truth for that mapping).
+    pub suite: &'static str,
+    /// Held-out problems decoded per run (0 < budget).
+    pub budget: usize,
+    /// Sampling temperature for the k-way decode.
+    pub temperature: f32,
+}
+
+/// The 4-suite difficulty ladder (Table 2's columns, easiest first):
+/// GSM8K → MATH500 → AMC23 → AIME24 analogues.
+pub const LADDER: &[BenchSuite] = &[
+    BenchSuite { suite: "gsm8k-syn", budget: 64, temperature: 1.0 },
+    BenchSuite { suite: "math500-syn", budget: 48, temperature: 1.0 },
+    BenchSuite { suite: "amc-syn", budget: 32, temperature: 1.0 },
+    BenchSuite { suite: "aime-syn", budget: 16, temperature: 1.0 },
+];
+
+/// Look up a ladder rung by suite name; unknown names are an error (never
+/// a silent fallback).
+pub fn bench_suite(name: &str) -> Result<&'static BenchSuite> {
+    LADDER.iter().find(|b| b.suite == name).ok_or_else(|| {
+        anyhow!(
+            "unknown bench suite {name:?}; ladder: {:?}",
+            LADDER.iter().map(|b| b.suite).collect::<Vec<_>>()
+        )
+    })
+}
+
+/// Unbiased pass@k estimator (Chen et al., "Evaluating Large Language
+/// Models Trained on Code"): given `n` samples of which `c` are correct,
+///
+/// ```text
+/// pass@k = 1 - C(n-c, k) / C(n, k)
+/// ```
+///
+/// computed as a stable running product. Requires `1 <= k <= n`.
+///
+/// ```
+/// use tinylora_rl::eval::bench::pass_at_k;
+/// assert_eq!(pass_at_k(1, 1, 1), 1.0); // k=1 on one sample = exact match
+/// assert!((pass_at_k(4, 2, 1) - 0.5).abs() < 1e-12); // pass@1 = c/n
+/// assert_eq!(pass_at_k(4, 0, 4), 0.0);
+/// assert_eq!(pass_at_k(4, 1, 4), 1.0); // any correct sample ⇒ pass@n = 1
+/// ```
+pub fn pass_at_k(n: usize, c: usize, k: usize) -> f64 {
+    assert!((1..=n).contains(&k), "pass@k needs 1 <= k ({k}) <= n ({n})");
+    if c == 0 {
+        return 0.0;
+    }
+    if n - c < k {
+        return 1.0;
+    }
+    let mut prod = 1.0f64;
+    for i in 0..k {
+        prod *= (n - c - i) as f64 / (n - i) as f64;
+    }
+    1.0 - prod
+}
+
+/// Majority vote over extracted answers. `None` entries (no parseable
+/// answer) never vote; ties break to the answer seen *earliest* in sample
+/// order, so maj@k is deterministic under a fixed decode seed.
+///
+/// ```
+/// use tinylora_rl::eval::bench::majority_answer;
+/// assert_eq!(majority_answer(&[Some(3), Some(5), Some(5)]), Some(5));
+/// assert_eq!(majority_answer(&[Some(3), Some(5)]), Some(3)); // tie → first seen
+/// assert_eq!(majority_answer(&[None, None]), None);
+/// ```
+pub fn majority_answer(answers: &[Option<i64>]) -> Option<i64> {
+    let mut tally: Vec<(i64, usize)> = Vec::new();
+    for a in answers.iter().flatten() {
+        match tally.iter_mut().find(|(v, _)| v == a) {
+            Some((_, c)) => *c += 1,
+            None => tally.push((*a, 1)),
+        }
+    }
+    // strictly-greater keeps the first-seen answer on ties
+    let mut best: Option<(i64, usize)> = None;
+    for (v, c) in tally {
+        if best.map(|(_, bc)| c > bc).unwrap_or(true) {
+            best = Some((v, c));
+        }
+    }
+    best.map(|(v, _)| v)
+}
+
+/// Per-suite scores from one k-way sampled run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SuiteScore {
+    pub suite: String,
+    /// real (non-padding) problems scored
+    pub n: usize,
+    pub k: usize,
+    /// unbiased pass@1 over the k samples (= c/k averaged over problems)
+    pub pass1: f32,
+    /// unbiased pass@k
+    pub pass_k: f32,
+    /// majority-vote accuracy over the k samples
+    pub maj_k: f32,
+    /// fraction of samples in the canonical `#### n` format
+    pub format_rate: f32,
+    pub mean_response_len: f32,
+}
+
+impl SuiteScore {
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("suite", s(&self.suite)),
+            ("n", num(self.n as f64)),
+            ("k", num(self.k as f64)),
+            ("pass1", num(self.pass1 as f64)),
+            ("pass_k", num(self.pass_k as f64)),
+            ("maj_k", num(self.maj_k as f64)),
+            ("format_rate", num(self.format_rate as f64)),
+            ("mean_response_len", num(self.mean_response_len as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            suite: v.get("suite")?.str()?.to_string(),
+            n: v.get("n")?.usize()?,
+            k: v.get("k")?.usize()?,
+            pass1: v.get("pass1")?.f64()? as f32,
+            pass_k: v.get("pass_k")?.f64()? as f32,
+            maj_k: v.get("maj_k")?.f64()? as f32,
+            format_rate: v.get("format_rate")?.f64()? as f32,
+            mean_response_len: v.get("mean_response_len")?.f64()? as f32,
+        })
+    }
+}
+
+/// Score k consecutive samples per problem (the engine's grouped-row
+/// layout: rows `[p*k, (p+1)*k)` belong to problem `p`). Padding problems
+/// are skipped; `rows.len()` must equal `problems.len() * k`.
+pub fn score_rows(
+    suite: &str,
+    problems: &[Problem],
+    rows: &[GenRow],
+    k: usize,
+) -> Result<SuiteScore> {
+    if k == 0 || rows.len() != problems.len() * k {
+        bail!("score_rows: {} rows != {} problems x k={k}", rows.len(), problems.len());
+    }
+    let mut n = 0usize;
+    let (mut pass1, mut pass_k, mut maj_k) = (0.0f64, 0.0f64, 0.0f64);
+    let (mut fmt, mut len_sum) = (0usize, 0f32);
+    for (p, group) in problems.iter().zip(rows.chunks(k)) {
+        if is_padding(p) {
+            continue;
+        }
+        n += 1;
+        let c = group.iter().filter(|r| r.reward > 0.5).count();
+        pass1 += c as f64 / k as f64;
+        pass_k += pass_at_k(k, c, k);
+        let answers: Vec<Option<i64>> =
+            group.iter().map(|r| verifier::extract_answer(&r.text)).collect();
+        if majority_answer(&answers) == Some(p.answer) {
+            maj_k += 1.0;
+        }
+        fmt += group.iter().filter(|r| r.has_format).count();
+        len_sum += group.iter().map(|r| r.response.len() as f32).sum::<f32>();
+    }
+    if n == 0 {
+        bail!("score_rows: no real problems in suite {suite:?}");
+    }
+    Ok(SuiteScore {
+        suite: suite.to_string(),
+        n,
+        k,
+        pass1: (pass1 / n as f64) as f32,
+        pass_k: (pass_k / n as f64) as f32,
+        maj_k: (maj_k / n as f64) as f32,
+        format_rate: fmt as f32 / (n * k) as f32,
+        mean_response_len: len_sum / (n * k) as f32,
+    })
+}
+
+/// Configuration for one ladder run.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub tier: String,
+    /// suite names to run (empty = the full [`LADDER`])
+    pub suites: Vec<String>,
+    /// samples per problem (must divide the decode batch)
+    pub k: usize,
+    /// problems per suite (0 = the suite's ladder budget)
+    pub n: usize,
+    /// sampling temperature (negative = the suite's ladder temperature)
+    pub temperature: f32,
+    pub seed: u64,
+    /// pool threads (1 = the serial reference path, bit-identical)
+    pub workers: usize,
+    /// decode geometry (0 = `manifest.batch.roll`)
+    pub batch: usize,
+}
+
+impl BenchConfig {
+    pub fn new(tier: &str) -> Self {
+        Self {
+            tier: tier.to_string(),
+            suites: Vec::new(),
+            k: 4,
+            n: 0,
+            temperature: -1.0,
+            seed: 777,
+            workers: 1,
+            batch: 0,
+        }
+    }
+}
+
+/// Everything one ladder run produced for one set of weights.
+#[derive(Clone, Debug)]
+pub struct BenchRun {
+    pub tier: String,
+    /// label of the evaluated weights ("base", a scheme tag, ...)
+    pub name: String,
+    /// trained parameters behind these weights (0 for the base model)
+    pub params: usize,
+    pub k: usize,
+    pub seed: u64,
+    pub scores: Vec<SuiteScore>,
+    /// wall time; NOT serialized (JSON stays byte-deterministic)
+    pub wall_secs: f64,
+}
+
+impl BenchRun {
+    /// Canonical JSON (byte-identical across reruns and worker counts —
+    /// asserted in `tests/integration.rs`).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("kind", s("bench_run")),
+            ("tier", s(&self.tier)),
+            ("name", s(&self.name)),
+            ("params", num(self.params as f64)),
+            ("k", num(self.k as f64)),
+            // string, not number: u64 seeds above 2^53 would round in f64
+            ("seed", s(&self.seed.to_string())),
+            ("suites", Value::Arr(self.scores.iter().map(|x| x.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        if v.get("kind")?.str()? != "bench_run" {
+            bail!("not a bench_run JSON object");
+        }
+        Ok(Self {
+            tier: v.get("tier")?.str()?.to_string(),
+            name: v.get("name")?.str()?.to_string(),
+            params: v.get("params")?.usize()?,
+            k: v.get("k")?.usize()?,
+            seed: v.get("seed")?.str()?.parse()?,
+            scores: v
+                .get("suites")?
+                .arr()?
+                .iter()
+                .map(SuiteScore::from_json)
+                .collect::<Result<_>>()?,
+            wall_secs: 0.0,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string() + "\n")?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Value::parse(text.trim())?)
+    }
+
+    /// Rendered markdown table (golden-tested — keep byte-stable).
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!(
+            "### Bench — {}/{} ({} params, k={}, seed {})\n\n",
+            self.tier, self.name, self.params, self.k, self.seed
+        );
+        out.push_str(&format!(
+            "| suite | stands in for | n | pass@1 | pass@{k} | maj@{k} | format | len |\n\
+             |---|---|---|---|---|---|---|---|\n",
+            k = self.k
+        ));
+        for sc in &self.scores {
+            let stands = crate::tasks::generator::suite(&sc.suite)
+                .map(|x| x.stands_in_for)
+                .unwrap_or("—");
+            out.push_str(&format!(
+                "| {} | {} | {} | {:.3} | {:.3} | {:.3} | {:.3} | {:.1} |\n",
+                sc.suite, stands, sc.n, sc.pass1, sc.pass_k, sc.maj_k, sc.format_rate,
+                sc.mean_response_len
+            ));
+        }
+        out
+    }
+}
+
+/// Stable per-job decode seed — a pure function of request data so that
+/// serial and pooled runs draw identical samples no matter which worker
+/// picks a job up.
+fn job_seed(run_seed: u64, suite: &str, chunk_idx: usize) -> u64 {
+    run_seed ^ fnv1a(suite.as_bytes()) ^ (chunk_idx as u64).wrapping_mul(0x9e3779b97f4a7c15)
+}
+
+/// Run the ladder with a caller-owned engine (drivers benching several
+/// weight sets reuse one executable resolution).
+///
+/// Known memory bound: `GenJob` owns its weights, so every job clones the
+/// merged `WeightSet` (~0.5 MB at current tiers; the full default ladder
+/// is ≤ a few dozen jobs). Same bound as tenant rollout waves — moving
+/// the backbone behind `Arc` in `GenJob` is the shared fix if tiers grow.
+pub fn run_ladder_with(
+    rt: &Runtime,
+    engine: &InferenceEngine,
+    weights: &WeightSet,
+    name: &str,
+    params: usize,
+    cfg: &BenchConfig,
+) -> Result<BenchRun> {
+    let k = cfg.k;
+    if k == 0 {
+        bail!("bench: k must be >= 1");
+    }
+    if engine.batch % k != 0 {
+        bail!("bench: k={k} must divide the decode batch {}", engine.batch);
+    }
+    let per_job = engine.batch / k;
+    let suites: Vec<&'static BenchSuite> = if cfg.suites.is_empty() {
+        LADDER.iter().collect()
+    } else {
+        cfg.suites.iter().map(|n| bench_suite(n)).collect::<Result<_>>()?
+    };
+
+    let t0 = Timer::start();
+    // the whole ladder as ONE job list: workers stay saturated across
+    // suite boundaries instead of draining per suite
+    let mut jobs: Vec<GenJob> = Vec::new();
+    let mut meta: Vec<(usize, Vec<Problem>)> = Vec::new(); // job id -> (suite idx, its problems)
+    for (si, bs) in suites.iter().enumerate() {
+        let n = if cfg.n > 0 { cfg.n } else { bs.budget };
+        let temperature = if cfg.temperature >= 0.0 { cfg.temperature } else { bs.temperature };
+        let problems = eval_problems(bs.suite, n, cfg.seed)?;
+        for (ci, chunk) in problems.chunks(per_job).enumerate() {
+            // k=1 jobs take the engine's arbitrary-length path (it pads and
+            // drops sentinel rows itself); grouped jobs must fill the baked
+            // geometry exactly, so we pad the tail chunk explicitly
+            let job_problems = if k == 1 {
+                chunk.to_vec()
+            } else {
+                let mut padded = chunk.to_vec();
+                while padded.len() < per_job {
+                    padded.push(padding_problem());
+                }
+                padded
+            };
+            jobs.push(GenJob {
+                id: jobs.len() as u64,
+                weights: weights.clone(),
+                problems: job_problems.clone(),
+                group: k,
+                pb: None,
+                temperature,
+                seed: job_seed(cfg.seed, bs.suite, ci),
+            });
+            meta.push((si, job_problems));
+        }
+    }
+
+    let pool = WorkerPool::new(cfg.workers);
+    let results = pool.serve_maybe(rt, engine, jobs, cfg.workers > 1)?;
+
+    // demux rows back per suite (results arrive sorted by job id, and jobs
+    // were emitted suite-major, so per-suite order is the problem order)
+    let mut suite_problems: Vec<Vec<Problem>> = vec![Vec::new(); suites.len()];
+    let mut suite_rows: Vec<Vec<GenRow>> = vec![Vec::new(); suites.len()];
+    for res in results {
+        let (si, problems) = &meta[res.id as usize];
+        suite_problems[*si].extend(problems.iter().cloned());
+        suite_rows[*si].extend(res.rows);
+    }
+    let scores = suites
+        .iter()
+        .enumerate()
+        .map(|(si, bs)| score_rows(bs.suite, &suite_problems[si], &suite_rows[si], k))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(BenchRun {
+        tier: engine.tier.clone(),
+        name: name.to_string(),
+        params,
+        k,
+        seed: cfg.seed,
+        scores,
+        wall_secs: t0.secs(),
+    })
+}
+
+/// Run the full ladder for one weight set (the `bench` CLI entry point).
+pub fn run_ladder(
+    rt: &Runtime,
+    weights: &WeightSet,
+    name: &str,
+    params: usize,
+    cfg: &BenchConfig,
+) -> Result<BenchRun> {
+    let batch = if cfg.batch > 0 { cfg.batch } else { rt.manifest.batch.roll };
+    let engine = InferenceEngine::new(rt, &cfg.tier, batch)?;
+    run_ladder_with(rt, &engine, weights, name, params, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// exact C(n,k) reference for the estimator cross-check
+    fn binom(n: usize, k: usize) -> f64 {
+        if k > n {
+            return 0.0;
+        }
+        let mut out = 1.0f64;
+        for i in 0..k {
+            out *= (n - i) as f64 / (k - i) as f64;
+        }
+        out
+    }
+
+    #[test]
+    fn pass_at_k_matches_combinatorial_formula() {
+        for n in 1..=10usize {
+            for c in 0..=n {
+                for k in 1..=n {
+                    let want = 1.0 - binom(n - c, k) / binom(n, k);
+                    let got = pass_at_k(n, c, k);
+                    assert!((got - want).abs() < 1e-12, "n={n} c={c} k={k}: {got} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pass_at_1_is_exact_match_accuracy() {
+        // with n samples, pass@1 is the plain fraction correct — and at
+        // n=k=1 it degenerates to 0/1 exact match
+        for n in 1..=8usize {
+            for c in 0..=n {
+                assert!((pass_at_k(n, c, 1) - c as f64 / n as f64).abs() < 1e-12);
+            }
+        }
+        assert_eq!(pass_at_k(1, 0, 1), 0.0);
+        assert_eq!(pass_at_k(1, 1, 1), 1.0);
+    }
+
+    #[test]
+    fn pass_at_k_monotone_in_k() {
+        for c in 0..=8usize {
+            let mut prev = 0.0;
+            for k in 1..=8 {
+                let p = pass_at_k(8, c, k);
+                assert!(p >= prev - 1e-12, "c={c} k={k}");
+                prev = p;
+            }
+        }
+    }
+
+    #[test]
+    fn majority_tie_breaks_to_first_seen_deterministically() {
+        assert_eq!(majority_answer(&[Some(3), Some(5), Some(5), Some(3)]), Some(3));
+        assert_eq!(majority_answer(&[Some(5), Some(3), Some(3), Some(5)]), Some(5));
+        // None never votes; a single parseable answer wins
+        assert_eq!(majority_answer(&[None, Some(9), None]), Some(9));
+        assert_eq!(majority_answer(&[]), None);
+    }
+
+    fn row(text: &str, reward: f32) -> GenRow {
+        GenRow {
+            prompt_len: 4,
+            response: vec![1, 2, 3],
+            behavior: vec![],
+            text: text.to_string(),
+            reward,
+            hit_eos: true,
+            has_format: verifier::has_canonical_format(text),
+        }
+    }
+
+    fn problem(answer: i64) -> Problem {
+        Problem { prompt: "p".into(), gold: format!("#### {answer}"), answer, suite: "gsm8k-syn" }
+    }
+
+    #[test]
+    fn score_rows_grouped_layout_and_padding() {
+        let problems = vec![problem(7), problem(9), padding_problem()];
+        // problem 0: one of two samples correct; problem 1: majority wrong
+        // answer but one correct sample; padding rows must be ignored
+        let rows = vec![
+            row("#### 7", 1.0),
+            row("#### 8", 0.0),
+            row("#### 1", 0.0),
+            row("#### 9", 1.0),
+            row("", 0.0),
+            row("", 0.0),
+        ];
+        let sc = score_rows("gsm8k-syn", &problems, &rows, 2).unwrap();
+        assert_eq!(sc.n, 2);
+        assert_eq!(sc.k, 2);
+        assert!((sc.pass1 - 0.5).abs() < 1e-6);
+        assert!((sc.pass_k - 1.0).abs() < 1e-6, "any-correct at k=n");
+        // problem 0 majority tie -> first seen (7, correct); problem 1 tie
+        // -> first seen (1, wrong)
+        assert!((sc.maj_k - 0.5).abs() < 1e-6);
+        assert!((sc.format_rate - 1.0).abs() < 1e-6);
+        assert!(score_rows("gsm8k-syn", &problems, &rows[..4], 2).is_err(), "length mismatch");
+    }
+
+    #[test]
+    fn ladder_names_resolve_and_unknown_is_error() {
+        for b in LADDER {
+            assert!(crate::tasks::generator::suite(b.suite).is_some(), "{} missing", b.suite);
+            assert!(b.budget > 0);
+            assert_eq!(bench_suite(b.suite).unwrap().suite, b.suite);
+        }
+        assert!(bench_suite("nope").is_err());
+        // budgets shrink up the ladder, like the paper's suites
+        for w in LADDER.windows(2) {
+            assert!(w[1].budget <= w[0].budget);
+        }
+    }
+
+    #[test]
+    fn bench_run_json_roundtrip_is_deterministic() {
+        let run = BenchRun {
+            tier: "micro".into(),
+            name: "tinylora_r2_u13_all".into(),
+            params: 13,
+            k: 4,
+            seed: 777,
+            scores: vec![SuiteScore {
+                suite: "gsm8k-syn".into(),
+                n: 64,
+                k: 4,
+                pass1: 0.91,
+                pass_k: 0.984,
+                maj_k: 0.953,
+                format_rate: 0.998,
+                mean_response_len: 18.25,
+            }],
+            wall_secs: 12.5,
+        };
+        let j1 = run.to_json().to_string();
+        let back = BenchRun::from_json(&Value::parse(&j1).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), j1);
+        assert_eq!(back.scores, run.scores);
+        assert_eq!(back.wall_secs, 0.0, "timing must not survive serialization");
+    }
+
+    #[test]
+    fn markdown_golden() {
+        let run = BenchRun {
+            tier: "micro".into(),
+            name: "base".into(),
+            params: 0,
+            k: 4,
+            seed: 777,
+            scores: vec![
+                SuiteScore {
+                    suite: "gsm8k-syn".into(),
+                    n: 64,
+                    k: 4,
+                    pass1: 0.91,
+                    pass_k: 0.984,
+                    maj_k: 0.953,
+                    format_rate: 0.998,
+                    mean_response_len: 18.25,
+                },
+                SuiteScore {
+                    suite: "aime-syn".into(),
+                    n: 16,
+                    k: 4,
+                    pass1: 0.25,
+                    pass_k: 0.5,
+                    maj_k: 0.3125,
+                    format_rate: 0.75,
+                    mean_response_len: 33.5,
+                },
+            ],
+            wall_secs: 0.0,
+        };
+        let want = "### Bench — micro/base (0 params, k=4, seed 777)\n\n\
+                    | suite | stands in for | n | pass@1 | pass@4 | maj@4 | format | len |\n\
+                    |---|---|---|---|---|---|---|---|\n\
+                    | gsm8k-syn | GSM8K | 64 | 0.910 | 0.984 | 0.953 | 0.998 | 18.2 |\n\
+                    | aime-syn | AIME24 | 16 | 0.250 | 0.500 | 0.312 | 0.750 | 33.5 |\n";
+        assert_eq!(run.to_markdown(), want);
+    }
+
+    #[test]
+    fn job_seeds_are_stable_and_distinct() {
+        assert_eq!(job_seed(7, "gsm8k-syn", 0), job_seed(7, "gsm8k-syn", 0));
+        assert_ne!(job_seed(7, "gsm8k-syn", 0), job_seed(7, "gsm8k-syn", 1));
+        assert_ne!(job_seed(7, "gsm8k-syn", 0), job_seed(7, "aime-syn", 0));
+        assert_ne!(job_seed(7, "gsm8k-syn", 1), job_seed(8, "gsm8k-syn", 1));
+    }
+}

@@ -1,12 +1,27 @@
-//! Evaluation harness: greedy decoding over held-out problem sets, exact-
-//! match accuracy per suite (the paper's pass@1 protocol).
+//! Evaluation subsystem: held-out problem streams, greedy pass@1 scoring,
+//! and the full benchmark ladder.
 //!
-//! A thin client of `engine::InferenceEngine`: chunking, sentinel padding
-//! of the final partial batch and EOS-cut/decode all happen in the engine;
-//! this module only owns the held-out problem streams and the accuracy
-//! aggregation.
+//! Three layers, lowest first:
+//!
+//!   * this module — deterministic held-out problem streams
+//!     ([`eval_problems`]; seed-disjoint from training by construction)
+//!     and the paper's simplest protocol: greedy decode, exact-match
+//!     pass@1 ([`evaluate`] / [`evaluate_suite_ladder`]);
+//!   * [`bench`] — the benchmark subsystem: a registry of suites with
+//!     per-suite decode budgets ([`bench::LADDER`]), k-way temperature
+//!     sampling pooled across engine workers, and the unbiased
+//!     pass@k / maj@k estimators (Tables 1–3);
+//!   * [`report`] — recovery-fraction reports over several bench runs
+//!     (the "90% of the improvement with 1000x fewer parameters" table).
+//!
+//! All decoding is a thin client of `engine::InferenceEngine`: chunking,
+//! sentinel padding and EOS-cut/decode happen there; this subsystem owns
+//! problem streams and score aggregation only.
 
-use anyhow::Result;
+pub mod bench;
+pub mod report;
+
+use anyhow::{anyhow, Result};
 
 use crate::engine::InferenceEngine;
 use crate::runtime::Runtime;
@@ -25,10 +40,17 @@ pub struct EvalResult {
 
 /// Deterministic held-out problem set for a suite (seed stream disjoint
 /// from training by construction: trainers use stream 0x6772706f).
-pub fn eval_problems(suite_name: &str, n: usize, seed: u64) -> Vec<Problem> {
-    let s = suite(suite_name).unwrap_or(&SUITES[0]);
+/// Unknown suite names are an error — never a silent fallback to the
+/// first suite.
+pub fn eval_problems(suite_name: &str, n: usize, seed: u64) -> Result<Vec<Problem>> {
+    let s = suite(suite_name).ok_or_else(|| {
+        anyhow!(
+            "unknown eval suite {suite_name:?}; available: {:?}",
+            SUITES.iter().map(|s| s.name).collect::<Vec<_>>()
+        )
+    })?;
     let mut rng = Pcg64::with_stream(seed, 0x6576616c);
-    (0..n).map(|_| s.generate(&mut rng)).collect()
+    Ok((0..n).map(|_| s.generate(&mut rng)).collect())
 }
 
 /// Greedy-decode `n` held-out problems; exact-match accuracy.
@@ -55,7 +77,7 @@ pub fn evaluate_with(
     seed: u64,
 ) -> Result<EvalResult> {
     let tok = Tokenizer::new();
-    let problems = eval_problems(suite_name, n, seed);
+    let problems = eval_problems(suite_name, n, seed)?;
     let mut rng = Pcg64::with_stream(seed, 0x65767231);
     let rows = engine.generate_problems(rt, weights, &problems, &tok, 0.0, &mut rng)?;
 
@@ -105,14 +127,22 @@ mod tests {
 
     #[test]
     fn eval_problems_deterministic_and_distinct_from_training() {
-        let a = eval_problems("gsm8k-syn", 10, 1);
-        let b = eval_problems("gsm8k-syn", 10, 1);
+        let a = eval_problems("gsm8k-syn", 10, 1).unwrap();
+        let b = eval_problems("gsm8k-syn", 10, 1).unwrap();
         assert_eq!(a, b);
-        let c = eval_problems("gsm8k-syn", 10, 2);
+        let c = eval_problems("gsm8k-syn", 10, 2).unwrap();
         assert_ne!(a, c);
         // training stream (grpo::draw_problems) must not collide
         let mut rng = crate::util::Pcg64::with_stream(1, 0x6772706f);
         let t = crate::coordinator::grpo::draw_problems("gsm8k-syn", 10, &mut rng);
         assert_ne!(a, t);
+    }
+
+    #[test]
+    fn unknown_suite_is_an_error_not_a_fallback() {
+        let err = eval_problems("gsm8k", 4, 1).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown eval suite"), "{msg}");
+        assert!(msg.contains("gsm8k-syn"), "should list available suites: {msg}");
     }
 }

@@ -1,0 +1,291 @@
+//! Recovery-fraction reports — the paper's headline table: what fraction
+//! of a reference run's improvement over the base model each adapter
+//! recovers, keyed by trained-parameter count ("90% of the improvement
+//! with 1000x fewer trained parameters").
+//!
+//! A [`RecoveryReport`] stitches [`BenchRun`]s produced by
+//! [`crate::eval::bench`]: one baseline (the untrained base model), one
+//! reference anchoring 100% (typically the full-FT run), and any number of
+//! adapter runs. Per suite,
+//!
+//! ```text
+//! recovery = (acc_adapter - acc_base) / (acc_reference - acc_base)
+//! ```
+//!
+//! on pass@1, with a degenerate (zero-improvement) reference defined as
+//! fully recovered. Output is deterministic JSON plus a rendered markdown
+//! table (golden-tested). The `report` CLI builds one from saved bench
+//! JSON files; `experiments::recovery_report` builds one straight from
+//! in-memory training outcomes.
+
+use anyhow::{bail, Result};
+
+use crate::eval::bench::BenchRun;
+use crate::util::json::{num, obj, s, Value};
+
+/// Baseline + reference + adapter runs over one shared suite set.
+#[derive(Clone, Debug)]
+pub struct RecoveryReport {
+    /// the untrained base model (recovery 0% by definition)
+    pub baseline: BenchRun,
+    /// the run anchoring 100% recovery (full FT / the largest adapter)
+    pub reference: BenchRun,
+    /// adapter runs, sorted ascending by trained-parameter count
+    pub adapters: Vec<BenchRun>,
+}
+
+impl RecoveryReport {
+    /// Validates that every run shares the baseline's full protocol —
+    /// suite set, k, decode seed and per-suite problem counts (mixed
+    /// protocols make the fractions meaningless) — then sorts the
+    /// adapters by trained-parameter count.
+    pub fn new(
+        baseline: BenchRun,
+        reference: BenchRun,
+        mut adapters: Vec<BenchRun>,
+    ) -> Result<Self> {
+        let want: Vec<(&str, usize)> =
+            baseline.scores.iter().map(|x| (x.suite.as_str(), x.n)).collect();
+        for run in adapters.iter().chain(std::iter::once(&reference)) {
+            if run.tier != baseline.tier {
+                bail!(
+                    "backbone tier mismatch: {} ran on {}, baseline on {}",
+                    run.name,
+                    run.tier,
+                    baseline.tier
+                );
+            }
+            if run.k != baseline.k {
+                bail!("bench k mismatch: {} has k={}, baseline k={}", run.name, run.k, baseline.k);
+            }
+            if run.seed != baseline.seed {
+                bail!(
+                    "decode seed mismatch: {} ran seed {}, baseline seed {} (different problem sets)",
+                    run.name,
+                    run.seed,
+                    baseline.seed
+                );
+            }
+            let got: Vec<(&str, usize)> =
+                run.scores.iter().map(|x| (x.suite.as_str(), x.n)).collect();
+            if got != want {
+                bail!(
+                    "suite/budget mismatch: {} ran {:?}, baseline ran {:?}",
+                    run.name,
+                    got,
+                    want
+                );
+            }
+        }
+        adapters.sort_by_key(|r| r.params);
+        Ok(Self { baseline, reference, adapters })
+    }
+
+    /// Fraction of the reference improvement recovered on suite `si`
+    /// (pass@1). A reference that did not improve counts as recovered.
+    pub fn recovery(&self, run: &BenchRun, si: usize) -> f32 {
+        let base = self.baseline.scores[si].pass1;
+        let full = self.reference.scores[si].pass1 - base;
+        if full.abs() < 1e-6 {
+            return 1.0;
+        }
+        (run.scores[si].pass1 - base) / full
+    }
+
+    /// Mean recovery across the suite set.
+    pub fn mean_recovery(&self, run: &BenchRun) -> f32 {
+        let n = self.baseline.scores.len().max(1) as f32;
+        (0..self.baseline.scores.len()).map(|si| self.recovery(run, si)).sum::<f32>() / n
+    }
+
+    /// Deterministic JSON: the three run groups plus the derived recovery
+    /// table, so consumers need no recomputation.
+    pub fn to_json(&self) -> Value {
+        let table: Vec<Value> = self
+            .adapters
+            .iter()
+            .chain(std::iter::once(&self.reference))
+            .map(|run| {
+                obj(vec![
+                    ("name", s(&run.name)),
+                    ("params", num(run.params as f64)),
+                    (
+                        "per_suite",
+                        Value::Arr(
+                            (0..run.scores.len())
+                                .map(|si| num(self.recovery(run, si) as f64))
+                                .collect(),
+                        ),
+                    ),
+                    ("mean", num(self.mean_recovery(run) as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("kind", s("recovery_report")),
+            ("baseline", self.baseline.to_json()),
+            ("reference", self.reference.to_json()),
+            ("adapters", Value::Arr(self.adapters.iter().map(|r| r.to_json()).collect())),
+            ("recovery", Value::Arr(table)),
+        ])
+    }
+
+    /// The paper's table, rendered (golden-tested — keep byte-stable):
+    /// rows ordered by trained-parameter count, cells `pass@1 (recovery)`.
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!(
+            "## Recovery vs trained parameters (pass@1, k={}, seed {})\n\n| run | params |",
+            self.baseline.k, self.baseline.seed
+        );
+        for sc in &self.baseline.scores {
+            out.push_str(&format!(" {} |", sc.suite));
+        }
+        out.push_str(" mean recovery |\n|---|---|");
+        for _ in &self.baseline.scores {
+            out.push_str("---|");
+        }
+        out.push_str("---|\n");
+        out.push_str(&format!("| {} | {} |", self.baseline.name, self.baseline.params));
+        for sc in &self.baseline.scores {
+            out.push_str(&format!(" {:.3} |", sc.pass1));
+        }
+        out.push_str(" — |\n");
+        for run in self.adapters.iter().chain(std::iter::once(&self.reference)) {
+            out.push_str(&format!("| {} | {} |", run.name, run.params));
+            for si in 0..run.scores.len() {
+                out.push_str(&format!(
+                    " {:.3} ({:.0}%) |",
+                    run.scores[si].pass1,
+                    self.recovery(run, si) * 100.0
+                ));
+            }
+            out.push_str(&format!(" {:.0}% |\n", self.mean_recovery(run) * 100.0));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::bench::SuiteScore;
+
+    fn score(suite: &str, pass1: f32) -> SuiteScore {
+        SuiteScore {
+            suite: suite.into(),
+            n: 16,
+            k: 4,
+            pass1,
+            pass_k: pass1,
+            maj_k: pass1,
+            format_rate: 1.0,
+            mean_response_len: 20.0,
+        }
+    }
+
+    fn run(name: &str, params: usize, accs: &[(&str, f32)]) -> BenchRun {
+        BenchRun {
+            tier: "micro".into(),
+            name: name.into(),
+            params,
+            k: 4,
+            seed: 777,
+            scores: accs.iter().map(|&(sname, a)| score(sname, a)).collect(),
+            wall_secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn recovery_fraction_math() {
+        let report = RecoveryReport::new(
+            run("base", 0, &[("gsm8k-syn", 0.40), ("aime-syn", 0.10)]),
+            run("full", 139_000, &[("gsm8k-syn", 0.60), ("aime-syn", 0.10)]),
+            vec![run("tinylora_r2_u13_all", 13, &[("gsm8k-syn", 0.58), ("aime-syn", 0.30)])],
+        )
+        .unwrap();
+        let tiny = &report.adapters[0];
+        assert!((report.recovery(tiny, 0) - 0.9).abs() < 1e-6);
+        // degenerate reference (no improvement) counts as fully recovered
+        assert_eq!(report.recovery(tiny, 1), 1.0);
+        assert!((report.mean_recovery(tiny) - 0.95).abs() < 1e-6);
+        // the reference recovers itself on the improving suite
+        assert!((report.recovery(&report.reference, 0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adapters_sorted_by_params_and_mismatches_rejected() {
+        let report = RecoveryReport::new(
+            run("base", 0, &[("gsm8k-syn", 0.4)]),
+            run("full", 1000, &[("gsm8k-syn", 0.6)]),
+            vec![
+                run("b", 13, &[("gsm8k-syn", 0.5)]),
+                run("a", 1, &[("gsm8k-syn", 0.45)]),
+            ],
+        )
+        .unwrap();
+        assert_eq!(report.adapters[0].params, 1);
+        assert_eq!(report.adapters[1].params, 13);
+
+        // different suite set
+        assert!(RecoveryReport::new(
+            run("base", 0, &[("gsm8k-syn", 0.4)]),
+            run("full", 1000, &[("aime-syn", 0.6)]),
+            vec![],
+        )
+        .is_err());
+        // different k
+        let mut other_k = run("full", 1000, &[("gsm8k-syn", 0.6)]);
+        other_k.k = 8;
+        assert!(RecoveryReport::new(run("base", 0, &[("gsm8k-syn", 0.4)]), other_k, vec![])
+            .is_err());
+        // different backbone tier
+        let mut other_tier = run("full", 1000, &[("gsm8k-syn", 0.6)]);
+        other_tier.tier = "nano".into();
+        assert!(RecoveryReport::new(run("base", 0, &[("gsm8k-syn", 0.4)]), other_tier, vec![])
+            .is_err());
+        // different decode seed (different problem sets)
+        let mut other_seed = run("full", 1000, &[("gsm8k-syn", 0.6)]);
+        other_seed.seed = 3;
+        assert!(RecoveryReport::new(run("base", 0, &[("gsm8k-syn", 0.4)]), other_seed, vec![])
+            .is_err());
+        // different per-suite budget
+        let mut other_n = run("full", 1000, &[("gsm8k-syn", 0.6)]);
+        other_n.scores[0].n = 8;
+        assert!(RecoveryReport::new(run("base", 0, &[("gsm8k-syn", 0.4)]), other_n, vec![])
+            .is_err());
+    }
+
+    #[test]
+    fn markdown_golden() {
+        let report = RecoveryReport::new(
+            run("base", 0, &[("gsm8k-syn", 0.40), ("aime-syn", 0.10)]),
+            run("full", 139000, &[("gsm8k-syn", 0.60), ("aime-syn", 0.30)]),
+            vec![run("tinylora_r2_u13_all", 13, &[("gsm8k-syn", 0.58), ("aime-syn", 0.25)])],
+        )
+        .unwrap();
+        let want = "## Recovery vs trained parameters (pass@1, k=4, seed 777)\n\n\
+                    | run | params | gsm8k-syn | aime-syn | mean recovery |\n\
+                    |---|---|---|---|---|\n\
+                    | base | 0 | 0.400 | 0.100 | — |\n\
+                    | tinylora_r2_u13_all | 13 | 0.580 (90%) | 0.250 (75%) | 82% |\n\
+                    | full | 139000 | 0.600 (100%) | 0.300 (100%) | 100% |\n";
+        assert_eq!(report.to_markdown(), want);
+    }
+
+    #[test]
+    fn json_contains_derived_table() {
+        let report = RecoveryReport::new(
+            run("base", 0, &[("gsm8k-syn", 0.4)]),
+            run("full", 1000, &[("gsm8k-syn", 0.6)]),
+            vec![run("tiny", 13, &[("gsm8k-syn", 0.5)])],
+        )
+        .unwrap();
+        let v = report.to_json();
+        assert_eq!(v.get("kind").unwrap().str().unwrap(), "recovery_report");
+        let rows = v.get("recovery").unwrap().arr().unwrap();
+        assert_eq!(rows.len(), 2); // adapter + reference
+        assert!((rows[0].get("mean").unwrap().f64().unwrap() - 0.5).abs() < 1e-6);
+        // deterministic: serializing twice is byte-identical
+        assert_eq!(v.to_string(), report.to_json().to_string());
+    }
+}

@@ -9,7 +9,9 @@
 //!     the `trainer` subsystem (the one canonical training-step skeleton:
 //!     `TrainSession` + resumable `TrainState` + the multi-tenant
 //!     `TenantTrainer`), the pretrain/GRPO/SFT loss loops, rollouts,
-//!     evaluation, the multi-adapter serving plane, metrics and the CLI.
+//!     the `eval` subsystem (greedy pass@1 plus the `eval::bench`
+//!     pass@k/maj@k suite ladder and `eval::report` recovery-fraction
+//!     reports), the multi-adapter serving plane, metrics and the CLI.
 //!     Rollout, eval and serving are thin clients of `engine`; the three
 //!     loss loops are thin `TrainLoop` impls driven by `trainer`.
 //!

@@ -9,9 +9,15 @@
 //!                train independent adapters against one shared backbone
 //!                (rollout waves pooled over `--workers` threads) and
 //!                register into the serving AdapterStore
-//!   eval       — run the benchmark ladder on a checkpoint (+ optional adapter)
+//!   eval       — greedy pass@1 on a checkpoint (+ optional --ladder)
+//!   bench      — the benchmark subsystem: k-way sampled decoding over the
+//!                suite ladder, pass@k/maj@k pooled across --workers,
+//!                deterministic JSON + markdown per run
+//!   report     — stitch saved bench JSONs into the paper's
+//!                recovery-fraction table (baseline/reference/adapters)
 //!   sweep      — the paper's LR-sweep protocol for one scheme (runs as a
-//!                lrs × seeds tenant grid for GRPO)
+//!                lrs × seeds tenant grid for GRPO); --bench-k K benches
+//!                the winning adapter on the ladder afterwards
 //!   serve-demo — multi-adapter serving simulation
 //!   info       — manifest summary + the paper's Table 1 per tier
 
@@ -41,6 +47,8 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "tenants" => cmd_tenants(&args),
         "eval" => cmd_eval(&args),
+        "bench" => cmd_bench(&args),
+        "report" => cmd_report(&args),
         "sweep" => cmd_sweep(&args),
         "serve-demo" => cmd_serve_demo(&args),
         "info" => cmd_info(&args),
@@ -67,8 +75,16 @@ COMMANDS
               [--steps 40] [--lr 2e-3] [--workers 4] [--precision bf16]
               [--suite gsm8k-syn] [--seed 0] [--max-resident 4]
   eval        --tier micro [--suite gsm8k-syn | --ladder] [--n 64]
+  bench       --tier micro [--suites gsm8k-syn,math500-syn,amc-syn,aime-syn]
+              [--k 4] [--n 0] [--workers 4] [--temperature -1] [--seed 777]
+              [--echo]   (benches the base backbone; adapter runs come
+              from `sweep --bench-k`)
+  report      --baseline results/bench_<..>.json --reference <..>.json
+              [--runs a.json,b.json] [--out results/report.md]
   sweep       --tier micro --scheme <tag> [--algo grpo] [--lrs 5e-4,2e-3,8e-3]
-              [--seeds 0,1] [--steps 40] [--workers 1]
+              [--seeds 0,1] [--steps 40] [--workers 1] [--bench-k 0]
+              (--bench-k K benches base + the winning adapter on the
+              ladder; shaped by --suites, --bench-n and --temperature)
   serve-demo  --tier micro [--tenants 16] [--requests 64] [--workers 1]
   info        [--tier micro]
 
@@ -310,8 +326,86 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The benchmark subsystem's CLI face: k-way sampled decoding over the
+/// suite ladder, pooled across workers, deterministic JSON + markdown out.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use tinylora_rl::eval::bench::{run_ladder, BenchConfig};
+
+    let dirs = Dirs::from_args(args);
+    let rt = runtime(&dirs)?;
+    let tier = args.str("tier", "micro");
+    let base = Policy::load_base(&rt, &tier, &dirs.ckpts)?;
+    let cfg = BenchConfig {
+        tier: tier.clone(),
+        suites: args.str_list("suites", &[]),
+        k: args.usize("k", 4)?,
+        n: args.usize("n", 0)?,
+        temperature: args.f32("temperature", -1.0)?,
+        seed: args.u64("seed", 777)?,
+        workers: args.usize("workers", 1)?,
+        batch: args.usize("batch", 0)?,
+    };
+    // this command only ever decodes the base backbone, so the run is
+    // labeled "base"/0 params — adapter bench runs come from
+    // `sweep --bench-k` (winning merged weights) or
+    // `experiments::recovery_report`, never from relabeling base scores
+    let run = run_ladder(&rt, &base, "base", 0, &cfg)?;
+
+    let mut log =
+        RunLog::new(Some(&dirs.results.join(format!("bench_{tier}.jsonl"))), args.bool("echo"));
+    for sc in &run.scores {
+        log.log_bench(&format!("{tier}/base"), 0, sc);
+    }
+    let json_path = dirs.results.join(format!("bench_{tier}_base_k{}.json", cfg.k));
+    run.save(&json_path)?;
+    println!("{}", run.to_markdown());
+    println!(
+        "ladder: {} suites x k={} in {:.1}s ({} workers) -> {}",
+        run.scores.len(),
+        cfg.k,
+        run.wall_secs,
+        cfg.workers,
+        json_path.display()
+    );
+    Ok(())
+}
+
+/// Stitch saved bench JSONs into the recovery-fraction report. Pure file
+/// plumbing — needs no artifacts/runtime, so reports can be regenerated
+/// anywhere.
+fn cmd_report(args: &Args) -> Result<()> {
+    use tinylora_rl::eval::bench::BenchRun;
+    use tinylora_rl::eval::report::RecoveryReport;
+
+    let dirs = Dirs::from_args(args);
+    let baseline = BenchRun::load(Path::new(&args.req("baseline")?))?;
+    let reference = BenchRun::load(Path::new(&args.req("reference")?))?;
+    let runs: Vec<BenchRun> = args
+        .str_list("runs", &[])
+        .iter()
+        .filter(|p| !p.is_empty())
+        .map(|p| BenchRun::load(Path::new(p)))
+        .collect::<Result<_>>()?;
+    let report = RecoveryReport::new(baseline, reference, runs)?;
+
+    let md = report.to_markdown();
+    let out_md = args.str("out", &dirs.results.join("report.md").to_string_lossy());
+    let out_md = Path::new(&out_md);
+    if let Some(dir) = out_md.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(out_md, &md)?;
+    let out_json = out_md.with_extension("json");
+    std::fs::write(&out_json, report.to_json().to_string() + "\n")?;
+    println!("{md}");
+    println!("report: {} + {}", out_md.display(), out_json.display());
+    Ok(())
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
-    use tinylora_rl::coordinator::sweep::{sweep_scheme, SweepConfig};
+    use tinylora_rl::coordinator::sweep::{sweep_scheme_full, SweepConfig};
+    use tinylora_rl::eval::bench::{run_ladder_with, BenchConfig};
+    use tinylora_rl::InferenceEngine;
     let dirs = Dirs::from_args(args);
     let rt = runtime(&dirs)?;
     let tier = args.str("tier", "micro");
@@ -336,15 +430,57 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         workers: args.usize("workers", 1)?,
         batch: args.usize("batch", 0)?,
     };
+    // validate the post-training bench config BEFORE spending minutes on
+    // the sweep: a k that doesn't divide the decode batch, or a typo'd
+    // suite name, fails in ms here instead of after training
+    let bench_k = args.usize("bench-k", 0)?;
+    let bench_suites = args.str_list("suites", &[]);
+    let bench_batch = if cfg.batch > 0 { cfg.batch } else { rt.manifest.batch.roll };
+    if bench_k > 0 {
+        if bench_batch % bench_k != 0 {
+            anyhow::bail!("--bench-k {bench_k} must divide the decode batch {bench_batch}");
+        }
+        for name in &bench_suites {
+            tinylora_rl::eval::bench::bench_suite(name)?;
+        }
+    }
+
     let mut log = RunLog::new(
         Some(&dirs.results.join(format!("sweep_{tier}_{scheme}.jsonl"))),
         args.bool("echo"),
     );
-    let out = sweep_scheme(&rt, &base, &cfg, &dirs.ckpts, &mut log)?;
+    let (out, best_merged) = sweep_scheme_full(&rt, &base, &cfg, &dirs.ckpts, &mut log)?;
     println!(
         "{}: {} params | baseline {:.3} -> best {:.3} @ lr {:.1e}",
         out.scheme_tag, out.trainable_params, out.baseline_accuracy, out.accuracy, out.best_lr
     );
+
+    // post-training eval in the same call: bench the base model and the
+    // winning adapter over the pass@k/maj@k ladder; `report` stitches the
+    // saved JSONs (plus a full-FT reference) into the recovery table
+    if bench_k > 0 {
+        let bcfg = BenchConfig {
+            tier: tier.clone(),
+            suites: bench_suites,
+            k: bench_k,
+            n: args.usize("bench-n", 0)?,
+            temperature: args.f32("temperature", -1.0)?,
+            seed: 777,
+            workers: cfg.workers,
+            batch: cfg.batch,
+        };
+        // one engine for both runs — same (tier, batch) geometry
+        let engine = InferenceEngine::new(&rt, &tier, bench_batch)?;
+        let base_run = run_ladder_with(&rt, &engine, &base, "base", 0, &bcfg)?;
+        let adapter_run =
+            run_ladder_with(&rt, &engine, &best_merged, &scheme, out.trainable_params, &bcfg)?;
+        let base_path = dirs.results.join(format!("bench_{tier}_base_k{bench_k}.json"));
+        let adapter_path = dirs.results.join(format!("bench_{tier}_{scheme}_k{bench_k}.json"));
+        base_run.save(&base_path)?;
+        adapter_run.save(&adapter_path)?;
+        println!("{}", adapter_run.to_markdown());
+        println!("bench: {} + {}", base_path.display(), adapter_path.display());
+    }
     Ok(())
 }
 

@@ -1,6 +1,10 @@
-//! Metrics: JSONL run logs + console progress.  Every trainer step and
-//! sweep point lands in one append-only file so figures can be regenerated
-//! from logged data.
+//! Metrics: JSONL run logs + console progress.  Every trainer step, sweep
+//! point, eval and bench score lands in one append-only file so figures
+//! and reports can be regenerated from logged data.
+//!
+//! Row schema is one JSON object per line with a `kind` discriminator
+//! (`step` / `pretrain` / `sweep_point` / `eval` / `bench`); all rows are
+//! written through `util::json`, so they parse back losslessly (tested).
 
 use std::fs::File;
 use std::io::Write;
@@ -128,6 +132,28 @@ impl RunLog {
             ("scheme", s(scheme)),
             ("lr", num(lr as f64)),
             ("accuracy", num(acc as f64)),
+        ]));
+    }
+
+    /// One benchmark-ladder suite score (`eval::bench`).
+    pub fn log_bench(&mut self, name: &str, params: usize, sc: &crate::eval::bench::SuiteScore) {
+        if self.echo {
+            println!(
+                "[bench {name} p={params}] {}: pass@1 {:.3} pass@{} {:.3} maj@{} {:.3} (n={})",
+                sc.suite, sc.pass1, sc.k, sc.pass_k, sc.k, sc.maj_k, sc.n
+            );
+        }
+        self.log(obj(vec![
+            ("kind", s("bench")),
+            ("name", s(name)),
+            ("params", num(params as f64)),
+            ("suite", s(&sc.suite)),
+            ("n", num(sc.n as f64)),
+            ("k", num(sc.k as f64)),
+            ("pass1", num(sc.pass1 as f64)),
+            ("pass_k", num(sc.pass_k as f64)),
+            ("maj_k", num(sc.maj_k as f64)),
+            ("format_rate", num(sc.format_rate as f64)),
         ]));
     }
 

@@ -4,6 +4,9 @@
 //! (rust supplies uniforms; see runtime docs), so this module serves the
 //! per-step decode path (serving plane) and is the reference the in-HLO
 //! sampler is validated against (integration test `generate_matches_host`).
+//! The benchmark subsystem's k-way sampled decoding (`eval::bench`) rides
+//! the same convention: temperature flows into the executable, uniforms
+//! come from per-job RNG streams.
 
 use crate::util::Pcg64;
 
@@ -44,6 +47,16 @@ impl Default for SamplingParams {
 /// Sample one token; returns (token, logp under the sampling distribution).
 /// Matches the in-HLO sampler: inverse-CDF over softmax(logits/temp) driven
 /// by a single uniform.
+///
+/// ```
+/// use tinylora_rl::sampler::{sample, SamplingParams};
+/// // temperature <= 0 is greedy: picks the argmax, logp convention 0.0
+/// let (tok, lp) = sample(&[0.1, 3.0, -1.0], SamplingParams { temperature: 0.0, top_k: 0 }, 0.5);
+/// assert_eq!((tok, lp), (1, 0.0));
+/// // u=0 always lands in the first bucket of the inverse CDF
+/// let (tok, _) = sample(&[10.0, -10.0], SamplingParams::default(), 0.0);
+/// assert_eq!(tok, 0);
+/// ```
 pub fn sample(logits: &[f32], params: SamplingParams, u: f32) -> (usize, f32) {
     if params.temperature <= 0.0 {
         let t = argmax(logits);

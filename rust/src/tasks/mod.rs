@@ -4,6 +4,12 @@
 //! verifiable integer answers, over a difficulty ladder that mirrors the
 //! paper's evaluation suites; the reward is exact-match on the canonical
 //! `#### <answer>` format, exactly as in the paper's RLVR setup.
+//!
+//! Submodules: [`generator`] (the suites and their problem templates),
+//! [`verifier`] (answer extraction + binary reward), [`corpus`] (batch
+//! builders and the pretraining format mixture).  The benchmark subsystem
+//! (`eval::bench`) layers per-suite decode budgets and pass@k/maj@k
+//! scoring on top of these generators.
 
 pub mod corpus;
 pub mod generator;

@@ -6,6 +6,13 @@
 
 /// Extract the answer from the LAST `####` marker (models sometimes emit
 /// several; graders take the final one).
+///
+/// ```
+/// use tinylora_rl::tasks::extract_answer;
+/// assert_eq!(extract_answer("12+3=15\n#### 15"), Some(15));
+/// assert_eq!(extract_answer("#### 1\nwait\n#### 2"), Some(2));
+/// assert_eq!(extract_answer("the answer is 5"), None);
+/// ```
 pub fn extract_answer(text: &str) -> Option<i64> {
     let idx = text.rfind("####")?;
     let rest = text[idx + 4..].trim_start();

@@ -159,11 +159,7 @@ impl TenantTrainer {
             plans.push(plan);
         }
         let t0 = Timer::start();
-        let results = if parallel {
-            self.pool.serve(rt, &self.engine, jobs)?
-        } else {
-            WorkerPool::serve_serial(rt, &self.engine, &jobs)?
-        };
+        let results = self.pool.serve_maybe(rt, &self.engine, jobs, parallel)?;
         // results come back sorted by job id == tenant index
         let wave_ms = t0.millis();
         let per_tenant_ms = wave_ms / g as f64;

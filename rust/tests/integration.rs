@@ -15,6 +15,9 @@ use tinylora_rl::coordinator::rollout::RolloutEngine;
 use tinylora_rl::coordinator::sweep::{sweep_scheme, SweepConfig};
 use tinylora_rl::engine::pool::{GenJob, WorkerPool};
 use tinylora_rl::engine::InferenceEngine;
+use tinylora_rl::eval::bench::{run_ladder_with, BenchConfig, LADDER};
+use tinylora_rl::eval::evaluate_with;
+use tinylora_rl::eval::report::RecoveryReport;
 use tinylora_rl::metrics::RunLog;
 use tinylora_rl::serving::AdapterStore;
 use tinylora_rl::tasks::corpus::{pretrain_batch, prompt_batch, sft_batch};
@@ -584,6 +587,111 @@ fn sweep_is_deterministic_across_runs_and_workers() {
     assert_eq!(a.to_json().to_string(), b.to_json().to_string());
     assert_eq!(a.to_json().to_string(), c.to_json().to_string(), "worker count changed results");
     assert_eq!(a.per_lr.len(), 2);
+}
+
+// ---------------------------------------------------------------------------
+// ISSUE 3: benchmark subsystem — pooled pass@k/maj@k ladder runs and the
+// recovery-fraction report.
+// ---------------------------------------------------------------------------
+
+fn bench_cfg(k: usize, n: usize, workers: usize, batch: usize) -> BenchConfig {
+    BenchConfig {
+        tier: "nano".into(),
+        suites: Vec::new(), // the full 4-suite ladder
+        k,
+        n,
+        temperature: 1.0,
+        seed: 3,
+        workers,
+        batch,
+    }
+}
+
+/// ISSUE 3 acceptance: the full 4-suite ladder at k=4 pooled across
+/// workers is byte-identical (canonical JSON) to the serial reference,
+/// and bench runs survive a save/load roundtrip.
+#[test]
+fn bench_ladder_pooled_matches_serial_and_roundtrips() {
+    require_artifacts!();
+    let rt = runtime();
+    let b = rt.manifest.batch.test;
+    let base = WeightSet::init(&rt.manifest.tier("nano").unwrap().clone(), 3);
+    let engine = InferenceEngine::new(rt, "nano", b).unwrap();
+
+    let serial = run_ladder_with(rt, &engine, &base, "base", 0, &bench_cfg(4, 4, 1, b)).unwrap();
+    let pooled = run_ladder_with(rt, &engine, &base, "base", 0, &bench_cfg(4, 4, 3, b)).unwrap();
+    assert_eq!(
+        serial.to_json().to_string(),
+        pooled.to_json().to_string(),
+        "pooled ladder != serial ladder"
+    );
+    assert_eq!(serial.scores.len(), LADDER.len());
+    for sc in &serial.scores {
+        assert_eq!(sc.k, 4);
+        assert_eq!(sc.n, 4, "padding rows must not be scored");
+        for v in [sc.pass1, sc.pass_k, sc.maj_k, sc.format_rate] {
+            assert!((0.0..=1.0).contains(&v), "{}: {v} out of range", sc.suite);
+        }
+        assert!(sc.pass1 <= sc.pass_k + 1e-6, "{}: pass@1 > pass@k", sc.suite);
+    }
+
+    let path = std::env::temp_dir().join("tlrl_itest_bench.json");
+    serial.save(&path).unwrap();
+    let back = tinylora_rl::eval::bench::BenchRun::load(&path).unwrap();
+    assert_eq!(back.to_json().to_string(), serial.to_json().to_string());
+    std::fs::remove_file(&path).ok();
+
+    // k that does not divide the baked batch is an error, not a mis-scored run
+    let err = run_ladder_with(rt, &engine, &base, "base", 0, &bench_cfg(3, 4, 1, b));
+    assert!(err.is_err(), "k=3 must not divide batch {b}");
+}
+
+/// k=1 greedy benching reduces to the original eval protocol exactly —
+/// the bench subsystem strictly generalises `evaluate`.
+#[test]
+fn bench_k1_greedy_matches_eval_accuracy() {
+    require_artifacts!();
+    let rt = runtime();
+    let b = rt.manifest.batch.test;
+    let base = WeightSet::init(&rt.manifest.tier("nano").unwrap().clone(), 3);
+    let engine = InferenceEngine::new(rt, "nano", b).unwrap();
+    let mut cfg = bench_cfg(1, 8, 1, b);
+    cfg.suites = vec!["gsm8k-syn".into()];
+    cfg.temperature = 0.0;
+    let run = run_ladder_with(rt, &engine, &base, "base", 0, &cfg).unwrap();
+    let ev = evaluate_with(rt, &engine, &base, "gsm8k-syn", 8, 3).unwrap();
+    assert!((run.scores[0].pass1 - ev.accuracy).abs() < 1e-6, "bench k=1 != greedy eval");
+    assert!((run.scores[0].pass_k - ev.accuracy).abs() < 1e-6);
+    assert!((run.scores[0].format_rate - ev.format_rate).abs() < 1e-6);
+}
+
+/// Recovery-fraction plumbing over real bench runs: two weight sets stand
+/// in for base and full-FT; the reference recovers 100% of itself on
+/// every suite, and the report JSON is deterministic.
+#[test]
+fn recovery_report_over_real_bench_runs() {
+    require_artifacts!();
+    let rt = runtime();
+    let b = rt.manifest.batch.test;
+    let tier = rt.manifest.tier("nano").unwrap().clone();
+    let engine = InferenceEngine::new(rt, "nano", b).unwrap();
+    let baseline =
+        run_ladder_with(rt, &engine, &WeightSet::init(&tier, 3), "base", 0, &bench_cfg(2, 4, 2, b))
+            .unwrap();
+    let full_ft = WeightSet::init(&tier, 5);
+    let reference =
+        run_ladder_with(rt, &engine, &full_ft, "full", 1000, &bench_cfg(2, 4, 2, b)).unwrap();
+    let report = RecoveryReport::new(baseline, reference, Vec::new()).unwrap();
+    for si in 0..report.reference.scores.len() {
+        assert!(
+            (report.recovery(&report.reference, si) - 1.0).abs() < 1e-6,
+            "reference must recover itself on suite {si}"
+        );
+    }
+    assert_eq!(report.to_json().to_string(), report.to_json().to_string());
+    let md = report.to_markdown();
+    assert!(md.contains("| full | 1000 |"), "{md}");
+    assert!(md.contains("100%"), "{md}");
 }
 
 #[test]
