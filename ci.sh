@@ -23,6 +23,20 @@ fi
 echo "== cargo test -q =="
 cargo test -q
 
+# Perf-trajectory gate: the committed BENCH_runtime.json must stay
+# schema-valid and its deterministic sections (occupancy-aware padding
+# vs the fixed-geometry baseline) must match a fresh recomputation.
+# Skips cleanly when the snapshot is absent; the measured
+# device_parallel section is only refreshed intentionally, never here.
+if [[ "$FAST" -eq 0 ]]; then
+  if [[ -f ../BENCH_runtime.json ]]; then
+    echo "== bench_runtime --check (perf snapshot) =="
+    cargo bench --bench bench_runtime -- --check
+  else
+    echo "== BENCH_runtime.json absent — perf-snapshot check skipped =="
+  fi
+fi
+
 if cargo clippy --version >/dev/null 2>&1; then
   echo "== cargo clippy --all-targets -- -D warnings =="
   cargo clippy --all-targets -- -D warnings

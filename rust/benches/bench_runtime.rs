@@ -1,0 +1,312 @@
+//! Runtime-subsystem benchmarks + the repo's machine-readable perf
+//! trajectory (`cargo bench --bench bench_runtime`).
+//!
+//! Emits `../BENCH_runtime.json` (repo root), the committed perf snapshot
+//! the repo regresses against. The snapshot's schema is deterministic and
+//! split in two:
+//!
+//!   * deterministic sections (`geometry`, `padding`) — pure functions of
+//!     the code (occupancy-aware `flush_plan` vs the fixed-geometry
+//!     baseline over a queue-depth grid), byte-identical on every
+//!     machine; `--check` recomputes them and fails on any drift;
+//!   * the measured section (`device_parallel`) — rows/s serial vs pooled
+//!     at D ∈ {1, 2, 4} execution contexts over real artifacts; `null`
+//!     when artifacts aren't built (the snapshot is refreshed
+//!     intentionally on benchmark-capable machines, never silently).
+//!
+//! Modes:
+//!   cargo bench --bench bench_runtime              # run + rewrite snapshot
+//!   cargo bench --bench bench_runtime -- --check   # validate committed
+//!                                                  # snapshot (ci.sh gate)
+
+use std::path::Path;
+
+use tinylora_rl::engine::pool::{GenJob, WorkerPool};
+use tinylora_rl::engine::{flush_plan, InferenceEngine};
+use tinylora_rl::eval::eval_problems;
+use tinylora_rl::tensor::{TensorF32, TensorI32};
+use tinylora_rl::util::json::{num, obj, s, Value};
+use tinylora_rl::util::timer::time_iters;
+use tinylora_rl::util::Timer;
+use tinylora_rl::weights::WeightSet;
+use tinylora_rl::Runtime;
+
+/// Committed snapshot path (repo root; cargo bench runs from `rust/`).
+/// Override with TINYLORA_BENCH_RUNTIME for scratch runs.
+fn snapshot_path() -> String {
+    std::env::var("TINYLORA_BENCH_RUNTIME").unwrap_or_else(|_| "../BENCH_runtime.json".into())
+}
+
+const SCHEMA_VERSION: usize = 1;
+/// Fixed-geometry baseline: one baked batch, tails pad all the way up.
+const FIXED: &[usize] = &[32];
+/// Occupancy-aware geometry set: tails flush on the smallest fit.
+const OCCUPANCY: &[usize] = &[4, 8, 16, 32];
+/// Queue depths swept by the padding comparison: 1..=DEPTH_MAX.
+const DEPTH_MAX: usize = 96;
+
+fn padded_rows(plan: &[(usize, usize)]) -> usize {
+    plan.iter().map(|(g, real)| g - real).sum()
+}
+
+fn geometry_section() -> Value {
+    let ints = |xs: &[usize]| Value::Arr(xs.iter().map(|&x| num(x as f64)).collect());
+    obj(vec![("fixed", ints(FIXED)), ("occupancy", ints(OCCUPANCY))])
+}
+
+/// Deterministic padding-waste comparison: integer totals only (integers
+/// serialize identically everywhere; ratios are derived at read time).
+fn padding_section() -> Value {
+    let canonical = *OCCUPANCY.last().unwrap();
+    let (mut rows, mut fixed_padded, mut occupancy_padded) = (0usize, 0usize, 0usize);
+    for depth in 1..=DEPTH_MAX {
+        rows += depth;
+        fixed_padded += padded_rows(&flush_plan(FIXED, canonical, depth));
+        occupancy_padded += padded_rows(&flush_plan(OCCUPANCY, canonical, depth));
+    }
+    obj(vec![
+        ("depth_min", num(1.0)),
+        ("depth_max", num(DEPTH_MAX as f64)),
+        ("rows", num(rows as f64)),
+        ("fixed_padded", num(fixed_padded as f64)),
+        ("occupancy_padded", num(occupancy_padded as f64)),
+    ])
+}
+
+/// Measured section: decode throughput serial vs pooled at D execution
+/// contexts. Needs artifacts; returns `Value::Null` otherwise.
+fn device_section() -> Value {
+    if !Path::new("artifacts/manifest.json").exists() {
+        println!("artifacts not built — device_parallel section skipped");
+        return Value::Null;
+    }
+    let n_jobs = 8usize;
+    let workers = 4usize;
+    let mut serial_rps = 0.0f64;
+    let mut pooled = Vec::new();
+    for d in [1usize, 2, 4] {
+        let rt = Runtime::with_devices(Path::new("artifacts"), d).expect("runtime");
+        let tier = rt.manifest.tier("nano").expect("nano tier").clone();
+        let batch = rt.manifest.batch.test;
+        let engine = InferenceEngine::new(&rt, "nano", batch).expect("engine");
+        let base = WeightSet::init(&tier, 0);
+        let make_jobs = || -> Vec<GenJob> {
+            (0..n_jobs as u64)
+                .map(|id| GenJob {
+                    id,
+                    weights: base.clone(),
+                    problems: eval_problems("gsm8k-syn", batch, 100 + id).unwrap(),
+                    group: 1,
+                    pb: None,
+                    temperature: 1.0,
+                    seed: id,
+                })
+                .collect()
+        };
+        let total_rows = (n_jobs * batch) as f64;
+        let pool = WorkerPool::new(workers);
+        // warmup: compile every (context, geometry) the jobs will touch
+        pool.serve(&rt, &engine, make_jobs()).expect("warmup");
+        if d == 1 {
+            let t = Timer::start();
+            WorkerPool::serve_serial(&rt, &engine, &make_jobs()).expect("serial");
+            serial_rps = total_rows / t.secs();
+        }
+        let t = Timer::start();
+        pool.serve(&rt, &engine, make_jobs()).expect("pooled");
+        let rps = total_rows / t.secs();
+        println!("device_parallel: D={d} pooled {rps:>9.1} rows/s ({workers} workers)");
+        pooled.push((d, rps));
+    }
+    println!("device_parallel: serial {serial_rps:>9.1} rows/s");
+    obj(vec![
+        ("tier", s("nano")),
+        ("jobs", num(n_jobs as f64)),
+        ("workers", num(workers as f64)),
+        ("serial_rows_per_s", num(serial_rps)),
+        (
+            "pooled_rows_per_s",
+            Value::Arr(
+                pooled
+                    .iter()
+                    .map(|&(d, rps)| {
+                        obj(vec![("devices", num(d as f64)), ("rows_per_s", num(rps))])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn build_snapshot(device: Value) -> Value {
+    obj(vec![
+        ("kind", s("bench_runtime")),
+        ("schema_version", num(SCHEMA_VERSION as f64)),
+        ("geometry", geometry_section()),
+        ("padding", padding_section()),
+        ("device_parallel", device),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// schema validation (the ci.sh gate)
+// ---------------------------------------------------------------------------
+
+fn ascending_usizes(v: &Value, what: &str) -> Result<(), String> {
+    let xs = v.usize_vec().map_err(|e| format!("{what}: {e:#}"))?;
+    if xs.is_empty() {
+        return Err(format!("{what}: empty geometry set"));
+    }
+    if xs.windows(2).any(|w| w[0] >= w[1]) {
+        return Err(format!("{what}: not strictly ascending: {xs:?}"));
+    }
+    Ok(())
+}
+
+/// Structural validation of a snapshot (measured values are NOT compared
+/// — only their schema; the deterministic sections are compared exactly
+/// by `check_snapshot`).
+fn validate_schema(v: &Value) -> Result<(), String> {
+    let get = |key: &str| v.get(key).map_err(|e| format!("{e:#}"));
+    if get("kind")?.str().map_err(|e| format!("kind: {e:#}"))? != "bench_runtime" {
+        return Err("kind != bench_runtime".into());
+    }
+    let version = get("schema_version")?.usize().map_err(|e| format!("schema_version: {e:#}"))?;
+    if version != SCHEMA_VERSION {
+        return Err(format!("schema_version {version} != {SCHEMA_VERSION}"));
+    }
+    let geo = get("geometry")?;
+    ascending_usizes(geo.get("fixed").map_err(|e| format!("{e:#}"))?, "geometry.fixed")?;
+    ascending_usizes(geo.get("occupancy").map_err(|e| format!("{e:#}"))?, "geometry.occupancy")?;
+    let pad = get("padding")?;
+    let field = |key: &str| -> Result<usize, String> {
+        pad.get(key)
+            .and_then(|x| x.usize())
+            .map_err(|e| format!("padding.{key}: {e:#}"))
+    };
+    let (rows, fixed, occ) =
+        (field("rows")?, field("fixed_padded")?, field("occupancy_padded")?);
+    field("depth_min")?;
+    field("depth_max")?;
+    if occ > fixed {
+        return Err(format!(
+            "padding regression: occupancy_padded {occ} > fixed_padded {fixed} (rows {rows})"
+        ));
+    }
+    let dev = get("device_parallel")?;
+    if !matches!(dev, Value::Null) {
+        dev.get("tier")
+            .and_then(|x| x.str().map(str::to_string))
+            .map_err(|e| format!("device_parallel.tier: {e:#}"))?;
+        for key in ["jobs", "workers", "serial_rows_per_s"] {
+            dev.get(key)
+                .and_then(|x| x.f64())
+                .map_err(|e| format!("device_parallel.{key}: {e:#}"))?;
+        }
+        let pooled = dev
+            .get("pooled_rows_per_s")
+            .and_then(|x| x.arr().map(|a| a.to_vec()))
+            .map_err(|e| format!("device_parallel.pooled_rows_per_s: {e:#}"))?;
+        for p in &pooled {
+            p.get("devices")
+                .and_then(|x| x.usize())
+                .map_err(|e| format!("pooled devices: {e:#}"))?;
+            p.get("rows_per_s")
+                .and_then(|x| x.f64())
+                .map_err(|e| format!("pooled rows_per_s: {e:#}"))?;
+        }
+    }
+    Ok(())
+}
+
+/// `--check`: the committed snapshot must be schema-valid AND its
+/// deterministic sections must equal a fresh recomputation byte-for-byte.
+fn check_snapshot(path: &str) -> Result<(), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let v = Value::parse(text.trim()).map_err(|e| format!("parsing {path}: {e:#}"))?;
+    validate_schema(&v)?;
+    let want = geometry_section();
+    let got = v.get("geometry").map_err(|e| format!("{e:#}"))?;
+    if *got != want {
+        return Err(format!(
+            "geometry drift: committed {} != recomputed {}",
+            got.to_string(),
+            want.to_string()
+        ));
+    }
+    let want = padding_section();
+    let got = v.get("padding").map_err(|e| format!("{e:#}"))?;
+    if *got != want {
+        return Err(format!(
+            "padding drift: committed {} != recomputed {} — occupancy-aware \
+             geometry selection changed; rerun `cargo bench --bench \
+             bench_runtime` and commit the refreshed snapshot",
+            got.to_string(),
+            want.to_string()
+        ));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// micro-benches (printed only; never serialized — timings are not
+// deterministic and the snapshot stays byte-stable without them)
+// ---------------------------------------------------------------------------
+
+fn bench_literal_conversion() {
+    let mut run = |name: &str, iters: usize, f: &mut dyn FnMut()| {
+        f();
+        let (mean, min, max) = time_iters(iters, f);
+        println!("{name:<48} mean {mean:>9.3} ms  (min {min:>9.3}, max {max:>9.3})");
+    };
+    let rank1 = TensorF32::from_vec(&[1 << 16], vec![0.5; 1 << 16]);
+    run("tensor/to_literal rank-1 64k (no reshape copy)", 200, &mut || {
+        std::hint::black_box(rank1.to_literal().unwrap());
+    });
+    let rank2 = TensorF32::from_vec(&[256, 256], vec![0.5; 1 << 16]);
+    run("tensor/to_literal rank-2 64k (reshape path)", 200, &mut || {
+        std::hint::black_box(rank2.to_literal().unwrap());
+    });
+    let ints = TensorI32::from_vec(&[1 << 16], vec![7; 1 << 16]);
+    run("tensor/to_literal rank-1 64k i32", 200, &mut || {
+        std::hint::black_box(ints.to_literal().unwrap());
+    });
+}
+
+fn main() {
+    let check = std::env::args().any(|a| a == "--check");
+    let path = snapshot_path();
+    if check {
+        match check_snapshot(&path) {
+            Ok(()) => println!("BENCH_runtime.json: schema + deterministic sections OK ({path})"),
+            Err(e) => {
+                eprintln!("BENCH_runtime.json check failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+
+    println!("== runtime subsystem benchmarks ==\n");
+    bench_literal_conversion();
+
+    let pad = padding_section();
+    let fixed = pad.get("fixed_padded").and_then(|x| x.usize()).unwrap();
+    let occ = pad.get("occupancy_padded").and_then(|x| x.usize()).unwrap();
+    let rows = pad.get("rows").and_then(|x| x.usize()).unwrap();
+    println!(
+        "\npadding over depths 1..={DEPTH_MAX}: fixed {fixed} padded rows \
+         ({:.1}% waste) -> occupancy-aware {occ} ({:.1}% waste)",
+        100.0 * fixed as f64 / (rows + fixed) as f64,
+        100.0 * occ as f64 / (rows + occ) as f64,
+    );
+
+    println!();
+    let snapshot = build_snapshot(device_section());
+    if let Err(e) = validate_schema(&snapshot) {
+        eprintln!("generated snapshot failed its own schema: {e}");
+        std::process::exit(1);
+    }
+    std::fs::write(&path, snapshot.to_string() + "\n").expect("writing snapshot");
+    println!("perf snapshot -> {path}");
+}

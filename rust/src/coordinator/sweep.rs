@@ -22,7 +22,7 @@ use crate::coordinator::grpo::{grpo_session, GrpoConfig};
 use crate::coordinator::policy::Policy;
 use crate::coordinator::sft::{sft_session, SftConfig};
 use crate::engine::InferenceEngine;
-use crate::eval::{evaluate, evaluate_with, EvalResult};
+use crate::eval::{evaluate_with, EvalResult};
 use crate::metrics::RunLog;
 use crate::runtime::Runtime;
 use crate::trainer::{TenantSpec, TenantTrainer};
@@ -90,11 +90,15 @@ impl SweepOutcome {
 
 /// Train one (scheme, lr, seed) run; returns the final eval, the tail
 /// reward/format rates and the trained merged weights (for downstream
-/// ladder benches).
+/// ladder benches). Evals go through the caller's engine, so a grid of
+/// runs resolves (and compiles) the eval executable once instead of once
+/// per grid point.
+#[allow(clippy::too_many_arguments)]
 pub fn run_once(
     rt: &Runtime,
     base: &WeightSet,
     cfg: &SweepConfig,
+    eval_engine: &InferenceEngine,
     lr: f32,
     seed: u64,
     ckpt_dir: &Path,
@@ -135,7 +139,7 @@ pub fn run_once(
         }
         other => anyhow::bail!("unknown algo {other}"),
     };
-    let ev = evaluate(rt, &policy.tier.name, &policy.merged, &cfg.eval_suite, cfg.eval_n, 777)?;
+    let ev = evaluate_with(rt, eval_engine, &policy.merged, &cfg.eval_suite, cfg.eval_n, 777)?;
     Ok((ev, reward, fmt, policy.merged))
 }
 
@@ -217,7 +221,8 @@ pub fn sweep_scheme_full(
     } else {
         for &lr in &cfg.lrs {
             for (si, &seed) in cfg.seeds.iter().enumerate() {
-                let (ev, rew, fmt, w) = run_once(rt, base, cfg, lr, seed, ckpt_dir, log)?;
+                let (ev, rew, fmt, w) =
+                    run_once(rt, base, cfg, &eval_engine, lr, seed, ckpt_dir, log)?;
                 grid.push((lr, ev.accuracy, rew, fmt));
                 if si == 0 {
                     merged.push(w);

@@ -7,19 +7,33 @@
 //! post-processing and batch padding all lived in three places.
 //! `InferenceEngine` owns all of it; those three layers are thin clients.
 //!
+//! Occupancy-aware geometry: the engine holds the manifest's FULL set of
+//! baked generate geometries for its tier (every batch size lowered with
+//! the same sampled length) and flushes a partial batch on the smallest
+//! geometry that fits it ([`pick_geometry`] / [`flush_plan`]) instead of
+//! padding all the way to the canonical batch. Geometry choice is a pure
+//! function of the pending row count — never of worker timing — so
+//! pooled and serial runs pick identical geometries, and row `i` of any
+//! batch consumes uniforms `[i·n_gen, (i+1)·n_gen)` regardless of the
+//! batch size, so a real row's samples do not depend on how much padding
+//! followed it.
+//!
 //! Companion modules:
 //!   * `scheduler` — per-adapter request queues with pluggable policies
 //!     (replaces the O(n²) single-queue `DynamicBatcher` scan);
 //!   * `pool` — a `WorkerPool` that serves independent adapter batches on
-//!     N threads (`Runtime` is `Send + Sync`).
+//!     N threads, each job pinned to a runtime execution context by its
+//!     job id (`Runtime` is a pool of `Send + Sync` contexts).
 
 pub mod pool;
 pub mod scheduler;
 
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
+use crate::runtime::context::{add_ms, ms_of};
 use crate::runtime::{Executable, Runtime};
 use crate::tasks::corpus::{prompt_batch, PromptBatch};
 use crate::tasks::generator::Problem;
@@ -47,6 +61,38 @@ pub fn padding_problem() -> Problem {
 
 pub fn is_padding(p: &Problem) -> bool {
     p.suite == PADDING_SUITE
+}
+
+/// Smallest baked geometry that fits `pending` rows (`geometries` must be
+/// ascending); falls back to the largest when nothing fits. Pure function
+/// of the queue depth — geometry choice can never depend on worker count
+/// or timing, which is what keeps pooled flushes identical to serial ones.
+pub fn pick_geometry(geometries: &[usize], pending: usize) -> usize {
+    debug_assert!(!geometries.is_empty());
+    geometries
+        .iter()
+        .copied()
+        .find(|&g| g >= pending)
+        .unwrap_or_else(|| *geometries.last().unwrap())
+}
+
+/// Chunking plan for decoding `n` arbitrary rows through baked
+/// geometries: full `canonical` chunks first, then one tail chunk on the
+/// smallest geometry that fits the remainder. Returns
+/// `(geometry, real_rows)` per chunk. With `geometries == [canonical]`
+/// this degenerates to the fixed-geometry baseline (tail padded all the
+/// way up), which is exactly what `bench_runtime` compares against.
+pub fn flush_plan(geometries: &[usize], canonical: usize, n: usize) -> Vec<(usize, usize)> {
+    let mut plan = Vec::new();
+    let mut left = n;
+    while left >= canonical {
+        plan.push((canonical, canonical));
+        left -= canonical;
+    }
+    if left > 0 {
+        plan.push((pick_geometry(geometries, left), left));
+    }
+    plan
 }
 
 /// One sampled sequence, post EOS-cut.
@@ -85,8 +131,7 @@ impl Generation {
     }
 }
 
-/// Cumulative per-engine counters (thread-safe: pool workers share one
-/// engine).
+/// Cumulative per-engine counters (snapshot of [`EngineCounters`]).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EngineStats {
     /// executable invocations
@@ -99,37 +144,136 @@ pub struct EngineStats {
     pub gen_ms: f64,
 }
 
-/// The shared inference engine: wraps executable selection for one
-/// (tier, batch) geometry, uniform generation, the fused-generate call and
-/// EOS-cut/decode/verify post-processing.
+/// Lock-free engine counters: pool workers share one engine, and the old
+/// `Mutex<EngineStats>` was taken once per decoded batch on every worker.
+/// Millisecond totals use the same f64-bits CAS accumulator as the
+/// runtime's perf counters.
+#[derive(Default)]
+pub struct EngineCounters {
+    batches: AtomicU64,
+    rows: AtomicU64,
+    padded_rows: AtomicU64,
+    gen_ms_bits: AtomicU64,
+}
+
+impl EngineCounters {
+    pub fn record(&self, batches: u64, rows: u64, padded_rows: u64, gen_ms: f64) {
+        self.batches.fetch_add(batches, Ordering::Relaxed);
+        self.rows.fetch_add(rows, Ordering::Relaxed);
+        self.padded_rows.fetch_add(padded_rows, Ordering::Relaxed);
+        add_ms(&self.gen_ms_bits, gen_ms);
+    }
+
+    pub fn snapshot(&self) -> EngineStats {
+        EngineStats {
+            batches: self.batches.load(Ordering::Relaxed),
+            rows: self.rows.load(Ordering::Relaxed),
+            padded_rows: self.padded_rows.load(Ordering::Relaxed),
+            gen_ms: ms_of(&self.gen_ms_bits),
+        }
+    }
+}
+
+/// The shared inference engine: executable selection over every baked
+/// (tier, batch) generate geometry, uniform generation, the fused-generate
+/// call and EOS-cut/decode/verify post-processing.
 pub struct InferenceEngine {
-    gen_exe: Arc<Executable>,
     pub tier: String,
-    /// baked executable batch size
+    /// canonical (largest usable) baked batch size — full chunks use it
     pub batch: usize,
-    /// sampled tokens per sequence
+    /// sampled tokens per sequence (identical across all geometries held)
     pub n_gen: usize,
     pub t_prefill: usize,
-    stats: Mutex<EngineStats>,
+    /// usable baked generate geometries, ascending: (batch, exe name)
+    geometries: Vec<(usize, String)>,
+    /// context the canonical executable placed on — public wrappers
+    /// without an explicit context decode here; pool workers pass their
+    /// job's pinned context instead
+    default_ctx: usize,
+    stats: EngineCounters,
 }
 
 impl InferenceEngine {
     pub fn new(rt: &Runtime, tier: &str, batch: usize) -> Result<Self> {
         let info = rt.manifest.generate_exe(tier, batch)?.clone();
-        let gen_exe = rt.load(&info.name)?;
+        let default_ctx = rt.placement(&info.name);
+        // warm the canonical geometry now: callers fail fast on a missing
+        // artifact instead of mid-serve
+        rt.load_on(default_ctx, &info.name)?;
         let t = rt.manifest.tier(tier)?;
+        // every generate geometry for this tier with the same sampled
+        // length, capped at the canonical batch (larger bakes would
+        // change the engine's advertised capacity)
+        let mut geometries: Vec<(usize, String)> = rt
+            .manifest
+            .executables
+            .values()
+            .filter(|e| {
+                e.fn_kind == "generate"
+                    && e.tier == tier
+                    && e.seq == info.seq
+                    && e.batch <= info.batch
+            })
+            .map(|e| (e.batch, e.name.clone()))
+            .collect();
+        geometries.sort_by_key(|g| g.0);
+        geometries.dedup_by_key(|g| g.0);
         Ok(Self {
-            gen_exe,
             tier: tier.to_string(),
             batch: info.batch,
             n_gen: info.seq,
             t_prefill: t.t_prefill,
-            stats: Mutex::new(EngineStats::default()),
+            geometries,
+            default_ctx,
+            stats: EngineCounters::default(),
         })
     }
 
+    /// Baked geometry batch sizes held by this engine, ascending.
+    pub fn geometries(&self) -> Vec<usize> {
+        self.geometries.iter().map(|g| g.0).collect()
+    }
+
+    /// Context the canonical executable was placed (and warmed) on — the
+    /// preferred context for `Runtime::checkout` callers, so an idle pool
+    /// sticks to the warm context instead of compiling on cold ones.
+    pub fn default_ctx(&self) -> usize {
+        self.default_ctx
+    }
+
+    /// Smallest baked geometry that can hold `rows` grouped rows with
+    /// group size `group` (the geometry must be divisible by the group so
+    /// the k samples of one problem stay consecutive); falls back to the
+    /// canonical batch.
+    pub fn grouped_geometry(&self, rows: usize, group: usize) -> usize {
+        self.geometries
+            .iter()
+            .map(|g| g.0)
+            .find(|&g| group > 0 && g % group == 0 && g >= rows)
+            .unwrap_or(self.batch)
+    }
+
+    /// The executable for a baked geometry, resident on context `ctx`
+    /// (the runtime's per-context cache makes repeat calls a read-lock
+    /// lookup; first use per context compiles once, single-flight).
+    fn exe_for(&self, rt: &Runtime, ctx: usize, batch: usize) -> Result<Arc<Executable>> {
+        let name = self
+            .geometries
+            .iter()
+            .find(|g| g.0 == batch)
+            .map(|g| &g.1)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no baked generate geometry b{batch} for tier {} (have {:?})",
+                    self.tier,
+                    self.geometries()
+                )
+            })?;
+        rt.load_on(ctx, name)
+    }
+
     /// Sample one batch from the merged weights. The prompt batch must
-    /// match the executable's baked geometry exactly; use
+    /// match one of the baked geometries exactly; use
     /// [`InferenceEngine::generate_problems`] for arbitrary-length inputs.
     pub fn generate(
         &self,
@@ -140,10 +284,25 @@ impl InferenceEngine {
         temperature: f32,
         rng: &mut Pcg64,
     ) -> Result<Generation> {
-        if pb.tokens.shape[0] != self.batch {
-            bail!("prompt batch {} != exe batch {}", pb.tokens.shape[0], self.batch);
-        }
-        let b = self.batch;
+        self.generate_on(rt, self.default_ctx, weights, pb, tok, temperature, rng)
+    }
+
+    /// [`InferenceEngine::generate`] on an explicit execution context
+    /// (pool workers pass their job's pinned context so independent
+    /// batches execute device-parallel).
+    #[allow(clippy::too_many_arguments)]
+    pub fn generate_on(
+        &self,
+        rt: &Runtime,
+        ctx: usize,
+        weights: &WeightSet,
+        pb: &PromptBatch,
+        tok: &Tokenizer,
+        temperature: f32,
+        rng: &mut Pcg64,
+    ) -> Result<Generation> {
+        let b = pb.tokens.shape[0];
+        let exe = self.exe_for(rt, ctx, b)?;
         let uniforms = TensorF32::from_vec(&[b, self.n_gen], rng.uniform_vec(b * self.n_gen));
         let mut args: Vec<Arg> = weights.args();
         args.push(Arg::I32(pb.tokens.clone()));
@@ -151,7 +310,7 @@ impl InferenceEngine {
         args.push(Arg::F32(uniforms));
         args.push(Arg::Scalar(temperature));
         let t0 = crate::util::Timer::start();
-        let out = rt.run(&self.gen_exe, &args)?;
+        let out = rt.run(&exe, &args)?;
         let gen_ms = t0.millis();
         let tokens = out.i32(0)?;
         let blp = out.f32(1)?;
@@ -184,20 +343,16 @@ impl InferenceEngine {
                 has_format,
             });
         }
-        {
-            let mut s = self.stats.lock().unwrap();
-            s.batches += 1;
-            s.rows += b as u64 - padded;
-            s.padded_rows += padded;
-            s.gen_ms += gen_ms;
-        }
+        self.stats.record(1, b as u64 - padded, padded, gen_ms);
         Ok(Generation { rows, group: pb.group })
     }
 
     /// Group-structured decode for GRPO-style training: each problem is
     /// expanded into `group` consecutive rows (prompt repeated, independent
-    /// samples). Training waves always fill the executable geometry
-    /// exactly, so a partial batch is an error, not a padding case.
+    /// samples). The expanded rows must fill one of the baked geometries
+    /// exactly — training waves and grouped bench jobs always do, so a
+    /// mismatch is an error, not a padding case.
+    #[allow(clippy::too_many_arguments)]
     pub fn generate_grouped(
         &self,
         rt: &Runtime,
@@ -208,22 +363,41 @@ impl InferenceEngine {
         temperature: f32,
         rng: &mut Pcg64,
     ) -> Result<Generation> {
-        if problems.len() * group != self.batch {
+        let ctx = self.default_ctx;
+        self.generate_grouped_on(rt, ctx, weights, problems, group, tok, temperature, rng)
+    }
+
+    /// [`InferenceEngine::generate_grouped`] on an explicit context.
+    #[allow(clippy::too_many_arguments)]
+    pub fn generate_grouped_on(
+        &self,
+        rt: &Runtime,
+        ctx: usize,
+        weights: &WeightSet,
+        problems: &[Problem],
+        group: usize,
+        tok: &Tokenizer,
+        temperature: f32,
+        rng: &mut Pcg64,
+    ) -> Result<Generation> {
+        let total = problems.len() * group;
+        if group == 0 || !self.geometries.iter().any(|g| g.0 == total) {
             bail!(
-                "grouped batch {}x{} != exe batch {}",
+                "grouped batch {}x{} is not a baked geometry (have {:?})",
                 problems.len(),
                 group,
-                self.batch
+                self.geometries()
             );
         }
         let pb = prompt_batch(problems, tok, group, self.t_prefill);
-        self.generate(rt, weights, &pb, tok, temperature, rng)
+        self.generate_on(rt, ctx, weights, &pb, tok, temperature, rng)
     }
 
-    /// Decode an arbitrary problem list: chunks it into executable-sized
-    /// batches, pads the final chunk with the explicit sentinel, and
-    /// returns exactly one row per real problem (padding rows dropped).
-    /// Empty input is an error, not a panic.
+    /// Decode an arbitrary problem list: chunks it into full canonical
+    /// batches, flushes the tail on the smallest baked geometry that fits
+    /// it (padded with the explicit sentinel), and returns exactly one
+    /// row per real problem (padding rows dropped). Empty input is an
+    /// error, not a panic.
     pub fn generate_problems(
         &self,
         rt: &Runtime,
@@ -233,31 +407,50 @@ impl InferenceEngine {
         temperature: f32,
         rng: &mut Pcg64,
     ) -> Result<Vec<GenRow>> {
+        self.generate_problems_on(rt, self.default_ctx, weights, problems, tok, temperature, rng)
+    }
+
+    /// [`InferenceEngine::generate_problems`] on an explicit context.
+    #[allow(clippy::too_many_arguments)]
+    pub fn generate_problems_on(
+        &self,
+        rt: &Runtime,
+        ctx: usize,
+        weights: &WeightSet,
+        problems: &[Problem],
+        tok: &Tokenizer,
+        temperature: f32,
+        rng: &mut Pcg64,
+    ) -> Result<Vec<GenRow>> {
         if problems.is_empty() {
             bail!("generate_problems: empty problem list");
         }
-        let b = self.batch;
+        let geoms = self.geometries();
         let mut rows = Vec::with_capacity(problems.len());
-        for chunk in problems.chunks(b) {
+        let mut offset = 0usize;
+        for (geometry, real) in flush_plan(&geoms, self.batch, problems.len()) {
+            let chunk = &problems[offset..offset + real];
+            offset += real;
             let mut padded: Vec<Problem> = chunk.to_vec();
-            while padded.len() < b {
+            while padded.len() < geometry {
                 padded.push(padding_problem());
             }
             let pb = prompt_batch(&padded, tok, 1, self.t_prefill);
-            let gen = self.generate(rt, weights, &pb, tok, temperature, rng)?;
+            let gen = self.generate_on(rt, ctx, weights, &pb, tok, temperature, rng)?;
             rows.extend(gen.rows.into_iter().take(chunk.len()));
         }
         Ok(rows)
     }
 
     pub fn stats(&self) -> EngineStats {
-        *self.stats.lock().unwrap()
+        self.stats.snapshot()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testing::check;
 
     #[test]
     fn padding_sentinel_is_unmistakable() {
@@ -278,5 +471,120 @@ mod tests {
         assert_send_sync::<InferenceEngine>();
         assert_send_sync::<GenRow>();
         assert_send_sync::<EngineStats>();
+        assert_send_sync::<EngineCounters>();
+    }
+
+    /// ISSUE 4 satellite: the lock-free counters lose no updates under
+    /// contention (0.25 ms is exact in binary, so the total is exact).
+    #[test]
+    fn engine_counters_concurrent_increments_are_lossless() {
+        let c = EngineCounters::default();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        c.record(1, 3, 1, 0.25);
+                    }
+                });
+            }
+        });
+        let snap = c.snapshot();
+        assert_eq!(snap.batches, 4000);
+        assert_eq!(snap.rows, 12000);
+        assert_eq!(snap.padded_rows, 4000);
+        assert_eq!(snap.gen_ms, 1000.0);
+    }
+
+    #[test]
+    fn pick_geometry_smallest_fit_and_fallback() {
+        let g = [4, 8, 16, 32];
+        assert_eq!(pick_geometry(&g, 1), 4);
+        assert_eq!(pick_geometry(&g, 4), 4);
+        assert_eq!(pick_geometry(&g, 5), 8);
+        assert_eq!(pick_geometry(&g, 17), 32);
+        assert_eq!(pick_geometry(&g, 33), 32, "oversized demand falls back to largest");
+        assert_eq!(pick_geometry(&[4], 3), 4, "single geometry = fixed baseline");
+    }
+
+    /// ISSUE 4 satellite: the occupancy-aware plan never pads more than
+    /// the fixed-geometry baseline, for any geometry set and queue depth.
+    #[test]
+    fn prop_occupancy_never_pads_more_than_fixed() {
+        check("occupancy padding", 300, |rng| {
+            // random ascending geometry set; canonical = its largest
+            let mut geoms: Vec<usize> =
+                (0..1 + rng.below(4)).map(|_| 1usize << rng.below(6)).collect();
+            geoms.push(1 << (4 + rng.below(3))); // canonical in 16..64
+            geoms.sort_unstable();
+            geoms.dedup();
+            let canonical = *geoms.last().unwrap();
+            let depth = 1 + rng.below(500) as usize;
+
+            let fixed = flush_plan(&[canonical], canonical, depth);
+            let occ = flush_plan(&geoms, canonical, depth);
+            let padded = |plan: &[(usize, usize)]| {
+                plan.iter().map(|(g, real)| g - real).sum::<usize>()
+            };
+            let (pf, po) = (padded(&fixed), padded(&occ));
+            if po > pf {
+                return Err(format!(
+                    "geoms {geoms:?} depth {depth}: occupancy padded {po} > fixed {pf}"
+                ));
+            }
+            // every chunk's geometry actually fits its real rows
+            for &(g, real) in fixed.iter().chain(&occ) {
+                if g < real {
+                    return Err(format!("geometry {g} < real rows {real}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// ISSUE 4 satellite: geometry choice changes only padding, never
+    /// which rows decode or their order — the real-row sequence of the
+    /// occupancy plan equals the fixed-geometry baseline's exactly.
+    #[test]
+    fn prop_flush_plan_serves_identical_rows_across_geometry() {
+        check("flush plan row identity", 200, |rng| {
+            let mut geoms: Vec<usize> =
+                (0..2 + rng.below(3)).map(|_| 1usize + rng.below(24) as usize).collect();
+            geoms.push(24 + rng.below(40) as usize); // canonical
+            geoms.sort_unstable();
+            geoms.dedup();
+            let canonical = *geoms.last().unwrap();
+            let depth = 1 + rng.below(300) as usize;
+
+            // expand each plan into the sequence of real row indices it serves
+            let rows_of = |plan: &[(usize, usize)]| -> Vec<usize> {
+                let mut out = Vec::new();
+                for &(_, real) in plan {
+                    let start = out.len();
+                    out.extend(start..start + real);
+                }
+                out
+            };
+            let fixed_rows = rows_of(&flush_plan(&[canonical], canonical, depth));
+            let occ_rows = rows_of(&flush_plan(&geoms, canonical, depth));
+            if fixed_rows != occ_rows {
+                return Err(format!(
+                    "geoms {geoms:?} depth {depth}: row sequences diverged"
+                ));
+            }
+            if fixed_rows.len() != depth {
+                return Err(format!("plan served {} of {depth} rows", fixed_rows.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn flush_plan_shape() {
+        // 2 full canonical chunks + a tail on the smallest fitting geometry
+        assert_eq!(flush_plan(&[4, 8, 16], 16, 37), vec![(16, 16), (16, 16), (8, 5)]);
+        assert_eq!(flush_plan(&[4, 8, 16], 16, 32), vec![(16, 16), (16, 16)]);
+        assert_eq!(flush_plan(&[4, 8, 16], 16, 3), vec![(4, 3)]);
+        assert_eq!(flush_plan(&[16], 16, 3), vec![(16, 3)], "fixed baseline pads fully");
+        assert!(flush_plan(&[4, 8, 16], 16, 0).is_empty());
     }
 }

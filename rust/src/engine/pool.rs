@@ -1,12 +1,17 @@
 //! Worker pool: serves independent adapter batches on N threads.
 //!
-//! `Runtime` is `Send + Sync` (Arc'd executable cache, Mutex'd counters,
-//! FFI sections serialised behind its internal `exec_lock`), so workers
-//! share ONE runtime and ONE `InferenceEngine` by reference via scoped
-//! threads — no cloning, no channels. Device execution serialises on that
-//! lock; what overlaps across workers is everything host-side: literal
-//! conversion, tuple decomposition, EOS-cut/decode/verify. Each job
-//! carries its own merged weights (activation/merging stays on the
+//! `Runtime` is `Send + Sync` (a pool of execution contexts, each with
+//! its own Arc'd executable cache, atomic counters and FFI lock), so
+//! workers share ONE runtime and ONE `InferenceEngine` by reference via
+//! scoped threads — no cloning, no channels. Every job is pinned to the
+//! execution context `job.id % rt.devices()` — a pure function of the
+//! job, NOT of the worker that dequeues it — so with D contexts up to D
+//! device executions overlap, and pooled results stay byte-identical to
+//! the serial reference no matter which worker (or how many) ran a job:
+//! `serve` and `serve_serial` route every job to the same context. What
+//! always overlaps across workers regardless of D is the host side:
+//! literal conversion, tuple decomposition, EOS-cut/decode/verify. Each
+//! job carries its own merged weights (activation/merging stays on the
 //! coordinating thread, where the `AdapterStore` LRU lives) and its own
 //! RNG stream seeded from the job id, so results are bit-identical to the
 //! single-threaded path regardless of which worker picks a job up or in
@@ -67,12 +72,17 @@ impl WorkerPool {
     fn run_job(rt: &Runtime, engine: &InferenceEngine, job: &GenJob) -> Result<Vec<GenRow>> {
         let tok = Tokenizer::new();
         let mut rng = Pcg64::with_stream(job.seed, POOL_STREAM);
+        // deterministic context affinity: the job id — not the worker —
+        // picks the execution context, so results can never depend on
+        // which thread dequeued the job or how many threads exist
+        let ctx = rt.ctx_for(job.id);
         if let Some(pb) = &job.pb {
-            Ok(engine.generate(rt, &job.weights, pb, &tok, job.temperature, &mut rng)?.rows)
+            Ok(engine.generate_on(rt, ctx, &job.weights, pb, &tok, job.temperature, &mut rng)?.rows)
         } else if job.group > 1 {
             Ok(engine
-                .generate_grouped(
+                .generate_grouped_on(
                     rt,
+                    ctx,
                     &job.weights,
                     &job.problems,
                     job.group,
@@ -82,8 +92,9 @@ impl WorkerPool {
                 )?
                 .rows)
         } else {
-            engine.generate_problems(
+            engine.generate_problems_on(
                 rt,
+                ctx,
                 &job.weights,
                 &job.problems,
                 &tok,

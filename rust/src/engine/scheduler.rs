@@ -169,6 +169,19 @@ impl Scheduler {
         }?;
         Some(self.take(pick))
     }
+
+    /// Every batch flushable at `now`, in policy order — one serving
+    /// "wave". Callers that fan waves across a `WorkerPool` (and, with a
+    /// device-parallel runtime, across execution contexts) collect the
+    /// whole wave in one call instead of re-running policy selection
+    /// interleaved with decode.
+    pub fn flush_wave(&mut self, now: f64) -> Vec<AdapterBatch> {
+        let mut wave = Vec::new();
+        while let Some(b) = self.next_batch(now) {
+            wave.push(b);
+        }
+        wave
+    }
 }
 
 #[cfg(test)]
@@ -318,6 +331,35 @@ mod tests {
                 }
             }
         });
+    }
+
+    /// `flush_wave` is exactly "next_batch until None": same batches,
+    /// same order, and it leaves the scheduler in the same state.
+    #[test]
+    fn flush_wave_matches_repeated_next_batch() {
+        let build = || {
+            let mut s = Scheduler::new(2, 10.0, SchedPolicy::OccupancyFirst);
+            for id in 0..9u64 {
+                s.push(req(id, if id % 3 == 0 { "a" } else { "b" }, id as f64 * 0.01));
+            }
+            s
+        };
+        let mut a = build();
+        let mut b = build();
+        let wave = a.flush_wave(100.0);
+        let mut reference = Vec::new();
+        while let Some(batch) = b.next_batch(100.0) {
+            reference.push(batch);
+        }
+        assert_eq!(wave.len(), reference.len());
+        for (x, y) in wave.iter().zip(&reference) {
+            assert_eq!(x.adapter, y.adapter);
+            assert_eq!(
+                x.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+                y.requests.iter().map(|r| r.id).collect::<Vec<_>>()
+            );
+        }
+        assert_eq!(a.pending(), b.pending());
     }
 
     #[test]

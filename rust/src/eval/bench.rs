@@ -392,14 +392,18 @@ pub fn run_ladder_with(
         let temperature = if cfg.temperature >= 0.0 { cfg.temperature } else { bs.temperature };
         let problems = eval_problems(bs.suite, n, cfg.seed)?;
         for (ci, chunk) in problems.chunks(per_job).enumerate() {
-            // k=1 jobs take the engine's arbitrary-length path (it pads and
-            // drops sentinel rows itself); grouped jobs must fill the baked
-            // geometry exactly, so we pad the tail chunk explicitly
+            // k=1 jobs take the engine's arbitrary-length path (it flushes
+            // the tail on the smallest baked geometry and drops sentinel
+            // rows itself); grouped jobs must fill a baked geometry
+            // exactly, so the tail chunk pads only to the smallest
+            // geometry (divisible by k) that holds it — occupancy-aware
+            // k-grouping instead of always filling the canonical batch
             let job_problems = if k == 1 {
                 chunk.to_vec()
             } else {
+                let target = engine.grouped_geometry(chunk.len() * k, k) / k;
                 let mut padded = chunk.to_vec();
-                while padded.len() < per_job {
+                while padded.len() < target {
                     padded.push(padding_problem());
                 }
                 padded

@@ -3,9 +3,12 @@
 //! Three-layer architecture (see DESIGN.md):
 //!   * L1/L2 live in `python/compile/` and are AOT-lowered to HLO text
 //!     (`make artifacts`); python never runs at request time.
-//!   * L3 (this crate) owns everything with a lifecycle: the PJRT runtime,
-//!     the shared thread-safe inference `engine` (the one canonical decode
-//!     path: `InferenceEngine` + per-adapter `Scheduler` + `WorkerPool`),
+//!   * L3 (this crate) owns everything with a lifecycle: the
+//!     device-parallel PJRT runtime (a pool of execution contexts, each
+//!     with its own client/cache/FFI-lock — DESIGN.md §9), the shared
+//!     thread-safe inference `engine` (the one canonical decode path:
+//!     occupancy-aware `InferenceEngine` + per-adapter `Scheduler` +
+//!     context-affine `WorkerPool`),
 //!     the `trainer` subsystem (the one canonical training-step skeleton:
 //!     `TrainSession` + resumable `TrainState` + the multi-tenant
 //!     `TenantTrainer`), the pretrain/GRPO/SFT loss loops, rollouts,

@@ -72,33 +72,42 @@ COMMANDS
               [--group 4] [--kl-coef 0] [--clip-c 4] [--eval-n 64] [--seed 0]
               [--ckpt-every 10] [--resume ckpts/<state>.trainstate]
   tenants     --tier micro [--n 4] [--scheme tinylora_r2_u13_all]
-              [--steps 40] [--lr 2e-3] [--workers 4] [--precision bf16]
-              [--suite gsm8k-syn] [--seed 0] [--max-resident 4]
+              [--steps 40] [--lr 2e-3] [--workers 4] [--devices 1]
+              [--precision bf16] [--suite gsm8k-syn] [--seed 0]
+              [--max-resident 4]
   eval        --tier micro [--suite gsm8k-syn | --ladder] [--n 64]
   bench       --tier micro [--suites gsm8k-syn,math500-syn,amc-syn,aime-syn]
-              [--k 4] [--n 0] [--workers 4] [--temperature -1] [--seed 777]
-              [--echo]   (benches the base backbone; adapter runs come
-              from `sweep --bench-k`)
+              [--k 4] [--n 0] [--workers 4] [--devices 1] [--temperature -1]
+              [--seed 777] [--echo]   (benches the base backbone; adapter
+              runs come from `sweep --bench-k`)
   report      --baseline results/bench_<..>.json --reference <..>.json
               [--runs a.json,b.json] [--out results/report.md]
   sweep       --tier micro --scheme <tag> [--algo grpo] [--lrs 5e-4,2e-3,8e-3]
-              [--seeds 0,1] [--steps 40] [--workers 1] [--bench-k 0]
-              (--bench-k K benches base + the winning adapter on the
-              ladder; shaped by --suites, --bench-n and --temperature)
+              [--seeds 0,1] [--steps 40] [--workers 1] [--devices 1]
+              [--bench-k 0]   (--bench-k K benches base + the winning
+              adapter on the ladder; shaped by --suites/--bench-n/
+              --temperature)
   serve-demo  --tier micro [--tenants 16] [--requests 64] [--workers 1]
+              [--devices 1]
   info        [--tier micro]
 
-Shared: --artifacts DIR --ckpts DIR --results DIR --echo"
+Shared: --artifacts DIR --ckpts DIR --results DIR --echo
+        --devices D  (execution-context pool: pool jobs pin to contexts,
+        up to D device executions overlap; results stay byte-identical)"
     );
 }
 
-fn runtime(dirs: &Dirs) -> Result<Runtime> {
-    Runtime::new(&dirs.artifacts)
+/// Build the runtime with `--devices D` execution contexts (default 1,
+/// i.e. the classic single-client behaviour). Every subcommand accepts
+/// the flag; `serve-demo`/`bench`/`sweep`/`tenants` are where the
+/// device-parallel pool actually pays off (pool jobs pin to contexts).
+fn runtime(args: &Args, dirs: &Dirs) -> Result<Runtime> {
+    Runtime::with_devices(&dirs.artifacts, args.usize("devices", 1)?)
 }
 
 fn cmd_pretrain(args: &Args) -> Result<()> {
     let dirs = Dirs::from_args(args);
-    let rt = runtime(&dirs)?;
+    let rt = runtime(args, &dirs)?;
     let tier = args.str("tier", "micro");
     let cfg = PretrainConfig {
         suite: args.str("suite", "gsm8k-syn"),
@@ -122,7 +131,7 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let dirs = Dirs::from_args(args);
-    let rt = runtime(&dirs)?;
+    let rt = runtime(args, &dirs)?;
     let tier = args.str("tier", "micro");
     let scheme = args.str("scheme", "tinylora_r2_u13_all");
     let algo = args.str("algo", "grpo");
@@ -242,7 +251,7 @@ fn cmd_tenants(args: &Args) -> Result<()> {
     use tinylora_rl::trainer::{TenantSpec, TenantTrainer};
 
     let dirs = Dirs::from_args(args);
-    let rt = runtime(&dirs)?;
+    let rt = runtime(args, &dirs)?;
     let tier = args.str("tier", "micro");
     let scheme = args.str("scheme", "tinylora_r2_u13_all");
     validate_scheme(&rt.manifest, &tier, &scheme, "grpo")?;
@@ -298,12 +307,27 @@ fn cmd_tenants(args: &Args) -> Result<()> {
         "engine: {} generate calls | {} rows (+{} padding) | {:.0} ms decode",
         es.batches, es.rows, es.padded_rows, es.gen_ms
     );
+    print_context_stats(&rt);
     Ok(())
+}
+
+/// Per-context runtime counters — shows how device-parallel work spread
+/// across the execution-context pool (one line per `--devices` context).
+fn print_context_stats(rt: &Runtime) {
+    if rt.devices() <= 1 {
+        return;
+    }
+    for (i, cs) in rt.per_context_stats().iter().enumerate() {
+        println!(
+            "  ctx {i}: {} compiles ({:.0} ms) | {} runs ({:.0} ms)",
+            cs.compiles, cs.compile_ms, cs.runs, cs.run_ms
+        );
+    }
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let dirs = Dirs::from_args(args);
-    let rt = runtime(&dirs)?;
+    let rt = runtime(args, &dirs)?;
     let tier = args.str("tier", "micro");
     let base = Policy::load_base(&rt, &tier, &dirs.ckpts)?;
     let n = args.usize("n", 64)?;
@@ -332,7 +356,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     use tinylora_rl::eval::bench::{run_ladder, BenchConfig};
 
     let dirs = Dirs::from_args(args);
-    let rt = runtime(&dirs)?;
+    let rt = runtime(args, &dirs)?;
     let tier = args.str("tier", "micro");
     let base = Policy::load_base(&rt, &tier, &dirs.ckpts)?;
     let cfg = BenchConfig {
@@ -407,7 +431,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     use tinylora_rl::eval::bench::{run_ladder_with, BenchConfig};
     use tinylora_rl::InferenceEngine;
     let dirs = Dirs::from_args(args);
-    let rt = runtime(&dirs)?;
+    let rt = runtime(args, &dirs)?;
     let tier = args.str("tier", "micro");
     let scheme = args.str("scheme", "tinylora_r2_u13_all");
     let algo = args.str("algo", "grpo");
@@ -491,7 +515,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     use tinylora_rl::util::Pcg64;
 
     let dirs = Dirs::from_args(args);
-    let rt = runtime(&dirs)?;
+    let rt = runtime(args, &dirs)?;
     let tier = args.str("tier", "micro");
     let base = Policy::load_base(&rt, &tier, &dirs.ckpts)?;
     let tenants = args.usize("tenants", 16)?;
@@ -536,13 +560,14 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         "engine: {} generate calls | {} rows (+{} padding) | {:.0} ms decode",
         es.batches, es.rows, es.padded_rows, es.gen_ms
     );
+    print_context_stats(&rt);
     Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
     let dirs = Dirs::from_args(args);
-    let rt = runtime(&dirs)?;
-    println!("platform: {}", rt.platform());
+    let rt = runtime(args, &dirs)?;
+    println!("platform: {} ({} execution contexts)", rt.platform(), rt.devices());
     println!("artifacts: {} executables", rt.manifest.executables.len());
     for (name, t) in &rt.manifest.tiers {
         println!(

@@ -1,0 +1,457 @@
+//! One execution context = one `xla::PjRtClient` + its own executable
+//! cache + its own FFI lock + atomic perf counters.
+//!
+//! The pre-pool `Runtime` held ONE client behind ONE global `exec_lock`,
+//! so every device execution in the process — `WorkerPool` decode
+//! batches, tenant rollout waves, bench ladders, trainer grad steps —
+//! serialised on a single mutex and only host-side work overlapped.
+//! `ExecContext` is the unit that breaks that: contexts share nothing
+//! (client, cache, lock, counters are all per-context), so two contexts
+//! execute truly concurrently. `super::Runtime` owns a pool of D of them
+//! and routes work; see DESIGN.md §9 for the lock hierarchy and the
+//! determinism argument.
+//!
+//! Counters are lock-free (`AtomicU64`; millisecond totals stored as
+//! f64 bit patterns, accumulated via CAS) so the hot path never takes a
+//! stats mutex — the old `Mutex<RuntimeStats>` was taken twice per
+//! `run`, once per `load`.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::{DType, ExeInfo, Manifest};
+use crate::tensor::{Arg, TensorF32, TensorI32};
+
+/// Cumulative perf counters of one context (or, via `Runtime::stats`,
+/// summed over all contexts).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeStats {
+    pub compile_ms: f64,
+    pub run_ms: f64,
+    pub runs: u64,
+    pub compiles: u64,
+}
+
+impl RuntimeStats {
+    /// Accumulate another context's counters (for pool-wide aggregation).
+    pub fn add(&mut self, other: &RuntimeStats) {
+        self.compile_ms += other.compile_ms;
+        self.run_ms += other.run_ms;
+        self.runs += other.runs;
+        self.compiles += other.compiles;
+    }
+}
+
+/// Add `ms` to a millisecond total stored as f64 bits in an `AtomicU64`
+/// (CAS loop; no mutex on the hot path). Shared with `engine`'s counters.
+pub fn add_ms(cell: &AtomicU64, ms: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + ms).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Read a millisecond total stored as f64 bits.
+pub fn ms_of(cell: &AtomicU64) -> f64 {
+    f64::from_bits(cell.load(Ordering::Relaxed))
+}
+
+type Slot<V> = Arc<OnceLock<std::result::Result<Arc<V>, String>>>;
+
+/// Keyed single-flight initialisation: however many threads ask for the
+/// same key concurrently, the initialiser runs exactly once and everyone
+/// gets the same `Arc`. Failures are NOT cached — the slot is cleared so
+/// a later call can retry (a transient compile error must not poison the
+/// cache for the life of the process).
+///
+/// This replaces the seed cache's check-then-insert pattern, where two
+/// threads racing to compile the same executable both compiled and the
+/// second insert won (the `Runtime::load` double-compile race).
+pub struct SingleFlight<V> {
+    slots: RwLock<HashMap<String, Slot<V>>>,
+}
+
+impl<V> Default for SingleFlight<V> {
+    fn default() -> Self {
+        Self { slots: RwLock::new(HashMap::new()) }
+    }
+}
+
+impl<V> SingleFlight<V> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The cached value for `key`, if an initialisation already succeeded.
+    pub fn get(&self, key: &str) -> Option<Arc<V>> {
+        let slots = self.slots.read().unwrap();
+        slots.get(key).and_then(|s| s.get()).and_then(|r| r.as_ref().ok().cloned())
+    }
+
+    /// Get `key`'s value, running `init` at most once across all
+    /// concurrent callers; latecomers block until the winner finishes.
+    pub fn get_or_try_init<F>(&self, key: &str, init: F) -> Result<Arc<V>>
+    where
+        F: FnOnce() -> Result<V>,
+    {
+        let slot = {
+            let slots = self.slots.read().unwrap();
+            slots.get(key).cloned()
+        };
+        let slot = match slot {
+            Some(s) => s,
+            None => self.slots.write().unwrap().entry(key.to_string()).or_default().clone(),
+        };
+        // exactly-once: OnceLock runs the closure on one thread and parks
+        // the rest until the result is published
+        let res = slot.get_or_init(|| init().map(Arc::new).map_err(|e| format!("{e:#}")));
+        match res {
+            Ok(v) => Ok(v.clone()),
+            Err(msg) => {
+                let err = msg.clone();
+                // clear the slot (if it is still ours) so a retry is possible
+                let mut slots = self.slots.write().unwrap();
+                if let Some(cur) = slots.get(key) {
+                    if Arc::ptr_eq(cur, &slot) {
+                        slots.remove(key);
+                    }
+                }
+                bail!("{err}")
+            }
+        }
+    }
+
+    /// Number of slots (successful or in-flight) currently held.
+    pub fn len(&self) -> usize {
+        self.slots.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[derive(Default)]
+struct PerfCounters {
+    compiles: AtomicU64,
+    runs: AtomicU64,
+    /// f64 total ms as bits (see `add_ms`)
+    compile_ms_bits: AtomicU64,
+    run_ms_bits: AtomicU64,
+    /// executions currently inside this context's FFI section — the
+    /// load signal behind `Runtime::checkout`'s least-loaded pick
+    active: AtomicU64,
+}
+
+/// Decrements `active` on drop so error paths can't leak load.
+struct ActiveGuard<'a>(&'a AtomicU64);
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Process-unique context identities: a pool index alone cannot tell two
+/// runtimes' contexts apart, and running one runtime's executable on
+/// another's client would touch PJRT objects outside their owning lock.
+static NEXT_CTX_UID: AtomicU64 = AtomicU64::new(1);
+
+/// A compiled executable, pinned to the context that compiled it
+/// (PJRT loaded executables are client-owned and cannot run elsewhere).
+pub struct Executable {
+    pub(super) exe: xla::PjRtLoadedExecutable,
+    pub info: ExeInfo,
+    /// owning context's pool index — `Runtime::run` routes on this
+    pub ctx: usize,
+    /// owning context's process-unique identity — `ExecContext::run`
+    /// rejects executables from any other context, even one with the
+    /// same pool index in a different `Runtime`
+    ctx_uid: u64,
+}
+
+// SAFETY: see `ExecContext` — loaded executables are immutable after
+// compilation and every FFI section on them runs under the owning
+// context's `ffi` lock.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+/// Outputs of one execution, keyed by position (manifest order).
+pub struct Outputs {
+    lits: Vec<xla::Literal>,
+    info: ExeInfo,
+}
+
+impl Outputs {
+    pub fn f32(&self, idx: usize) -> Result<TensorF32> {
+        let spec = &self.info.outputs[idx];
+        if spec.dtype != DType::F32 {
+            bail!("output {idx} ({}) is not f32", spec.name);
+        }
+        TensorF32::from_literal(&self.lits[idx], &spec.shape)
+    }
+
+    pub fn i32(&self, idx: usize) -> Result<TensorI32> {
+        let spec = &self.info.outputs[idx];
+        if spec.dtype != DType::S32 {
+            bail!("output {idx} ({}) is not s32", spec.name);
+        }
+        TensorI32::from_literal(&self.lits[idx], &spec.shape)
+    }
+
+    pub fn len(&self) -> usize {
+        self.lits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lits.is_empty()
+    }
+
+    /// Find an output index by manifest name.
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        self.info
+            .outputs
+            .iter()
+            .position(|o| o.name == name)
+            .with_context(|| format!("no output named {name:?}"))
+    }
+}
+
+/// One device-parallel execution context.
+pub struct ExecContext {
+    /// stable index of this context within the runtime's pool
+    pub id: usize,
+    /// process-unique identity (see `NEXT_CTX_UID`)
+    uid: u64,
+    client: xla::PjRtClient,
+    /// Serialises every FFI section that touches THIS context's PJRT
+    /// objects (compile, execute, device→host transfer). Contexts hold
+    /// independent locks, so D contexts execute concurrently; host-side
+    /// work (arg→literal conversion, tuple decomposition, decode/verify)
+    /// stays outside the lock as before.
+    ffi: Mutex<()>,
+    /// per-context executable cache with single-flight compile coalescing
+    cache: SingleFlight<Executable>,
+    perf: PerfCounters,
+}
+
+// SAFETY: the `xla` 0.1.6 wrapper holds non-Send handles to PJRT objects
+// (they may be internally reference-counted without atomics). Two claims
+// back these impls:
+//
+// 1. *Within* a context, no PJRT object is ever touched from two threads
+//    at once: every code path that uses one — `compile`, `execute`,
+//    `to_literal_sync`, `platform_name` — runs under this context's
+//    `ffi` lock, and a context's objects (client, loaded executables)
+//    never escape it (`Runtime::run` routes on `Executable::ctx`).
+// 2. *Across* contexts, concurrency only ever involves DISTINCT PJRT
+//    objects owned by distinct `PjRtClient`s. This leans on the PJRT
+//    contract that independent clients share no unsynchronised state —
+//    the multi-client granularity PJRT is designed for — rather than on
+//    any thread-safety of individual wrapper handles. It is the one
+//    assumption added over the old process-global lock; `--devices 1`
+//    (the default) restores exactly the old single-lock behaviour.
+//
+// `xla::Literal` values are standalone host buffers with no client
+// handle and are only ever owned by one thread. All rust-side mutability
+// is behind RwLock/Mutex/atomics. Concurrency is exercised by the
+// `engine::pool` tests at D=1 and D=2.
+unsafe impl Send for ExecContext {}
+unsafe impl Sync for ExecContext {}
+
+impl ExecContext {
+    pub fn new(id: usize) -> Result<Self> {
+        Ok(Self {
+            id,
+            uid: NEXT_CTX_UID.fetch_add(1, Ordering::Relaxed),
+            client: xla::PjRtClient::cpu()?,
+            ffi: Mutex::new(()),
+            cache: SingleFlight::new(),
+            perf: PerfCounters::default(),
+        })
+    }
+
+    /// Load (compile) an executable by manifest name, with single-flight
+    /// caching: concurrent loads of one name compile exactly once.
+    pub fn load(&self, manifest: &Manifest, art_dir: &Path, name: &str) -> Result<Arc<Executable>> {
+        self.cache.get_or_try_init(name, || {
+            let info = manifest.exe(name)?.clone();
+            let path = art_dir.join(&info.file);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .with_context(|| format!("loading HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = {
+                // compiles hold the FFI lock for seconds — count them in
+                // `in_flight` so least-loaded checkout steers around a
+                // context stuck compiling, not just one mid-execute
+                self.perf.active.fetch_add(1, Ordering::Relaxed);
+                let _busy = ActiveGuard(&self.perf.active);
+                let _ffi = self.ffi.lock().unwrap();
+                self.client.compile(&comp).with_context(|| format!("compiling {name}"))?
+            };
+            self.perf.compiles.fetch_add(1, Ordering::Relaxed);
+            add_ms(&self.perf.compile_ms_bits, t0.elapsed().as_secs_f64() * 1e3);
+            Ok(Executable { exe, info, ctx: self.id, ctx_uid: self.uid })
+        })
+    }
+
+    /// Execute with shape-checked args; returns per-output literals.
+    pub fn run(&self, exe: &Executable, args: &[Arg]) -> Result<Outputs> {
+        if exe.ctx_uid != self.uid {
+            // catches both a wrong context of this runtime AND a context
+            // of a different runtime that happens to share pool index
+            bail!(
+                "{}: executable belongs to another execution context (ctx {}), not this one (ctx {})",
+                exe.info.name,
+                exe.ctx,
+                self.id
+            );
+        }
+        if args.len() != exe.info.inputs.len() {
+            bail!(
+                "{}: got {} args, want {}",
+                exe.info.name,
+                args.len(),
+                exe.info.inputs.len()
+            );
+        }
+        for (a, spec) in args.iter().zip(&exe.info.inputs) {
+            a.check(spec).with_context(|| exe.info.name.clone())?;
+        }
+        let lits: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let root = {
+            self.perf.active.fetch_add(1, Ordering::Relaxed);
+            let _busy = ActiveGuard(&self.perf.active);
+            // device section: execute + transfer both touch PJRT objects
+            let _ffi = self.ffi.lock().unwrap();
+            let out = exe.exe.execute::<xla::Literal>(&lits)?;
+            out[0][0].to_literal_sync()?
+        };
+        self.perf.runs.fetch_add(1, Ordering::Relaxed);
+        add_ms(&self.perf.run_ms_bits, t0.elapsed().as_secs_f64() * 1e3);
+        // aot.py lowers with return_tuple=True: root is always a tuple.
+        let mut root = root;
+        let lits = root.decompose_tuple()?;
+        if lits.len() != exe.info.outputs.len() {
+            bail!(
+                "{}: got {} outputs, want {}",
+                exe.info.name,
+                lits.len(),
+                exe.info.outputs.len()
+            );
+        }
+        Ok(Outputs { lits, info: exe.info.clone() })
+    }
+
+    /// Calls currently inside this context's FFI section (executes AND
+    /// compiles — a context stuck compiling reads as loaded).
+    pub fn in_flight(&self) -> u64 {
+        self.perf.active.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of this context's cumulative counters.
+    pub fn stats(&self) -> RuntimeStats {
+        RuntimeStats {
+            compile_ms: ms_of(&self.perf.compile_ms_bits),
+            run_ms: ms_of(&self.perf.run_ms_bits),
+            runs: self.perf.runs.load(Ordering::Relaxed),
+            compiles: self.perf.compiles.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn platform(&self) -> String {
+        let _ffi = self.ffi.lock().unwrap();
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// ISSUE 4 satellite: concurrent initialisation of one key runs the
+    /// initialiser exactly once — everyone gets the winner's Arc.
+    #[test]
+    fn single_flight_concurrent_init_runs_once() {
+        let sf: SingleFlight<u64> = SingleFlight::new();
+        let ticks = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    let v = sf
+                        .get_or_try_init("exe", || {
+                            ticks.fetch_add(1, Ordering::SeqCst);
+                            // widen the race window: losers must park, not re-init
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                            Ok(42)
+                        })
+                        .unwrap();
+                    assert_eq!(*v, 42);
+                });
+            }
+        });
+        assert_eq!(ticks.load(Ordering::SeqCst), 1, "initialiser ran more than once");
+        assert_eq!(*sf.get("exe").unwrap(), 42);
+        assert_eq!(sf.len(), 1);
+    }
+
+    #[test]
+    fn single_flight_does_not_cache_failures() {
+        let sf: SingleFlight<u64> = SingleFlight::new();
+        let err = sf.get_or_try_init("k", || bail!("transient compile error"));
+        assert!(err.is_err());
+        assert!(sf.get("k").is_none(), "failure must not be cached");
+        // the retry runs a fresh initialiser and succeeds
+        let v = sf.get_or_try_init("k", || Ok(7)).unwrap();
+        assert_eq!(*v, 7);
+        assert_eq!(*sf.get("k").unwrap(), 7);
+    }
+
+    #[test]
+    fn single_flight_returns_cached_arc_without_reinit() {
+        let sf: SingleFlight<String> = SingleFlight::new();
+        let a = sf.get_or_try_init("x", || Ok("hello".to_string())).unwrap();
+        let b = sf.get_or_try_init("x", || panic!("must not re-init")).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    /// ISSUE 4 satellite: the CAS-loop f64 accumulator loses no updates
+    /// under contention (0.25 is exact in binary, so the total is exact).
+    #[test]
+    fn atomic_ms_accumulation_is_lossless() {
+        let cell = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        add_ms(&cell, 0.25);
+                    }
+                });
+            }
+        });
+        assert_eq!(ms_of(&cell), 1000.0);
+    }
+
+    #[test]
+    fn runtime_stats_aggregation() {
+        let mut agg = RuntimeStats::default();
+        agg.add(&RuntimeStats { compile_ms: 1.5, run_ms: 2.0, runs: 3, compiles: 1 });
+        agg.add(&RuntimeStats { compile_ms: 0.5, run_ms: 1.0, runs: 2, compiles: 1 });
+        assert_eq!(agg.compile_ms, 2.0);
+        assert_eq!(agg.run_ms, 3.0);
+        assert_eq!(agg.runs, 5);
+        assert_eq!(agg.compiles, 2);
+    }
+}

@@ -1,6 +1,6 @@
-//! PJRT runtime: loads AOT artifacts (HLO text) and executes them on the
-//! CPU client. The rust binary is self-contained once `make artifacts` has
-//! produced `artifacts/*.hlo.txt` + `manifest.json`.
+//! PJRT runtime: loads AOT artifacts (HLO text) and executes them on a
+//! pool of CPU execution contexts. The rust binary is self-contained once
+//! `make artifacts` has produced `artifacts/*.hlo.txt` + `manifest.json`.
 //!
 //! Notes driven by the `xla` 0.1.6 wrapper's semantics (measured, see
 //! EXPERIMENTS.md §Perf):
@@ -11,207 +11,165 @@
 //!     device state (KV caches) are fused *inside* single executables at
 //!     lowering time (`generate`).
 //!
-//! Thread-safety: `Runtime` is `Send + Sync`. The executable cache is an
-//! `RwLock` (reads dominate: one compile per name, then lock-free-ish
-//! lookups), perf counters sit behind a `Mutex`, and compiled executables
-//! are shared as `Arc<Executable>` so `engine::pool::WorkerPool` threads
-//! can run independent adapter batches concurrently against one client.
+//! Device parallelism: `Runtime` is a facade over D [`ExecContext`]s
+//! (one PJRT client + executable cache + FFI lock + atomic counters
+//! each — see `context.rs`). The old single global `exec_lock` is gone;
+//! executions only serialise per context, so `engine::pool` workers,
+//! tenant rollout waves and bench ladders overlap on the device up to D
+//! ways. Routing is deterministic everywhere it can affect results:
+//! named loads place by a stable hash ([`Runtime::placement`]), pool
+//! jobs pin by job id ([`Runtime::ctx_for`]), and only content-invariant
+//! callers use the least-loaded, warm-sticky [`Runtime::checkout`]. D
+//! defaults to 1
+//! (`--devices` / `TINYLORA_DEVICES` opt in), and D contexts run the
+//! same HLO through the same backend, so results do not depend on which
+//! context served a call. DESIGN.md §9 spells out the lock hierarchy and
+//! the determinism argument.
 
-use std::collections::HashMap;
+pub mod context;
+
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex, RwLock};
-use std::time::Instant;
+use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 
-use crate::manifest::{DType, ExeInfo, Manifest};
-use crate::tensor::{Arg, TensorF32, TensorI32};
+pub use context::{ExecContext, Executable, Outputs, RuntimeStats, SingleFlight};
+
+use crate::manifest::Manifest;
+use crate::tensor::Arg;
+use crate::util::fnv1a;
 
 pub struct Runtime {
-    client: xla::PjRtClient,
+    contexts: Vec<ExecContext>,
     pub manifest: Manifest,
     art_dir: PathBuf,
-    cache: RwLock<HashMap<String, Arc<Executable>>>,
-    /// Serialises every FFI section that touches PJRT objects (compile,
-    /// execute, device→host transfer). See the SAFETY note below: we do
-    /// NOT rely on the wrapper being internally thread-safe. Host-side
-    /// work (arg→literal conversion, tuple decomposition, decode/verify)
-    /// stays outside this lock, so `engine::pool` workers still overlap
-    /// usefully.
-    exec_lock: Mutex<()>,
-    /// cumulative (compile_ms, run_ms, runs) for perf accounting
-    stats: Mutex<RuntimeStats>,
-}
-
-// SAFETY: `Runtime`/`Executable` lack the auto traits only because the
-// `xla` 0.1.6 wrapper holds non-Send handles to PJRT objects (they may be
-// internally reference-counted without atomics). We therefore make NO
-// assumption about the wrapper's internal thread-safety: every code path
-// that touches a PJRT object — `compile`, `execute`, `to_literal_sync` —
-// runs under `exec_lock`, so those handles are never accessed from two
-// threads at once. `xla::Literal` values are standalone host buffers with
-// no client handle and are only ever owned by one thread. All rust-side
-// mutability is behind RwLock/Mutex. Concurrency is exercised by the
-// `engine::pool` tests.
-unsafe impl Send for Runtime {}
-unsafe impl Sync for Runtime {}
-
-#[derive(Clone, Copy, Debug, Default)]
-pub struct RuntimeStats {
-    pub compile_ms: f64,
-    pub run_ms: f64,
-    pub runs: u64,
-    pub compiles: u64,
-}
-
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub info: ExeInfo,
-}
-
-// SAFETY: see the `Runtime` impls above — loaded executables are immutable
-// after compilation and PJRT execution is thread-safe.
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
-
-/// Outputs of one execution, keyed by position (manifest order).
-pub struct Outputs {
-    lits: Vec<xla::Literal>,
-    info: ExeInfo,
-}
-
-impl Outputs {
-    pub fn f32(&self, idx: usize) -> Result<TensorF32> {
-        let spec = &self.info.outputs[idx];
-        if spec.dtype != DType::F32 {
-            bail!("output {idx} ({}) is not f32", spec.name);
-        }
-        TensorF32::from_literal(&self.lits[idx], &spec.shape)
-    }
-
-    pub fn i32(&self, idx: usize) -> Result<TensorI32> {
-        let spec = &self.info.outputs[idx];
-        if spec.dtype != DType::S32 {
-            bail!("output {idx} ({}) is not s32", spec.name);
-        }
-        TensorI32::from_literal(&self.lits[idx], &spec.shape)
-    }
-
-    pub fn len(&self) -> usize {
-        self.lits.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.lits.is_empty()
-    }
-
-    /// Find an output index by manifest name.
-    pub fn index_of(&self, name: &str) -> Result<usize> {
-        self.info
-            .outputs
-            .iter()
-            .position(|o| o.name == name)
-            .with_context(|| format!("no output named {name:?}"))
-    }
 }
 
 impl Runtime {
+    /// Single-context runtime — the default, byte-identical to the
+    /// pre-pool behaviour (one client, one FFI lock).
     pub fn new(art_dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(art_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self {
-            client,
-            manifest,
-            art_dir: art_dir.to_path_buf(),
-            cache: RwLock::new(HashMap::new()),
-            exec_lock: Mutex::new(()),
-            stats: Mutex::new(RuntimeStats::default()),
-        })
+        Self::with_devices(art_dir, 1)
     }
 
-    /// Default artifact dir: $TINYLORA_ARTIFACTS or ./artifacts.
+    /// Runtime with `devices` independent execution contexts (clamped to
+    /// at least 1). Contexts share nothing; work routed to different
+    /// contexts executes concurrently.
+    pub fn with_devices(art_dir: &Path, devices: usize) -> Result<Self> {
+        let manifest = Manifest::load(art_dir)?;
+        let d = devices.max(1);
+        let mut contexts = Vec::with_capacity(d);
+        for id in 0..d {
+            contexts.push(ExecContext::new(id)?);
+        }
+        Ok(Self { contexts, manifest, art_dir: art_dir.to_path_buf() })
+    }
+
+    /// Default artifact dir: $TINYLORA_ARTIFACTS or ./artifacts; context
+    /// count: $TINYLORA_DEVICES or 1. A set-but-unparseable device count
+    /// is an error, not a silent fall-back to 1 (the operator asked for
+    /// device parallelism; failing fast beats quietly not delivering it).
     pub fn from_env() -> Result<Self> {
         let dir = std::env::var("TINYLORA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        Self::new(Path::new(&dir))
+        let devices = match std::env::var("TINYLORA_DEVICES") {
+            Err(_) => 1,
+            Ok(v) => v.trim().parse().map_err(|_| {
+                anyhow::anyhow!("TINYLORA_DEVICES {v:?} is not a device count")
+            })?,
+        };
+        Self::with_devices(Path::new(&dir), devices)
     }
 
-    /// Load (compile) an executable by manifest name, with caching.
+    /// Number of execution contexts in the pool.
+    pub fn devices(&self) -> usize {
+        self.contexts.len()
+    }
+
+    /// A context by id (wrapped modulo the pool size, so callers may pass
+    /// any stable index).
+    pub fn context(&self, id: usize) -> &ExecContext {
+        &self.contexts[id % self.contexts.len()]
+    }
+
+    /// Deterministic context for a pool job: a pure function of the job
+    /// id, NOT of which worker dequeued it — this is what keeps pooled
+    /// results byte-identical to serial ones at any D (`serve` and
+    /// `serve_serial` route each job identically).
+    pub fn ctx_for(&self, job_id: u64) -> usize {
+        (job_id % self.contexts.len() as u64) as usize
+    }
+
+    /// Stable placement of a named executable: a hash of the name, so
+    /// every caller that loads `name` without an explicit context agrees
+    /// on one context (no duplicate compiles) and different executables
+    /// spread across the pool.
+    pub fn placement(&self, name: &str) -> usize {
+        (fnv1a(name.as_bytes()) % self.contexts.len() as u64) as usize
+    }
+
+    /// Least-loaded checkout biased to `preferred`: stays on `preferred`
+    /// unless some context is strictly less loaded (in-flight FFI
+    /// sections, compiles included). Sticky on ties, so an otherwise-idle
+    /// pool keeps reusing the warm context instead of rotating onto cold
+    /// ones and paying their first-use compiles. For callers whose
+    /// results cannot depend on the context — greedy serving decode,
+    /// occupancy probes — NOT for anything whose bytes must be
+    /// reproducible under a pinned schedule.
+    pub fn checkout(&self, preferred: usize) -> usize {
+        let n = self.contexts.len();
+        if n == 1 {
+            return 0;
+        }
+        let mut best = preferred % n;
+        let mut best_load = self.contexts[best].in_flight();
+        for (i, c) in self.contexts.iter().enumerate() {
+            let load = c.in_flight();
+            if load < best_load {
+                best = i;
+                best_load = load;
+            }
+        }
+        best
+    }
+
+    /// Load (compile) an executable by manifest name on its stable
+    /// placement context, with single-flight caching: concurrent loads of
+    /// one name yield exactly one compile.
     pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
-        if let Some(e) = self.cache.read().unwrap().get(name) {
-            return Ok(e.clone());
-        }
-        let info = self.manifest.exe(name)?.clone();
-        let path = self.art_dir.join(&info.file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .with_context(|| format!("loading HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = {
-            let _ffi = self.exec_lock.lock().unwrap();
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compiling {name}"))?
-        };
-        {
-            let mut s = self.stats.lock().unwrap();
-            s.compile_ms += t0.elapsed().as_secs_f64() * 1e3;
-            s.compiles += 1;
-        }
-        let arc = Arc::new(Executable { exe, info });
-        // two threads racing to compile the same exe both succeed; the
-        // second insert wins and the first Arc just drops when unreferenced
-        self.cache.write().unwrap().insert(name.to_string(), arc.clone());
-        Ok(arc)
+        self.load_on(self.placement(name), name)
     }
 
-    /// Execute with shape-checked args; returns per-output literals.
+    /// Load on an explicit context (engine decode paths pin per-job
+    /// contexts and need the executable resident there).
+    pub fn load_on(&self, ctx: usize, name: &str) -> Result<Arc<Executable>> {
+        self.context(ctx).load(&self.manifest, &self.art_dir, name)
+    }
+
+    /// Execute with shape-checked args; routed to the context that owns
+    /// the executable (PJRT executables cannot run on another client).
+    /// Routing goes through `context` (wrapping) so an executable from a
+    /// differently-sized runtime hits `ExecContext::run`'s id check — a
+    /// clean error, not an index panic.
     pub fn run(&self, exe: &Executable, args: &[Arg]) -> Result<Outputs> {
-        if args.len() != exe.info.inputs.len() {
-            bail!(
-                "{}: got {} args, want {}",
-                exe.info.name,
-                args.len(),
-                exe.info.inputs.len()
-            );
-        }
-        for (a, spec) in args.iter().zip(&exe.info.inputs) {
-            a.check(spec).with_context(|| exe.info.name.clone())?;
-        }
-        let lits: Vec<xla::Literal> =
-            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
-        let t0 = Instant::now();
-        let root = {
-            // device section: execute + transfer both touch PJRT objects
-            let _ffi = self.exec_lock.lock().unwrap();
-            let out = exe.exe.execute::<xla::Literal>(&lits)?;
-            out[0][0].to_literal_sync()?
-        };
-        {
-            let mut s = self.stats.lock().unwrap();
-            s.run_ms += t0.elapsed().as_secs_f64() * 1e3;
-            s.runs += 1;
-        }
-        // aot.py lowers with return_tuple=True: root is always a tuple.
-        let mut root = root;
-        let lits = root.decompose_tuple()?;
-        if lits.len() != exe.info.outputs.len() {
-            bail!(
-                "{}: got {} outputs, want {}",
-                exe.info.name,
-                lits.len(),
-                exe.info.outputs.len()
-            );
-        }
-        Ok(Outputs { lits, info: exe.info.clone() })
+        self.context(exe.ctx).run(exe, args)
     }
 
+    /// Cumulative counters aggregated over every context.
     pub fn stats(&self) -> RuntimeStats {
-        *self.stats.lock().unwrap()
+        let mut agg = RuntimeStats::default();
+        for c in &self.contexts {
+            agg.add(&c.stats());
+        }
+        agg
+    }
+
+    /// Per-context counter snapshots (index = context id).
+    pub fn per_context_stats(&self) -> Vec<RuntimeStats> {
+        self.contexts.iter().map(|c| c.stats()).collect()
     }
 
     pub fn platform(&self) -> String {
-        let _ffi = self.exec_lock.lock().unwrap();
-        self.client.platform_name()
+        self.contexts[0].platform()
     }
 }
 
@@ -225,6 +183,7 @@ mod tests {
     fn runtime_is_send_sync() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<Runtime>();
+        assert_send_sync::<ExecContext>();
         assert_send_sync::<Executable>();
         assert_send_sync::<RuntimeStats>();
     }

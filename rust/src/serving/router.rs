@@ -4,12 +4,15 @@
 //! `engine::InferenceEngine`, record latency. This is the
 //! vllm-router-shaped component of L3.
 //!
-//! The router owns no decode logic: padding sentinels, EOS cuts and the
+//! The router owns no decode logic: padding sentinels, EOS cuts,
+//! occupancy-aware geometry selection (partial flushes decode on the
+//! smallest baked batch that fits, cutting `padded_rows` waste) and the
 //! fused-generate call all live in `engine`. It owns the *serving policy*:
 //! which batch goes next (`engine::scheduler::Scheduler`), which merged
 //! model is resident (`AdapterStore`), and — via `drain_parallel` — how
 //! many independent adapter batches run concurrently
-//! (`engine::pool::WorkerPool`).
+//! (`engine::pool::WorkerPool`, jobs pinned to runtime execution
+//! contexts by job id).
 
 use std::path::PathBuf;
 
@@ -44,6 +47,9 @@ pub struct RouterStats {
     /// real wall time spent serving batches (merge + decode), ms
     pub wall_ms: f64,
     pub merge_hit_rate: f32,
+    /// padding rows the engine spent on partial flushes (occupancy-aware
+    /// geometry keeps this below the fixed-geometry baseline)
+    pub padded_rows: u64,
 }
 
 pub struct Router {
@@ -157,9 +163,22 @@ impl Router {
         let weights = self.store.activate(rt, &self.base, &batch.adapter, &self.ckpt_dir)?;
         let problems = Self::batch_problems(&batch);
         // the engine pads short batches with the explicit sentinel and
-        // returns exactly one row per real request
-        let rows =
-            self.engine.generate_problems(rt, &weights, &problems, &self.tok, 0.0, &mut self.rng)?;
+        // returns exactly one row per real request. Serving decode is
+        // greedy (temp 0) and per-row, so its *content* is
+        // context-invariant — the one caller where the least-loaded
+        // checkout is safe: ticks interleaved with training/bench work
+        // steer around busy contexts, and stick to the engine's warm
+        // context when the pool is idle.
+        let ctx = rt.checkout(self.engine.default_ctx());
+        let rows = self.engine.generate_problems_on(
+            rt,
+            ctx,
+            &weights,
+            &problems,
+            &self.tok,
+            0.0,
+            &mut self.rng,
+        )?;
         self.now += self.service_time;
         self.record(&batch, &rows);
         self.wall_ms += t.millis();
@@ -192,10 +211,7 @@ impl Router {
                 return Ok(());
             }
             // collect one wave: every batch flushable at the current clock
-            let mut wave: Vec<AdapterBatch> = Vec::new();
-            while let Some(b) = self.scheduler.next_batch(self.now) {
-                wave.push(b);
-            }
+            let wave = self.scheduler.flush_wave(self.now);
             if wave.is_empty() {
                 self.now += self.scheduler.max_wait.max(1e-3);
                 continue;
@@ -249,6 +265,7 @@ impl Router {
             },
             wall_ms: self.wall_ms,
             merge_hit_rate: self.store.hit_rate(),
+            padded_rows: self.engine.stats().padded_rows,
         }
     }
 }

@@ -5,6 +5,31 @@ use anyhow::{bail, Result};
 
 use crate::manifest::{ArgSpec, DType};
 
+/// Literal construction for an f32 buffer at a given shape. Rank-1
+/// tensors skip the `reshape` round-trip entirely — `vec1` already
+/// carries the right shape, and `reshape` materialises a second
+/// full-size literal. That copy used to be paid on EVERY batch for every
+/// rank-1 argument (prompt lengths, advantages, adapter theta vectors).
+fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// i32 twin of [`literal_f32`] (the xla element-type trait is not
+/// nameable from here, so the helper is monomorphic per dtype).
+fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorF32 {
     pub shape: Vec<usize>,
@@ -26,8 +51,7 @@ impl TensorF32 {
     }
 
     pub fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+        literal_f32(&self.shape, &self.data)
     }
 
     pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Self> {
@@ -61,8 +85,7 @@ impl TensorI32 {
     }
 
     pub fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+        literal_i32(&self.shape, &self.data)
     }
 
     pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Self> {
@@ -132,5 +155,33 @@ mod tests {
     fn norm() {
         let t = TensorF32::from_vec(&[2], vec![3.0, 4.0]);
         assert!((t.norm() - 5.0).abs() < 1e-6);
+    }
+
+    /// ISSUE 4 satellite: the direct-shape literal construction (rank-1
+    /// fast path included) round-trips exactly on random shapes, both
+    /// dtypes. Literals are standalone host buffers — no client needed.
+    #[test]
+    fn prop_literal_roundtrip_random_shapes() {
+        crate::testing::check("literal roundtrip", 50, |rng| {
+            let rank = 1 + rng.below(3) as usize;
+            let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(5) as usize).collect();
+            let n: usize = shape.iter().product();
+
+            let data: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let t = TensorF32::from_vec(&shape, data);
+            let lit = t.to_literal().map_err(|e| format!("{e:#}"))?;
+            let back = TensorF32::from_literal(&lit, &shape).map_err(|e| format!("{e:#}"))?;
+            if back != t {
+                return Err(format!("f32 roundtrip mismatch at shape {shape:?}"));
+            }
+
+            let ti = TensorI32::from_vec(&shape, (0..n as i32).collect());
+            let lit = ti.to_literal().map_err(|e| format!("{e:#}"))?;
+            let back = TensorI32::from_literal(&lit, &shape).map_err(|e| format!("{e:#}"))?;
+            if back != ti {
+                return Err(format!("i32 roundtrip mismatch at shape {shape:?}"));
+            }
+            Ok(())
+        });
     }
 }

@@ -12,7 +12,12 @@
 //! their rollout seed, and the pool derives decode RNGs on the same stream
 //! as the in-loop path — so parallel results are bit-identical to serial
 //! ones, and a TenantTrainer run of G tenants equals G separate runs
-//! (asserted in `tests/integration.rs`).
+//! (asserted in `tests/integration.rs`). With a device-parallel runtime
+//! (`Runtime::with_devices`), wave jobs additionally pin to execution
+//! contexts by tenant index (`job.id % devices`), so up to D tenants'
+//! decodes run concurrently on the device instead of serialising on one
+//! global FFI lock — the job→context map is a pure function of the
+//! tenant, keeping pooled == serial byte-identical at any D.
 //!
 //! Finished tenants register straight into the serving `AdapterStore`,
 //! closing the train→serve loop.
@@ -106,6 +111,19 @@ impl TenantTrainer {
         }
         let tier = base.tier.clone();
         let engine = InferenceEngine::new(rt, &tier, batch)?;
+        // rollout waves must fill the baked geometry exactly (group *
+        // prompts == batch); reject a bad group now instead of failing
+        // G sessions deep into the first wave
+        for spec in &specs {
+            if spec.cfg.group == 0 || engine.batch % spec.cfg.group != 0 {
+                bail!(
+                    "tenant {}: group {} does not divide the decode batch {}",
+                    spec.name,
+                    spec.cfg.group,
+                    engine.batch
+                );
+            }
+        }
         let mut sessions = Vec::with_capacity(specs.len());
         for spec in &specs {
             let mut policy = Policy::new(

@@ -6,7 +6,7 @@
 //! Requires `make artifacts` to have run (skipped gracefully otherwise).
 
 use std::path::Path;
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 use tinylora_rl::adapters::{count, packing::Precision, Theta};
 use tinylora_rl::coordinator::grpo::{grpo_session_cfg, GrpoConfig, GrpoLoop};
@@ -692,6 +692,111 @@ fn recovery_report_over_real_bench_runs() {
     let md = report.to_markdown();
     assert!(md.contains("| full | 1000 |"), "{md}");
     assert!(md.contains("100%"), "{md}");
+}
+
+// ---------------------------------------------------------------------------
+// ISSUE 4: device-parallel runtime — single-flight compiles, context
+// routing, occupancy-aware batch geometry.
+// ---------------------------------------------------------------------------
+
+/// ISSUE 4 satellite: concurrent loads of one executable compile it
+/// exactly once (single-flight coalescing) and hand every caller the
+/// same `Arc` — the seed's check-then-insert double-compile race is gone.
+#[test]
+fn concurrent_load_compiles_once() {
+    require_artifacts!();
+    // fresh runtime: the shared RT may already have this exe cached
+    let rt = Runtime::new(art_dir()).unwrap();
+    let name =
+        rt.manifest.generate_exe("nano", rt.manifest.batch.test).unwrap().name.clone();
+    let loaded: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..6).map(|_| s.spawn(|| rt.load(&name).unwrap())).collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(rt.stats().compiles, 1, "concurrent loads must coalesce to one compile");
+    for e in &loaded {
+        assert!(Arc::ptr_eq(e, &loaded[0]), "all callers must share one executable");
+    }
+}
+
+/// ISSUE 4 tentpole: a D=2 context pool serves pooled jobs byte-identical
+/// to the D=1 serial reference (job→context pinning is a pure function of
+/// the job id), and aggregates per-context counters.
+#[test]
+fn multi_context_pool_matches_single_context_serial() {
+    require_artifacts!();
+    let rt1 = Runtime::new(art_dir()).unwrap();
+    let rt2 = Runtime::with_devices(art_dir(), 2).unwrap();
+    assert_eq!(rt1.devices(), 1);
+    assert_eq!(rt2.devices(), 2);
+    let tier = rt2.manifest.tier("nano").unwrap().clone();
+    let b = rt2.manifest.batch.test;
+    let weights = WeightSet::init(&tier, 0);
+    let make_jobs = || -> Vec<GenJob> {
+        (0..4u64)
+            .map(|id| {
+                let mut rng = Pcg64::with_stream(300 + id, 0x6a6f6273);
+                GenJob {
+                    id,
+                    weights: weights.clone(),
+                    problems: (0..3).map(|_| SUITES[0].generate(&mut rng)).collect(),
+                    group: 1,
+                    pb: None,
+                    temperature: 1.0,
+                    seed: 90 + id,
+                }
+            })
+            .collect()
+    };
+    let e1 = InferenceEngine::new(&rt1, "nano", b).unwrap();
+    let e2 = InferenceEngine::new(&rt2, "nano", b).unwrap();
+    let reference = WorkerPool::serve_serial(&rt1, &e1, &make_jobs()).unwrap();
+    let pooled = WorkerPool::new(3).serve(&rt2, &e2, make_jobs()).unwrap();
+    assert_eq!(reference.len(), pooled.len());
+    for (a, p) in reference.iter().zip(&pooled) {
+        assert_eq!(a.id, p.id);
+        for (x, y) in a.rows.iter().zip(&p.rows) {
+            assert_eq!(x.response, y.response, "job {} diverged across contexts", a.id);
+            assert_eq!(x.behavior, y.behavior);
+        }
+    }
+    // both contexts did real work and the aggregate matches the parts
+    let per = rt2.per_context_stats();
+    assert_eq!(per.len(), 2);
+    assert!(per.iter().all(|s| s.runs > 0), "jobs must spread across both contexts");
+    assert_eq!(per.iter().map(|s| s.runs).sum::<u64>(), rt2.stats().runs);
+}
+
+/// ISSUE 4 tentpole: occupancy-aware geometry never pads more than the
+/// fixed-geometry baseline would, and returns exactly one row per real
+/// problem regardless of the geometry chosen for the tail flush.
+#[test]
+fn occupancy_aware_flush_padding_never_worse() {
+    require_artifacts!();
+    let rt = runtime();
+    let b = rt.manifest.batch.test;
+    let tier = rt.manifest.tier("nano").unwrap().clone();
+    let weights = WeightSet::init(&tier, 0);
+    let engine = InferenceEngine::new(rt, "nano", b).unwrap();
+    assert!(engine.geometries().contains(&b), "canonical geometry must be held");
+    let tok = Tokenizer::new();
+    let mut gen_rng = Pcg64::new(31);
+    for n in [1usize, b - 1, b, b + 1, 2 * b - 1] {
+        let mut rng = Pcg64::new(17);
+        let problems: Vec<_> = (0..n).map(|_| SUITES[0].generate(&mut rng)).collect();
+        let before = engine.stats();
+        let rows =
+            engine.generate_problems(rt, &weights, &problems, &tok, 0.0, &mut gen_rng).unwrap();
+        let after = engine.stats();
+        assert_eq!(rows.len(), n, "one row per real problem at n={n}");
+        assert_eq!(after.rows - before.rows, n as u64);
+        // fixed baseline pads the tail all the way to the canonical batch
+        let fixed = (n.div_ceil(b) * b - n) as u64;
+        assert!(
+            after.padded_rows - before.padded_rows <= fixed,
+            "n={n}: occupancy-aware padding exceeded the fixed baseline"
+        );
+    }
 }
 
 #[test]
