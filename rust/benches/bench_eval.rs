@@ -100,7 +100,7 @@ fn main() {
     let tier = rt.manifest.tier("nano").expect("nano tier").clone();
     let ckpt = Path::new("ckpts").join("nano.ckpt");
     let base =
-        if ckpt.exists() { WeightSet::load(&ckpt).unwrap() } else { WeightSet::init(&tier, 0) };
+        if ckpt.exists() { WeightSet::load(&ckpt).unwrap() } else { WeightSet::init(&tier, 0).unwrap() };
 
     println!();
     for k in [1usize, 4, 16] {

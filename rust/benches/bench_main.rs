@@ -162,7 +162,7 @@ fn main() {
     let weights = if ckpt.exists() {
         WeightSet::load(&ckpt).unwrap()
     } else {
-        WeightSet::init(&tier, 0)
+        WeightSet::init(&tier, 0).unwrap()
     };
     let mut rng = Pcg64::new(5);
 

@@ -89,7 +89,7 @@ fn device_section() -> Value {
         let tier = rt.manifest.tier("nano").expect("nano tier").clone();
         let batch = rt.manifest.batch.test;
         let engine = InferenceEngine::new(&rt, "nano", batch).expect("engine");
-        let base = WeightSet::init(&tier, 0);
+        let base = WeightSet::init(&tier, 0).unwrap();
         let make_jobs = || -> Vec<GenJob> {
             (0..n_jobs as u64)
                 .map(|id| GenJob {

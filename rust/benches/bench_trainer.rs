@@ -157,7 +157,7 @@ fn main() {
     let tier = rt.manifest.tier("nano").expect("nano tier").clone();
     let ckpt = Path::new("ckpts").join("nano.ckpt");
     let base =
-        if ckpt.exists() { WeightSet::load(&ckpt).unwrap() } else { WeightSet::init(&tier, 0) };
+        if ckpt.exists() { WeightSet::load(&ckpt).unwrap() } else { WeightSet::init(&tier, 0).unwrap() };
 
     println!();
     bench_tenants(&mut b, &rt, &base, 4, 4);

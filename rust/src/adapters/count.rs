@@ -4,6 +4,8 @@
 //! An integration test asserts they agree with the manifest's `theta_size`
 //! for every lowered artifact (python computes sizes independently).
 
+use anyhow::{bail, Result};
+
 use crate::manifest::TierInfo;
 
 pub const N_MODULES: usize = 7; // q,k,v,o,up,gate,down
@@ -26,16 +28,18 @@ pub fn lora_xs(tier: &TierInfo, r: usize) -> usize {
     tier.n_layers * N_MODULES * r * r
 }
 
-/// TinyLoRA: u per *group*; groups determined by the tying plan.
-pub fn tinylora(tier: &TierInfo, u: usize, tie: &str, n_tie: usize) -> usize {
-    n_groups(tier, tie, n_tie) * u
+/// TinyLoRA: u per *group*; groups determined by the tying plan. An
+/// unknown plan name (these arrive from the manifest / CLI flags) is an
+/// error, not a panic.
+pub fn tinylora(tier: &TierInfo, u: usize, tie: &str, n_tie: usize) -> Result<usize> {
+    Ok(n_groups(tier, tie, n_tie)? * u)
 }
 
 /// Number of distinct trainable vectors under a tying plan (mirrors
 /// `Scheme.groups` in python/compile/configs.py).
-pub fn n_groups(tier: &TierInfo, tie: &str, n_tie: usize) -> usize {
+pub fn n_groups(tier: &TierInfo, tie: &str, n_tie: usize) -> Result<usize> {
     let n = tier.n_layers * N_MODULES;
-    match tie {
+    Ok(match tie {
         "all" => 1,
         "none" => n,
         "tiled" => n.div_ceil(n_tie),
@@ -43,15 +47,15 @@ pub fn n_groups(tier: &TierInfo, tie: &str, n_tie: usize) -> usize {
             let per_type = tier.n_layers.div_ceil(n_tie);
             N_MODULES * per_type
         }
-        other => panic!("unknown tie plan {other}"),
-    }
+        other => bail!("unknown tie plan {other:?} (all|none|tiled|structured)"),
+    })
 }
 
 /// Flat module index (l * 7 + m) -> group id; mirror of python's
 /// `Scheme.groups` (cross-checked against manifest `groups` in tests).
-pub fn group_assignment(tier: &TierInfo, tie: &str, n_tie: usize) -> Vec<usize> {
+pub fn group_assignment(tier: &TierInfo, tie: &str, n_tie: usize) -> Result<Vec<usize>> {
     let n = tier.n_layers * N_MODULES;
-    match tie {
+    Ok(match tie {
         "all" => vec![0; n],
         "none" => (0..n).collect(),
         "tiled" => (0..n).map(|i| i / n_tie).collect(),
@@ -65,12 +69,12 @@ pub fn group_assignment(tier: &TierInfo, tie: &str, n_tie: usize) -> Vec<usize> 
             }
             out
         }
-        other => panic!("unknown tie plan {other}"),
-    }
+        other => bail!("unknown tie plan {other:?} (all|none|tiled|structured)"),
+    })
 }
 
 /// Render the paper's Table 1 for a tier (used by the `info` CLI command).
-pub fn table1(tier: &TierInfo) -> String {
+pub fn table1(tier: &TierInfo) -> Result<String> {
     let mut s = String::new();
     s.push_str(&format!(
         "Table 1 — trainable parameters ({}: d={}, L={}, m={})\n",
@@ -92,10 +96,10 @@ pub fn table1(tier: &TierInfo) -> String {
         s.push_str(&format!(
             "  {:<22} {:>12}\n",
             label,
-            tinylora(tier, u, tie, n_tie)
+            tinylora(tier, u, tie, n_tie)?
         ));
     }
-    s
+    Ok(s)
 }
 
 #[cfg(test)]
@@ -132,7 +136,7 @@ mod tests {
     fn minimums_match_paper_table1() {
         let t = tier(3, 64, 128);
         // TinyLoRA minimum is ONE parameter (full tying, u=1)
-        assert_eq!(tinylora(&t, 1, "all", 1), 1);
+        assert_eq!(tinylora(&t, 1, "all", 1).unwrap(), 1);
         // LoRA-XS minimum is one per module: n*m
         assert_eq!(lora_xs(&t, 1), 3 * 7);
         // LoRA r=1 is sum over modules of (d_in + d_out)
@@ -142,7 +146,28 @@ mod tests {
     #[test]
     fn the_13_param_config() {
         let t = tier(3, 64, 128);
-        assert_eq!(tinylora(&t, 13, "all", 1), 13);
+        assert_eq!(tinylora(&t, 13, "all", 1).unwrap(), 13);
+    }
+
+    /// ISSUE 5 satellite: an unknown tie plan (manifest / CLI input) is a
+    /// named error through every entry point, never a panic.
+    #[test]
+    fn unknown_tie_plan_is_an_error() {
+        let t = tier(2, 32, 64);
+        for res in [
+            n_groups(&t, "diagonal", 1).map(|_| ()),
+            group_assignment(&t, "diagonal", 1).map(|_| ()),
+            tinylora(&t, 13, "diagonal", 1).map(|_| ()),
+        ] {
+            let msg = format!("{:#}", res.unwrap_err());
+            assert!(msg.contains("unknown tie plan"), "{msg}");
+            assert!(msg.contains("diagonal"), "{msg}");
+        }
+        // the valid plans still resolve, and table1 renders
+        for tie in ["all", "none", "tiled", "structured"] {
+            n_groups(&t, tie, 2).unwrap();
+        }
+        assert!(table1(&t).unwrap().contains("TinyLoRA u=13 tied"));
     }
 
     #[test]
@@ -152,13 +177,17 @@ mod tests {
             let t = tier(l, 32, 64);
             let tie = *rng.choice(&["all", "none", "tiled", "structured"]);
             let n_tie = rng.range_i64(1, 9) as usize;
-            let gs = group_assignment(&t, tie, n_tie);
+            let gs = group_assignment(&t, tie, n_tie).unwrap();
             if gs.len() != l * N_MODULES {
                 return Err("wrong length".into());
             }
             let max = *gs.iter().max().unwrap();
-            if max + 1 != n_groups(&t, tie, n_tie) {
-                return Err(format!("max {} vs n_groups {}", max, n_groups(&t, tie, n_tie)));
+            if max + 1 != n_groups(&t, tie, n_tie).unwrap() {
+                return Err(format!(
+                    "max {} vs n_groups {}",
+                    max,
+                    n_groups(&t, tie, n_tie).unwrap()
+                ));
             }
             // group ids must be contiguous 0..=max
             let mut seen = vec![false; max + 1];
@@ -170,8 +199,8 @@ mod tests {
             }
             // tying monotonicity: larger n_tie never increases group count
             if tie == "tiled" || tie == "structured" {
-                let g2 = n_groups(&t, tie, n_tie + 1);
-                if g2 > n_groups(&t, tie, n_tie) {
+                let g2 = n_groups(&t, tie, n_tie + 1).unwrap();
+                if g2 > n_groups(&t, tie, n_tie).unwrap() {
                     return Err("n_tie+1 increased groups".into());
                 }
             }
@@ -182,7 +211,7 @@ mod tests {
     #[test]
     fn structured_shares_within_type_only() {
         let t = tier(4, 32, 64);
-        let gs = group_assignment(&t, "structured", 2);
+        let gs = group_assignment(&t, "structured", 2).unwrap();
         // modules of different types never share a group
         for l1 in 0..4 {
             for l2 in 0..4 {
@@ -203,7 +232,7 @@ mod tests {
     #[test]
     fn tiled_shares_across_types() {
         let t = tier(2, 32, 64);
-        let gs = group_assignment(&t, "tiled", 7);
+        let gs = group_assignment(&t, "tiled", 7).unwrap();
         // first 7 modules (layer 0) share one group regardless of type
         assert!(gs[..7].iter().all(|&g| g == gs[0]));
         assert!(gs[7..14].iter().all(|&g| g == gs[7]));

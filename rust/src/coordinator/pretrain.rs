@@ -78,7 +78,7 @@ impl PretrainLoop {
                 })?
                 .name,
         )?;
-        let weights = WeightSet::init(&tier, cfg.seed);
+        let weights = WeightSet::init(&tier, cfg.seed)?;
         Ok(Self { cfg, weights, tier, exe, tok: Tokenizer::new(), batch: b })
     }
 }

@@ -24,6 +24,14 @@
 //!   * `pool` — a `WorkerPool` that serves independent adapter batches on
 //!     N threads, each job pinned to a runtime execution context by its
 //!     job id (`Runtime` is a pool of `Send + Sync` contexts).
+//!
+//! The engine is backend-blind: it speaks only the manifest contract
+//! (baked generate geometries, tuple outputs, the padding sentinel), so
+//! the same code decodes through PJRT artifacts and through the hermetic
+//! sim backend — `tests/e2e_sim.rs` drives every path below on the sim
+//! unconditionally, and the pooled==serial assertions hold per backend
+//! because geometry choice and job→context routing never consult the
+//! backend at all.
 
 pub mod pool;
 pub mod scheduler;

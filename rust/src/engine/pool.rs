@@ -15,7 +15,9 @@
 //! coordinating thread, where the `AdapterStore` LRU lives) and its own
 //! RNG stream seeded from the job id, so results are bit-identical to the
 //! single-threaded path regardless of which worker picks a job up or in
-//! what order (asserted in `tests/integration.rs`).
+//! what order (asserted in `tests/integration.rs`, and unconditionally on
+//! the sim backend at D∈{1,2,4} — including under injected per-context
+//! delays — in `tests/e2e_sim.rs`).
 
 use std::collections::VecDeque;
 use std::sync::Mutex;

@@ -17,6 +17,11 @@
 //!     has a full batch waiting. Starvation-free.
 //!   * `RoundRobin` — rotate a cursor over adapters for full batches
 //!     (per-tenant fairness), with the same expiry-first guarantee.
+//!
+//! Unit-level property tests below cover the policies in isolation;
+//! `tests/e2e_sim.rs` additionally drives every policy through a live
+//! `WorkerPool` against the sim backend (wave formation → pooled decode →
+//! completion accounting), including an adapter-starvation regression.
 
 use std::collections::{HashMap, VecDeque};
 

@@ -21,6 +21,10 @@
 //! wall-clock time is deliberately excluded) plus a rendered markdown
 //! table (golden-tested). [`crate::eval::report::RecoveryReport`] stitches
 //! several runs into the paper's recovery-fraction table.
+//!
+//! The ladder is backend-blind; `tests/e2e_sim.rs` asserts pooled==serial
+//! canonical-JSON identity on the sim backend in every CI run, so the
+//! determinism claim no longer depends on artifacts existing.
 
 use std::path::Path;
 

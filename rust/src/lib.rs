@@ -4,8 +4,10 @@
 //!   * L1/L2 live in `python/compile/` and are AOT-lowered to HLO text
 //!     (`make artifacts`); python never runs at request time.
 //!   * L3 (this crate) owns everything with a lifecycle: the
-//!     device-parallel PJRT runtime (a pool of execution contexts, each
-//!     with its own client/cache/FFI-lock — DESIGN.md §9), the shared
+//!     device-parallel runtime (a pool of execution contexts over a
+//!     pluggable `Backend` — the PJRT client path or the hermetic
+//!     deterministic sim backend, DESIGN.md §9–10 — each with its own
+//!     backend/cache/FFI-lock), the shared
 //!     thread-safe inference `engine` (the one canonical decode path:
 //!     occupancy-aware `InferenceEngine` + per-adapter `Scheduler` +
 //!     context-affine `WorkerPool`),

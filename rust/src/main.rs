@@ -93,7 +93,9 @@ COMMANDS
 
 Shared: --artifacts DIR --ckpts DIR --results DIR --echo
         --devices D  (execution-context pool: pool jobs pin to contexts,
-        up to D device executions overlap; results stay byte-identical)"
+        up to D device executions overlap; results stay byte-identical)
+        --backend pjrt|sim  (sim = hermetic pure-rust backend, zero
+        artifacts needed; use --tier sim. Env: TINYLORA_BACKEND)"
     );
 }
 
@@ -101,8 +103,22 @@ Shared: --artifacts DIR --ckpts DIR --results DIR --echo
 /// i.e. the classic single-client behaviour). Every subcommand accepts
 /// the flag; `serve-demo`/`bench`/`sweep`/`tenants` are where the
 /// device-parallel pool actually pays off (pool jobs pin to contexts).
+///
+/// `--backend sim` (or `TINYLORA_BACKEND=sim`) swaps the PJRT artifact
+/// path for the hermetic pure-rust simulator — the whole CLI (pretrain →
+/// train → bench → serve-demo, `--tier sim`) then runs with no
+/// `artifacts/` directory at all.
 fn runtime(args: &Args, dirs: &Dirs) -> Result<Runtime> {
-    Runtime::with_devices(&dirs.artifacts, args.usize("devices", 1)?)
+    let devices = args.usize("devices", 1)?;
+    let backend = args.str(
+        "backend",
+        &std::env::var("TINYLORA_BACKEND").unwrap_or_else(|_| "pjrt".into()),
+    );
+    match backend.as_str() {
+        "pjrt" => Runtime::with_devices(&dirs.artifacts, devices),
+        "sim" => Runtime::sim(devices),
+        other => anyhow::bail!("--backend {other:?} is not a backend (pjrt|sim)"),
+    }
 }
 
 fn cmd_pretrain(args: &Args) -> Result<()> {
@@ -567,7 +583,12 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
 fn cmd_info(args: &Args) -> Result<()> {
     let dirs = Dirs::from_args(args);
     let rt = runtime(args, &dirs)?;
-    println!("platform: {} ({} execution contexts)", rt.platform(), rt.devices());
+    println!(
+        "platform: {} [{} backend] ({} execution contexts)",
+        rt.platform(),
+        rt.backend_name(),
+        rt.devices()
+    );
     println!("artifacts: {} executables", rt.manifest.executables.len());
     for (name, t) in &rt.manifest.tiers {
         println!(
@@ -575,8 +596,11 @@ fn cmd_info(args: &Args) -> Result<()> {
             t.d, t.n_layers, t.n_heads, t.f, t.n_params
         );
     }
-    let tier = args.str("tier", "micro");
+    // the sim backend has exactly one tier; default to it there so
+    // `tinylora-rl info --backend sim` works with no flags
+    let default_tier = if rt.backend_name() == "sim" { "sim" } else { "micro" };
+    let tier = args.str("tier", default_tier);
     let t = rt.manifest.tier(&tier)?;
-    println!("\n{}", count::table1(t));
+    println!("\n{}", count::table1(t)?);
     Ok(())
 }

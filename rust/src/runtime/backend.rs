@@ -1,0 +1,90 @@
+//! The `Backend` abstraction — what `ExecContext` needs from a device
+//! layer, and nothing else.
+//!
+//! Extracted from the PJRT-only `runtime/context.rs` so the whole stack
+//! (engine → trainer → serving → bench) can run against more than one
+//! substrate. The contract is exactly the manifest's entry-point surface:
+//!
+//!   * [`Backend::compile`] turns one manifest [`ExeInfo`] into a resident
+//!     [`CompiledExe`] (PJRT: parse + compile the HLO text artifact; sim:
+//!     bind the pure-rust implementation of that entry point);
+//!   * [`CompiledExe::execute`] runs it over shape-checked [`Arg`]s and
+//!     returns one host tensor per manifest output, in manifest order —
+//!     the tuple-output convention every caller already assumes.
+//!
+//! Concurrency contract: a backend instance is owned by exactly one
+//! `ExecContext` and is handed that context's `ffi` mutex on every call.
+//! Backends guard exactly the sections that touch shared native state
+//! (PJRT: compile, execute, device→host transfer) and leave pure host
+//! work outside it; the sim backend is pure rust and never locks. Two
+//! contexts never share a backend, so cross-context concurrency involves
+//! distinct backend instances by construction — the same isolation the
+//! PJRT multi-client model provides, now stated at the trait boundary.
+//!
+//! Implementations: [`super::pjrt::PjrtBackend`] (the production path,
+//! requires `make artifacts`) and [`super::sim::SimBackend`] (hermetic,
+//! deterministic, zero artifacts — see DESIGN.md §10).
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::manifest::ExeInfo;
+use crate::tensor::{Arg, TensorF32, TensorI32};
+
+pub use super::sim::SimOptions;
+
+/// One output of an execution, already on host. Backends produce these in
+/// manifest output order; `Outputs` hands them to callers per dtype.
+pub enum HostTensor {
+    F32(TensorF32),
+    I32(TensorI32),
+}
+
+/// A backend-resident compiled entry point. `Send + Sync` because
+/// executables are shared across pool workers via `Arc<Executable>`;
+/// every native section runs under the owning context's `ffi` lock.
+pub trait CompiledExe: Send + Sync {
+    /// Run the entry point over `args` (already validated against
+    /// `info.inputs`). Returns one host tensor per `info.outputs` entry,
+    /// in manifest order. `ffi` is the owning context's lock; guard the
+    /// native sections with it and leave host-side work outside.
+    fn execute(&self, info: &ExeInfo, args: &[Arg], ffi: &Mutex<()>) -> Result<Vec<HostTensor>>;
+}
+
+/// One execution context's device layer.
+pub trait Backend: Send + Sync {
+    /// Short name for diagnostics ("pjrt" | "sim").
+    fn name(&self) -> &'static str;
+
+    /// Platform string for the `info` CLI (PJRT reports the client's
+    /// platform; sim reports itself).
+    fn platform(&self, ffi: &Mutex<()>) -> String;
+
+    /// Compile/bind one manifest entry point. `art_dir` is where AOT
+    /// artifacts live; hermetic backends ignore it. Transient failures
+    /// are safe to return: the caller's `SingleFlight` cache does not
+    /// poison on error, so a later load retries.
+    fn compile(&self, art_dir: &Path, info: &ExeInfo, ffi: &Mutex<()>)
+        -> Result<Box<dyn CompiledExe>>;
+}
+
+/// Which backend a `Runtime` should construct its contexts with.
+#[derive(Clone, Debug)]
+pub enum BackendSpec {
+    /// One PJRT CPU client per context over AOT artifacts on disk
+    /// (requires `make artifacts`). The production path.
+    Pjrt,
+    /// The hermetic pure-rust simulator: a synthetic manifest, a tiny
+    /// deterministic toy model, zero artifacts. `SimOptions` injects
+    /// faults (compile failures, per-context execute delays) for the
+    /// e2e suite.
+    Sim(SimOptions),
+}
+
+impl BackendSpec {
+    pub fn sim() -> Self {
+        BackendSpec::Sim(SimOptions::default())
+    }
+}

@@ -1,15 +1,16 @@
-//! One execution context = one `xla::PjRtClient` + its own executable
-//! cache + its own FFI lock + atomic perf counters.
+//! One execution context = one backend instance ([`Backend`]: a PJRT
+//! client or the pure-rust sim) + its own executable cache + its own FFI
+//! lock + atomic perf counters.
 //!
 //! The pre-pool `Runtime` held ONE client behind ONE global `exec_lock`,
 //! so every device execution in the process — `WorkerPool` decode
 //! batches, tenant rollout waves, bench ladders, trainer grad steps —
 //! serialised on a single mutex and only host-side work overlapped.
 //! `ExecContext` is the unit that breaks that: contexts share nothing
-//! (client, cache, lock, counters are all per-context), so two contexts
+//! (backend, cache, lock, counters are all per-context), so two contexts
 //! execute truly concurrently. `super::Runtime` owns a pool of D of them
 //! and routes work; see DESIGN.md §9 for the lock hierarchy and the
-//! determinism argument.
+//! determinism argument, §10 for the backend abstraction.
 //!
 //! Counters are lock-free (`AtomicU64`; millisecond totals stored as
 //! f64 bit patterns, accumulated via CAS) so the hot path never takes a
@@ -25,6 +26,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::manifest::{DType, ExeInfo, Manifest};
+use crate::runtime::backend::{Backend, CompiledExe, HostTensor};
 use crate::tensor::{Arg, TensorF32, TensorI32};
 
 /// Cumulative perf counters of one context (or, via `Runtime::stats`,
@@ -71,7 +73,8 @@ type Slot<V> = Arc<OnceLock<std::result::Result<Arc<V>, String>>>;
 /// same key concurrently, the initialiser runs exactly once and everyone
 /// gets the same `Arc`. Failures are NOT cached — the slot is cleared so
 /// a later call can retry (a transient compile error must not poison the
-/// cache for the life of the process).
+/// cache for the life of the process; the sim backend's injected compile
+/// failures drive this path end-to-end in `tests/e2e_sim.rs`).
 ///
 /// This replaces the seed cache's check-then-insert pattern, where two
 /// threads racing to compile the same executable both compiled and the
@@ -147,8 +150,8 @@ struct PerfCounters {
     /// f64 total ms as bits (see `add_ms`)
     compile_ms_bits: AtomicU64,
     run_ms_bits: AtomicU64,
-    /// executions currently inside this context's FFI section — the
-    /// load signal behind `Runtime::checkout`'s least-loaded pick
+    /// calls currently inside this context's backend (compile or execute)
+    /// — the load signal behind `Runtime::checkout`'s least-loaded pick
     active: AtomicU64,
 }
 
@@ -163,13 +166,14 @@ impl Drop for ActiveGuard<'_> {
 
 /// Process-unique context identities: a pool index alone cannot tell two
 /// runtimes' contexts apart, and running one runtime's executable on
-/// another's client would touch PJRT objects outside their owning lock.
+/// another's backend would touch native objects outside their owning lock.
 static NEXT_CTX_UID: AtomicU64 = AtomicU64::new(1);
 
-/// A compiled executable, pinned to the context that compiled it
-/// (PJRT loaded executables are client-owned and cannot run elsewhere).
+/// A compiled executable, pinned to the context that compiled it (PJRT
+/// loaded executables are client-owned and cannot run elsewhere; the sim
+/// keeps the same routing discipline so both backends exercise one path).
 pub struct Executable {
-    pub(super) exe: xla::PjRtLoadedExecutable,
+    exe: Box<dyn CompiledExe>,
     pub info: ExeInfo,
     /// owning context's pool index — `Runtime::run` routes on this
     pub ctx: usize,
@@ -179,15 +183,16 @@ pub struct Executable {
     ctx_uid: u64,
 }
 
-// SAFETY: see `ExecContext` — loaded executables are immutable after
-// compilation and every FFI section on them runs under the owning
-// context's `ffi` lock.
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
-
-/// Outputs of one execution, keyed by position (manifest order).
+/// Outputs of one execution, keyed by position (manifest order). Backends
+/// hand results back as host tensors, so this type is backend-blind.
+///
+/// Known cost: the accessors clone the requested tensor (one memcpy per
+/// accessed output on top of the backend's device→host transfer). At the
+/// current tiers the largest output set is the pretrain grads (~0.5 MB);
+/// if tiers grow, move to consuming/borrowing accessors rather than
+/// widening this one.
 pub struct Outputs {
-    lits: Vec<xla::Literal>,
+    vals: Vec<HostTensor>,
     info: ExeInfo,
 }
 
@@ -197,7 +202,10 @@ impl Outputs {
         if spec.dtype != DType::F32 {
             bail!("output {idx} ({}) is not f32", spec.name);
         }
-        TensorF32::from_literal(&self.lits[idx], &spec.shape)
+        match &self.vals[idx] {
+            HostTensor::F32(t) => Ok(t.clone()),
+            HostTensor::I32(_) => bail!("output {idx} ({}) is not f32", spec.name),
+        }
     }
 
     pub fn i32(&self, idx: usize) -> Result<TensorI32> {
@@ -205,15 +213,18 @@ impl Outputs {
         if spec.dtype != DType::S32 {
             bail!("output {idx} ({}) is not s32", spec.name);
         }
-        TensorI32::from_literal(&self.lits[idx], &spec.shape)
+        match &self.vals[idx] {
+            HostTensor::I32(t) => Ok(t.clone()),
+            HostTensor::F32(_) => bail!("output {idx} ({}) is not s32", spec.name),
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.lits.len()
+        self.vals.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.lits.is_empty()
+        self.vals.is_empty()
     }
 
     /// Find an output index by manifest name.
@@ -232,52 +243,36 @@ pub struct ExecContext {
     pub id: usize,
     /// process-unique identity (see `NEXT_CTX_UID`)
     uid: u64,
-    client: xla::PjRtClient,
-    /// Serialises every FFI section that touches THIS context's PJRT
-    /// objects (compile, execute, device→host transfer). Contexts hold
-    /// independent locks, so D contexts execute concurrently; host-side
-    /// work (arg→literal conversion, tuple decomposition, decode/verify)
-    /// stays outside the lock as before.
+    /// this context's device layer (PJRT client or sim); owned 1:1
+    backend: Box<dyn Backend>,
+    /// Serialises every native section that touches THIS context's
+    /// backend state (PJRT: compile, execute, device→host transfer).
+    /// Contexts hold independent locks, so D contexts execute
+    /// concurrently; host-side work (arg conversion, decode/verify)
+    /// stays outside the lock. The lock is threaded into the backend,
+    /// which guards exactly its native sections (the sim guards nothing —
+    /// it is pure rust).
     ffi: Mutex<()>,
     /// per-context executable cache with single-flight compile coalescing
     cache: SingleFlight<Executable>,
     perf: PerfCounters,
 }
 
-// SAFETY: the `xla` 0.1.6 wrapper holds non-Send handles to PJRT objects
-// (they may be internally reference-counted without atomics). Two claims
-// back these impls:
-//
-// 1. *Within* a context, no PJRT object is ever touched from two threads
-//    at once: every code path that uses one — `compile`, `execute`,
-//    `to_literal_sync`, `platform_name` — runs under this context's
-//    `ffi` lock, and a context's objects (client, loaded executables)
-//    never escape it (`Runtime::run` routes on `Executable::ctx`).
-// 2. *Across* contexts, concurrency only ever involves DISTINCT PJRT
-//    objects owned by distinct `PjRtClient`s. This leans on the PJRT
-//    contract that independent clients share no unsynchronised state —
-//    the multi-client granularity PJRT is designed for — rather than on
-//    any thread-safety of individual wrapper handles. It is the one
-//    assumption added over the old process-global lock; `--devices 1`
-//    (the default) restores exactly the old single-lock behaviour.
-//
-// `xla::Literal` values are standalone host buffers with no client
-// handle and are only ever owned by one thread. All rust-side mutability
-// is behind RwLock/Mutex/atomics. Concurrency is exercised by the
-// `engine::pool` tests at D=1 and D=2.
-unsafe impl Send for ExecContext {}
-unsafe impl Sync for ExecContext {}
-
 impl ExecContext {
-    pub fn new(id: usize) -> Result<Self> {
-        Ok(Self {
+    pub fn new(id: usize, backend: Box<dyn Backend>) -> Self {
+        Self {
             id,
             uid: NEXT_CTX_UID.fetch_add(1, Ordering::Relaxed),
-            client: xla::PjRtClient::cpu()?,
+            backend,
             ffi: Mutex::new(()),
             cache: SingleFlight::new(),
             perf: PerfCounters::default(),
-        })
+        }
+    }
+
+    /// Backend name ("pjrt" | "sim") for diagnostics.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Load (compile) an executable by manifest name, with single-flight
@@ -285,19 +280,14 @@ impl ExecContext {
     pub fn load(&self, manifest: &Manifest, art_dir: &Path, name: &str) -> Result<Arc<Executable>> {
         self.cache.get_or_try_init(name, || {
             let info = manifest.exe(name)?.clone();
-            let path = art_dir.join(&info.file);
             let t0 = Instant::now();
-            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-                .with_context(|| format!("loading HLO text {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
             let exe = {
-                // compiles hold the FFI lock for seconds — count them in
-                // `in_flight` so least-loaded checkout steers around a
+                // compiles can hold the FFI lock for seconds — count them
+                // in `in_flight` so least-loaded checkout steers around a
                 // context stuck compiling, not just one mid-execute
                 self.perf.active.fetch_add(1, Ordering::Relaxed);
                 let _busy = ActiveGuard(&self.perf.active);
-                let _ffi = self.ffi.lock().unwrap();
-                self.client.compile(&comp).with_context(|| format!("compiling {name}"))?
+                self.backend.compile(art_dir, &info, &self.ffi)?
             };
             self.perf.compiles.fetch_add(1, Ordering::Relaxed);
             add_ms(&self.perf.compile_ms_bits, t0.elapsed().as_secs_f64() * 1e3);
@@ -305,7 +295,7 @@ impl ExecContext {
         })
     }
 
-    /// Execute with shape-checked args; returns per-output literals.
+    /// Execute with shape-checked args; returns per-output host tensors.
     pub fn run(&self, exe: &Executable, args: &[Arg]) -> Result<Outputs> {
         if exe.ctx_uid != self.uid {
             // catches both a wrong context of this runtime AND a context
@@ -328,34 +318,26 @@ impl ExecContext {
         for (a, spec) in args.iter().zip(&exe.info.inputs) {
             a.check(spec).with_context(|| exe.info.name.clone())?;
         }
-        let lits: Vec<xla::Literal> =
-            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
         let t0 = Instant::now();
-        let root = {
+        let vals = {
             self.perf.active.fetch_add(1, Ordering::Relaxed);
             let _busy = ActiveGuard(&self.perf.active);
-            // device section: execute + transfer both touch PJRT objects
-            let _ffi = self.ffi.lock().unwrap();
-            let out = exe.exe.execute::<xla::Literal>(&lits)?;
-            out[0][0].to_literal_sync()?
+            exe.exe.execute(&exe.info, args, &self.ffi)?
         };
         self.perf.runs.fetch_add(1, Ordering::Relaxed);
         add_ms(&self.perf.run_ms_bits, t0.elapsed().as_secs_f64() * 1e3);
-        // aot.py lowers with return_tuple=True: root is always a tuple.
-        let mut root = root;
-        let lits = root.decompose_tuple()?;
-        if lits.len() != exe.info.outputs.len() {
+        if vals.len() != exe.info.outputs.len() {
             bail!(
                 "{}: got {} outputs, want {}",
                 exe.info.name,
-                lits.len(),
+                vals.len(),
                 exe.info.outputs.len()
             );
         }
-        Ok(Outputs { lits, info: exe.info.clone() })
+        Ok(Outputs { vals, info: exe.info.clone() })
     }
 
-    /// Calls currently inside this context's FFI section (executes AND
+    /// Calls currently inside this context's backend (executes AND
     /// compiles — a context stuck compiling reads as loaded).
     pub fn in_flight(&self) -> u64 {
         self.perf.active.load(Ordering::Relaxed)
@@ -372,8 +354,7 @@ impl ExecContext {
     }
 
     pub fn platform(&self) -> String {
-        let _ffi = self.ffi.lock().unwrap();
-        self.client.platform_name()
+        self.backend.platform(&self.ffi)
     }
 }
 

@@ -1,39 +1,43 @@
-//! PJRT runtime: loads AOT artifacts (HLO text) and executes them on a
-//! pool of CPU execution contexts. The rust binary is self-contained once
-//! `make artifacts` has produced `artifacts/*.hlo.txt` + `manifest.json`.
+//! The runtime: loads manifest entry points and executes them on a pool
+//! of execution contexts, behind a pluggable [`Backend`].
 //!
-//! Notes driven by the `xla` 0.1.6 wrapper's semantics (measured, see
-//! EXPERIMENTS.md §Perf):
-//!   * Results always come back as ONE tuple buffer (the client does not
-//!     untuple), so every entry point is invoked through `run`, which
-//!     decomposes the tuple into per-output literals on host.
-//!   * Tuple buffers cannot be re-fed as inputs, so loops that would chain
-//!     device state (KV caches) are fused *inside* single executables at
-//!     lowering time (`generate`).
+//! Two backends exist (see `backend.rs` for the trait contract):
+//!   * **pjrt** — the production path: AOT artifacts (HLO text) compiled
+//!     onto one `xla::PjRtClient` per context. Requires `make artifacts`.
+//!   * **sim** — a hermetic, deterministic pure-rust implementation of
+//!     every manifest entry point ([`sim::sim_manifest`]), so the full
+//!     engine → trainer → serving → bench stack runs end-to-end with no
+//!     artifacts on disk (`--backend sim`, `Runtime::sim`, or
+//!     `TINYLORA_BACKEND=sim`). CI's `tests/e2e_sim.rs` runs on it
+//!     unconditionally.
 //!
 //! Device parallelism: `Runtime` is a facade over D [`ExecContext`]s
-//! (one PJRT client + executable cache + FFI lock + atomic counters
+//! (one backend instance + executable cache + FFI lock + atomic counters
 //! each — see `context.rs`). The old single global `exec_lock` is gone;
 //! executions only serialise per context, so `engine::pool` workers,
-//! tenant rollout waves and bench ladders overlap on the device up to D
-//! ways. Routing is deterministic everywhere it can affect results:
-//! named loads place by a stable hash ([`Runtime::placement`]), pool
-//! jobs pin by job id ([`Runtime::ctx_for`]), and only content-invariant
-//! callers use the least-loaded, warm-sticky [`Runtime::checkout`]. D
-//! defaults to 1
+//! tenant rollout waves and bench ladders overlap up to D ways. Routing
+//! is deterministic everywhere it can affect results: named loads place
+//! by a stable hash ([`Runtime::placement`]), pool jobs pin by job id
+//! ([`Runtime::ctx_for`]), and only content-invariant callers use the
+//! least-loaded, warm-sticky [`Runtime::checkout`]. D defaults to 1
 //! (`--devices` / `TINYLORA_DEVICES` opt in), and D contexts run the
-//! same HLO through the same backend, so results do not depend on which
-//! context served a call. DESIGN.md §9 spells out the lock hierarchy and
-//! the determinism argument.
+//! same entry points through the same backend, so results do not depend
+//! on which context served a call. DESIGN.md §9 spells out the lock
+//! hierarchy and the determinism argument; §10 the backend contract.
 
+pub mod backend;
 pub mod context;
+pub mod pjrt;
+pub mod sim;
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::Result;
 
+pub use backend::{Backend, BackendSpec, CompiledExe, HostTensor, SimOptions};
 pub use context::{ExecContext, Executable, Outputs, RuntimeStats, SingleFlight};
+pub use sim::{sim_manifest, SIM_SCHEME, SIM_TIER};
 
 use crate::manifest::Manifest;
 use crate::tensor::Arg;
@@ -43,32 +47,74 @@ pub struct Runtime {
     contexts: Vec<ExecContext>,
     pub manifest: Manifest,
     art_dir: PathBuf,
+    backend_name: &'static str,
 }
 
 impl Runtime {
-    /// Single-context runtime — the default, byte-identical to the
+    /// Single-context PJRT runtime — the default, byte-identical to the
     /// pre-pool behaviour (one client, one FFI lock).
     pub fn new(art_dir: &Path) -> Result<Self> {
         Self::with_devices(art_dir, 1)
     }
 
-    /// Runtime with `devices` independent execution contexts (clamped to
-    /// at least 1). Contexts share nothing; work routed to different
-    /// contexts executes concurrently.
+    /// PJRT runtime with `devices` independent execution contexts
+    /// (clamped to at least 1). Contexts share nothing; work routed to
+    /// different contexts executes concurrently.
     pub fn with_devices(art_dir: &Path, devices: usize) -> Result<Self> {
-        let manifest = Manifest::load(art_dir)?;
-        let d = devices.max(1);
-        let mut contexts = Vec::with_capacity(d);
-        for id in 0..d {
-            contexts.push(ExecContext::new(id)?);
-        }
-        Ok(Self { contexts, manifest, art_dir: art_dir.to_path_buf() })
+        Self::with_backend(BackendSpec::Pjrt, art_dir, devices)
     }
 
-    /// Default artifact dir: $TINYLORA_ARTIFACTS or ./artifacts; context
-    /// count: $TINYLORA_DEVICES or 1. A set-but-unparseable device count
-    /// is an error, not a silent fall-back to 1 (the operator asked for
-    /// device parallelism; failing fast beats quietly not delivering it).
+    /// Hermetic sim runtime: synthetic manifest, pure-rust entry points,
+    /// zero artifacts on disk. Deterministic at any device count.
+    pub fn sim(devices: usize) -> Result<Self> {
+        Self::sim_with(devices, SimOptions::default())
+    }
+
+    /// [`Runtime::sim`] with fault injection (compile failures, slow
+    /// contexts) — the e2e suite's handle on failure-path coverage.
+    pub fn sim_with(devices: usize, opts: SimOptions) -> Result<Self> {
+        Self::with_backend(BackendSpec::Sim(opts), Path::new("<sim>"), devices)
+    }
+
+    /// Runtime over an explicit backend spec. The manifest comes from
+    /// `art_dir` for PJRT and from [`sim::sim_manifest`] for sim (which
+    /// never touches the filesystem).
+    pub fn with_backend(spec: BackendSpec, art_dir: &Path, devices: usize) -> Result<Self> {
+        let d = devices.max(1);
+        let (manifest, backend_name) = match &spec {
+            BackendSpec::Pjrt => (Manifest::load(art_dir)?, "pjrt"),
+            BackendSpec::Sim(_) => (sim_manifest(), "sim"),
+        };
+        let mut contexts = Vec::with_capacity(d);
+        match spec {
+            BackendSpec::Pjrt => {
+                for id in 0..d {
+                    contexts.push(ExecContext::new(id, Box::new(pjrt::PjrtBackend::new()?)));
+                }
+            }
+            BackendSpec::Sim(opts) => {
+                // fault state is runtime-wide (an injected compile failure
+                // hits whichever context compiles next); delays are
+                // per-context by id
+                let faults = Arc::new(sim::SimFaults::new(&opts));
+                for id in 0..d {
+                    let delay = opts.ctx_delay_ms.get(id).copied().unwrap_or(0);
+                    contexts.push(ExecContext::new(
+                        id,
+                        Box::new(sim::SimBackend::new(faults.clone(), delay)),
+                    ));
+                }
+            }
+        }
+        Ok(Self { contexts, manifest, art_dir: art_dir.to_path_buf(), backend_name })
+    }
+
+    /// Backend + artifact dir + context count from the environment:
+    /// `TINYLORA_BACKEND` ("pjrt" default | "sim"), `TINYLORA_ARTIFACTS`
+    /// (default ./artifacts; ignored by sim), `TINYLORA_DEVICES`
+    /// (default 1). A set-but-unparseable value is an error, not a silent
+    /// fall-back (the operator asked for something; failing fast beats
+    /// quietly not delivering it).
     pub fn from_env() -> Result<Self> {
         let dir = std::env::var("TINYLORA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
         let devices = match std::env::var("TINYLORA_DEVICES") {
@@ -77,7 +123,16 @@ impl Runtime {
                 anyhow::anyhow!("TINYLORA_DEVICES {v:?} is not a device count")
             })?,
         };
-        Self::with_devices(Path::new(&dir), devices)
+        match std::env::var("TINYLORA_BACKEND").as_deref() {
+            Err(_) | Ok("pjrt") => Self::with_devices(Path::new(&dir), devices),
+            Ok("sim") => Self::sim(devices),
+            Ok(other) => anyhow::bail!("TINYLORA_BACKEND {other:?} is not a backend (pjrt|sim)"),
+        }
+    }
+
+    /// Which backend this runtime's contexts run ("pjrt" | "sim").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend_name
     }
 
     /// Number of execution contexts in the pool.
@@ -108,7 +163,7 @@ impl Runtime {
     }
 
     /// Least-loaded checkout biased to `preferred`: stays on `preferred`
-    /// unless some context is strictly less loaded (in-flight FFI
+    /// unless some context is strictly less loaded (in-flight backend
     /// sections, compiles included). Sticky on ties, so an otherwise-idle
     /// pool keeps reusing the warm context instead of rotating onto cold
     /// ones and paying their first-use compiles. For callers whose
@@ -146,10 +201,10 @@ impl Runtime {
     }
 
     /// Execute with shape-checked args; routed to the context that owns
-    /// the executable (PJRT executables cannot run on another client).
-    /// Routing goes through `context` (wrapping) so an executable from a
-    /// differently-sized runtime hits `ExecContext::run`'s id check — a
-    /// clean error, not an index panic.
+    /// the executable (backend-resident executables cannot run on another
+    /// context's backend). Routing goes through `context` (wrapping) so
+    /// an executable from a differently-sized runtime hits
+    /// `ExecContext::run`'s id check — a clean error, not an index panic.
     pub fn run(&self, exe: &Executable, args: &[Arg]) -> Result<Outputs> {
         self.context(exe.ctx).run(exe, args)
     }
@@ -186,5 +241,20 @@ mod tests {
         assert_send_sync::<ExecContext>();
         assert_send_sync::<Executable>();
         assert_send_sync::<RuntimeStats>();
+    }
+
+    /// The sim runtime constructs with zero artifacts on disk and reports
+    /// its backend; PJRT stays the default elsewhere.
+    #[test]
+    fn sim_runtime_constructs_without_artifacts() {
+        let rt = Runtime::sim(2).unwrap();
+        assert_eq!(rt.backend_name(), "sim");
+        assert_eq!(rt.devices(), 2);
+        assert_eq!(rt.platform(), "sim");
+        assert!(rt.manifest.tiers.contains_key(SIM_TIER));
+        // a named load resolves and executes through the normal path
+        let name = rt.manifest.generate_exe(SIM_TIER, rt.manifest.batch.test).unwrap().name.clone();
+        rt.load(&name).unwrap();
+        assert_eq!(rt.stats().compiles, 1);
     }
 }

@@ -1,0 +1,126 @@
+//! The PJRT backend: one `xla::PjRtClient` per execution context, running
+//! AOT-lowered HLO text artifacts. This is the production device layer;
+//! everything `xla`-specific in the runtime lives in this file.
+//!
+//! Notes driven by the `xla` 0.1.6 wrapper's semantics (measured, see
+//! EXPERIMENTS.md §Perf):
+//!   * Results always come back as ONE tuple buffer (the client does not
+//!     untuple); `PjrtExe::execute` decomposes the tuple into per-output
+//!     host tensors.
+//!   * Tuple buffers cannot be re-fed as inputs, so loops that would chain
+//!     device state (KV caches) are fused *inside* single executables at
+//!     lowering time (`generate`).
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::manifest::{DType, ExeInfo};
+use crate::runtime::backend::{Backend, CompiledExe, HostTensor};
+use crate::tensor::{Arg, TensorF32, TensorI32};
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+// SAFETY: the `xla` 0.1.6 wrapper holds non-Send handles to PJRT objects
+// (they may be internally reference-counted without atomics). Two claims
+// back these impls:
+//
+// 1. *Within* a context, no PJRT object is ever touched from two threads
+//    at once: every code path that uses one — `compile`, `execute`,
+//    `to_literal_sync`, `platform_name` — runs under the owning context's
+//    `ffi` lock (threaded into every `Backend`/`CompiledExe` call), and a
+//    context's objects (client, loaded executables) never escape it
+//    (`Runtime::run` routes on `Executable::ctx`).
+// 2. *Across* contexts, concurrency only ever involves DISTINCT PJRT
+//    objects owned by distinct `PjRtClient`s. This leans on the PJRT
+//    contract that independent clients share no unsynchronised state —
+//    the multi-client granularity PJRT is designed for — rather than on
+//    any thread-safety of individual wrapper handles. It is the one
+//    assumption added over the old process-global lock; `--devices 1`
+//    (the default) restores exactly the old single-lock behaviour.
+//
+// `xla::Literal` values are standalone host buffers with no client
+// handle and are only ever owned by one thread. All rust-side mutability
+// is behind RwLock/Mutex/atomics. Concurrency is exercised by the
+// `engine::pool` tests at D=1 and D=2.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+impl PjrtBackend {
+    pub fn new() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()? })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn platform(&self, ffi: &Mutex<()>) -> String {
+        let _ffi = ffi.lock().unwrap();
+        self.client.platform_name()
+    }
+
+    fn compile(
+        &self,
+        art_dir: &Path,
+        info: &ExeInfo,
+        ffi: &Mutex<()>,
+    ) -> Result<Box<dyn CompiledExe>> {
+        let path = art_dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = {
+            let _ffi = ffi.lock().unwrap();
+            self.client.compile(&comp).with_context(|| format!("compiling {}", info.name))?
+        };
+        Ok(Box::new(PjrtExe { exe }))
+    }
+}
+
+/// A compiled executable, pinned to the client that compiled it (PJRT
+/// loaded executables are client-owned and cannot run elsewhere — the
+/// context-identity check in `ExecContext::run` enforces the routing).
+struct PjrtExe {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: see `PjrtBackend` — loaded executables are immutable after
+// compilation and every FFI section on them runs under the owning
+// context's `ffi` lock.
+unsafe impl Send for PjrtExe {}
+unsafe impl Sync for PjrtExe {}
+
+impl CompiledExe for PjrtExe {
+    fn execute(&self, info: &ExeInfo, args: &[Arg], ffi: &Mutex<()>) -> Result<Vec<HostTensor>> {
+        // host side, outside the lock: arg → literal conversion
+        let lits: Vec<xla::Literal> = args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let root = {
+            // device section: execute + transfer both touch PJRT objects
+            let _ffi = ffi.lock().unwrap();
+            let out = self.exe.execute::<xla::Literal>(&lits)?;
+            out[0][0].to_literal_sync()?
+        };
+        // aot.py lowers with return_tuple=True: root is always a tuple.
+        let mut root = root;
+        let lits = root.decompose_tuple()?;
+        if lits.len() != info.outputs.len() {
+            bail!("{}: got {} outputs, want {}", info.name, lits.len(), info.outputs.len());
+        }
+        // host side again: literal → tensor per manifest output spec
+        lits.iter()
+            .zip(&info.outputs)
+            .map(|(lit, spec)| {
+                Ok(match spec.dtype {
+                    DType::F32 => HostTensor::F32(TensorF32::from_literal(lit, &spec.shape)?),
+                    DType::S32 => HostTensor::I32(TensorI32::from_literal(lit, &spec.shape)?),
+                })
+            })
+            .collect()
+    }
+}

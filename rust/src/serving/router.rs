@@ -12,7 +12,9 @@
 //! model is resident (`AdapterStore`), and — via `drain_parallel` — how
 //! many independent adapter batches run concurrently
 //! (`engine::pool::WorkerPool`, jobs pinned to runtime execution
-//! contexts by job id).
+//! contexts by job id). Nothing here names a backend: the same router
+//! serves PJRT artifacts and the sim backend (`tests/e2e_sim.rs` drains
+//! full multi-tenant traffic on sim in every CI run).
 
 use std::path::PathBuf;
 

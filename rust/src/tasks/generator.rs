@@ -5,6 +5,8 @@
 //! word problems; gold solutions are scratchpad lines (`a+b=c`) ending with
 //! the canonical `#### answer` line the verifier rewards.
 
+use anyhow::{bail, Context, Result};
+
 use crate::util::Pcg64;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -39,6 +41,65 @@ pub const SUITES: &[Suite] = &[
 
 pub fn suite(name: &str) -> Option<&'static Suite> {
     SUITES.iter().find(|s| s.name == name)
+}
+
+/// Parse and arithmetically check one gold scratchpad line `a⊕b=c`
+/// (⊕ ∈ {+,-,*}), returning `c`. Corpus lines are data, so a malformed
+/// or arithmetically wrong line is an error naming the line — never a
+/// panic (the seed's test helper panicked with "bad line ...").
+pub fn check_gold_line(line: &str) -> Result<i64> {
+    let (lhs, rhs) = line
+        .split_once('=')
+        .with_context(|| format!("bad corpus line {line:?}: no '='"))?;
+    let want: i64 =
+        rhs.trim().parse().with_context(|| format!("bad corpus line {line:?}: rhs not a number"))?;
+    // operator search skips index 0 so a leading '-' reads as a sign
+    let op_at = lhs
+        .char_indices()
+        .skip(1)
+        .find(|&(_, c)| c == '+' || c == '-' || c == '*')
+        .map(|(i, _)| i)
+        .with_context(|| format!("bad corpus line {line:?}: no operator in {lhs:?}"))?;
+    let a: i64 = lhs[..op_at]
+        .trim()
+        .parse()
+        .with_context(|| format!("bad corpus line {line:?}: first operand"))?;
+    let b: i64 = lhs[op_at + 1..]
+        .trim()
+        .parse()
+        .with_context(|| format!("bad corpus line {line:?}: second operand"))?;
+    let got = match lhs.as_bytes()[op_at] {
+        b'+' => a + b,
+        b'-' => a - b,
+        b'*' => a * b,
+        _ => unreachable!("operator search only matches + - *"),
+    };
+    if got != want {
+        bail!("bad corpus line {line:?}: {a} {} {b} = {got}, not {want}", lhs.as_bytes()[op_at] as char);
+    }
+    Ok(want)
+}
+
+/// Validate a problem's whole gold scratchpad: every `a⊕b=c` line checks
+/// out and the final `#### answer` line matches `p.answer`.
+pub fn validate_gold(p: &Problem) -> Result<()> {
+    let mut saw_answer = false;
+    for line in p.gold.lines() {
+        if let Some(ans) = line.strip_prefix("#### ") {
+            let ans: i64 =
+                ans.trim().parse().with_context(|| format!("bad answer line {line:?}"))?;
+            if ans != p.answer {
+                bail!("answer line says {ans}, problem says {}", p.answer);
+            }
+            saw_answer = true;
+        } else if line.contains('=') {
+            check_gold_line(line)?;
+        }
+    }
+    if !saw_answer {
+        bail!("gold scratchpad has no '#### answer' line");
+    }
+    Ok(())
 }
 
 const NAMES: &[&str] = &["ann", "ben", "tom", "sam", "kim", "leo", "mia", "dan"];
@@ -230,29 +291,40 @@ mod tests {
         for s in SUITES {
             for _ in 0..100 {
                 let p = s.generate(&mut rng);
-                for line in p.gold.lines() {
-                    if let Some((lhs, rhs)) = line.split_once('=') {
-                        let want: i64 = rhs.parse().unwrap();
-                        let got = eval_binary(lhs).unwrap_or_else(|| panic!("bad line {line}"));
-                        assert_eq!(got, want, "{line} in {:?}", p.gold);
-                    }
-                }
+                validate_gold(&p).unwrap_or_else(|e| panic!("{e:#} in {:?}", p.gold));
             }
         }
     }
 
-    fn eval_binary(expr: &str) -> Option<i64> {
-        for (i, c) in expr.char_indices().skip(1) {
-            if c == '+' || c == '-' || c == '*' {
-                let a: i64 = expr[..i].parse().ok()?;
-                let b: i64 = expr[i + 1..].parse().ok()?;
-                return Some(match c {
-                    '+' => a + b,
-                    '-' => a - b,
-                    _ => a * b,
-                });
-            }
+    /// ISSUE 5 satellite: malformed corpus lines are structured errors
+    /// naming the offending line, never panics.
+    #[test]
+    fn malformed_corpus_lines_are_errors() {
+        // well-formed lines parse (leading '-' reads as a sign)
+        assert_eq!(check_gold_line("2+3=5").unwrap(), 5);
+        assert_eq!(check_gold_line("10-12=-2").unwrap(), -2);
+        assert_eq!(check_gold_line("-2*3=-6").unwrap(), -6);
+        for bad in [
+            "garbage",        // no '='
+            "2+3=",           // empty rhs
+            "2+3=x",          // non-numeric rhs
+            "23=23",          // no operator
+            "2/4=0",          // unsupported operator
+            "2+3=6",          // arithmetic lie
+            "+=5",            // missing operands
+        ] {
+            let err = check_gold_line(bad).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(bad), "error must name the line: {msg}");
         }
-        None
+        // a corrupted gold scratchpad fails validation as a whole
+        let mut rng = Pcg64::new(1);
+        let mut p = SUITES[0].generate(&mut rng);
+        assert!(validate_gold(&p).is_ok());
+        p.gold = p.gold.replacen("####", "?###", 1);
+        assert!(validate_gold(&p).is_err(), "missing answer line must be an error");
+        let mut q = SUITES[0].generate(&mut rng);
+        q.answer += 1; // answer line no longer matches the problem
+        assert!(validate_gold(&q).is_err());
     }
 }

@@ -22,6 +22,12 @@
 //! Finished tenants register straight into the serving `AdapterStore`,
 //! closing the train→serve loop.
 //!
+//! Backend-blind: the plane resolves everything through the manifest
+//! (grad/merge/generate entry points), so the same trainer runs on PJRT
+//! artifacts and on the hermetic sim backend — `tests/e2e_sim.rs` asserts
+//! tenant-wave == independent-runs bit-identity on sim in every CI run,
+//! artifacts or not.
+//!
 //! Known memory bound: each tenant's `Policy` currently clones the frozen
 //! base `WeightSet` (and waves clone merged weights into their `GenJob`s),
 //! so residency is O(G · n_params) — fine at the current tiers (~0.5 MB

@@ -23,7 +23,9 @@ pub struct WeightSet {
 impl WeightSet {
     /// Initialize from the manifest's init spec (same family as python's
     /// `init_weights`; exact values differ — rust owns pretraining).
-    pub fn init(tier: &TierInfo, seed: u64) -> Self {
+    /// An unknown init kind is a malformed manifest — an error, not a
+    /// panic (the manifest is external input).
+    pub fn init(tier: &TierInfo, seed: u64) -> Result<Self> {
         let mut rng = Pcg64::with_stream(seed, 0x77656967687473);
         let mut names = Vec::new();
         let mut tensors = Vec::new();
@@ -33,12 +35,12 @@ impl WeightSet {
                 "ones" => vec![1.0; n],
                 "zeros" => vec![0.0; n],
                 "normal" => rng.normal_vec(n, w.init.std),
-                other => panic!("unknown init kind {other}"),
+                other => bail!("weight {}: unknown init kind {other:?}", w.name),
             };
             names.push(w.name.clone());
             tensors.push(TensorF32::from_vec(&w.shape, data));
         }
-        Self { tier: tier.name.clone(), names, tensors }
+        Ok(Self { tier: tier.name.clone(), names, tensors })
     }
 
     pub fn index_of(&self, name: &str) -> Result<usize> {
@@ -251,18 +253,32 @@ mod tests {
     #[test]
     fn init_is_deterministic_and_respects_spec() {
         let t = tiny_tier();
-        let w1 = WeightSet::init(&t, 7);
-        let w2 = WeightSet::init(&t, 7);
+        let w1 = WeightSet::init(&t, 7).unwrap();
+        let w2 = WeightSet::init(&t, 7).unwrap();
         assert_eq!(w1.tensors, w2.tensors);
         assert_eq!(w1.get("g").unwrap().data, vec![1.0; 3]);
-        let w3 = WeightSet::init(&t, 8);
+        let w3 = WeightSet::init(&t, 8).unwrap();
         assert_ne!(w1.get("a").unwrap().data, w3.get("a").unwrap().data);
+    }
+
+    /// ISSUE 5 satellite: a malformed manifest init kind is an error
+    /// naming the weight and the kind, never a panic.
+    #[test]
+    fn unknown_init_kind_is_an_error() {
+        let mut t = tiny_tier();
+        t.weights[1].init.kind = "xavier".into();
+        // WeightSet is not Debug, so take the error by hand
+        let err = WeightSet::init(&t, 0).err().expect("bad init kind must error");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown init kind"), "{msg}");
+        assert!(msg.contains("xavier"), "{msg}");
+        assert!(msg.contains("weight g:"), "should name the weight: {msg}");
     }
 
     #[test]
     fn checkpoint_roundtrip() {
         let t = tiny_tier();
-        let w = WeightSet::init(&t, 3);
+        let w = WeightSet::init(&t, 3).unwrap();
         let dir = std::env::temp_dir().join("tlrl_test_ckpt");
         let path = dir.join("t.ckpt");
         w.save(&path).unwrap();
@@ -275,7 +291,7 @@ mod tests {
     #[test]
     fn flat_roundtrip() {
         let t = tiny_tier();
-        let mut w = WeightSet::init(&t, 3);
+        let mut w = WeightSet::init(&t, 3).unwrap();
         let mut flat = w.flat();
         flat[0] = 42.0;
         w.set_flat(&flat).unwrap();
