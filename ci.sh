@@ -64,16 +64,32 @@ echo "== cargo test --test integration (per-backend, PJRT variants skip without 
 report_skips "integration" cargo test --test integration -- --nocapture
 
 # Perf-trajectory gate: the committed BENCH_runtime.json must stay
-# schema-valid and its deterministic sections (occupancy-aware padding
-# vs the fixed-geometry baseline) must match a fresh recomputation.
-# Skips cleanly when the snapshot is absent; the measured
-# device_parallel section is only refreshed intentionally, never here.
+# schema-valid (device_parallel included — it is measured on the
+# hermetic sim backend, so null is never excusable) and its
+# deterministic sections (occupancy-aware padding vs the fixed-geometry
+# baseline) must match a fresh recomputation. Skips cleanly when the
+# snapshot is absent; measured sections are only refreshed
+# intentionally, never here.
 if [[ "$FAST" -eq 0 ]]; then
   if [[ -f ../BENCH_runtime.json ]]; then
     echo "== bench_runtime --check (perf snapshot) =="
     cargo bench --bench bench_runtime -- --check
   else
     echo "== BENCH_runtime.json absent — perf-snapshot check skipped =="
+  fi
+
+  # Sim-engine trajectory gate: BENCH_SIM.json is REQUIRED — the bench
+  # is hermetic (pure-rust sim engine vs its frozen scalar baseline),
+  # so a missing snapshot has no excuse. `--check` validates the
+  # schema, recomputes the engine-geometry echo, enforces the >= 2x
+  # batch-32 generate speedup floor, and prints the committed sim
+  # rows/s so the gate's tally shows the numbers it is holding.
+  if [[ -f ../BENCH_SIM.json ]]; then
+    echo "== bench_sim --check (sim engine rows/s snapshot) =="
+    cargo bench --bench bench_sim -- --check
+  else
+    echo "== BENCH_SIM.json missing — run 'cargo bench --bench bench_sim' and commit it =="
+    exit 1
   fi
 fi
 

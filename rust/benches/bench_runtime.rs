@@ -10,20 +10,20 @@
 //!     baseline over a queue-depth grid), byte-identical on every
 //!     machine; `--check` recomputes them and fails on any drift;
 //!   * the measured section (`device_parallel`) — rows/s serial vs pooled
-//!     at D ∈ {1, 2, 4} execution contexts over real artifacts; `null`
-//!     when artifacts aren't built (the snapshot is refreshed
-//!     intentionally on benchmark-capable machines, never silently).
+//!     at D ∈ {1, 2, 4} execution contexts on the hermetic sim backend.
+//!     Running on `--backend sim` (instead of gating on PJRT artifacts)
+//!     means the measurement runs on every machine, so the committed
+//!     snapshot is REQUIRED to carry it — `--check` fails on `null`.
 //!
 //! Modes:
 //!   cargo bench --bench bench_runtime              # run + rewrite snapshot
 //!   cargo bench --bench bench_runtime -- --check   # validate committed
 //!                                                  # snapshot (ci.sh gate)
 
-use std::path::Path;
-
 use tinylora_rl::engine::pool::{GenJob, WorkerPool};
 use tinylora_rl::engine::{flush_plan, InferenceEngine};
 use tinylora_rl::eval::eval_problems;
+use tinylora_rl::runtime::SIM_TIER;
 use tinylora_rl::tensor::{TensorF32, TensorI32};
 use tinylora_rl::util::json::{num, obj, s, Value};
 use tinylora_rl::util::timer::time_iters;
@@ -37,7 +37,7 @@ fn snapshot_path() -> String {
     std::env::var("TINYLORA_BENCH_RUNTIME").unwrap_or_else(|_| "../BENCH_runtime.json".into())
 }
 
-const SCHEMA_VERSION: usize = 1;
+const SCHEMA_VERSION: usize = 2;
 /// Fixed-geometry baseline: one baked batch, tails pad all the way up.
 const FIXED: &[usize] = &[32];
 /// Occupancy-aware geometry set: tails flush on the smallest fit.
@@ -74,21 +74,18 @@ fn padding_section() -> Value {
 }
 
 /// Measured section: decode throughput serial vs pooled at D execution
-/// contexts. Needs artifacts; returns `Value::Null` otherwise.
+/// contexts, measured on the hermetic sim backend — zero artifacts, so
+/// it runs (and the snapshot stays populated) on every machine.
 fn device_section() -> Value {
-    if !Path::new("artifacts/manifest.json").exists() {
-        println!("artifacts not built — device_parallel section skipped");
-        return Value::Null;
-    }
     let n_jobs = 8usize;
     let workers = 4usize;
     let mut serial_rps = 0.0f64;
     let mut pooled = Vec::new();
     for d in [1usize, 2, 4] {
-        let rt = Runtime::with_devices(Path::new("artifacts"), d).expect("runtime");
-        let tier = rt.manifest.tier("nano").expect("nano tier").clone();
+        let rt = Runtime::sim(d).expect("sim runtime");
+        let tier = rt.manifest.tier(SIM_TIER).expect("sim tier").clone();
         let batch = rt.manifest.batch.test;
-        let engine = InferenceEngine::new(&rt, "nano", batch).expect("engine");
+        let engine = InferenceEngine::new(&rt, SIM_TIER, batch).expect("engine");
         let base = WeightSet::init(&tier, 0).unwrap();
         let make_jobs = || -> Vec<GenJob> {
             (0..n_jobs as u64)
@@ -120,7 +117,8 @@ fn device_section() -> Value {
     }
     println!("device_parallel: serial {serial_rps:>9.1} rows/s");
     obj(vec![
-        ("tier", s("nano")),
+        ("backend", s("sim")),
+        ("tier", s(SIM_TIER)),
         ("jobs", num(n_jobs as f64)),
         ("workers", num(workers as f64)),
         ("serial_rows_per_s", num(serial_rps)),
@@ -194,26 +192,41 @@ fn validate_schema(v: &Value) -> Result<(), String> {
         ));
     }
     let dev = get("device_parallel")?;
-    if !matches!(dev, Value::Null) {
-        dev.get("tier")
+    if matches!(dev, Value::Null) {
+        return Err(
+            "device_parallel is null — the measurement runs on the hermetic sim \
+             backend (no artifacts needed); rerun `cargo bench --bench \
+             bench_runtime` and commit the refreshed snapshot"
+                .into(),
+        );
+    }
+    for key in ["backend", "tier"] {
+        dev.get(key)
             .and_then(|x| x.str().map(str::to_string))
-            .map_err(|e| format!("device_parallel.tier: {e:#}"))?;
-        for key in ["jobs", "workers", "serial_rows_per_s"] {
-            dev.get(key)
-                .and_then(|x| x.f64())
-                .map_err(|e| format!("device_parallel.{key}: {e:#}"))?;
-        }
-        let pooled = dev
-            .get("pooled_rows_per_s")
-            .and_then(|x| x.arr().map(|a| a.to_vec()))
-            .map_err(|e| format!("device_parallel.pooled_rows_per_s: {e:#}"))?;
-        for p in &pooled {
-            p.get("devices")
-                .and_then(|x| x.usize())
-                .map_err(|e| format!("pooled devices: {e:#}"))?;
-            p.get("rows_per_s")
-                .and_then(|x| x.f64())
-                .map_err(|e| format!("pooled rows_per_s: {e:#}"))?;
+            .map_err(|e| format!("device_parallel.{key}: {e:#}"))?;
+    }
+    for key in ["jobs", "workers", "serial_rows_per_s"] {
+        dev.get(key)
+            .and_then(|x| x.f64())
+            .map_err(|e| format!("device_parallel.{key}: {e:#}"))?;
+    }
+    let pooled = dev
+        .get("pooled_rows_per_s")
+        .and_then(|x| x.arr().map(|a| a.to_vec()))
+        .map_err(|e| format!("device_parallel.pooled_rows_per_s: {e:#}"))?;
+    if pooled.is_empty() {
+        return Err("device_parallel.pooled_rows_per_s: empty".into());
+    }
+    for p in &pooled {
+        p.get("devices")
+            .and_then(|x| x.usize())
+            .map_err(|e| format!("pooled devices: {e:#}"))?;
+        let rps = p
+            .get("rows_per_s")
+            .and_then(|x| x.f64())
+            .map_err(|e| format!("pooled rows_per_s: {e:#}"))?;
+        if !rps.is_finite() || rps <= 0.0 {
+            return Err(format!("pooled rows_per_s not positive: {rps}"));
         }
     }
     Ok(())

@@ -1,0 +1,693 @@
+//! Sim execution-engine benchmark + the committed rows/s trajectory
+//! (`cargo bench --bench bench_sim`).
+//!
+//! Emits `../BENCH_SIM.json` (repo root): rows/s of the vectorized,
+//! row-parallel sim engine (`runtime::sim::exec`) on its three hot entry
+//! points — `generate`, `logprobs`, `grpo_step` — over a batch ×
+//! row-worker grid, against a FROZEN copy of the pre-split scalar
+//! engine (per-position `mv()` with a fresh `Vec` per call, per-element
+//! `pseudo_factor` hashing in merge/projection). The baseline lives in
+//! this file on purpose: the library's scalar path is a `#[cfg(test)]`
+//! differential oracle, and the baseline must stay fixed as the engine
+//! improves — it IS the denominator of the trajectory.
+//!
+//! Snapshot schema, like `BENCH_runtime.json`:
+//!   * `engine` — deterministic geometry echo (V/D/F, block lengths);
+//!     `--check` recomputes it and fails on drift, so a geometry change
+//!     forces a re-measure instead of silently invalidating the numbers;
+//!   * `measured` — rows/s grids plus `speedup_generate_b32`, gated by
+//!     `--check` at >= 2.0 (the vectorization floor this PR claims).
+//!
+//! Modes:
+//!   cargo bench --bench bench_sim              # run + rewrite snapshot
+//!   cargo bench --bench bench_sim -- --check   # validate committed
+//!                                              # snapshot (ci.sh gate)
+
+use tinylora_rl::runtime::sim::exec::{adapter_grads, generate, logprobs, GenInput, GrpoParams};
+use tinylora_rl::runtime::sim::{
+    merge_mats, project_dtheta, D, F, GEOMETRIES, MATS, N_GEN, N_THETA, SimModel, T_PREFILL,
+    T_TRAIN, V,
+};
+use tinylora_rl::util::json::{num, obj, s, Value};
+use tinylora_rl::util::{Pcg64, Timer};
+
+/// Committed snapshot path (repo root; cargo bench runs from `rust/`).
+/// Override with TINYLORA_BENCH_SIM for scratch runs.
+fn snapshot_path() -> String {
+    std::env::var("TINYLORA_BENCH_SIM").unwrap_or_else(|_| "../BENCH_SIM.json".into())
+}
+
+const SCHEMA_VERSION: usize = 1;
+/// Batch sizes swept (rows per execute call).
+const BATCHES: [usize; 3] = [1, 8, 32];
+/// Row-worker counts swept (0/1 = serial; see `exec::chunk_ranges`).
+const WORKERS: [usize; 3] = [1, 2, 4];
+/// The scalar baseline is measured once, at the largest batch.
+const SCALAR_BATCH: usize = 32;
+/// Benchmarked entry points, snapshot order.
+const OPS: [&str; 3] = ["generate", "logprobs", "grpo_step"];
+
+// ---------------------------------------------------------------------------
+// Frozen scalar baseline (the pre-split engine, verbatim algorithm)
+// ---------------------------------------------------------------------------
+
+/// The old engine, frozen: one position at a time, a fresh `Vec` per
+/// `mv()` call, logits/softmax/backprop unfused, and per-element hash
+/// recomputation in the merge and the dtheta projection. Do NOT
+/// "improve" this module — speedups belong in `runtime::sim::exec`,
+/// and this baseline is what they are measured against.
+#[allow(clippy::needless_range_loop)]
+mod scalar_baseline {
+    use tinylora_rl::runtime::sim::{pseudo_factor, GAIN, MERGE_SCALE, N_THETA, SimModel, V};
+
+    use super::{D, F, N_GEN, T_PREFILL, T_TRAIN};
+
+    pub struct Acts {
+        x: usize,
+        h: Vec<f32>,
+        tnh: Vec<f32>,
+        vv: Vec<f32>,
+        u: Vec<f32>,
+        g: Vec<f32>,
+        p: Vec<f32>,
+        z: Vec<f32>,
+    }
+
+    pub struct Grads {
+        pub embed: Vec<f32>,
+        pub mats: [Vec<f32>; 7],
+    }
+
+    impl Grads {
+        pub fn zeros() -> Self {
+            Self {
+                embed: vec![0.0; V * D],
+                mats: [
+                    vec![0.0; D * D],
+                    vec![0.0; D * D],
+                    vec![0.0; D * D],
+                    vec![0.0; D * D],
+                    vec![0.0; D * F],
+                    vec![0.0; D * F],
+                    vec![0.0; F * D],
+                ],
+            }
+        }
+    }
+
+    /// y[j] = sum_i x[i] * w[i*d_out + j] — allocates the output, the
+    /// per-position cost the arena-based engine removed.
+    fn mv(w: &[f32], x: &[f32], d_out: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; d_out];
+        for (i, &xi) in x.iter().enumerate() {
+            let row = &w[i * d_out..(i + 1) * d_out];
+            for j in 0..d_out {
+                y[j] += xi * row[j];
+            }
+        }
+        y
+    }
+
+    pub fn forward(m: &SimModel, tok: i32) -> (Acts, Vec<f32>) {
+        let x = (tok.max(0) as usize).min(V - 1);
+        let h = m.embed[x * D..(x + 1) * D].to_vec();
+        let [wq, wk, wv, wo, wup, wgate, wdown] = m.mats;
+        let sq = mv(wq, &h, D);
+        let sk = mv(wk, &h, D);
+        let tnh: Vec<f32> = (0..D).map(|j| (sq[j] + sk[j]).tanh()).collect();
+        let vv = mv(wv, &tnh, D);
+        let a = mv(wo, &vv, D);
+        let u = mv(wup, &h, F);
+        let g = mv(wgate, &h, F);
+        let p: Vec<f32> = (0..F).map(|j| u[j] * g[j].tanh()).collect();
+        let mm = mv(wdown, &p, D);
+        let z: Vec<f32> = (0..D).map(|j| h[j] + a[j] + mm[j]).collect();
+        let mut logits = vec![0.0f32; V];
+        for v in 0..V {
+            let ev = &m.embed[v * D..(v + 1) * D];
+            let mut dot = 0.0f32;
+            for j in 0..D {
+                dot += z[j] * ev[j];
+            }
+            logits[v] = GAIN * dot;
+        }
+        (Acts { x, h, tnh, vv, u, g, p, z }, logits)
+    }
+
+    pub fn backward(m: &SimModel, acts: &Acts, dlogits: &[f32], grads: &mut Grads) {
+        let [wq, wk, wv, wo, wup, wgate, wdown] = m.mats;
+        let mut dz = vec![0.0f32; D];
+        for v in 0..V {
+            let dv = GAIN * dlogits[v];
+            if dv == 0.0 {
+                continue;
+            }
+            let ev = &m.embed[v * D..(v + 1) * D];
+            for j in 0..D {
+                dz[j] += dv * ev[j];
+                grads.embed[v * D + j] += dv * acts.z[j];
+            }
+        }
+        let mut dh = dz.clone();
+        let dm = &dz;
+        let da = &dz;
+        let mut dp = vec![0.0f32; F];
+        for i in 0..F {
+            for j in 0..D {
+                dp[i] += dm[j] * wdown[i * D + j];
+                grads.mats[6][i * D + j] += acts.p[i] * dm[j];
+            }
+        }
+        let mut du = vec![0.0f32; F];
+        let mut dg = vec![0.0f32; F];
+        for i in 0..F {
+            let r = acts.g[i].tanh();
+            du[i] = dp[i] * r;
+            dg[i] = dp[i] * acts.u[i] * (1.0 - r * r);
+        }
+        for i in 0..D {
+            for j in 0..F {
+                grads.mats[4][i * F + j] += acts.h[i] * du[j];
+                grads.mats[5][i * F + j] += acts.h[i] * dg[j];
+                dh[i] += wup[i * F + j] * du[j] + wgate[i * F + j] * dg[j];
+            }
+        }
+        let mut dvv = vec![0.0f32; D];
+        for i in 0..D {
+            for j in 0..D {
+                dvv[i] += da[j] * wo[i * D + j];
+                grads.mats[3][i * D + j] += acts.vv[i] * da[j];
+            }
+        }
+        let mut dt = vec![0.0f32; D];
+        for i in 0..D {
+            for j in 0..D {
+                dt[i] += dvv[j] * wv[i * D + j];
+                grads.mats[2][i * D + j] += acts.tnh[i] * dvv[j];
+            }
+        }
+        let ds: Vec<f32> =
+            (0..D).map(|j| dt[j] * (1.0 - acts.tnh[j] * acts.tnh[j])).collect();
+        for i in 0..D {
+            for j in 0..D {
+                grads.mats[0][i * D + j] += acts.h[i] * ds[j];
+                grads.mats[1][i * D + j] += acts.h[i] * ds[j];
+                dh[i] += (wq[i * D + j] + wk[i * D + j]) * ds[j];
+            }
+        }
+        for j in 0..D {
+            grads.embed[acts.x * D + j] += dh[j];
+        }
+    }
+
+    fn softmax(logits: &[f32]) -> Vec<f32> {
+        let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = logits.iter().map(|&l| (l - mx).exp()).collect();
+        let sum: f32 = exps.iter().sum();
+        exps.iter().map(|&e| e / sum).collect()
+    }
+
+    pub fn generate_rows(
+        m: &SimModel,
+        b: usize,
+        tokens: &[i32],
+        plen: &[i32],
+        uniforms: &[f32],
+        temperature: f32,
+        out: (&mut [i32], &mut [f32]),
+    ) {
+        let (out_tokens, out_logp) = out;
+        for i in 0..b {
+            let p = (plen[i].max(1) as usize).min(T_PREFILL);
+            let mut last = tokens[i * T_PREFILL + p - 1];
+            for t in 0..N_GEN {
+                let (_, logits) = forward(m, last);
+                let scaled: Vec<f32> = logits.iter().map(|&l| l / temperature).collect();
+                let probs = softmax(&scaled);
+                let u = uniforms[i * N_GEN + t];
+                let mut cum = 0.0f32;
+                let mut chosen = V - 1;
+                for v in 0..V {
+                    cum += probs[v];
+                    if u < cum {
+                        chosen = v;
+                        break;
+                    }
+                }
+                out_tokens[i * N_GEN + t] = chosen as i32;
+                out_logp[i * N_GEN + t] = probs[chosen].max(1e-30).ln();
+                last = chosen as i32;
+            }
+        }
+    }
+
+    pub fn logprob_rows(m: &SimModel, b: usize, tokens: &[i32], out: &mut [f32]) {
+        let t_len = T_TRAIN;
+        for i in 0..b {
+            for j in 0..t_len - 1 {
+                let (_, logits) = forward(m, tokens[i * t_len + j]);
+                let probs = softmax(&logits);
+                let y = (tokens[i * t_len + j + 1].max(0) as usize).min(V - 1);
+                out[i * (t_len - 1) + j] = probs[y].max(1e-30).ln();
+            }
+        }
+    }
+
+    fn merge_hashed(base: [&[f32]; 7], theta: &[f32]) -> [Vec<f32>; 7] {
+        std::array::from_fn(|t| {
+            let mut out = base[t].to_vec();
+            for (j, w) in out.iter_mut().enumerate() {
+                let mut delta = 0.0f32;
+                for (k, &th) in theta.iter().enumerate() {
+                    delta += th * pseudo_factor(t, k, j);
+                }
+                *w += MERGE_SCALE * delta;
+            }
+            out
+        })
+    }
+
+    fn project_hashed(dmats: &[Vec<f32>; 7]) -> Vec<f32> {
+        let mut dtheta = vec![0.0f32; N_THETA];
+        for (t, dm) in dmats.iter().enumerate() {
+            for (j, &dw) in dm.iter().enumerate() {
+                if dw == 0.0 {
+                    continue;
+                }
+                for (k, dt) in dtheta.iter_mut().enumerate() {
+                    *dt += MERGE_SCALE * dw * pseudo_factor(t, k, j);
+                }
+            }
+        }
+        dtheta
+    }
+
+    /// One GRPO adapter-gradient step: hash-merge, per-position
+    /// forward/backward, hash-projection. Returns dtheta.
+    pub struct GrpoIn<'a> {
+        pub tokens: &'a [i32],
+        pub mask: &'a [f32],
+        pub behavior: &'a [f32],
+        pub advantages: &'a [f32],
+        pub clip_c: f32,
+        pub kl_coef: f32,
+    }
+
+    pub fn grpo_step(base: &SimModel, theta: &[f32], b: usize, inp: &GrpoIn) -> Vec<f32> {
+        let merged = merge_hashed(base.mats, theta);
+        let m = SimModel {
+            embed: base.embed,
+            mats: std::array::from_fn(|t| merged[t].as_slice()),
+        };
+        let t_len = T_TRAIN;
+        let n: f32 = inp.mask.iter().sum::<f32>().max(1.0);
+        let mut grads = Grads::zeros();
+        let mut dlogits = vec![0.0f32; V];
+        for i in 0..b {
+            let adv = inp.advantages[i];
+            for j in 0..t_len - 1 {
+                let w = inp.mask[i * (t_len - 1) + j];
+                if w == 0.0 {
+                    continue;
+                }
+                let (acts, logits) = forward(&m, inp.tokens[i * t_len + j]);
+                let probs = softmax(&logits);
+                let y = (inp.tokens[i * t_len + j + 1].max(0) as usize).min(V - 1);
+                let lp = probs[y].max(1e-30).ln();
+                let beh = inp.behavior[i * (t_len - 1) + j];
+                let ratio = (lp - beh).exp().min(1e6);
+                let wt = if inp.clip_c > 0.0 { ratio.min(inp.clip_c) } else { ratio };
+                let dl_dlp = (-wt * adv + inp.kl_coef * (ratio - 1.0)) * w / n;
+                for v in 0..V {
+                    let onehot = if v == y { 1.0 } else { 0.0 };
+                    dlogits[v] = dl_dlp * (onehot - probs[v]);
+                }
+                backward(&m, &acts, &dlogits, &mut grads);
+            }
+        }
+        project_hashed(&grads.mats)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Inputs + measurement harness
+// ---------------------------------------------------------------------------
+
+/// Shared seeded inputs at the largest batch; smaller batches slice.
+struct Inputs {
+    embed: Vec<f32>,
+    mats: [Vec<f32>; 7],
+    theta: Vec<f32>,
+    tokens_gen: Vec<i32>,
+    plen: Vec<i32>,
+    uniforms: Vec<f32>,
+    tokens_train: Vec<i32>,
+    mask: Vec<f32>,
+    behavior: Vec<f32>,
+    advantages: Vec<f32>,
+}
+
+impl Inputs {
+    fn seeded() -> Self {
+        let b = SCALAR_BATCH;
+        let mut rng = Pcg64::new(4242);
+        let embed = rng.normal_vec(V * D, 0.1);
+        let mats: [Vec<f32>; 7] =
+            std::array::from_fn(|t| rng.normal_vec(MATS[t].1 * MATS[t].2, 0.3));
+        Self {
+            embed,
+            mats,
+            theta: rng.normal_vec(N_THETA, 0.2),
+            tokens_gen: (0..b * T_PREFILL).map(|_| rng.below(V as u64) as i32).collect(),
+            plen: (0..b).map(|_| 1 + rng.below(T_PREFILL as u64) as i32).collect(),
+            uniforms: rng.uniform_vec(b * N_GEN),
+            tokens_train: (0..b * T_TRAIN).map(|_| rng.below(V as u64) as i32).collect(),
+            mask: (0..b * (T_TRAIN - 1))
+                .map(|_| if rng.below(4) == 0 { 0.0 } else { 1.0 })
+                .collect(),
+            behavior: (0..b * (T_TRAIN - 1)).map(|_| -rng.uniform() * 3.0).collect(),
+            advantages: (0..b).map(|_| rng.uniform() - 0.5).collect(),
+        }
+    }
+
+    fn model(&self) -> SimModel<'_> {
+        SimModel { embed: &self.embed, mats: std::array::from_fn(|t| self.mats[t].as_slice()) }
+    }
+}
+
+/// rows/s of `f`, which processes `rows_per_call` rows per invocation:
+/// one warmup call, then at least 3 calls and at least 0.15 s of wall
+/// clock (whichever takes longer).
+fn measure(rows_per_call: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let t = Timer::start();
+    let mut calls = 0usize;
+    loop {
+        f();
+        calls += 1;
+        if calls >= 3 && t.secs() >= 0.15 {
+            break;
+        }
+    }
+    (calls * rows_per_call) as f64 / t.secs()
+}
+
+/// Measured grid of one op: rows/s at every batch × worker point.
+fn sweep(name: &str, mut run: impl FnMut(usize, usize)) -> Vec<(usize, usize, f64)> {
+    let mut grid = Vec::new();
+    for &b in &BATCHES {
+        for &w in &WORKERS {
+            let rps = measure(b, || run(b, w));
+            println!("{name:<10} b={b:<2} w={w}: {rps:>10.1} rows/s");
+            grid.push((b, w, rps));
+        }
+    }
+    grid
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot schema
+// ---------------------------------------------------------------------------
+
+/// Deterministic echo of the engine geometry the numbers were measured
+/// at. `--check` recomputes this; drift fails the gate so stale rows/s
+/// can never masquerade as current ones after a geometry change.
+fn engine_section() -> Value {
+    let ints = |xs: &[usize]| Value::Arr(xs.iter().map(|&x| num(x as f64)).collect());
+    obj(vec![
+        ("vocab", num(V as f64)),
+        ("d", num(D as f64)),
+        ("f", num(F as f64)),
+        ("t_prefill", num(T_PREFILL as f64)),
+        ("t_train", num(T_TRAIN as f64)),
+        ("n_gen", num(N_GEN as f64)),
+        ("theta", num(N_THETA as f64)),
+        ("geometries", ints(&GEOMETRIES)),
+    ])
+}
+
+fn op_section(grid: &[(usize, usize, f64)], scalar_rps: f64) -> Value {
+    obj(vec![
+        ("scalar_b32_rows_per_s", num(scalar_rps)),
+        (
+            "grid",
+            Value::Arr(
+                grid.iter()
+                    .map(|&(b, w, rps)| {
+                        obj(vec![
+                            ("batch", num(b as f64)),
+                            ("workers", num(w as f64)),
+                            ("rows_per_s", num(rps)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn grid_rps(op: &Value, batch: usize, workers: usize) -> Result<f64, String> {
+    let grid = op
+        .get("grid")
+        .and_then(|x| x.arr().map(|a| a.to_vec()))
+        .map_err(|e| format!("grid: {e:#}"))?;
+    for e in &grid {
+        let b = e.get("batch").and_then(|x| x.usize()).map_err(|e| format!("batch: {e:#}"))?;
+        let w =
+            e.get("workers").and_then(|x| x.usize()).map_err(|e| format!("workers: {e:#}"))?;
+        if b == batch && w == workers {
+            return e
+                .get("rows_per_s")
+                .and_then(|x| x.f64())
+                .map_err(|e| format!("rows_per_s: {e:#}"));
+        }
+    }
+    Err(format!("no grid entry for batch {batch} workers {workers}"))
+}
+
+fn validate_schema(v: &Value) -> Result<(), String> {
+    let get = |key: &str| v.get(key).map_err(|e| format!("{e:#}"));
+    if get("kind")?.str().map_err(|e| format!("kind: {e:#}"))? != "bench_sim" {
+        return Err("kind != bench_sim".into());
+    }
+    let version = get("schema_version")?.usize().map_err(|e| format!("schema_version: {e:#}"))?;
+    if version != SCHEMA_VERSION {
+        return Err(format!("schema_version {version} != {SCHEMA_VERSION}"));
+    }
+    let engine = get("engine")?;
+    let want = engine_section();
+    if *engine != want {
+        return Err(format!(
+            "engine drift: committed {} != recomputed {} — the sim geometry \
+             changed; rerun `cargo bench --bench bench_sim` and commit the \
+             refreshed snapshot",
+            engine.to_string(),
+            want.to_string()
+        ));
+    }
+    let measured = get("measured")?;
+    for op in OPS {
+        let sec = measured.get(op).map_err(|e| format!("measured.{op}: {e:#}"))?;
+        let scalar = sec
+            .get("scalar_b32_rows_per_s")
+            .and_then(|x| x.f64())
+            .map_err(|e| format!("{op}.scalar_b32_rows_per_s: {e:#}"))?;
+        if !scalar.is_finite() || scalar <= 0.0 {
+            return Err(format!("{op}.scalar_b32_rows_per_s not positive: {scalar}"));
+        }
+        let grid = sec
+            .get("grid")
+            .and_then(|x| x.arr().map(|a| a.to_vec()))
+            .map_err(|e| format!("{op}.grid: {e:#}"))?;
+        if grid.len() != BATCHES.len() * WORKERS.len() {
+            return Err(format!(
+                "{op}.grid has {} entries, expected {}",
+                grid.len(),
+                BATCHES.len() * WORKERS.len()
+            ));
+        }
+        for &b in &BATCHES {
+            for &w in &WORKERS {
+                let rps = grid_rps(sec, b, w).map_err(|e| format!("{op}: {e}"))?;
+                if !rps.is_finite() || rps <= 0.0 {
+                    return Err(format!("{op} b={b} w={w}: rows_per_s not positive: {rps}"));
+                }
+            }
+        }
+    }
+    let speedup = measured
+        .get("speedup_generate_b32")
+        .and_then(|x| x.f64())
+        .map_err(|e| format!("measured.speedup_generate_b32: {e:#}"))?;
+    if !speedup.is_finite() || speedup < 2.0 {
+        return Err(format!(
+            "speedup_generate_b32 {speedup:.2} < 2.0 — the vectorized engine \
+             must hold at least 2x over the frozen scalar baseline on \
+             batch-32 generate"
+        ));
+    }
+    let gen = measured.get("generate").map_err(|e| format!("{e:#}"))?;
+    let scalar = gen
+        .get("scalar_b32_rows_per_s")
+        .and_then(|x| x.f64())
+        .map_err(|e| format!("{e:#}"))?;
+    let ratio = grid_rps(gen, SCALAR_BATCH, 1)? / scalar;
+    if (speedup - ratio).abs() > 0.01 * ratio {
+        return Err(format!(
+            "speedup_generate_b32 {speedup:.4} inconsistent with its grid \
+             (batch-32 workers-1 / scalar = {ratio:.4})"
+        ));
+    }
+    Ok(())
+}
+
+/// `--check`: committed snapshot must be schema-valid, geometry-current
+/// and above the speedup floor; prints the committed rows/s tally that
+/// ci.sh surfaces in its full-mode report.
+fn check_snapshot(path: &str) -> Result<(), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let v = Value::parse(text.trim()).map_err(|e| format!("parsing {path}: {e:#}"))?;
+    validate_schema(&v)?;
+    let measured = v.get("measured").map_err(|e| format!("{e:#}"))?;
+    for op in OPS {
+        let sec = measured.get(op).map_err(|e| format!("{e:#}"))?;
+        let scalar = sec
+            .get("scalar_b32_rows_per_s")
+            .and_then(|x| x.f64())
+            .map_err(|e| format!("{e:#}"))?;
+        let fast = grid_rps(sec, SCALAR_BATCH, 1).map_err(|e| format!("{op}: {e}"))?;
+        println!(
+            "sim rows/s (committed): {op:<9} b32w1 {fast:>10.1}  \
+             scalar {scalar:>9.1}  ({:.2}x)",
+            fast / scalar
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// main
+// ---------------------------------------------------------------------------
+
+fn main() {
+    let check = std::env::args().any(|a| a == "--check");
+    let path = snapshot_path();
+    if check {
+        match check_snapshot(&path) {
+            Ok(()) => println!("BENCH_SIM.json: schema + engine + speedup floor OK ({path})"),
+            Err(e) => {
+                eprintln!("BENCH_SIM.json check failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+
+    println!("== sim execution-engine benchmarks ==\n");
+    let inp = Inputs::seeded();
+    let m = inp.model();
+    let (clip_c, kl_coef) = (2.0f32, 0.1f32);
+
+    // generate
+    let mut toks = vec![0i32; SCALAR_BATCH * N_GEN];
+    let mut lps = vec![0.0f32; SCALAR_BATCH * N_GEN];
+    let gen_grid = sweep("generate", |b, w| {
+        let gin = GenInput {
+            tokens: &inp.tokens_gen[..b * T_PREFILL],
+            prompt_len: &inp.plen[..b],
+            uniforms: &inp.uniforms[..b * N_GEN],
+            temperature: 1.0,
+        };
+        generate(m, b, &gin, w, &mut toks[..b * N_GEN], &mut lps[..b * N_GEN]);
+        std::hint::black_box((&toks, &lps));
+    });
+    let gen_scalar = measure(SCALAR_BATCH, || {
+        scalar_baseline::generate_rows(
+            &m,
+            SCALAR_BATCH,
+            &inp.tokens_gen,
+            &inp.plen,
+            &inp.uniforms,
+            1.0,
+            (&mut toks, &mut lps),
+        );
+        std::hint::black_box((&toks, &lps));
+    });
+    println!("generate   scalar b={SCALAR_BATCH}: {gen_scalar:>10.1} rows/s");
+
+    // logprobs
+    let mut lp_out = vec![0.0f32; SCALAR_BATCH * (T_TRAIN - 1)];
+    let lp_grid = sweep("logprobs", |b, w| {
+        logprobs(m, b, T_TRAIN, &inp.tokens_train[..b * T_TRAIN], w, &mut lp_out);
+        std::hint::black_box(&lp_out);
+    });
+    let lp_scalar = measure(SCALAR_BATCH, || {
+        scalar_baseline::logprob_rows(&m, SCALAR_BATCH, &inp.tokens_train, &mut lp_out);
+        std::hint::black_box(&lp_out);
+    });
+    println!("logprobs   scalar b={SCALAR_BATCH}: {lp_scalar:>10.1} rows/s");
+
+    // grpo_step: merge + adapter grads + dtheta projection per call
+    let grpo_grid = sweep("grpo_step", |b, w| {
+        let merged = merge_mats(m.mats, &inp.theta);
+        let mm =
+            SimModel { embed: m.embed, mats: std::array::from_fn(|t| merged[t].as_slice()) };
+        let params = GrpoParams {
+            behavior: &inp.behavior[..b * (T_TRAIN - 1)],
+            advantages: &inp.advantages[..b],
+            clip_c,
+            kl_coef,
+        };
+        let (grads, stats) = adapter_grads(
+            mm,
+            b,
+            T_TRAIN,
+            &inp.tokens_train[..b * T_TRAIN],
+            &inp.mask[..b * (T_TRAIN - 1)],
+            Some(&params),
+            w,
+        );
+        std::hint::black_box((project_dtheta(&grads.mats), stats));
+    });
+    let grpo_scalar = measure(SCALAR_BATCH, || {
+        let gin = scalar_baseline::GrpoIn {
+            tokens: &inp.tokens_train,
+            mask: &inp.mask,
+            behavior: &inp.behavior,
+            advantages: &inp.advantages,
+            clip_c,
+            kl_coef,
+        };
+        std::hint::black_box(scalar_baseline::grpo_step(&m, &inp.theta, SCALAR_BATCH, &gin));
+    });
+    println!("grpo_step  scalar b={SCALAR_BATCH}: {grpo_scalar:>10.1} rows/s");
+
+    let g32w1 = gen_grid
+        .iter()
+        .find(|&&(b, w, _)| b == SCALAR_BATCH && w == 1)
+        .map(|&(_, _, rps)| rps)
+        .unwrap();
+    let speedup = g32w1 / gen_scalar;
+    println!("\nspeedup (generate b32, vectorized w1 / scalar): {speedup:.2}x");
+
+    let snapshot = obj(vec![
+        ("kind", s("bench_sim")),
+        ("schema_version", num(SCHEMA_VERSION as f64)),
+        ("engine", engine_section()),
+        (
+            "measured",
+            obj(vec![
+                ("generate", op_section(&gen_grid, gen_scalar)),
+                ("logprobs", op_section(&lp_grid, lp_scalar)),
+                ("grpo_step", op_section(&grpo_grid, grpo_scalar)),
+                ("speedup_generate_b32", num(speedup)),
+            ]),
+        ),
+    ]);
+    if let Err(e) = validate_schema(&snapshot) {
+        eprintln!("generated snapshot failed its own schema: {e}");
+        std::process::exit(1);
+    }
+    std::fs::write(&path, snapshot.to_string() + "\n").expect("writing snapshot");
+    println!("perf snapshot -> {path}");
+}

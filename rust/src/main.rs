@@ -95,7 +95,9 @@ Shared: --artifacts DIR --ckpts DIR --results DIR --echo
         --devices D  (execution-context pool: pool jobs pin to contexts,
         up to D device executions overlap; results stay byte-identical)
         --backend pjrt|sim  (sim = hermetic pure-rust backend, zero
-        artifacts needed; use --tier sim. Env: TINYLORA_BACKEND)"
+        artifacts needed; use --tier sim. Env: TINYLORA_BACKEND)
+        --sim-workers W  (sim only: row workers per execute call,
+        0 = serial; byte-identical at any W. Env: TINYLORA_SIM_WORKERS)"
     );
 }
 
@@ -107,7 +109,9 @@ Shared: --artifacts DIR --ckpts DIR --results DIR --echo
 /// `--backend sim` (or `TINYLORA_BACKEND=sim`) swaps the PJRT artifact
 /// path for the hermetic pure-rust simulator — the whole CLI (pretrain →
 /// train → bench → serve-demo, `--tier sim`) then runs with no
-/// `artifacts/` directory at all.
+/// `artifacts/` directory at all. `--sim-workers W` fans each sim
+/// execute call's batch rows across W threads (pure throughput knob:
+/// results are byte-identical at any W).
 fn runtime(args: &Args, dirs: &Dirs) -> Result<Runtime> {
     let devices = args.usize("devices", 1)?;
     let backend = args.str(
@@ -116,7 +120,12 @@ fn runtime(args: &Args, dirs: &Dirs) -> Result<Runtime> {
     );
     match backend.as_str() {
         "pjrt" => Runtime::with_devices(&dirs.artifacts, devices),
-        "sim" => Runtime::sim(devices),
+        "sim" => {
+            let workers = args.usize("sim-workers", 0)?;
+            let opts =
+                tinylora_rl::runtime::SimOptions { row_workers: workers, ..Default::default() };
+            Runtime::sim_with(devices, opts)
+        }
         other => anyhow::bail!("--backend {other:?} is not a backend (pjrt|sim)"),
     }
 }

@@ -98,10 +98,9 @@ impl Runtime {
                 // per-context by id
                 let faults = Arc::new(sim::SimFaults::new(&opts));
                 for id in 0..d {
-                    let delay = opts.ctx_delay_ms.get(id).copied().unwrap_or(0);
                     contexts.push(ExecContext::new(
                         id,
-                        Box::new(sim::SimBackend::new(faults.clone(), delay)),
+                        Box::new(sim::SimBackend::new(faults.clone(), id, &opts)),
                     ));
                 }
             }
@@ -112,9 +111,10 @@ impl Runtime {
     /// Backend + artifact dir + context count from the environment:
     /// `TINYLORA_BACKEND` ("pjrt" default | "sim"), `TINYLORA_ARTIFACTS`
     /// (default ./artifacts; ignored by sim), `TINYLORA_DEVICES`
-    /// (default 1). A set-but-unparseable value is an error, not a silent
-    /// fall-back (the operator asked for something; failing fast beats
-    /// quietly not delivering it).
+    /// (default 1), `TINYLORA_SIM_WORKERS` (sim only: row workers per
+    /// execute call, default 0 = serial). A set-but-unparseable value is
+    /// an error, not a silent fall-back (the operator asked for
+    /// something; failing fast beats quietly not delivering it).
     pub fn from_env() -> Result<Self> {
         let dir = std::env::var("TINYLORA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
         let devices = match std::env::var("TINYLORA_DEVICES") {
@@ -123,9 +123,18 @@ impl Runtime {
                 anyhow::anyhow!("TINYLORA_DEVICES {v:?} is not a device count")
             })?,
         };
+        let sim_workers = match std::env::var("TINYLORA_SIM_WORKERS") {
+            Err(_) => 0,
+            Ok(v) => v.trim().parse().map_err(|_| {
+                anyhow::anyhow!("TINYLORA_SIM_WORKERS {v:?} is not a worker count")
+            })?,
+        };
         match std::env::var("TINYLORA_BACKEND").as_deref() {
             Err(_) | Ok("pjrt") => Self::with_devices(Path::new(&dir), devices),
-            Ok("sim") => Self::sim(devices),
+            Ok("sim") => {
+                let opts = SimOptions { row_workers: sim_workers, ..Default::default() };
+                Self::sim_with(devices, opts)
+            }
             Ok(other) => anyhow::bail!("TINYLORA_BACKEND {other:?} is not a backend (pjrt|sim)"),
         }
     }

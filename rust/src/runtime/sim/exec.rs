@@ -1,0 +1,573 @@
+//! Data-parallel batch execution: rows of a sim batch dispatched across
+//! `std::thread::scope` workers — no new deps, no locks, no channels.
+//!
+//! Determinism under row-parallelism is preserved *by construction*:
+//!
+//! 1. Rows are split into contiguous chunks ([`chunk_ranges`]) and every
+//!    row writes only its own pre-split output slot (disjoint `&mut`
+//!    views — the type system rules out write interleaving).
+//! 2. Row `i`'s computation reads only row `i`'s inputs and the shared
+//!    read-only weights, so scheduling order cannot reach the data.
+//! 3. Cross-row reductions (gradients, loss stats) go through per-row
+//!    partials folded on the calling thread in ascending row order —
+//!    a fixed f32 reduction tree, independent of worker count.
+//!
+//! Hence pooled == serial byte-identity at ANY worker count: the same
+//! property the e2e suite checks across device contexts, now also held
+//! per-context for row workers. A worker count of 0 or 1 (or a batch of
+//! one chunk) short-circuits to a plain serial loop on the caller's
+//! thread — no spawn cost on the b=1 decode path.
+
+use std::ops::Range;
+
+use super::kernels::softmax_rows;
+use super::model::{
+    ce_row, clamp_tok, forward_block, grpo_row, sample_one, CeSums, GrpoRowIn, GrpoSums, Prepared,
+    Scratch, SimGrads, SimModel,
+};
+use super::{N_GEN, T_PREFILL, V};
+
+/// Split `rows` into at most `workers` contiguous ascending chunks,
+/// sizes differing by at most one (earlier chunks take the remainder).
+pub fn chunk_ranges(rows: usize, workers: usize) -> Vec<Range<usize>> {
+    if rows == 0 {
+        return Vec::new();
+    }
+    let k = workers.max(1).min(rows);
+    let (base, extra) = (rows / k, rows % k);
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for c in 0..k {
+        let len = base + usize::from(c < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Split a flat `[rows * per_row]` buffer into per-chunk `&mut` views
+/// matching `ranges` (which must be contiguous ascending from 0).
+fn split_rows<'a, T>(
+    mut buf: &'a mut [T],
+    ranges: &[Range<usize>],
+    per_row: usize,
+) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(ranges.len());
+    for r in ranges {
+        let (head, rest) = buf.split_at_mut((r.end - r.start) * per_row);
+        out.push(head);
+        buf = rest;
+    }
+    out
+}
+
+/// Run `f` once per chunk, each with its chunk's pre-split output slot
+/// and a worker-private [`Scratch`]. One chunk runs inline on the
+/// calling thread; more fan out over a `std::thread::scope` (auto-join,
+/// panics propagate). Chunk/slot pairing is positional, so outputs land
+/// in row order regardless of which worker finishes first.
+fn dispatch<Out, F>(ranges: Vec<Range<usize>>, outs: Vec<Out>, f: F)
+where
+    Out: Send,
+    F: Fn(Range<usize>, Out, &mut Scratch) + Sync,
+{
+    debug_assert_eq!(ranges.len(), outs.len());
+    if ranges.len() <= 1 {
+        let mut sc = Scratch::new();
+        for (r, o) in ranges.into_iter().zip(outs) {
+            f(r, o, &mut sc);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let f = &f;
+        for (r, o) in ranges.into_iter().zip(outs) {
+            s.spawn(move || {
+                let mut sc = Scratch::new();
+                f(r, o, &mut sc);
+            });
+        }
+    });
+}
+
+/// Inputs of one generate call (weights travel via [`SimModel`]).
+pub struct GenInput<'a> {
+    /// Prompt tokens, `[b, T_PREFILL]` row-major.
+    pub tokens: &'a [i32],
+    /// Prompt length per row, `[b]`.
+    pub prompt_len: &'a [i32],
+    /// Sampling uniforms, `[b, N_GEN]` row-major.
+    pub uniforms: &'a [f32],
+    /// Sampling temperature (<= 0 is greedy).
+    pub temperature: f32,
+}
+
+/// Batched ancestral decode: all rows of a chunk advance in lockstep —
+/// one [`forward_block`] per step over the chunk's current tokens, then
+/// a per-row sample. Row `i` reads uniforms row `i` by GLOBAL index, so
+/// chunking is invisible in the outputs.
+pub fn generate(
+    model: SimModel,
+    b: usize,
+    inp: &GenInput,
+    workers: usize,
+    out_tokens: &mut [i32],
+    out_logp: &mut [f32],
+) {
+    debug_assert!(inp.tokens.len() >= b * T_PREFILL && inp.uniforms.len() >= b * N_GEN);
+    debug_assert!(out_tokens.len() >= b * N_GEN && out_logp.len() >= b * N_GEN);
+    let ranges = chunk_ranges(b, workers);
+    let tok_slots = split_rows(out_tokens, &ranges, N_GEN);
+    let lp_slots = split_rows(out_logp, &ranges, N_GEN);
+    let outs: Vec<_> = tok_slots.into_iter().zip(lp_slots).collect();
+    dispatch(ranges, outs, |range, (toks_out, lps_out), sc| {
+        let prep = Prepared::new(model, false);
+        let n = range.end - range.start;
+        sc.ensure(n);
+        for (bi, i) in range.clone().enumerate() {
+            let p = (inp.prompt_len[i].max(1) as usize).min(T_PREFILL);
+            sc.xs[bi] = clamp_tok(inp.tokens[i * T_PREFILL + p - 1]);
+        }
+        for t in 0..N_GEN {
+            forward_block(&prep, sc, n);
+            for (bi, i) in range.clone().enumerate() {
+                let u = inp.uniforms[i * N_GEN + t];
+                let (chosen, lp) = sample_one(
+                    &sc.logits[bi * V..(bi + 1) * V],
+                    inp.temperature,
+                    u,
+                    &mut sc.probs[bi * V..(bi + 1) * V],
+                );
+                toks_out[bi * N_GEN + t] = chosen as i32;
+                lps_out[bi * N_GEN + t] = lp;
+                sc.xs[bi] = chosen;
+            }
+        }
+    });
+}
+
+/// Teacher-forced log-probs of every next-token in `[b, t_len]` rows:
+/// each row's `t_len - 1` positions form one block (one forward, one
+/// softmax sweep — the old per-position `mv()` path, de-allocated).
+pub fn logprobs(
+    model: SimModel,
+    b: usize,
+    t_len: usize,
+    tokens: &[i32],
+    workers: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(tokens.len() >= b * t_len && out.len() >= b * (t_len - 1));
+    let ranges = chunk_ranges(b, workers);
+    let outs = split_rows(out, &ranges, t_len - 1);
+    dispatch(ranges, outs, |range, lp_out, sc| {
+        let prep = Prepared::new(model, false);
+        let np = t_len - 1;
+        sc.ensure(np);
+        for (bi, i) in range.clone().enumerate() {
+            let row = &tokens[i * t_len..(i + 1) * t_len];
+            for j in 0..np {
+                sc.xs[j] = clamp_tok(row[j]);
+            }
+            forward_block(&prep, sc, np);
+            softmax_rows(&sc.logits[..np * V], np, V, &mut sc.probs[..np * V]);
+            for j in 0..np {
+                let y = clamp_tok(row[j + 1]);
+                lp_out[bi * np + j] = sc.probs[j * V + y].max(1e-30).ln();
+            }
+        }
+    });
+}
+
+/// Full-weight masked-CE gradients over `[b, t_len]` rows (pretrain).
+/// Returns the reduced gradients and `[loss, acc, entropy, mean_logp]`
+/// (already `/ n`), reduced over per-row partials in ascending row order.
+pub fn pretrain_grads(
+    model: SimModel,
+    b: usize,
+    t_len: usize,
+    tokens: &[i32],
+    mask: &[f32],
+    workers: usize,
+) -> (SimGrads, [f32; 4]) {
+    debug_assert!(tokens.len() >= b * t_len && mask.len() >= b * (t_len - 1));
+    let n_total: f32 = mask.iter().sum::<f32>().max(1.0);
+    let mut rows: Vec<(SimGrads, CeSums)> =
+        (0..b).map(|_| (SimGrads::zeros(), CeSums::default())).collect();
+    let ranges = chunk_ranges(b, workers);
+    let slots = split_rows(&mut rows, &ranges, 1);
+    dispatch(ranges, slots, |range, slot, sc| {
+        let prep = Prepared::new(model, true);
+        for (bi, i) in range.clone().enumerate() {
+            let (grads, sums) = &mut slot[bi];
+            *sums = ce_row(
+                &prep,
+                &tokens[i * t_len..(i + 1) * t_len],
+                &mask[i * (t_len - 1)..(i + 1) * (t_len - 1)],
+                n_total,
+                sc,
+                grads,
+                true,
+            );
+        }
+    });
+    let mut grads = SimGrads::zeros();
+    let mut sums = CeSums::default();
+    for (g, s) in &rows {
+        grads.add(g);
+        sums.add(s);
+    }
+    let n = n_total;
+    (grads, [sums.loss / n, sums.acc / n, sums.ent / n, sums.lp / n])
+}
+
+/// GRPO-only inputs of one adapter-gradient call.
+pub struct GrpoParams<'a> {
+    /// Behavior (rollout-time) log-probs, `[b, t_len - 1]`.
+    pub behavior: &'a [f32],
+    /// Group-relative advantage per row, `[b]`.
+    pub advantages: &'a [f32],
+    /// Importance-ratio truncation constant (0 disables clipping).
+    pub clip_c: f32,
+    /// k3 KL penalty coefficient.
+    pub kl_coef: f32,
+}
+
+/// Adapter gradients through the merge (SFT masked-CE, or GRPO when
+/// `grpo` is given): `model` is the already-merged model. Returns the
+/// reduced weight-space gradients (mats only — the embedding sites are
+/// skipped since only `project_dtheta(grads.mats)` consumes them) and
+/// the 8-slot stats vector, both reduced in ascending row order.
+pub fn adapter_grads(
+    model: SimModel,
+    b: usize,
+    t_len: usize,
+    tokens: &[i32],
+    mask: &[f32],
+    grpo: Option<&GrpoParams>,
+    workers: usize,
+) -> (SimGrads, Vec<f32>) {
+    debug_assert!(tokens.len() >= b * t_len && mask.len() >= b * (t_len - 1));
+    let n: f32 = mask.iter().sum::<f32>().max(1.0);
+    let ranges = chunk_ranges(b, workers);
+    match grpo {
+        Some(g) => {
+            let mut rows: Vec<(SimGrads, GrpoSums)> =
+                (0..b).map(|_| (SimGrads::zeros(), GrpoSums::default())).collect();
+            let slots = split_rows(&mut rows, &ranges, 1);
+            dispatch(ranges, slots, |range, slot, sc| {
+                let prep = Prepared::new(model, true);
+                for (bi, i) in range.clone().enumerate() {
+                    let gin = GrpoRowIn {
+                        behavior: &g.behavior[i * (t_len - 1)..(i + 1) * (t_len - 1)],
+                        adv: g.advantages[i],
+                        clip_c: g.clip_c,
+                        kl_coef: g.kl_coef,
+                    };
+                    let (grads, sums) = &mut slot[bi];
+                    *sums = grpo_row(
+                        &prep,
+                        &tokens[i * t_len..(i + 1) * t_len],
+                        &mask[i * (t_len - 1)..(i + 1) * (t_len - 1)],
+                        &gin,
+                        n,
+                        sc,
+                        grads,
+                    );
+                }
+            });
+            let mut grads = SimGrads::zeros();
+            let mut s = GrpoSums::default();
+            for (g, p) in &rows {
+                grads.add(g);
+                s.add(p);
+            }
+            let loss = s.pg / n + g.kl_coef * s.k3 / n;
+            let stats = vec![
+                loss,
+                s.pg / n,
+                s.k1 / n,
+                s.k3 / n,
+                s.rsum / n,
+                s.clipped / n,
+                s.ent / n,
+                s.lp / n,
+            ];
+            (grads, stats)
+        }
+        None => {
+            let mut rows: Vec<(SimGrads, CeSums)> =
+                (0..b).map(|_| (SimGrads::zeros(), CeSums::default())).collect();
+            let slots = split_rows(&mut rows, &ranges, 1);
+            dispatch(ranges, slots, |range, slot, sc| {
+                let prep = Prepared::new(model, true);
+                for (bi, i) in range.clone().enumerate() {
+                    let (grads, sums) = &mut slot[bi];
+                    *sums = ce_row(
+                        &prep,
+                        &tokens[i * t_len..(i + 1) * t_len],
+                        &mask[i * (t_len - 1)..(i + 1) * (t_len - 1)],
+                        n,
+                        sc,
+                        grads,
+                        false,
+                    );
+                }
+            });
+            let mut grads = SimGrads::zeros();
+            let mut s = CeSums::default();
+            for (g, p) in &rows {
+                grads.add(g);
+                s.add(p);
+            }
+            let stats =
+                vec![s.loss / n, s.acc / n, 0.0, 0.0, 1.0, 0.0, s.ent / n, s.lp / n];
+            (grads, stats)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::model::reference;
+    use super::super::{merge_mats, project_dtheta, MATS, N_THETA, T_TRAIN};
+    use super::*;
+    use crate::util::Pcg64;
+
+    /// Worker counts every differential case runs at (the e2e suite's
+    /// device counts, reused as row-worker counts).
+    const WORKER_COUNTS: [usize; 3] = [1, 2, 4];
+    /// All baked generate geometries.
+    const GEOMS: [usize; 4] = [1, 2, 4, 8];
+
+    fn random_model_bufs(seed: u64) -> (Vec<f32>, [Vec<f32>; 7]) {
+        let mut rng = Pcg64::new(seed);
+        let embed = rng.normal_vec(V * 8, 0.1);
+        let mats: [Vec<f32>; 7] =
+            std::array::from_fn(|t| rng.normal_vec(MATS[t].1 * MATS[t].2, 0.3));
+        (embed, mats)
+    }
+
+    fn model<'a>(embed: &'a [f32], mats: &'a [Vec<f32>; 7]) -> SimModel<'a> {
+        SimModel { embed, mats: std::array::from_fn(|t| mats[t].as_slice()) }
+    }
+
+    fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    fn grads_bits_eq(a: &SimGrads, b: &SimGrads) -> bool {
+        bits_eq(&a.embed_unembed, &b.embed_unembed)
+            && bits_eq(&a.embed_input, &b.embed_input)
+            && (0..7).all(|t| bits_eq(&a.mats[t], &b.mats[t]))
+    }
+
+    #[test]
+    fn chunk_ranges_partition_rows() {
+        assert!(chunk_ranges(0, 4).is_empty());
+        for rows in 1..=9usize {
+            for workers in 0..=5usize {
+                let ranges = chunk_ranges(rows, workers);
+                assert!(ranges.len() <= workers.max(1) && ranges.len() <= rows);
+                assert_eq!(ranges[0].start, 0);
+                assert_eq!(ranges.last().unwrap().end, rows);
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].end, w[1].start, "chunks must be contiguous ascending");
+                }
+                let sizes: Vec<usize> = ranges.iter().map(|r| r.end - r.start).collect();
+                let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(mx - mn <= 1, "chunk sizes must differ by at most one");
+            }
+        }
+    }
+
+    /// Generate matches the scalar reference (and therefore itself at
+    /// every worker count) bit-for-bit at every geometry × temperature.
+    #[test]
+    fn generate_matches_reference_at_all_geometries_and_workers() {
+        let (embed, mats) = random_model_bufs(31);
+        let m = model(&embed, &mats);
+        let mut rng = Pcg64::new(32);
+        for &b in &GEOMS {
+            let tokens: Vec<i32> =
+                (0..b * T_PREFILL).map(|_| rng.below(V as u64) as i32).collect();
+            let plen: Vec<i32> =
+                (0..b).map(|_| 1 + rng.below(T_PREFILL as u64) as i32).collect();
+            let uniforms = rng.uniform_vec(b * N_GEN);
+            for &temperature in &[1.0f32, 0.7, 0.0] {
+                let inp = GenInput {
+                    tokens: &tokens,
+                    prompt_len: &plen,
+                    uniforms: &uniforms,
+                    temperature,
+                };
+                // scalar reference: per row, per step, fresh Vecs
+                let mut want_toks = vec![0i32; b * N_GEN];
+                let mut want_lps = vec![0.0f32; b * N_GEN];
+                let mut probs = vec![0.0f32; V];
+                for i in 0..b {
+                    let p = (plen[i].max(1) as usize).min(T_PREFILL);
+                    let mut last = tokens[i * T_PREFILL + p - 1];
+                    for t in 0..N_GEN {
+                        let (_, logits) = reference::forward_pos(&m, last);
+                        let (chosen, lp) =
+                            sample_one(&logits, temperature, uniforms[i * N_GEN + t], &mut probs);
+                        want_toks[i * N_GEN + t] = chosen as i32;
+                        want_lps[i * N_GEN + t] = lp;
+                        last = chosen as i32;
+                    }
+                }
+                for &w in &WORKER_COUNTS {
+                    let mut got_toks = vec![0i32; b * N_GEN];
+                    let mut got_lps = vec![0.0f32; b * N_GEN];
+                    generate(m, b, &inp, w, &mut got_toks, &mut got_lps);
+                    assert_eq!(got_toks, want_toks, "b={b} w={w} T={temperature}: tokens");
+                    assert!(
+                        bits_eq(&got_lps, &want_lps),
+                        "b={b} w={w} T={temperature}: behavior log-probs diverge"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn logprobs_match_reference_at_all_geometries_and_workers() {
+        let (embed, mats) = random_model_bufs(33);
+        let m = model(&embed, &mats);
+        let mut rng = Pcg64::new(34);
+        for &b in &GEOMS {
+            let tokens: Vec<i32> =
+                (0..b * T_TRAIN).map(|_| rng.below(V as u64) as i32).collect();
+            let mut want = vec![0.0f32; b * (T_TRAIN - 1)];
+            for i in 0..b {
+                for j in 0..T_TRAIN - 1 {
+                    let (_, logits) = reference::forward_pos(&m, tokens[i * T_TRAIN + j]);
+                    let probs = reference::softmax(&logits);
+                    let y = clamp_tok(tokens[i * T_TRAIN + j + 1]);
+                    want[i * (T_TRAIN - 1) + j] = probs[y].max(1e-30).ln();
+                }
+            }
+            for &w in &WORKER_COUNTS {
+                let mut got = vec![0.0f32; b * (T_TRAIN - 1)];
+                logprobs(m, b, T_TRAIN, &tokens, w, &mut got);
+                assert!(bits_eq(&got, &want), "b={b} w={w}: logprobs diverge from reference");
+            }
+        }
+    }
+
+    /// Random tokens AND a random sparse mask: the gather path (mask==0
+    /// skip) must agree with the reference's skip exactly.
+    #[test]
+    fn pretrain_grads_match_reference_at_all_geometries_and_workers() {
+        let (embed, mats) = random_model_bufs(35);
+        let m = model(&embed, &mats);
+        let mut rng = Pcg64::new(36);
+        for &b in &GEOMS {
+            let tokens: Vec<i32> =
+                (0..b * T_TRAIN).map(|_| rng.below(V as u64) as i32).collect();
+            let mask: Vec<f32> = (0..b * (T_TRAIN - 1))
+                .map(|_| if rng.below(4) == 0 { 0.0 } else { 1.0 })
+                .collect();
+            let n: f32 = mask.iter().sum::<f32>().max(1.0);
+            // reference: per-row partials, reduced ascending — the same
+            // tree the engine commits to
+            let mut want = SimGrads::zeros();
+            let mut sums = CeSums::default();
+            for i in 0..b {
+                let mut g = SimGrads::zeros();
+                let s = reference::ce_row_ref(
+                    &m,
+                    &tokens[i * T_TRAIN..(i + 1) * T_TRAIN],
+                    &mask[i * (T_TRAIN - 1)..(i + 1) * (T_TRAIN - 1)],
+                    n,
+                    &mut g,
+                    true,
+                );
+                want.add(&g);
+                sums.add(&s);
+            }
+            let want_stats = [sums.loss / n, sums.acc / n, sums.ent / n, sums.lp / n];
+            for &w in &WORKER_COUNTS {
+                let (got, got_stats) = pretrain_grads(m, b, T_TRAIN, &tokens, &mask, w);
+                assert!(grads_bits_eq(&got, &want), "b={b} w={w}: pretrain grads diverge");
+                assert!(bits_eq(&got_stats, &want_stats), "b={b} w={w}: pretrain stats diverge");
+            }
+        }
+    }
+
+    /// GRPO adapter path: merged weights, ratio/clip/KL math, and the
+    /// dtheta projection all bitwise-stable across geometries × workers.
+    #[test]
+    fn adapter_grads_match_reference_at_all_geometries_and_workers() {
+        let (embed, mats) = random_model_bufs(37);
+        let base = model(&embed, &mats);
+        let mut rng = Pcg64::new(38);
+        let theta = rng.normal_vec(N_THETA, 0.2);
+        let merged = merge_mats(base.mats, &theta);
+        let m = SimModel { embed: &embed, mats: std::array::from_fn(|t| merged[t].as_slice()) };
+        for &b in &GEOMS {
+            let tokens: Vec<i32> =
+                (0..b * T_TRAIN).map(|_| rng.below(V as u64) as i32).collect();
+            let mask: Vec<f32> = (0..b * (T_TRAIN - 1))
+                .map(|_| if rng.below(5) == 0 { 0.0 } else { 1.0 })
+                .collect();
+            let behavior: Vec<f32> =
+                (0..b * (T_TRAIN - 1)).map(|_| -rng.uniform() * 3.0).collect();
+            let advantages: Vec<f32> = (0..b).map(|_| rng.uniform() - 0.5).collect();
+            let (clip_c, kl_coef) = (2.0f32, 0.1f32);
+            let n: f32 = mask.iter().sum::<f32>().max(1.0);
+
+            let mut want = SimGrads::zeros();
+            let mut s = GrpoSums::default();
+            for i in 0..b {
+                let gin = GrpoRowIn {
+                    behavior: &behavior[i * (T_TRAIN - 1)..(i + 1) * (T_TRAIN - 1)],
+                    adv: advantages[i],
+                    clip_c,
+                    kl_coef,
+                };
+                let mut g = SimGrads::zeros();
+                let p = reference::grpo_row_ref(
+                    &m,
+                    &tokens[i * T_TRAIN..(i + 1) * T_TRAIN],
+                    &mask[i * (T_TRAIN - 1)..(i + 1) * (T_TRAIN - 1)],
+                    &gin,
+                    n,
+                    &mut g,
+                );
+                want.add(&g);
+                s.add(&p);
+            }
+            let want_dtheta = project_dtheta(&want.mats);
+            let want_loss = s.pg / n + kl_coef * s.k3 / n;
+
+            let params = GrpoParams {
+                behavior: &behavior,
+                advantages: &advantages,
+                clip_c,
+                kl_coef,
+            };
+            for &w in &WORKER_COUNTS {
+                let (got, stats) =
+                    adapter_grads(m, b, T_TRAIN, &tokens, &mask, Some(&params), w);
+                assert!(
+                    (0..7).all(|t| bits_eq(&got.mats[t], &want.mats[t])),
+                    "b={b} w={w}: grpo weight grads diverge"
+                );
+                let got_dtheta = project_dtheta(&got.mats);
+                assert!(bits_eq(&got_dtheta, &want_dtheta), "b={b} w={w}: dtheta diverges");
+                assert_eq!(stats[0].to_bits(), want_loss.to_bits(), "b={b} w={w}: loss");
+                assert_eq!(stats.len(), 8);
+            }
+            // SFT path at the same geometry: workers must also be inert
+            let base_stats: Vec<Vec<f32>> = WORKER_COUNTS
+                .iter()
+                .map(|&w| adapter_grads(m, b, T_TRAIN, &tokens, &mask, None, w).1)
+                .collect();
+            for sv in &base_stats[1..] {
+                assert!(bits_eq(sv, &base_stats[0]), "b={b}: sft stats vary with workers");
+            }
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Blocked, autovectorization-friendly microkernels over flat row-major
+//! `&[f32]` buffers — the arithmetic substrate of the sim engine.
+//!
+//! Every kernel obeys one contract, the **canonical reduction order**:
+//! each output element accumulates its contributions *in place*, in
+//! ascending order of the contraction index, starting from whatever is
+//! already in `out`. Blocking only ever groups *independent output rows*
+//! (never the contraction dimension), so the per-element f32 operation
+//! sequence is identical to the naive triple loop — blocked == naive
+//! bit-for-bit, which is what lets `model::reference` (a plain scalar
+//! oracle) pin the vectorized engine down to exact bits.
+//!
+//! Why this shape vectorizes: rustc will not reassociate floats, so a
+//! sequential dot product (`acc += a[i]*b[i]`) compiles to a serial
+//! dependency chain. All kernels here are therefore written as rank-1 /
+//! axpy updates with unit-stride inner loops over *distinct* output
+//! elements (`out[j] += x * b[j]`) — independent lanes the compiler can
+//! turn into SIMD without changing any rounding. [`matmul_acc`] adds a
+//! fixed-width `MR`-row accumulator block on top: four output rows share
+//! one sweep over `b`, quartering traffic on the hot matrix.
+
+/// Output-row block width of [`matmul_acc`]. Rows are independent, so
+/// blocking over them cannot reorder any per-element accumulation.
+const MR: usize = 4;
+
+/// `out[m,n] += a[m,k] · b[k,n]`, all row-major. Contraction (`k`) runs
+/// ascending per output element; `MR` output rows are processed per sweep
+/// over `b` with a unit-stride inner loop over `n`.
+pub fn matmul_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert!(a.len() >= m * k, "a too short");
+    debug_assert!(b.len() >= k * n, "b too short");
+    debug_assert!(out.len() >= m * n, "out too short");
+    let mut i = 0;
+    while i + MR <= m {
+        let (o0, rest) = out[i * n..(i + MR) * n].split_at_mut(n);
+        let (o1, rest) = rest.split_at_mut(n);
+        let (o2, o3) = rest.split_at_mut(n);
+        for p in 0..k {
+            let br = &b[p * n..(p + 1) * n];
+            let x0 = a[i * k + p];
+            let x1 = a[(i + 1) * k + p];
+            let x2 = a[(i + 2) * k + p];
+            let x3 = a[(i + 3) * k + p];
+            for j in 0..n {
+                let bv = br[j];
+                o0[j] += x0 * bv;
+                o1[j] += x1 * bv;
+                o2[j] += x2 * bv;
+                o3[j] += x3 * bv;
+            }
+        }
+        i += MR;
+    }
+    while i < m {
+        let or = &mut out[i * n..(i + 1) * n];
+        for p in 0..k {
+            let br = &b[p * n..(p + 1) * n];
+            let x = a[i * k + p];
+            for j in 0..n {
+                or[j] += x * br[j];
+            }
+        }
+        i += 1;
+    }
+}
+
+/// `out[k,n] += aᵀ[k,m] · b[m,n]` for row-major `a[m,k]`, `b[m,n]` — the
+/// weight-gradient kernel (`dW += actsᵀ · dOut`). The contraction index
+/// is `m` (block positions / batch rows) and runs ascending in the OUTER
+/// loop: each position contributes one rank-1 update, so gradient
+/// elements accumulate in position order — exactly the order a scalar
+/// per-position backward produces.
+pub fn matmul_at_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert!(a.len() >= m * k, "a too short");
+    debug_assert!(b.len() >= m * n, "b too short");
+    debug_assert!(out.len() >= k * n, "out too short");
+    for p in 0..m {
+        let ar = &a[p * k..(p + 1) * k];
+        let br = &b[p * n..(p + 1) * n];
+        for (i, &x) in ar.iter().enumerate() {
+            let or = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                or[j] += x * br[j];
+            }
+        }
+    }
+}
+
+/// `dst[cols,rows] = srcᵀ` for row-major `src[rows,cols]`. Used once per
+/// `Prepared` model to turn backward's `x · Wᵀ` products into plain
+/// [`matmul_acc`] calls with unit-stride inner loops.
+pub fn transpose(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
+    debug_assert!(src.len() >= rows * cols && dst.len() >= rows * cols);
+    for r in 0..rows {
+        let sr = &src[r * cols..(r + 1) * cols];
+        for (c, &v) in sr.iter().enumerate() {
+            dst[c * rows + r] = v;
+        }
+    }
+}
+
+/// In-place `x *= s` (GAIN folding in the fused logit/backprop path).
+pub fn scale_inplace(xs: &mut [f32], s: f32) {
+    for x in xs {
+        *x *= s;
+    }
+}
+
+/// In-place elementwise tanh (the smooth attention/gate nonlinearity).
+pub fn tanh_inplace(xs: &mut [f32]) {
+    for x in xs {
+        *x = x.tanh();
+    }
+}
+
+/// Max-subtracted softmax of one row, deterministic fixed order: max fold
+/// ascending, exponentials ascending, sum ascending, then divide. Same
+/// operation sequence as the pre-split scalar `softmax`.
+pub fn softmax_row(logits: &[f32], probs: &mut [f32]) {
+    debug_assert_eq!(logits.len(), probs.len());
+    let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    for (p, &l) in probs.iter_mut().zip(logits) {
+        *p = (l - mx).exp();
+    }
+    let mut sum = 0.0f32;
+    for &p in probs.iter() {
+        sum += p;
+    }
+    for p in probs.iter_mut() {
+        *p /= sum;
+    }
+}
+
+/// [`softmax_row`] of `logits / temperature` without materializing the
+/// scaled row: the division is recomputed in the max pass and the exp
+/// pass (same bits both times), preserving the exact op sequence of the
+/// scalar `softmax(&scaled)` it replaces.
+pub fn softmax_row_temp(logits: &[f32], temperature: f32, probs: &mut [f32]) {
+    debug_assert_eq!(logits.len(), probs.len());
+    let mut mx = f32::NEG_INFINITY;
+    for &l in logits {
+        mx = mx.max(l / temperature);
+    }
+    for (p, &l) in probs.iter_mut().zip(logits) {
+        *p = (l / temperature - mx).exp();
+    }
+    let mut sum = 0.0f32;
+    for &p in probs.iter() {
+        sum += p;
+    }
+    for p in probs.iter_mut() {
+        *p /= sum;
+    }
+}
+
+/// Block softmax: [`softmax_row`] applied to each of `rows` rows of width
+/// `width` (rows are independent; no cross-row reduction exists).
+pub fn softmax_rows(logits: &[f32], rows: usize, width: usize, probs: &mut [f32]) {
+    debug_assert!(logits.len() >= rows * width && probs.len() >= rows * width);
+    for r in 0..rows {
+        softmax_row(&logits[r * width..(r + 1) * width], &mut probs[r * width..(r + 1) * width]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    /// Naive triple loop with the same per-element order (i, p-asc, j).
+    fn naive_matmul_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    out[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+    }
+
+    fn naive_at_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        for p in 0..m {
+            for i in 0..k {
+                for j in 0..n {
+                    out[i * n + j] += a[p * k + i] * b[p * n + j];
+                }
+            }
+        }
+    }
+
+    /// The row-blocked kernel is bitwise equal to the naive triple loop
+    /// at every block-remainder shape — the property the whole
+    /// determinism argument leans on.
+    #[test]
+    fn blocked_matmul_matches_naive_bitwise() {
+        let mut rng = Pcg64::new(41);
+        for &(m, k, n) in &[(1, 8, 8), (3, 8, 16), (4, 16, 8), (7, 8, 64), (63, 8, 64)] {
+            let a = rng.normal_vec(m * k, 1.0);
+            let b = rng.normal_vec(k * n, 1.0);
+            // non-zero starting accumulators: "+=" semantics must match too
+            let init = rng.normal_vec(m * n, 0.1);
+            let mut got = init.clone();
+            let mut want = init.clone();
+            matmul_acc(&a, &b, m, k, n, &mut got);
+            naive_matmul_acc(&a, &b, m, k, n, &mut want);
+            let eq = got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(eq, "matmul_acc diverges from naive at ({m},{k},{n})");
+
+            let bt = rng.normal_vec(m * n, 1.0);
+            let mut got = vec![0.0f32; k * n];
+            let mut want = vec![0.0f32; k * n];
+            matmul_at_acc(&a, &bt, m, k, n, &mut got);
+            naive_at_acc(&a, &bt, m, k, n, &mut want);
+            let eq = got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(eq, "matmul_at_acc diverges from naive at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn transpose_round_trips() {
+        let mut rng = Pcg64::new(42);
+        let (r, c) = (7, 13);
+        let src = rng.normal_vec(r * c, 1.0);
+        let mut t = vec![0.0f32; r * c];
+        let mut back = vec![0.0f32; r * c];
+        transpose(&src, r, c, &mut t);
+        transpose(&t, c, r, &mut back);
+        assert_eq!(src, back);
+        assert_eq!(t[3 * r + 2], src[2 * c + 3]);
+    }
+
+    /// softmax_rows rows are independent and each row matches the single
+    /// row kernel bit-for-bit; temperature-1 equals the unscaled kernel.
+    #[test]
+    fn softmax_blocks_match_rows() {
+        let mut rng = Pcg64::new(43);
+        let (rows, w) = (5, 64);
+        let logits = rng.normal_vec(rows * w, 3.0);
+        let mut block = vec![0.0f32; rows * w];
+        softmax_rows(&logits, rows, w, &mut block);
+        for r in 0..rows {
+            let mut one = vec![0.0f32; w];
+            softmax_row(&logits[r * w..(r + 1) * w], &mut one);
+            assert_eq!(one, block[r * w..(r + 1) * w]);
+            let sum: f32 = one.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+            let mut temp1 = vec![0.0f32; w];
+            softmax_row_temp(&logits[r * w..(r + 1) * w], 1.0, &mut temp1);
+            let eq = one.iter().zip(&temp1).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(eq, "temperature-1 softmax must equal the unscaled kernel");
+        }
+    }
+}

@@ -13,6 +13,25 @@
 //! genuinely descends its cross-entropy, and the merge entry point is
 //! exactly the linear map the adapter gradients differentiate through.
 //!
+//! Since PR 5 the sim is the substrate every CI scenario runs on, so it
+//! is also a measured hot path (`benches/bench_sim.rs` → `BENCH_SIM.json`).
+//! The execution core is a vectorized, allocation-free, batch-parallel
+//! engine split across three submodules (DESIGN.md §11):
+//!
+//! - [`kernels`] — blocked row-major matmul microkernels with a fixed,
+//!   canonical per-element reduction order (blocked == naive bitwise);
+//! - [`model`] — fused block forward/backward over a reusable [`Scratch`]
+//!   arena (zero per-position allocation), plus merge/projection with a
+//!   cached pseudo-factor table and a `#[cfg(test)]` scalar reference
+//!   oracle the engine must match bit-for-bit;
+//! - [`exec`] — batch rows dispatched across `std::thread::scope` row
+//!   workers with pre-split output slots and ascending-row reduction, so
+//!   pooled == serial byte-identity holds at any worker count by
+//!   construction.
+//!
+//! This module keeps the backend plumbing: the synthetic manifest, the
+//! `Backend`/`CompiledExe` impls, argument parsing, and fault injection.
+//!
 //! What it deliberately does NOT validate: HLO lowering, PJRT literal
 //! layout/FFI, numerical parity with the python model. Those stay
 //! artifact-gated (DESIGN.md §10 draws the line in detail).
@@ -21,13 +40,14 @@
 //! manifest-declared inputs — no clocks, no thread ids, no global RNG,
 //! fixed f32 summation order. Row `i` of a batch depends only on row `i`'s
 //! inputs and the weights, which is what makes sentinel padding inert and
-//! pooled execution byte-identical to serial at any device count.
+//! pooled execution byte-identical to serial at any device count (and,
+//! since the engine split, at any row-worker count).
 //!
 //! Fault injection ([`SimOptions`]): transient compile failures (to
-//! exercise `SingleFlight`'s no-poison retry) and per-context execute
-//! delays (to prove worker/context timing skew cannot change results).
-
-#![allow(clippy::needless_range_loop)]
+//! exercise `SingleFlight`'s no-poison retry), per-context execute
+//! delays (to prove worker/context timing skew cannot change results),
+//! and a per-row execute-time budget (tail-latency scenarios for
+//! continuous-batching work, scaling with batch size).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -44,25 +64,42 @@ use crate::runtime::backend::{Backend, CompiledExe, HostTensor};
 use crate::tensor::{Arg, TensorF32, TensorI32};
 use crate::tokenizer::{BOS, CHARS, EOS, PAD, VOCAB_SIZE};
 
+pub mod exec;
+pub mod kernels;
+pub mod model;
+
+pub use model::{merge_mats, project_dtheta, pseudo_factor, Scratch, SimGrads, SimModel};
+
 /// The sim backbone tier name.
 pub const SIM_TIER: &str = "sim";
 /// The one adapter scheme the sim manifest bakes (the paper's headline
 /// 13-parameter config, same tag as the real artifacts).
 pub const SIM_SCHEME: &str = "tinylora_r2_u13_all";
 
-const V: usize = VOCAB_SIZE; // 64
-const D: usize = 8;
-const F: usize = 16;
-const L: usize = 1;
-const T_PREFILL: usize = 32;
-const T_TRAIN: usize = 64;
-const N_GEN: usize = 24;
+/// Vocab size (the tokenizer's, = 64).
+pub const V: usize = VOCAB_SIZE;
+/// Model width.
+pub const D: usize = 8;
+/// MLP hidden width.
+pub const F: usize = 16;
+/// Layer count (the sim has one block).
+pub const L: usize = 1;
+/// Prompt window of the generate entry points.
+pub const T_PREFILL: usize = 32;
+/// Training sequence length.
+pub const T_TRAIN: usize = 64;
+/// Tokens generated per row per generate call.
+pub const N_GEN: usize = 24;
 /// Baked generate geometries (ascending; canonical = batch.roll = 8).
-const GEOMETRIES: [usize; 4] = [1, 2, 4, 8];
-const BATCH_TRAIN: usize = 4;
-const BATCH_ROLL: usize = 8;
-const N_THETA: usize = 13;
-const N_STATS: usize = 8;
+pub const GEOMETRIES: [usize; 4] = [1, 2, 4, 8];
+/// Training/serving batch.
+pub const BATCH_TRAIN: usize = 4;
+/// Rollout batch.
+pub const BATCH_ROLL: usize = 8;
+/// Adapter parameter count (the paper's 13).
+pub const N_THETA: usize = 13;
+/// Stats slots every gradient entry point returns.
+pub const N_STATS: usize = 8;
 
 /// Logit gain: the tied-embedding bilinear form `z·E` is O(0.03) at init;
 /// the gain lifts logits (and, via the chain rule, gradients) into a range
@@ -72,12 +109,12 @@ const N_STATS: usize = 8;
 /// corpus-like text the measured CE ratio is ~0.65 at gain 16 and ~0.60
 /// at 24 — 24 keeps real margin without collapsing the initial sampling
 /// distribution the way 32 starts to.
-const GAIN: f32 = 24.0;
+pub const GAIN: f32 = 24.0;
 /// Scale of the pseudo-factor directions theta is folded in along.
-const MERGE_SCALE: f32 = 0.05;
+pub const MERGE_SCALE: f32 = 0.05;
 
 /// The seven adapted matrices, manifest order, with (d_in, d_out).
-const MATS: [(&str, usize, usize); 7] = [
+pub const MATS: [(&str, usize, usize); 7] = [
     ("attn_q", D, D),
     ("attn_k", D, D),
     ("attn_v", D, D),
@@ -356,8 +393,8 @@ pub fn sim_manifest() -> Manifest {
 // Fault injection
 // ---------------------------------------------------------------------------
 
-/// Sim-only fault injection, set at runtime construction
-/// (`Runtime::sim_with`). All fields default to "no faults".
+/// Sim-only execution options, set at runtime construction
+/// (`Runtime::sim_with`). All fields default to "no faults, serial rows".
 #[derive(Clone, Debug, Default)]
 pub struct SimOptions {
     /// Fail the next N compiles (runtime-wide) with a transient error —
@@ -367,6 +404,16 @@ pub struct SimOptions {
     /// beyond the vec's length get 0) — models a slow device and proves
     /// timing skew cannot change pooled results.
     pub ctx_delay_ms: Vec<u64>,
+    /// Row workers per execute call (0 or 1 = serial). A pure throughput
+    /// knob: results are byte-identical at every value (`exec` module
+    /// docs give the construction), so it is safe to turn up anywhere.
+    pub row_workers: usize,
+    /// Artificial per-ROW execute-time budget in microseconds: each call
+    /// stalls `batch × budget` before computing, on top of `ctx_delay_ms`.
+    /// Models per-row tail latency (a slow sample, a long row) so
+    /// continuous-batching scenarios can shape realistic latency
+    /// distributions against the fast engine. Never changes results.
+    pub row_budget_us: u64,
 }
 
 /// Shared mutable fault state (one per runtime, shared by its contexts).
@@ -399,11 +446,20 @@ impl SimFaults {
 pub struct SimBackend {
     faults: Arc<SimFaults>,
     delay_ms: u64,
+    row_budget_us: u64,
+    workers: usize,
 }
 
 impl SimBackend {
-    pub fn new(faults: Arc<SimFaults>, delay_ms: u64) -> Self {
-        Self { faults, delay_ms }
+    /// One backend per execution context: `ctx_id` selects this context's
+    /// injected delay from `opts.ctx_delay_ms`.
+    pub fn new(faults: Arc<SimFaults>, ctx_id: usize, opts: &SimOptions) -> Self {
+        Self {
+            faults,
+            delay_ms: opts.ctx_delay_ms.get(ctx_id).copied().unwrap_or(0),
+            row_budget_us: opts.row_budget_us,
+            workers: opts.row_workers,
+        }
     }
 }
 
@@ -427,7 +483,11 @@ impl Backend for SimBackend {
         }
         match info.fn_kind.as_str() {
             "generate" | "logprobs" | "pretrain" | "sft" | "grpo" | "merge" => {
-                Ok(Box::new(SimExe { delay_ms: self.delay_ms }))
+                Ok(Box::new(SimExe {
+                    delay_ms: self.delay_ms,
+                    row_budget_us: self.row_budget_us,
+                    workers: self.workers,
+                }))
             }
             other => bail!("sim backend has no entry point kind {other:?}"),
         }
@@ -436,21 +496,26 @@ impl Backend for SimBackend {
 
 struct SimExe {
     delay_ms: u64,
+    row_budget_us: u64,
+    workers: usize,
 }
 
 impl CompiledExe for SimExe {
     fn execute(&self, info: &ExeInfo, args: &[Arg], _ffi: &Mutex<()>) -> Result<Vec<HostTensor>> {
-        // fault injection: a slow context (never a different one) — results
-        // are a pure function of args, so skew cannot change them
-        if self.delay_ms > 0 {
-            std::thread::sleep(std::time::Duration::from_millis(self.delay_ms));
+        // fault injection: a slow context and/or per-row latency (never a
+        // different result) — outputs are a pure function of args, so
+        // skew cannot change them
+        let stall_us = self.delay_ms * 1000 + info.batch as u64 * self.row_budget_us;
+        if stall_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(stall_us));
         }
+        let w = self.workers;
         match info.fn_kind.as_str() {
-            "generate" => run_generate(info, args),
-            "logprobs" => run_logprobs(info, args),
-            "pretrain" => run_pretrain(info, args),
-            "sft" => run_adapter_grad(info, args, false),
-            "grpo" => run_adapter_grad(info, args, true),
+            "generate" => run_generate(info, args, w),
+            "logprobs" => run_logprobs(info, args, w),
+            "pretrain" => run_pretrain(info, args, w),
+            "sft" => run_adapter_grad(info, args, false, w),
+            "grpo" => run_adapter_grad(info, args, true, w),
             "merge" => run_merge(info, args),
             other => bail!("sim backend has no entry point kind {other:?}"),
         }
@@ -487,370 +552,59 @@ fn out_i32(info: &ExeInfo, idx: usize, data: Vec<i32>) -> HostTensor {
     HostTensor::I32(TensorI32::from_vec(&info.outputs[idx].shape, data))
 }
 
-// ---------------------------------------------------------------------------
-// The toy model: forward, backward, merge
-// ---------------------------------------------------------------------------
-
-/// Borrowed model weights: tied embedding + the seven adapted matrices
-/// (owned variants hold merged copies).
-struct SimModel<'a> {
-    embed: &'a [f32],
-    mats: [&'a [f32]; 7],
-}
-
-/// Cached activations of one forward position (for backprop).
-struct Acts {
-    x: usize,
-    h: Vec<f32>,
-    tnh: Vec<f32>,
-    vv: Vec<f32>,
-    u: Vec<f32>,
-    g: Vec<f32>,
-    p: Vec<f32>,
-    z: Vec<f32>,
-}
-
-/// Accumulated gradients, tier weight order (embed + the seven mats).
-struct SimGrads {
-    embed: Vec<f32>,
-    mats: [Vec<f32>; 7],
-}
-
-impl SimGrads {
-    fn zeros() -> Self {
-        Self {
-            embed: vec![0.0; V * D],
-            mats: [
-                vec![0.0; D * D],
-                vec![0.0; D * D],
-                vec![0.0; D * D],
-                vec![0.0; D * D],
-                vec![0.0; D * F],
-                vec![0.0; D * F],
-                vec![0.0; F * D],
-            ],
-        }
-    }
-}
-
-/// y[j] = sum_i x[i] * w[i*d_out + j] for a row-major [d_in, d_out] matrix.
-fn mv(w: &[f32], x: &[f32], d_out: usize) -> Vec<f32> {
-    let mut y = vec![0.0f32; d_out];
-    for (i, &xi) in x.iter().enumerate() {
-        let row = &w[i * d_out..(i + 1) * d_out];
-        for j in 0..d_out {
-            y[j] += xi * row[j];
-        }
-    }
-    y
-}
-
-impl SimModel<'_> {
-    fn from_args<'a>(args: &'a [Arg], base: usize) -> Result<SimModel<'a>> {
-        Ok(SimModel {
-            embed: f32s(args, base)?,
-            mats: [
-                f32s(args, base + 1)?,
-                f32s(args, base + 2)?,
-                f32s(args, base + 3)?,
-                f32s(args, base + 4)?,
-                f32s(args, base + 5)?,
-                f32s(args, base + 6)?,
-                f32s(args, base + 7)?,
-            ],
-        })
-    }
-
-    /// One position's forward: token id -> logits over the vocab (and the
-    /// intermediates backprop needs). Bigram by construction: the output
-    /// depends only on this token and the weights, which makes rows
-    /// independent and the fused generate loop exact.
-    fn forward(&self, tok: i32) -> (Acts, Vec<f32>) {
-        let x = (tok.max(0) as usize).min(V - 1);
-        let h = self.embed[x * D..(x + 1) * D].to_vec();
-        let [wq, wk, wv, wo, wup, wgate, wdown] = self.mats;
-        let sq = mv(wq, &h, D);
-        let sk = mv(wk, &h, D);
-        let tnh: Vec<f32> = (0..D).map(|j| (sq[j] + sk[j]).tanh()).collect();
-        let vv = mv(wv, &tnh, D);
-        let a = mv(wo, &vv, D);
-        let u = mv(wup, &h, F);
-        let g = mv(wgate, &h, F);
-        // smooth gate (tanh, not relu) so the model is differentiable
-        // everywhere — the finite-difference gradcheck has no kinks to
-        // straddle
-        let p: Vec<f32> = (0..F).map(|j| u[j] * g[j].tanh()).collect();
-        let m = mv(wdown, &p, D);
-        let z: Vec<f32> = (0..D).map(|j| h[j] + a[j] + m[j]).collect();
-        let mut logits = vec![0.0f32; V];
-        for v in 0..V {
-            let ev = &self.embed[v * D..(v + 1) * D];
-            let mut dot = 0.0f32;
-            for j in 0..D {
-                dot += z[j] * ev[j];
-            }
-            logits[v] = GAIN * dot;
-        }
-        (Acts { x, h, tnh, vv, u, g, p, z }, logits)
-    }
-
-    /// Backprop one position given `dlogits` (dLoss/dlogits), accumulating
-    /// into `grads`. Exact adjoint of [`SimModel::forward`].
-    fn backward(&self, acts: &Acts, dlogits: &[f32], grads: &mut SimGrads) {
-        let [wq, wk, wv, wo, wup, wgate, wdown] = self.mats;
-        // tied unembedding: logits[v] = GAIN * z . embed[v]
-        let mut dz = vec![0.0f32; D];
-        for v in 0..V {
-            let dv = GAIN * dlogits[v];
-            if dv == 0.0 {
-                continue;
-            }
-            let ev = &self.embed[v * D..(v + 1) * D];
-            for j in 0..D {
-                dz[j] += dv * ev[j];
-                grads.embed[v * D + j] += dv * acts.z[j];
-            }
-        }
-        // z = h + a + m
-        let mut dh = dz.clone();
-        let dm = &dz;
-        let da = &dz;
-        // m = Wdown . p
-        let mut dp = vec![0.0f32; F];
-        for i in 0..F {
-            for j in 0..D {
-                dp[i] += dm[j] * wdown[i * D + j];
-                grads.mats[6][i * D + j] += acts.p[i] * dm[j];
-            }
-        }
-        // p = u * tanh(g)
-        let mut du = vec![0.0f32; F];
-        let mut dg = vec![0.0f32; F];
-        for i in 0..F {
-            let r = acts.g[i].tanh();
-            du[i] = dp[i] * r;
-            dg[i] = dp[i] * acts.u[i] * (1.0 - r * r);
-        }
-        // u = Wup . h ; g = Wgate . h
-        for i in 0..D {
-            for j in 0..F {
-                grads.mats[4][i * F + j] += acts.h[i] * du[j];
-                grads.mats[5][i * F + j] += acts.h[i] * dg[j];
-                dh[i] += wup[i * F + j] * du[j] + wgate[i * F + j] * dg[j];
-            }
-        }
-        // a = Wo . vv
-        let mut dvv = vec![0.0f32; D];
-        for i in 0..D {
-            for j in 0..D {
-                dvv[i] += da[j] * wo[i * D + j];
-                grads.mats[3][i * D + j] += acts.vv[i] * da[j];
-            }
-        }
-        // vv = Wv . tanh(s)
-        let mut dt = vec![0.0f32; D];
-        for i in 0..D {
-            for j in 0..D {
-                dt[i] += dvv[j] * wv[i * D + j];
-                grads.mats[2][i * D + j] += acts.tnh[i] * dvv[j];
-            }
-        }
-        // s = Wq.h + Wk.h ; t = tanh(s)
-        let ds: Vec<f32> = (0..D).map(|j| dt[j] * (1.0 - acts.tnh[j] * acts.tnh[j])).collect();
-        for i in 0..D {
-            for j in 0..D {
-                grads.mats[0][i * D + j] += acts.h[i] * ds[j];
-                grads.mats[1][i * D + j] += acts.h[i] * ds[j];
-                dh[i] += (wq[i * D + j] + wk[i * D + j]) * ds[j];
-            }
-        }
-        // input embedding
-        for j in 0..D {
-            grads.embed[acts.x * D + j] += dh[j];
-        }
-    }
-}
-
-/// Max-subtracted softmax (deterministic f32, fixed order).
-fn softmax(logits: &[f32]) -> Vec<f32> {
-    let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-    let exps: Vec<f32> = logits.iter().map(|&l| (l - mx).exp()).collect();
-    let sum: f32 = exps.iter().sum();
-    exps.iter().map(|&e| e / sum).collect()
-}
-
-fn entropy_of(probs: &[f32]) -> f32 {
-    -probs.iter().map(|&p| if p > 0.0 { p * p.ln() } else { 0.0 }).sum::<f32>()
-}
-
-/// Deterministic pseudo-factor direction phi(t, k, j) in [-0.5, 0.5]:
-/// the fixed "frozen projection" the sim folds theta along. Mirrored by
-/// the adapter gradients (exact chain rule through the merge).
-fn pseudo_factor(t: usize, k: usize, j: usize) -> f32 {
-    let mut h = 0x9e3779b97f4a7c15u64
-        ^ (t as u64).wrapping_mul(0xa076_1d64_78bd_642f)
-        ^ ((k as u64 + 1).wrapping_mul(0xe703_7ed1_a0b4_28db))
-        ^ ((j as u64 + 1).wrapping_mul(0x8ebc_6af0_9c88_c6e3));
-    h ^= h >> 29;
-    h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
-    h ^= h >> 32;
-    ((h >> 40) as f32) * (1.0 / (1u64 << 24) as f32) - 0.5
-}
-
-/// merged[t][j] = base[t][j] + MERGE_SCALE * sum_k theta[k] * phi(t,k,j).
-/// Linear in theta and exactly identity at theta = 0 — every adapter
-/// scheme starts at the base model, same as the real artifacts.
-fn merge_mats(base: [&[f32]; 7], theta: &[f32]) -> [Vec<f32>; 7] {
-    std::array::from_fn(|t| {
-        let mut out = base[t].to_vec();
-        for (j, w) in out.iter_mut().enumerate() {
-            let mut delta = 0.0f32;
-            for (k, &th) in theta.iter().enumerate() {
-                delta += th * pseudo_factor(t, k, j);
-            }
-            *w += MERGE_SCALE * delta;
-        }
-        out
+fn model_from_args<'a>(args: &'a [Arg], base: usize) -> Result<SimModel<'a>> {
+    Ok(SimModel {
+        embed: f32s(args, base)?,
+        mats: [
+            f32s(args, base + 1)?,
+            f32s(args, base + 2)?,
+            f32s(args, base + 3)?,
+            f32s(args, base + 4)?,
+            f32s(args, base + 5)?,
+            f32s(args, base + 6)?,
+            f32s(args, base + 7)?,
+        ],
     })
 }
 
-/// dL/dtheta[k] = MERGE_SCALE * sum_{t,j} dL/dW[t][j] * phi(t,k,j).
-fn project_dtheta(dmats: &[Vec<f32>; 7]) -> Vec<f32> {
-    let mut dtheta = vec![0.0f32; N_THETA];
-    for (t, dm) in dmats.iter().enumerate() {
-        for (j, &dw) in dm.iter().enumerate() {
-            if dw == 0.0 {
-                continue;
-            }
-            for (k, dt) in dtheta.iter_mut().enumerate() {
-                *dt += MERGE_SCALE * dw * pseudo_factor(t, k, j);
-            }
-        }
-    }
-    dtheta
-}
-
 // ---------------------------------------------------------------------------
-// Entry points
+// Entry points (arg parsing → `exec` engine calls)
 // ---------------------------------------------------------------------------
 
 const N_WEIGHTS: usize = 8; // embed + 7 mats, tier order
 const N_FACTORS: usize = 14; // us/vf per module (ignored, contract only)
 
-fn run_generate(info: &ExeInfo, args: &[Arg]) -> Result<Vec<HostTensor>> {
-    let model = SimModel::from_args(args, 0)?;
-    let tokens = i32s(args, N_WEIGHTS)?;
-    let plen = i32s(args, N_WEIGHTS + 1)?;
-    let uniforms = f32s(args, N_WEIGHTS + 2)?;
-    let temperature = scalar(args, N_WEIGHTS + 3)?;
+fn run_generate(info: &ExeInfo, args: &[Arg], workers: usize) -> Result<Vec<HostTensor>> {
+    let model = model_from_args(args, 0)?;
+    let inp = exec::GenInput {
+        tokens: i32s(args, N_WEIGHTS)?,
+        prompt_len: i32s(args, N_WEIGHTS + 1)?,
+        uniforms: f32s(args, N_WEIGHTS + 2)?,
+        temperature: scalar(args, N_WEIGHTS + 3)?,
+    };
     let b = info.batch;
-
     let mut out_tokens = vec![0i32; b * N_GEN];
     let mut out_logp = vec![0.0f32; b * N_GEN];
-    for i in 0..b {
-        let p = (plen[i].max(1) as usize).min(T_PREFILL);
-        let mut last = tokens[i * T_PREFILL + p - 1];
-        for t in 0..N_GEN {
-            let (_, logits) = model.forward(last);
-            let (chosen, lp) = if temperature <= 0.0 {
-                // greedy: argmax, ties to the lowest index; behavior is
-                // the temperature-1 log-prob of the chosen token
-                let mut best = 0usize;
-                for v in 1..V {
-                    if logits[v] > logits[best] {
-                        best = v;
-                    }
-                }
-                let probs = softmax(&logits);
-                (best, probs[best].max(1e-30).ln())
-            } else {
-                let scaled: Vec<f32> = logits.iter().map(|&l| l / temperature).collect();
-                let probs = softmax(&scaled);
-                let u = uniforms[i * N_GEN + t];
-                let mut cum = 0.0f32;
-                let mut chosen = V - 1;
-                for v in 0..V {
-                    cum += probs[v];
-                    if u < cum {
-                        chosen = v;
-                        break;
-                    }
-                }
-                (chosen, probs[chosen].max(1e-30).ln())
-            };
-            out_tokens[i * N_GEN + t] = chosen as i32;
-            out_logp[i * N_GEN + t] = lp;
-            last = chosen as i32;
-        }
-    }
+    exec::generate(model, b, &inp, workers, &mut out_tokens, &mut out_logp);
     Ok(vec![out_i32(info, 0, out_tokens), out_f32(info, 1, out_logp)])
 }
 
-fn run_logprobs(info: &ExeInfo, args: &[Arg]) -> Result<Vec<HostTensor>> {
-    let model = SimModel::from_args(args, 0)?;
+fn run_logprobs(info: &ExeInfo, args: &[Arg], workers: usize) -> Result<Vec<HostTensor>> {
+    let model = model_from_args(args, 0)?;
     let tokens = i32s(args, N_WEIGHTS)?;
     let b = info.batch;
-    let t_len = T_TRAIN;
-    let mut out = vec![0.0f32; b * (t_len - 1)];
-    for i in 0..b {
-        for j in 0..t_len - 1 {
-            let (_, logits) = model.forward(tokens[i * t_len + j]);
-            let probs = softmax(&logits);
-            let y = (tokens[i * t_len + j + 1].max(0) as usize).min(V - 1);
-            out[i * (t_len - 1) + j] = probs[y].max(1e-30).ln();
-        }
-    }
+    let mut out = vec![0.0f32; b * (T_TRAIN - 1)];
+    exec::logprobs(model, b, T_TRAIN, tokens, workers, &mut out);
     Ok(vec![out_f32(info, 0, out)])
 }
 
-/// Shared masked-CE forward/backward (pretrain and SFT).
-/// Returns (grads, [loss, token_acc, entropy, mean_logp]).
-fn masked_ce(model: &SimModel, tokens: &[i32], mask: &[f32], b: usize) -> (SimGrads, [f32; 4]) {
-    let t_len = T_TRAIN;
-    let n: f32 = mask.iter().sum::<f32>().max(1.0);
-    let mut grads = SimGrads::zeros();
-    let (mut loss, mut acc, mut ent, mut lp_sum) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    let mut dlogits = vec![0.0f32; V];
-    for i in 0..b {
-        for j in 0..t_len - 1 {
-            let w = mask[i * (t_len - 1) + j];
-            if w == 0.0 {
-                continue;
-            }
-            let (acts, logits) = model.forward(tokens[i * t_len + j]);
-            let probs = softmax(&logits);
-            let y = (tokens[i * t_len + j + 1].max(0) as usize).min(V - 1);
-            let lp = probs[y].max(1e-30).ln();
-            loss += -w * lp;
-            lp_sum += w * lp;
-            ent += w * entropy_of(&probs);
-            let mut best = 0usize;
-            for v in 1..V {
-                if logits[v] > logits[best] {
-                    best = v;
-                }
-            }
-            if best == y {
-                acc += w;
-            }
-            // dLoss/dlp = -w/n ; dlp/dlogits[v] = onehot - p
-            let dl_dlp = -w / n;
-            for v in 0..V {
-                let onehot = if v == y { 1.0 } else { 0.0 };
-                dlogits[v] = dl_dlp * (onehot - probs[v]);
-            }
-            model.backward(&acts, &dlogits, &mut grads);
-        }
-    }
-    (grads, [loss / n, acc / n, ent / n, lp_sum / n])
-}
-
-fn run_pretrain(info: &ExeInfo, args: &[Arg]) -> Result<Vec<HostTensor>> {
-    let model = SimModel::from_args(args, 0)?;
+fn run_pretrain(info: &ExeInfo, args: &[Arg], workers: usize) -> Result<Vec<HostTensor>> {
+    let model = model_from_args(args, 0)?;
     let tokens = i32s(args, N_WEIGHTS)?;
     let mask = f32s(args, N_WEIGHTS + 1)?;
-    let (grads, [loss, acc, ent, mean_lp]) = masked_ce(&model, tokens, mask, info.batch);
-    let mut out = vec![out_f32(info, 0, grads.embed)];
+    let (grads, [loss, acc, ent, mean_lp]) =
+        exec::pretrain_grads(model, info.batch, T_TRAIN, tokens, mask, workers);
+    let mut out = vec![out_f32(info, 0, grads.embed())];
     for (t, g) in grads.mats.into_iter().enumerate() {
         out.push(out_f32(info, t + 1, g));
     }
@@ -861,8 +615,13 @@ fn run_pretrain(info: &ExeInfo, args: &[Arg]) -> Result<Vec<HostTensor>> {
 
 /// Adapter gradients (SFT CE or GRPO with truncated importance sampling),
 /// differentiated through the same merge the `merge` entry point applies.
-fn run_adapter_grad(info: &ExeInfo, args: &[Arg], grpo: bool) -> Result<Vec<HostTensor>> {
-    let base = SimModel::from_args(args, 0)?;
+fn run_adapter_grad(
+    info: &ExeInfo,
+    args: &[Arg],
+    grpo: bool,
+    workers: usize,
+) -> Result<Vec<HostTensor>> {
+    let base = model_from_args(args, 0)?;
     let theta = f32s(args, N_WEIGHTS + N_FACTORS)?;
     let merged = merge_mats(base.mats, theta);
     let model = SimModel {
@@ -874,61 +633,19 @@ fn run_adapter_grad(info: &ExeInfo, args: &[Arg], grpo: bool) -> Result<Vec<Host
     let mask = f32s(args, idx + 1)?;
     let b = info.batch;
 
-    let (grads, stats) = if grpo {
-        let behavior = f32s(args, idx + 2)?;
-        let advantages = f32s(args, idx + 3)?;
-        let clip_c = scalar(args, idx + 4)?;
-        let kl_coef = scalar(args, idx + 5)?;
-        let t_len = T_TRAIN;
-        let n: f32 = mask.iter().sum::<f32>().max(1.0);
-        let mut grads = SimGrads::zeros();
-        let (mut pg, mut k1, mut k3, mut rsum, mut clipped) = (0.0f32, 0.0f32, 0.0f32, 0.0f32, 0.0f32);
-        let (mut ent, mut lp_sum) = (0.0f32, 0.0f32);
-        let mut dlogits = vec![0.0f32; V];
-        for i in 0..b {
-            let adv = advantages[i];
-            for j in 0..t_len - 1 {
-                let w = mask[i * (t_len - 1) + j];
-                if w == 0.0 {
-                    continue;
-                }
-                let (acts, logits) = model.forward(tokens[i * t_len + j]);
-                let probs = softmax(&logits);
-                let y = (tokens[i * t_len + j + 1].max(0) as usize).min(V - 1);
-                let lp = probs[y].max(1e-30).ln();
-                let beh = behavior[i * (t_len - 1) + j];
-                let ratio = (lp - beh).exp().min(1e6);
-                let wt = if clip_c > 0.0 { ratio.min(clip_c) } else { ratio };
-                pg += -w * wt * adv * lp;
-                k1 += w * (beh - lp);
-                k3 += w * (ratio - 1.0 - (lp - beh));
-                rsum += w * ratio;
-                if clip_c > 0.0 && ratio > clip_c {
-                    clipped += w;
-                }
-                ent += w * entropy_of(&probs);
-                lp_sum += w * lp;
-                // loss = pg/n + kl_coef * k3/n, with the importance weight
-                // stop-gradded (truncated importance sampling):
-                // dLoss/dlp = (-wt*adv + kl_coef*(ratio-1)) * w/n
-                let dl_dlp = (-wt * adv + kl_coef * (ratio - 1.0)) * w / n;
-                for v in 0..V {
-                    let onehot = if v == y { 1.0 } else { 0.0 };
-                    dlogits[v] = dl_dlp * (onehot - probs[v]);
-                }
-                model.backward(&acts, &dlogits, &mut grads);
-            }
-        }
-        let loss = pg / n + kl_coef * k3 / n;
-        (
-            grads,
-            vec![loss, pg / n, k1 / n, k3 / n, rsum / n, clipped / n, ent / n, lp_sum / n],
-        )
+    let params;
+    let grpo_params = if grpo {
+        params = exec::GrpoParams {
+            behavior: f32s(args, idx + 2)?,
+            advantages: f32s(args, idx + 3)?,
+            clip_c: scalar(args, idx + 4)?,
+            kl_coef: scalar(args, idx + 5)?,
+        };
+        Some(&params)
     } else {
-        let (grads, [loss, acc, ent, mean_lp]) = masked_ce(&model, tokens, mask, b);
-        (grads, vec![loss, acc, 0.0, 0.0, 1.0, 0.0, ent, mean_lp])
+        None
     };
-
+    let (grads, stats) = exec::adapter_grads(model, b, T_TRAIN, tokens, mask, grpo_params, workers);
     let dtheta = project_dtheta(&grads.mats);
     Ok(vec![out_f32(info, 0, dtheta), out_f32(info, 1, stats)])
 }
@@ -965,128 +682,31 @@ mod tests {
         (embed, mats)
     }
 
-    fn model<'a>(embed: &'a [f32], mats: &'a [Vec<f32>; 7]) -> SimModel<'a> {
-        SimModel { embed, mats: std::array::from_fn(|t| mats[t].as_slice()) }
+    /// Weight args + a generate arg tail for batch `b` (random prompts).
+    fn gen_args(b: usize, seed: u64) -> Vec<Arg> {
+        let (embed, mats) = random_model_bufs(seed);
+        let mut args: Vec<Arg> = vec![Arg::F32(TensorF32::from_vec(&[V, D], embed))];
+        for (t, (_, din, dout)) in MATS.iter().enumerate() {
+            args.push(Arg::F32(TensorF32::from_vec(&[L, *din, *dout], mats[t].clone())));
+        }
+        let mut rng = Pcg64::new(seed + 1);
+        let toks: Vec<i32> = (0..b * T_PREFILL).map(|_| rng.below(V as u64) as i32).collect();
+        args.push(Arg::I32(TensorI32::from_vec(&[b, T_PREFILL], toks)));
+        args.push(Arg::I32(TensorI32::from_vec(&[b], vec![2; b])));
+        args.push(Arg::F32(TensorF32::from_vec(&[b, N_GEN], rng.uniform_vec(b * N_GEN))));
+        args.push(Arg::Scalar(1.0));
+        args
     }
 
-    /// CE loss of one (token -> target) position, for finite differences.
-    fn pos_loss(m: &SimModel, x: i32, y: usize) -> f32 {
-        let (_, logits) = m.forward(x);
-        -softmax(&logits)[y].max(1e-30).ln()
-    }
-
-    /// The hand-derived backprop matches central finite differences on
-    /// every weight tensor — the one test that keeps the whole sim
-    /// gradient stack honest.
-    #[test]
-    fn backward_matches_finite_differences() {
-        let (embed, mats) = random_model_bufs(5);
-        let (x, y) = (7i32, 11usize);
-
-        // analytic gradient
-        let m = model(&embed, &mats);
-        let (acts, logits) = m.forward(x);
-        let probs = softmax(&logits);
-        let mut dlogits = vec![0.0f32; V];
-        for v in 0..V {
-            let onehot = if v == y { 1.0 } else { 0.0 };
-            dlogits[v] = -(onehot - probs[v]); // dLoss/dlp = -1
-        }
-        let mut grads = SimGrads::zeros();
-        m.backward(&acts, &dlogits, &mut grads);
-
-        let eps = 1e-2f32;
-        let mut rng = Pcg64::new(9);
-        // spot-check a random sample of coordinates in every tensor
-        for t in 0..8 {
-            for _ in 0..20 {
-                let (numeric, analytic) = if t == 0 {
-                    // embed rows that matter: the input token and the target
-                    let row = if rng.below(2) == 0 { x as usize } else { y };
-                    let j = row * D + rng.below(D as u64) as usize;
-                    let mut e2 = embed.clone();
-                    e2[j] += eps;
-                    let lp = pos_loss(&model(&e2, &mats), x, y);
-                    e2[j] -= 2.0 * eps;
-                    let lm = pos_loss(&model(&e2, &mats), x, y);
-                    ((lp - lm) / (2.0 * eps), grads.embed[j])
-                } else {
-                    let mi = t - 1;
-                    let j = rng.below(mats[mi].len() as u64) as usize;
-                    let mut m2 = mats.clone();
-                    m2[mi][j] += eps;
-                    let lp = pos_loss(&model(&embed, &m2), x, y);
-                    m2[mi][j] -= 2.0 * eps;
-                    let lm = pos_loss(&model(&embed, &m2), x, y);
-                    ((lp - lm) / (2.0 * eps), grads.mats[mi][j])
-                };
-                assert!(
-                    (numeric - analytic).abs() <= 2e-3 + 0.05 * numeric.abs(),
-                    "tensor {t}: finite diff {numeric} vs analytic {analytic}"
-                );
-            }
-        }
-    }
-
-    #[test]
-    fn merge_is_identity_at_zero_and_linear() {
-        let (_, mats) = random_model_bufs(3);
-        let base: [&[f32]; 7] = std::array::from_fn(|t| mats[t].as_slice());
-        let zero = merge_mats(base, &[0.0; N_THETA]);
-        for t in 0..7 {
-            assert_eq!(zero[t], mats[t], "theta=0 must merge to the base exactly");
-        }
-        // linearity: merge(a) + merge(b) - base == merge(a + b)
-        let mut rng = Pcg64::new(4);
-        let ta: Vec<f32> = rng.normal_vec(N_THETA, 0.2);
-        let tb: Vec<f32> = rng.normal_vec(N_THETA, 0.2);
-        let tab: Vec<f32> = ta.iter().zip(&tb).map(|(a, b)| a + b).collect();
-        let ma = merge_mats(base, &ta);
-        let mb = merge_mats(base, &tb);
-        let mab = merge_mats(base, &tab);
-        for t in 0..7 {
-            for j in 0..mats[t].len() {
-                let sum = ma[t][j] + mb[t][j] - mats[t][j];
-                assert!((sum - mab[t][j]).abs() < 1e-4, "merge not linear at ({t},{j})");
-            }
-        }
-        // a non-trivial theta must actually move the weights
-        assert!(ma.iter().zip(&mats).any(|(m, b)| m != b));
-    }
-
-    #[test]
-    fn dtheta_projection_matches_merge_chain_rule() {
-        // loss = sum_j W[t][j] * c[t][j] (linear in W) has dL/dW = c, so
-        // dL/dtheta via the projection must equal the finite difference of
-        // the merged loss — exact to f32 roundoff.
-        let (_, mats) = random_model_bufs(6);
-        let base: [&[f32]; 7] = std::array::from_fn(|t| mats[t].as_slice());
-        let mut rng = Pcg64::new(7);
-        let c: [Vec<f32>; 7] = std::array::from_fn(|t| rng.normal_vec(mats[t].len(), 1.0));
-        let loss = |theta: &[f32]| -> f64 {
-            let m = merge_mats(base, theta);
-            (0..7)
-                .map(|t| {
-                    m[t].iter().zip(&c[t]).map(|(&w, &cc)| w as f64 * cc as f64).sum::<f64>()
-                })
-                .sum()
-        };
-        let dtheta = project_dtheta(&c);
-        let mut theta = vec![0.0f32; N_THETA];
-        for k in 0..N_THETA {
-            let eps = 1e-2f32;
-            theta[k] = eps;
-            let lp = loss(&theta);
-            theta[k] = -eps;
-            let lm = loss(&theta);
-            theta[k] = 0.0;
-            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
-            assert!(
-                (numeric - dtheta[k]).abs() <= 1e-3 + 1e-3 * numeric.abs(),
-                "theta[{k}]: finite diff {numeric} vs projected {}",
-                dtheta[k]
-            );
-        }
+    fn tensors_bits_eq(a: &[HostTensor], b: &[HostTensor]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| match (x, y) {
+                (HostTensor::F32(x), HostTensor::F32(y)) => {
+                    x.data.iter().zip(&y.data).all(|(p, q)| p.to_bits() == q.to_bits())
+                }
+                (HostTensor::I32(x), HostTensor::I32(y)) => x.data == y.data,
+                _ => false,
+            })
     }
 
     #[test]
@@ -1137,8 +757,10 @@ mod tests {
         args.push(Arg::F32(TensorF32::from_vec(&[2, N_GEN], uni.clone())));
         args.push(Arg::Scalar(1.0));
 
+        // run with 2 row workers: the wrapper path must be as
+        // deterministic as the serial engine
         let run = |args: &[Arg]| -> (Vec<i32>, Vec<f32>) {
-            let out = run_generate(&info, args).unwrap();
+            let out = run_generate(&info, args, 2).unwrap();
             let toks = match &out[0] {
                 HostTensor::I32(t) => t.data.clone(),
                 _ => panic!("tokens output must be s32"),
@@ -1167,8 +789,9 @@ mod tests {
 
     #[test]
     fn fault_injection_consumes_compile_failures() {
-        let faults = Arc::new(SimFaults::new(&SimOptions { fail_compiles: 1, ctx_delay_ms: vec![] }));
-        let backend = SimBackend::new(faults.clone(), 0);
+        let opts = SimOptions { fail_compiles: 1, ..Default::default() };
+        let faults = Arc::new(SimFaults::new(&opts));
+        let backend = SimBackend::new(faults.clone(), 0, &opts);
         let m = sim_manifest();
         let info = m.generate_exe(SIM_TIER, 1).unwrap();
         let ffi = Mutex::new(());
@@ -1176,5 +799,29 @@ mod tests {
         assert!(err.is_err(), "first compile must hit the injected failure");
         assert_eq!(faults.pending_compile_failures(), 0);
         assert!(backend.compile(Path::new("<sim>"), info, &ffi).is_ok(), "retry must succeed");
+    }
+
+    /// The per-row budget stalls the call by `batch × budget` (a lower
+    /// bound — sleep never undershoots) without touching the outputs.
+    #[test]
+    fn row_budget_stalls_execute_without_changing_results() {
+        let m = sim_manifest();
+        let b = 4usize;
+        let info = m.generate_exe(SIM_TIER, b).unwrap().clone();
+        let args = gen_args(b, 51);
+        let run_with = |budget_us: u64| -> (Vec<HostTensor>, f64) {
+            let opts = SimOptions { row_budget_us: budget_us, ..Default::default() };
+            let faults = Arc::new(SimFaults::new(&opts));
+            let backend = SimBackend::new(faults, 0, &opts);
+            let ffi = Mutex::new(());
+            let exe = backend.compile(Path::new("<sim>"), &info, &ffi).unwrap();
+            let t = std::time::Instant::now();
+            let out = exe.execute(&info, &args, &ffi).unwrap();
+            (out, t.elapsed().as_secs_f64())
+        };
+        let (fast, _) = run_with(0);
+        let (slow, secs) = run_with(2000);
+        assert!(secs >= 0.008, "4 rows × 2ms budget must stall ≥ 8ms (got {secs}s)");
+        assert!(tensors_bits_eq(&fast, &slow), "row budget must never change results");
     }
 }

@@ -1,0 +1,1177 @@
+//! The sim's tiny differentiable model, vectorized: forward/backward over
+//! *blocks* of independent positions through a reusable [`Scratch`] arena
+//! — zero per-position allocation — with logits, softmax and backprop
+//! fused per block.
+//!
+//! The model is a char-bigram transformer block (DESIGN.md §10): each
+//! position depends only on its own token and the weights, so a block of
+//! positions (all active targets of one training row, or the current
+//! token of every decode row in a chunk) is a plain `[n, D]` matrix that
+//! flows through the [`kernels`](super::kernels) as batched matmuls.
+//!
+//! Determinism contract (DESIGN.md §11): every buffer is written by
+//! kernels that accumulate in the canonical reduction order, and every
+//! gradient tensor has exactly ONE accumulation site, so per-element
+//! contributions arrive in ascending position order. The two embedding
+//! roles (unembedding vs input lookup) would otherwise interleave at a
+//! shared element — [`SimGrads`] therefore keeps them in separate buffers
+//! and merges elementwise at the end. `reference` (behind `#[cfg(test)]`)
+//! is a naive per-position scalar implementation of the same reduction
+//! trees: the differential oracle the engine must match bit-for-bit.
+
+#![allow(clippy::needless_range_loop)]
+
+use std::sync::OnceLock;
+
+use super::kernels::{
+    matmul_acc, matmul_at_acc, scale_inplace, softmax_row, softmax_row_temp, softmax_rows,
+    tanh_inplace, transpose,
+};
+use super::{D, F, GAIN, MATS, MERGE_SCALE, N_THETA, V};
+
+/// Borrowed model weights: tied embedding + the seven adapted matrices
+/// (owned variants hold merged copies).
+#[derive(Clone, Copy)]
+pub struct SimModel<'a> {
+    /// Tied embedding, `[V, D]` row-major.
+    pub embed: &'a [f32],
+    /// The seven adapted matrices in manifest order (see `MATS`).
+    pub mats: [&'a [f32]; 7],
+}
+
+/// Clamp a raw token id into the vocab (same clamp at every entry point).
+pub fn clamp_tok(tok: i32) -> usize {
+    (tok.max(0) as usize).min(V - 1)
+}
+
+// ---------------------------------------------------------------------------
+// Prepared weights
+// ---------------------------------------------------------------------------
+
+/// A [`SimModel`] plus the derived layouts the kernels want: the
+/// transposed embedding for the logit matmul and (when backprop will
+/// run) transposed weight copies so every `x · Wᵀ` in backward becomes a
+/// unit-stride [`matmul_acc`]. Built once per worker chunk, reused for
+/// every block.
+pub struct Prepared<'a> {
+    /// The borrowed weights this was derived from.
+    pub model: SimModel<'a>,
+    /// `embedᵀ`, `[D, V]` — logits for a whole block in one matmul.
+    embed_t: Vec<f32>,
+    bwd: Option<PreparedBwd>,
+}
+
+/// Transposes used only by backward (q+k are summed before transposing:
+/// backward needs `(Wq + Wk)ᵀ` as one matrix).
+struct PreparedBwd {
+    wqk_t: Vec<f32>,
+    wv_t: Vec<f32>,
+    wo_t: Vec<f32>,
+    wup_t: Vec<f32>,
+    wgate_t: Vec<f32>,
+    wdown_t: Vec<f32>,
+}
+
+impl<'a> Prepared<'a> {
+    /// Derive kernel layouts; `need_backward` controls whether the six
+    /// backward transposes are built (decode/scoring paths skip them).
+    pub fn new(model: SimModel<'a>, need_backward: bool) -> Self {
+        let mut embed_t = vec![0.0f32; D * V];
+        transpose(model.embed, V, D, &mut embed_t);
+        let bwd = need_backward.then(|| {
+            let [wq, wk, wv, wo, wup, wgate, wdown] = model.mats;
+            let wqk: Vec<f32> = wq.iter().zip(wk).map(|(a, b)| a + b).collect();
+            let mut p = PreparedBwd {
+                wqk_t: vec![0.0f32; D * D],
+                wv_t: vec![0.0f32; D * D],
+                wo_t: vec![0.0f32; D * D],
+                wup_t: vec![0.0f32; D * F],
+                wgate_t: vec![0.0f32; D * F],
+                wdown_t: vec![0.0f32; F * D],
+            };
+            transpose(&wqk, D, D, &mut p.wqk_t);
+            transpose(wv, D, D, &mut p.wv_t);
+            transpose(wo, D, D, &mut p.wo_t);
+            transpose(wup, D, F, &mut p.wup_t);
+            transpose(wgate, D, F, &mut p.wgate_t);
+            transpose(wdown, F, D, &mut p.wdown_t);
+            p
+        });
+        Self { model, embed_t, bwd }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scratch arena
+// ---------------------------------------------------------------------------
+
+/// Grow-on-demand activation arena for one worker: every forward/backward
+/// buffer for a block of up to `cap` positions, allocated once and reused
+/// for the worker's whole chunk (the allocation-free replacement for the
+/// old per-position `Acts::zeros()` / `mv()` Vec churn). Lifetime: one
+/// `Scratch` per dispatch worker, rows and blocks stream through it.
+#[derive(Default)]
+pub struct Scratch {
+    cap: usize,
+    /// Input token per block row (gathered, already vocab-clamped).
+    pub(super) xs: Vec<usize>,
+    /// Target token per block row (training paths).
+    pub(super) ys: Vec<usize>,
+    /// Mask weight per block row (training paths).
+    pub(super) ws: Vec<f32>,
+    // forward activations, block-major [n, D] / [n, F] / [n, V]
+    pub(super) h: Vec<f32>,
+    pub(super) tnh: Vec<f32>,
+    pub(super) vv: Vec<f32>,
+    pub(super) att: Vec<f32>,
+    pub(super) u: Vec<f32>,
+    pub(super) tg: Vec<f32>,
+    pub(super) pact: Vec<f32>,
+    pub(super) mlp: Vec<f32>,
+    pub(super) z: Vec<f32>,
+    pub(super) zs: Vec<f32>,
+    pub(super) logits: Vec<f32>,
+    pub(super) probs: Vec<f32>,
+    // backward adjoints
+    pub(super) dlogits: Vec<f32>,
+    pub(super) dz: Vec<f32>,
+    pub(super) dh: Vec<f32>,
+    pub(super) dvv: Vec<f32>,
+    pub(super) dt: Vec<f32>,
+    pub(super) ds: Vec<f32>,
+    pub(super) dp: Vec<f32>,
+    pub(super) du: Vec<f32>,
+    pub(super) dg: Vec<f32>,
+}
+
+impl Scratch {
+    /// An empty arena; buffers materialize on first [`Scratch::ensure`].
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow every buffer to hold an `n`-position block (never shrinks).
+    pub fn ensure(&mut self, n: usize) {
+        if n <= self.cap {
+            return;
+        }
+        self.xs.resize(n, 0);
+        self.ys.resize(n, 0);
+        self.ws.resize(n, 0.0);
+        for buf in [&mut self.h, &mut self.tnh, &mut self.vv, &mut self.att, &mut self.mlp] {
+            buf.resize(n * D, 0.0);
+        }
+        for buf in [&mut self.z, &mut self.zs, &mut self.dz, &mut self.dh] {
+            buf.resize(n * D, 0.0);
+        }
+        for buf in [&mut self.dvv, &mut self.dt, &mut self.ds] {
+            buf.resize(n * D, 0.0);
+        }
+        for buf in [&mut self.u, &mut self.tg, &mut self.pact] {
+            buf.resize(n * F, 0.0);
+        }
+        for buf in [&mut self.dp, &mut self.du, &mut self.dg] {
+            buf.resize(n * F, 0.0);
+        }
+        for buf in [&mut self.logits, &mut self.probs, &mut self.dlogits] {
+            buf.resize(n * V, 0.0);
+        }
+        self.cap = n;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gradients
+// ---------------------------------------------------------------------------
+
+/// Accumulated gradients. The tied embedding appears in TWO independent
+/// accumulation sites (unembedding outer product, input-row scatter);
+/// keeping them in separate buffers is what gives every gradient element
+/// a single site and therefore a position-ascending accumulation order
+/// identical between the blocked engine and the scalar oracle. They are
+/// merged elementwise by [`SimGrads::embed`] at output time.
+pub struct SimGrads {
+    /// d/d embed via the tied unembedding (`dlogitsᵀ · z`), `[V, D]`.
+    pub embed_unembed: Vec<f32>,
+    /// d/d embed via the input lookup (`dh` scattered to token rows).
+    pub embed_input: Vec<f32>,
+    /// d/d mats in manifest order.
+    pub mats: [Vec<f32>; 7],
+}
+
+impl SimGrads {
+    /// All-zero gradients at the sim's fixed shapes.
+    pub fn zeros() -> Self {
+        Self {
+            embed_unembed: vec![0.0; V * D],
+            embed_input: vec![0.0; V * D],
+            mats: std::array::from_fn(|t| vec![0.0; MATS[t].1 * MATS[t].2]),
+        }
+    }
+
+    /// `self += other`, fixed field order (embed sites, then mats 0..7) —
+    /// the one reduction used to fold per-row gradients, always applied
+    /// in ascending row order regardless of worker count.
+    pub fn add(&mut self, other: &SimGrads) {
+        for (a, b) in self.embed_unembed.iter_mut().zip(&other.embed_unembed) {
+            *a += b;
+        }
+        for (a, b) in self.embed_input.iter_mut().zip(&other.embed_input) {
+            *a += b;
+        }
+        for t in 0..7 {
+            for (a, b) in self.mats[t].iter_mut().zip(&other.mats[t]) {
+                *a += b;
+            }
+        }
+    }
+
+    /// The full tied-embedding gradient: unembedding + input sites,
+    /// merged elementwise (the fixed final step of the reduction tree).
+    pub fn embed(&self) -> Vec<f32> {
+        self.embed_unembed.iter().zip(&self.embed_input).map(|(a, b)| a + b).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused block forward / backward
+// ---------------------------------------------------------------------------
+
+/// Forward a block of `n` positions whose (clamped) tokens sit in
+/// `sc.xs[..n]`: fills `sc.logits[..n*V]` plus every intermediate
+/// backward needs. One kernel call per model stage; no allocation.
+pub fn forward_block(prep: &Prepared, sc: &mut Scratch, n: usize) {
+    sc.ensure(n);
+    let m = &prep.model;
+    let [wq, wk, _wv, wo, wup, wgate, wdown] = m.mats;
+    for p in 0..n {
+        let x = sc.xs[p];
+        sc.h[p * D..(p + 1) * D].copy_from_slice(&m.embed[x * D..(x + 1) * D]);
+    }
+    // s = h·Wq + h·Wk (q-terms then k-terms, contraction ascending), tanh
+    sc.tnh[..n * D].fill(0.0);
+    matmul_acc(&sc.h[..n * D], wq, n, D, D, &mut sc.tnh[..n * D]);
+    matmul_acc(&sc.h[..n * D], wk, n, D, D, &mut sc.tnh[..n * D]);
+    tanh_inplace(&mut sc.tnh[..n * D]);
+    sc.vv[..n * D].fill(0.0);
+    matmul_acc(&sc.tnh[..n * D], m.mats[2], n, D, D, &mut sc.vv[..n * D]);
+    sc.att[..n * D].fill(0.0);
+    matmul_acc(&sc.vv[..n * D], wo, n, D, D, &mut sc.att[..n * D]);
+    sc.u[..n * F].fill(0.0);
+    matmul_acc(&sc.h[..n * D], wup, n, D, F, &mut sc.u[..n * F]);
+    sc.tg[..n * F].fill(0.0);
+    matmul_acc(&sc.h[..n * D], wgate, n, D, F, &mut sc.tg[..n * F]);
+    tanh_inplace(&mut sc.tg[..n * F]);
+    for i in 0..n * F {
+        sc.pact[i] = sc.u[i] * sc.tg[i];
+    }
+    sc.mlp[..n * D].fill(0.0);
+    matmul_acc(&sc.pact[..n * F], wdown, n, F, D, &mut sc.mlp[..n * D]);
+    // z = (h + a) + m; logits = (GAIN·z) · embedᵀ with GAIN pre-folded
+    for i in 0..n * D {
+        sc.z[i] = (sc.h[i] + sc.att[i]) + sc.mlp[i];
+        sc.zs[i] = GAIN * sc.z[i];
+    }
+    sc.logits[..n * V].fill(0.0);
+    matmul_acc(&sc.zs[..n * D], &prep.embed_t, n, D, V, &mut sc.logits[..n * V]);
+}
+
+/// Backprop a block given `sc.dlogits[..n*V]` (dLoss/dlogits, pre-GAIN),
+/// accumulating into `grads`. Exact adjoint of [`forward_block`], one
+/// kernel call per stage; `sc.dlogits` is consumed (scaled in place).
+/// `need_embed` skips both embedding sites — the adapter paths only ever
+/// read `grads.mats` (dtheta projection), so the engine skips ~40% of
+/// backward's work there.
+pub fn backward_block(
+    prep: &Prepared,
+    sc: &mut Scratch,
+    n: usize,
+    grads: &mut SimGrads,
+    need_embed: bool,
+) {
+    let bwd = prep.bwd.as_ref().expect("Prepared::new(_, true) required for backward");
+    // tied unembedding: logits = (GAIN·z)·embedᵀ — fold GAIN once
+    scale_inplace(&mut sc.dlogits[..n * V], GAIN);
+    if need_embed {
+        matmul_at_acc(&sc.dlogits[..n * V], &sc.z[..n * D], n, V, D, &mut grads.embed_unembed);
+    }
+    sc.dz[..n * D].fill(0.0);
+    matmul_acc(&sc.dlogits[..n * V], prep.model.embed, n, V, D, &mut sc.dz[..n * D]);
+    // z = h + a + m: dh starts as dz; dz doubles as dm and da below
+    sc.dh[..n * D].copy_from_slice(&sc.dz[..n * D]);
+    // m = p·Wdown
+    sc.dp[..n * F].fill(0.0);
+    matmul_acc(&sc.dz[..n * D], &bwd.wdown_t, n, D, F, &mut sc.dp[..n * F]);
+    matmul_at_acc(&sc.pact[..n * F], &sc.dz[..n * D], n, F, D, &mut grads.mats[6]);
+    // p = u ⊙ tanh(g)
+    for i in 0..n * F {
+        let r = sc.tg[i];
+        sc.du[i] = sc.dp[i] * r;
+        sc.dg[i] = sc.dp[i] * sc.u[i] * (1.0 - r * r);
+    }
+    // u = h·Wup ; g = h·Wgate
+    matmul_at_acc(&sc.h[..n * D], &sc.du[..n * F], n, D, F, &mut grads.mats[4]);
+    matmul_at_acc(&sc.h[..n * D], &sc.dg[..n * F], n, D, F, &mut grads.mats[5]);
+    matmul_acc(&sc.du[..n * F], &bwd.wup_t, n, F, D, &mut sc.dh[..n * D]);
+    matmul_acc(&sc.dg[..n * F], &bwd.wgate_t, n, F, D, &mut sc.dh[..n * D]);
+    // a = vv·Wo
+    sc.dvv[..n * D].fill(0.0);
+    matmul_acc(&sc.dz[..n * D], &bwd.wo_t, n, D, D, &mut sc.dvv[..n * D]);
+    matmul_at_acc(&sc.vv[..n * D], &sc.dz[..n * D], n, D, D, &mut grads.mats[3]);
+    // vv = tanh(s)·Wv
+    sc.dt[..n * D].fill(0.0);
+    matmul_acc(&sc.dvv[..n * D], &bwd.wv_t, n, D, D, &mut sc.dt[..n * D]);
+    matmul_at_acc(&sc.tnh[..n * D], &sc.dvv[..n * D], n, D, D, &mut grads.mats[2]);
+    // s = h·Wq + h·Wk ; tanh
+    for i in 0..n * D {
+        let t = sc.tnh[i];
+        sc.ds[i] = sc.dt[i] * (1.0 - t * t);
+    }
+    matmul_at_acc(&sc.h[..n * D], &sc.ds[..n * D], n, D, D, &mut grads.mats[0]);
+    matmul_at_acc(&sc.h[..n * D], &sc.ds[..n * D], n, D, D, &mut grads.mats[1]);
+    matmul_acc(&sc.ds[..n * D], &bwd.wqk_t, n, D, D, &mut sc.dh[..n * D]);
+    // input embedding rows (position-ascending scatter)
+    if need_embed {
+        for p in 0..n {
+            let x = sc.xs[p];
+            let dst = &mut grads.embed_input[x * D..(x + 1) * D];
+            let src = &sc.dh[p * D..(p + 1) * D];
+            for j in 0..D {
+                dst[j] += src[j];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row-level loss fns (one training row = one fused block)
+// ---------------------------------------------------------------------------
+
+/// Per-row masked-CE partial sums, reduced over rows in ascending order.
+#[derive(Clone, Copy, Default)]
+pub struct CeSums {
+    /// Weighted negative log-likelihood sum.
+    pub loss: f32,
+    /// Weighted argmax-accuracy sum.
+    pub acc: f32,
+    /// Weighted entropy sum.
+    pub ent: f32,
+    /// Weighted log-prob sum.
+    pub lp: f32,
+}
+
+impl CeSums {
+    /// `self += other`, fixed field order.
+    pub fn add(&mut self, o: &CeSums) {
+        self.loss += o.loss;
+        self.acc += o.acc;
+        self.ent += o.ent;
+        self.lp += o.lp;
+    }
+}
+
+/// Per-row GRPO partial sums (field order is the reduction order).
+#[derive(Clone, Copy, Default)]
+pub struct GrpoSums {
+    /// Truncated-importance policy-gradient sum.
+    pub pg: f32,
+    /// k1 KL estimator sum.
+    pub k1: f32,
+    /// k3 KL estimator sum.
+    pub k3: f32,
+    /// Importance-ratio sum.
+    pub rsum: f32,
+    /// Clip-event weight sum.
+    pub clipped: f32,
+    /// Weighted entropy sum.
+    pub ent: f32,
+    /// Weighted log-prob sum.
+    pub lp: f32,
+}
+
+impl GrpoSums {
+    /// `self += other`, fixed field order.
+    pub fn add(&mut self, o: &GrpoSums) {
+        self.pg += o.pg;
+        self.k1 += o.k1;
+        self.k3 += o.k3;
+        self.rsum += o.rsum;
+        self.clipped += o.clipped;
+        self.ent += o.ent;
+        self.lp += o.lp;
+    }
+}
+
+/// Gather the active (mask != 0) positions of one training row into the
+/// arena: fills `sc.xs/ys/ws[..na]` and returns `na`. Ascending position
+/// order — the order every accumulation below inherits.
+fn gather_row(tokens: &[i32], mask: &[f32], sc: &mut Scratch) -> usize {
+    let t_len = tokens.len();
+    sc.ensure(t_len - 1);
+    let mut na = 0usize;
+    for j in 0..t_len - 1 {
+        let w = mask[j];
+        if w == 0.0 {
+            continue;
+        }
+        sc.xs[na] = clamp_tok(tokens[j]);
+        sc.ys[na] = clamp_tok(tokens[j + 1]);
+        sc.ws[na] = w;
+        na += 1;
+    }
+    na
+}
+
+/// Masked-CE forward/backward of one row (pretrain and SFT), fused per
+/// block: one forward, one softmax sweep, one backward. `n_total` is the
+/// GLOBAL mask sum (normalization is batch-wide, computed by the caller).
+pub(super) fn ce_row(
+    prep: &Prepared,
+    tokens: &[i32],
+    mask: &[f32],
+    n_total: f32,
+    sc: &mut Scratch,
+    grads: &mut SimGrads,
+    need_embed: bool,
+) -> CeSums {
+    let na = gather_row(tokens, mask, sc);
+    let mut sums = CeSums::default();
+    if na == 0 {
+        return sums;
+    }
+    forward_block(prep, sc, na);
+    softmax_rows(&sc.logits[..na * V], na, V, &mut sc.probs[..na * V]);
+    for p in 0..na {
+        let (y, w) = (sc.ys[p], sc.ws[p]);
+        let logits = &sc.logits[p * V..(p + 1) * V];
+        let probs = &sc.probs[p * V..(p + 1) * V];
+        let lp = probs[y].max(1e-30).ln();
+        sums.loss += -w * lp;
+        sums.lp += w * lp;
+        sums.ent += w * entropy_of(probs);
+        if argmax(logits) == y {
+            sums.acc += w;
+        }
+        // dLoss/dlp = -w/n ; dlp/dlogits[v] = onehot - p
+        let dl_dlp = -w / n_total;
+        let dl = &mut sc.dlogits[p * V..(p + 1) * V];
+        for v in 0..V {
+            let onehot = if v == y { 1.0 } else { 0.0 };
+            dl[v] = dl_dlp * (onehot - probs[v]);
+        }
+    }
+    backward_block(prep, sc, na, grads, need_embed);
+    sums
+}
+
+/// Per-row GRPO inputs (behavior log-probs aligned to the row's mask,
+/// the row's advantage, and the step's clip/KL scalars).
+pub(super) struct GrpoRowIn<'a> {
+    pub behavior: &'a [f32],
+    pub adv: f32,
+    pub clip_c: f32,
+    pub kl_coef: f32,
+}
+
+/// GRPO forward/backward of one row (truncated importance sampling),
+/// fused per block like [`ce_row`]. Also needs the ORIGINAL position
+/// index per active slot to index `behavior` — gather preserves it via
+/// the mask scan being identical.
+pub(super) fn grpo_row(
+    prep: &Prepared,
+    tokens: &[i32],
+    mask: &[f32],
+    gin: &GrpoRowIn,
+    n_total: f32,
+    sc: &mut Scratch,
+    grads: &mut SimGrads,
+) -> GrpoSums {
+    let t_len = tokens.len();
+    let mut sums = GrpoSums::default();
+    // gather with original positions preserved in ys-order: reuse the
+    // mask scan and stash behavior per active slot in ws-order
+    sc.ensure(t_len - 1);
+    let mut na = 0usize;
+    for j in 0..t_len - 1 {
+        if mask[j] == 0.0 {
+            continue;
+        }
+        sc.xs[na] = clamp_tok(tokens[j]);
+        sc.ys[na] = clamp_tok(tokens[j + 1]);
+        sc.ws[na] = mask[j];
+        // dt is free at gather time; borrow it to carry behavior lps
+        sc.dt[na] = gin.behavior[j];
+        na += 1;
+    }
+    if na == 0 {
+        return sums;
+    }
+    forward_block(prep, sc, na);
+    softmax_rows(&sc.logits[..na * V], na, V, &mut sc.probs[..na * V]);
+    for p in 0..na {
+        let (y, w) = (sc.ys[p], sc.ws[p]);
+        let probs = &sc.probs[p * V..(p + 1) * V];
+        let lp = probs[y].max(1e-30).ln();
+        let beh = sc.dt[p];
+        let ratio = (lp - beh).exp().min(1e6);
+        let wt = if gin.clip_c > 0.0 { ratio.min(gin.clip_c) } else { ratio };
+        sums.pg += -w * wt * gin.adv * lp;
+        sums.k1 += w * (beh - lp);
+        sums.k3 += w * (ratio - 1.0 - (lp - beh));
+        sums.rsum += w * ratio;
+        if gin.clip_c > 0.0 && ratio > gin.clip_c {
+            sums.clipped += w;
+        }
+        sums.ent += w * entropy_of(probs);
+        sums.lp += w * lp;
+        // loss = pg/n + kl_coef * k3/n, importance weight stop-gradded:
+        // dLoss/dlp = (-wt*adv + kl_coef*(ratio-1)) * w/n
+        let dl_dlp = (-wt * gin.adv + gin.kl_coef * (ratio - 1.0)) * w / n_total;
+        let dl = &mut sc.dlogits[p * V..(p + 1) * V];
+        for v in 0..V {
+            let onehot = if v == y { 1.0 } else { 0.0 };
+            dl[v] = dl_dlp * (onehot - probs[v]);
+        }
+    }
+    // adapter path: dtheta only reads mats grads — skip embedding sites
+    backward_block(prep, sc, na, grads, false);
+    sums
+}
+
+/// Sample one token from a logit row, replicating the pre-split scalar
+/// semantics exactly: temperature <= 0 is greedy argmax (ties to the
+/// lowest index, behavior lp at temperature 1); otherwise cumulative
+/// sampling over the temperature-scaled softmax. Fills `probs`.
+pub(super) fn sample_one(
+    logits: &[f32],
+    temperature: f32,
+    u: f32,
+    probs: &mut [f32],
+) -> (usize, f32) {
+    if temperature <= 0.0 {
+        let best = argmax(logits);
+        softmax_row(logits, probs);
+        (best, probs[best].max(1e-30).ln())
+    } else {
+        softmax_row_temp(logits, temperature, probs);
+        let mut cum = 0.0f32;
+        let mut chosen = V - 1;
+        for v in 0..V {
+            cum += probs[v];
+            if u < cum {
+                chosen = v;
+                break;
+            }
+        }
+        (chosen, probs[chosen].max(1e-30).ln())
+    }
+}
+
+/// Argmax with ties to the lowest index (the sim's greedy rule).
+pub(super) fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0usize;
+    for v in 1..logits.len() {
+        if logits[v] > logits[best] {
+            best = v;
+        }
+    }
+    best
+}
+
+/// Shannon entropy of a probability row (ascending, fixed order).
+pub(super) fn entropy_of(probs: &[f32]) -> f32 {
+    -probs.iter().map(|&p| if p > 0.0 { p * p.ln() } else { 0.0 }).sum::<f32>()
+}
+
+// ---------------------------------------------------------------------------
+// Merge + dtheta projection (the adapter's linear map)
+// ---------------------------------------------------------------------------
+
+/// Deterministic pseudo-factor direction phi(t, k, j) in [-0.5, 0.5]:
+/// the fixed "frozen projection" the sim folds theta along. Mirrored by
+/// the adapter gradients (exact chain rule through the merge).
+pub fn pseudo_factor(t: usize, k: usize, j: usize) -> f32 {
+    let mut h = 0x9e3779b97f4a7c15u64
+        ^ (t as u64).wrapping_mul(0xa076_1d64_78bd_642f)
+        ^ ((k as u64 + 1).wrapping_mul(0xe703_7ed1_a0b4_28db))
+        ^ ((j as u64 + 1).wrapping_mul(0x8ebc_6af0_9c88_c6e3));
+    h ^= h >> 29;
+    h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h ^= h >> 32;
+    ((h >> 40) as f32) * (1.0 / (1u64 << 24) as f32) - 0.5
+}
+
+/// Cached phi table, one `[elems(t) * N_THETA]` strip per matrix with k
+/// contiguous (unit stride in both the merge and the projection). The
+/// old code re-hashed phi(t,k,j) per element per call — 1152×13 hashes
+/// on every merge AND every dtheta projection; now it's a lookup.
+fn phi_table() -> &'static [Vec<f32>; 7] {
+    static PHI: OnceLock<[Vec<f32>; 7]> = OnceLock::new();
+    PHI.get_or_init(|| {
+        std::array::from_fn(|t| {
+            let n = MATS[t].1 * MATS[t].2;
+            let mut v = vec![0.0f32; n * N_THETA];
+            for j in 0..n {
+                for k in 0..N_THETA {
+                    v[j * N_THETA + k] = pseudo_factor(t, k, j);
+                }
+            }
+            v
+        })
+    })
+}
+
+/// merged[t][j] = base[t][j] + MERGE_SCALE * sum_k theta[k] * phi(t,k,j).
+/// Linear in theta and exactly identity at theta = 0 — every adapter
+/// scheme starts at the base model, same as the real artifacts.
+pub fn merge_mats(base: [&[f32]; 7], theta: &[f32]) -> [Vec<f32>; 7] {
+    let phi = phi_table();
+    std::array::from_fn(|t| {
+        let mut out = base[t].to_vec();
+        for (j, w) in out.iter_mut().enumerate() {
+            let row = &phi[t][j * N_THETA..(j + 1) * N_THETA];
+            let mut delta = 0.0f32;
+            for (k, &th) in theta.iter().enumerate() {
+                delta += th * row[k];
+            }
+            *w += MERGE_SCALE * delta;
+        }
+        out
+    })
+}
+
+/// dL/dtheta[k] = MERGE_SCALE * sum_{t,j} dL/dW[t][j] * phi(t,k,j).
+pub fn project_dtheta(dmats: &[Vec<f32>; 7]) -> Vec<f32> {
+    let phi = phi_table();
+    let mut dtheta = vec![0.0f32; N_THETA];
+    for (t, dm) in dmats.iter().enumerate() {
+        for (j, &dw) in dm.iter().enumerate() {
+            if dw == 0.0 {
+                continue;
+            }
+            let row = &phi[t][j * N_THETA..(j + 1) * N_THETA];
+            for (k, dt) in dtheta.iter_mut().enumerate() {
+                *dt += MERGE_SCALE * dw * row[k];
+            }
+        }
+    }
+    dtheta
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference oracle (the differential ground truth)
+// ---------------------------------------------------------------------------
+
+/// Naive per-position scalar implementation of the SAME reduction trees
+/// the blocked engine fixes — no kernels, no arena, no blocking, fresh
+/// Vecs everywhere. Because blocking only groups independent output rows
+/// and every gradient element has a single accumulation site, the
+/// per-element f32 op sequence here is identical to the engine's, so the
+/// differential tests in `exec` assert *bitwise* equality against this.
+#[cfg(test)]
+pub(super) mod reference {
+    use super::*;
+
+    /// Per-position activations (plain Vecs — deliberately naive).
+    pub struct RefActs {
+        pub x: usize,
+        pub h: Vec<f32>,
+        pub tnh: Vec<f32>,
+        pub vv: Vec<f32>,
+        pub u: Vec<f32>,
+        pub tg: Vec<f32>,
+        pub pact: Vec<f32>,
+        pub z: Vec<f32>,
+    }
+
+    /// `out[j] += sum_i x[i] * w[i*d_out + j]`, contraction index outer —
+    /// the scalar twin of a one-row `matmul_acc`.
+    fn mv_acc(w: &[f32], x: &[f32], out: &mut [f32]) {
+        let d_out = out.len();
+        for (i, &xi) in x.iter().enumerate() {
+            let row = &w[i * d_out..(i + 1) * d_out];
+            for j in 0..d_out {
+                out[j] += xi * row[j];
+            }
+        }
+    }
+
+    /// One position's forward, mirroring `forward_block` stage by stage.
+    pub fn forward_pos(m: &SimModel, tok: i32) -> (RefActs, Vec<f32>) {
+        let x = clamp_tok(tok);
+        let h = m.embed[x * D..(x + 1) * D].to_vec();
+        let [wq, wk, wv, wo, wup, wgate, wdown] = m.mats;
+        let mut tnh = vec![0.0f32; D];
+        mv_acc(wq, &h, &mut tnh);
+        mv_acc(wk, &h, &mut tnh);
+        for t in tnh.iter_mut() {
+            *t = t.tanh();
+        }
+        let mut vv = vec![0.0f32; D];
+        mv_acc(wv, &tnh, &mut vv);
+        let mut att = vec![0.0f32; D];
+        mv_acc(wo, &vv, &mut att);
+        let mut u = vec![0.0f32; F];
+        mv_acc(wup, &h, &mut u);
+        let mut tg = vec![0.0f32; F];
+        mv_acc(wgate, &h, &mut tg);
+        for t in tg.iter_mut() {
+            *t = t.tanh();
+        }
+        let pact: Vec<f32> = (0..F).map(|i| u[i] * tg[i]).collect();
+        let mut mlp = vec![0.0f32; D];
+        mv_acc(wdown, &pact, &mut mlp);
+        let z: Vec<f32> = (0..D).map(|j| (h[j] + att[j]) + mlp[j]).collect();
+        let zs: Vec<f32> = z.iter().map(|&v| GAIN * v).collect();
+        // logits[v] += zs[j] * embed[v*D + j], j (contraction) outer
+        let mut logits = vec![0.0f32; V];
+        for j in 0..D {
+            let zj = zs[j];
+            for v in 0..V {
+                logits[v] += zj * m.embed[v * D + j];
+            }
+        }
+        (RefActs { x, h, tnh, vv, u, tg, pact, z }, logits)
+    }
+
+    /// One position's backward, mirroring `backward_block` stage by
+    /// stage (including GAIN folding and the two-site embed split).
+    pub fn backward_pos(
+        m: &SimModel,
+        acts: &RefActs,
+        dlogits: &[f32],
+        grads: &mut SimGrads,
+        need_embed: bool,
+    ) {
+        let [wq, wk, wv, wo, wup, wgate, wdown] = m.mats;
+        let dl: Vec<f32> = dlogits.iter().map(|&d| GAIN * d).collect();
+        if need_embed {
+            for v in 0..V {
+                for j in 0..D {
+                    grads.embed_unembed[v * D + j] += dl[v] * acts.z[j];
+                }
+            }
+        }
+        // dz[j] += dl[v] * embed[v*D + j], v (contraction) outer
+        let mut dz = vec![0.0f32; D];
+        for v in 0..V {
+            let dv = dl[v];
+            for j in 0..D {
+                dz[j] += dv * m.embed[v * D + j];
+            }
+        }
+        let mut dh = dz.clone();
+        // m = p·Wdown: dp = dz·Wdownᵀ (contraction j outer), dWdown += pᵀ·dz
+        let mut dp = vec![0.0f32; F];
+        for j in 0..D {
+            for i in 0..F {
+                dp[i] += dz[j] * wdown[i * D + j];
+            }
+        }
+        for i in 0..F {
+            for j in 0..D {
+                grads.mats[6][i * D + j] += acts.pact[i] * dz[j];
+            }
+        }
+        // p = u ⊙ tanh(g)
+        let mut du = vec![0.0f32; F];
+        let mut dg = vec![0.0f32; F];
+        for i in 0..F {
+            let r = acts.tg[i];
+            du[i] = dp[i] * r;
+            dg[i] = dp[i] * acts.u[i] * (1.0 - r * r);
+        }
+        for i in 0..D {
+            for j in 0..F {
+                grads.mats[4][i * F + j] += acts.h[i] * du[j];
+                grads.mats[5][i * F + j] += acts.h[i] * dg[j];
+            }
+        }
+        // dh += du·Wupᵀ then dg·Wgateᵀ (two passes, like the two kernels)
+        for j in 0..F {
+            for i in 0..D {
+                dh[i] += du[j] * wup[i * F + j];
+            }
+        }
+        for j in 0..F {
+            for i in 0..D {
+                dh[i] += dg[j] * wgate[i * F + j];
+            }
+        }
+        // a = vv·Wo
+        let mut dvv = vec![0.0f32; D];
+        for j in 0..D {
+            for i in 0..D {
+                dvv[i] += dz[j] * wo[i * D + j];
+            }
+        }
+        for i in 0..D {
+            for j in 0..D {
+                grads.mats[3][i * D + j] += acts.vv[i] * dz[j];
+            }
+        }
+        // vv = tanh(s)·Wv
+        let mut dt = vec![0.0f32; D];
+        for j in 0..D {
+            for i in 0..D {
+                dt[i] += dvv[j] * wv[i * D + j];
+            }
+        }
+        for i in 0..D {
+            for j in 0..D {
+                grads.mats[2][i * D + j] += acts.tnh[i] * dvv[j];
+            }
+        }
+        // s = h·Wq + h·Wk ; tanh
+        let ds: Vec<f32> = (0..D).map(|j| dt[j] * (1.0 - acts.tnh[j] * acts.tnh[j])).collect();
+        for i in 0..D {
+            for j in 0..D {
+                grads.mats[0][i * D + j] += acts.h[i] * ds[j];
+            }
+        }
+        for i in 0..D {
+            for j in 0..D {
+                grads.mats[1][i * D + j] += acts.h[i] * ds[j];
+            }
+        }
+        // dh += ds·(Wq+Wk)ᵀ, matching the summed-then-transposed kernel
+        for j in 0..D {
+            for i in 0..D {
+                dh[i] += ds[j] * (wq[i * D + j] + wk[i * D + j]);
+            }
+        }
+        if need_embed {
+            for j in 0..D {
+                grads.embed_input[acts.x * D + j] += dh[j];
+            }
+        }
+    }
+
+    /// Reference softmax with the kernel's exact op order.
+    pub fn softmax(logits: &[f32]) -> Vec<f32> {
+        let mut probs = vec![0.0f32; logits.len()];
+        super::softmax_row(logits, &mut probs);
+        probs
+    }
+
+    /// Reference masked-CE row: per-position forward/backward, same
+    /// stats and dlogits math as `ce_row`, position-ascending.
+    pub fn ce_row_ref(
+        m: &SimModel,
+        tokens: &[i32],
+        mask: &[f32],
+        n_total: f32,
+        grads: &mut SimGrads,
+        need_embed: bool,
+    ) -> CeSums {
+        let t_len = tokens.len();
+        let mut sums = CeSums::default();
+        for j in 0..t_len - 1 {
+            let w = mask[j];
+            if w == 0.0 {
+                continue;
+            }
+            let (acts, logits) = forward_pos(m, tokens[j]);
+            let probs = softmax(&logits);
+            let y = clamp_tok(tokens[j + 1]);
+            let lp = probs[y].max(1e-30).ln();
+            sums.loss += -w * lp;
+            sums.lp += w * lp;
+            sums.ent += w * entropy_of(&probs);
+            if argmax(&logits) == y {
+                sums.acc += w;
+            }
+            let dl_dlp = -w / n_total;
+            let mut dlogits = vec![0.0f32; V];
+            for v in 0..V {
+                let onehot = if v == y { 1.0 } else { 0.0 };
+                dlogits[v] = dl_dlp * (onehot - probs[v]);
+            }
+            backward_pos(m, &acts, &dlogits, grads, need_embed);
+        }
+        sums
+    }
+
+    /// Reference GRPO row, mirroring `grpo_row`'s math per position.
+    pub fn grpo_row_ref(
+        m: &SimModel,
+        tokens: &[i32],
+        mask: &[f32],
+        gin: &GrpoRowIn,
+        n_total: f32,
+        grads: &mut SimGrads,
+    ) -> GrpoSums {
+        let t_len = tokens.len();
+        let mut sums = GrpoSums::default();
+        for j in 0..t_len - 1 {
+            let w = mask[j];
+            if w == 0.0 {
+                continue;
+            }
+            let (acts, logits) = forward_pos(m, tokens[j]);
+            let probs = softmax(&logits);
+            let y = clamp_tok(tokens[j + 1]);
+            let lp = probs[y].max(1e-30).ln();
+            let beh = gin.behavior[j];
+            let ratio = (lp - beh).exp().min(1e6);
+            let wt = if gin.clip_c > 0.0 { ratio.min(gin.clip_c) } else { ratio };
+            sums.pg += -w * wt * gin.adv * lp;
+            sums.k1 += w * (beh - lp);
+            sums.k3 += w * (ratio - 1.0 - (lp - beh));
+            sums.rsum += w * ratio;
+            if gin.clip_c > 0.0 && ratio > gin.clip_c {
+                sums.clipped += w;
+            }
+            sums.ent += w * entropy_of(&probs);
+            sums.lp += w * lp;
+            let dl_dlp = (-wt * gin.adv + gin.kl_coef * (ratio - 1.0)) * w / n_total;
+            let mut dlogits = vec![0.0f32; V];
+            for v in 0..V {
+                let onehot = if v == y { 1.0 } else { 0.0 };
+                dlogits[v] = dl_dlp * (onehot - probs[v]);
+            }
+            backward_pos(m, &acts, &dlogits, grads, false);
+        }
+        sums
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    pub(super) fn random_model_bufs(seed: u64) -> (Vec<f32>, [Vec<f32>; 7]) {
+        let mut rng = Pcg64::new(seed);
+        let embed = rng.normal_vec(V * D, 0.1);
+        let mats: [Vec<f32>; 7] =
+            std::array::from_fn(|t| rng.normal_vec(MATS[t].1 * MATS[t].2, 0.3));
+        (embed, mats)
+    }
+
+    fn model<'a>(embed: &'a [f32], mats: &'a [Vec<f32>; 7]) -> SimModel<'a> {
+        SimModel { embed, mats: std::array::from_fn(|t| mats[t].as_slice()) }
+    }
+
+    /// The blocked forward equals the scalar oracle bit-for-bit at every
+    /// block size that occurs in practice (1 decode row .. 63 targets).
+    #[test]
+    fn forward_block_matches_reference_bitwise() {
+        let (embed, mats) = random_model_bufs(21);
+        let m = model(&embed, &mats);
+        let prep = Prepared::new(m, false);
+        let mut rng = Pcg64::new(22);
+        for &n in &[1usize, 2, 4, 5, 8, 31, 63] {
+            let toks: Vec<i32> = (0..n).map(|_| rng.below(V as u64) as i32).collect();
+            let mut sc = Scratch::new();
+            sc.ensure(n);
+            for (p, &t) in toks.iter().enumerate() {
+                sc.xs[p] = clamp_tok(t);
+            }
+            forward_block(&prep, &mut sc, n);
+            for (p, &t) in toks.iter().enumerate() {
+                let (_, want) = reference::forward_pos(&m, t);
+                let got = &sc.logits[p * V..(p + 1) * V];
+                let eq = got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(eq, "block n={n} pos {p}: vectorized logits != reference");
+            }
+        }
+    }
+
+    /// The blocked backward equals the scalar oracle bit-for-bit on every
+    /// gradient tensor (both embed sites and all seven mats).
+    #[test]
+    fn backward_block_matches_reference_bitwise() {
+        let (embed, mats) = random_model_bufs(23);
+        let m = model(&embed, &mats);
+        let prep = Prepared::new(m, true);
+        let mut rng = Pcg64::new(24);
+        let n = 17usize;
+        let toks: Vec<i32> = (0..n).map(|_| rng.below(V as u64) as i32).collect();
+        let dls: Vec<f32> = rng.normal_vec(n * V, 0.3);
+
+        let mut sc = Scratch::new();
+        sc.ensure(n);
+        for (p, &t) in toks.iter().enumerate() {
+            sc.xs[p] = clamp_tok(t);
+        }
+        forward_block(&prep, &mut sc, n);
+        sc.dlogits[..n * V].copy_from_slice(&dls);
+        let mut got = SimGrads::zeros();
+        backward_block(&prep, &mut sc, n, &mut got, true);
+
+        let mut want = SimGrads::zeros();
+        for (p, &t) in toks.iter().enumerate() {
+            let (acts, _) = reference::forward_pos(&m, t);
+            reference::backward_pos(&m, &acts, &dls[p * V..(p + 1) * V], &mut want, true);
+        }
+        let pairs: Vec<(&[f32], &[f32], &str)> = vec![
+            (&got.embed_unembed, &want.embed_unembed, "embed_unembed"),
+            (&got.embed_input, &want.embed_input, "embed_input"),
+        ];
+        for (g, w, name) in pairs {
+            assert!(
+                g.iter().zip(w).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{name} grads diverge from reference"
+            );
+        }
+        for t in 0..7 {
+            let eq =
+                got.mats[t].iter().zip(&want.mats[t]).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(eq, "mats[{t}] grads diverge from reference");
+        }
+    }
+
+    /// The VECTORIZED backward matches central finite differences on
+    /// every weight tensor — the re-check the rewrite must pass (the one
+    /// test that keeps the whole sim gradient stack honest).
+    #[test]
+    fn backward_matches_finite_differences() {
+        let (embed, mats) = random_model_bufs(5);
+        let (x, y) = (7i32, 11usize);
+
+        // CE loss of one position through the vectorized path
+        let pos_loss = |embed: &[f32], mats: &[Vec<f32>; 7]| -> f32 {
+            let m = SimModel {
+                embed,
+                mats: std::array::from_fn(|t| mats[t].as_slice()),
+            };
+            let prep = Prepared::new(m, false);
+            let mut sc = Scratch::new();
+            sc.ensure(1);
+            sc.xs[0] = clamp_tok(x);
+            forward_block(&prep, &mut sc, 1);
+            let mut probs = vec![0.0f32; V];
+            softmax_row(&sc.logits[..V], &mut probs);
+            -probs[y].max(1e-30).ln()
+        };
+
+        // analytic gradient via the vectorized backward
+        let m = model(&embed, &mats);
+        let prep = Prepared::new(m, true);
+        let mut sc = Scratch::new();
+        sc.ensure(1);
+        sc.xs[0] = clamp_tok(x);
+        forward_block(&prep, &mut sc, 1);
+        let mut probs = vec![0.0f32; V];
+        softmax_row(&sc.logits[..V], &mut probs);
+        for v in 0..V {
+            let onehot = if v == y { 1.0 } else { 0.0 };
+            sc.dlogits[v] = -(onehot - probs[v]); // dLoss/dlp = -1
+        }
+        let mut grads = SimGrads::zeros();
+        backward_block(&prep, &mut sc, 1, &mut grads, true);
+        let embed_grad = grads.embed();
+
+        let eps = 1e-2f32;
+        let mut rng = Pcg64::new(9);
+        // spot-check a random sample of coordinates in every tensor
+        for t in 0..8 {
+            for _ in 0..20 {
+                let (numeric, analytic) = if t == 0 {
+                    // embed rows that matter: the input token and the target
+                    let row = if rng.below(2) == 0 { x as usize } else { y };
+                    let j = row * D + rng.below(D as u64) as usize;
+                    let mut e2 = embed.clone();
+                    e2[j] += eps;
+                    let lp = pos_loss(&e2, &mats);
+                    e2[j] -= 2.0 * eps;
+                    let lm = pos_loss(&e2, &mats);
+                    ((lp - lm) / (2.0 * eps), embed_grad[j])
+                } else {
+                    let mi = t - 1;
+                    let j = rng.below(mats[mi].len() as u64) as usize;
+                    let mut m2 = mats.clone();
+                    m2[mi][j] += eps;
+                    let lp = pos_loss(&embed, &m2);
+                    m2[mi][j] -= 2.0 * eps;
+                    let lm = pos_loss(&embed, &m2);
+                    ((lp - lm) / (2.0 * eps), grads.mats[mi][j])
+                };
+                assert!(
+                    (numeric - analytic).abs() <= 2e-3 + 0.05 * numeric.abs(),
+                    "tensor {t}: finite diff {numeric} vs analytic {analytic}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn merge_is_identity_at_zero_and_linear() {
+        let (_, mats) = random_model_bufs(3);
+        let base: [&[f32]; 7] = std::array::from_fn(|t| mats[t].as_slice());
+        let zero = merge_mats(base, &[0.0; N_THETA]);
+        for t in 0..7 {
+            assert_eq!(zero[t], mats[t], "theta=0 must merge to the base exactly");
+        }
+        // linearity: merge(a) + merge(b) - base == merge(a + b)
+        let mut rng = Pcg64::new(4);
+        let ta: Vec<f32> = rng.normal_vec(N_THETA, 0.2);
+        let tb: Vec<f32> = rng.normal_vec(N_THETA, 0.2);
+        let tab: Vec<f32> = ta.iter().zip(&tb).map(|(a, b)| a + b).collect();
+        let ma = merge_mats(base, &ta);
+        let mb = merge_mats(base, &tb);
+        let mab = merge_mats(base, &tab);
+        for t in 0..7 {
+            for j in 0..mats[t].len() {
+                let sum = ma[t][j] + mb[t][j] - mats[t][j];
+                assert!((sum - mab[t][j]).abs() < 1e-4, "merge not linear at ({t},{j})");
+            }
+        }
+        // a non-trivial theta must actually move the weights
+        assert!(ma.iter().zip(&mats).any(|(m, b)| m != b));
+    }
+
+    /// The cached phi table serves exactly the per-call hash values.
+    #[test]
+    fn phi_table_matches_pseudo_factor() {
+        let phi = phi_table();
+        for t in 0..7 {
+            let n = MATS[t].1 * MATS[t].2;
+            for j in [0, 1, n / 2, n - 1] {
+                for k in 0..N_THETA {
+                    assert_eq!(
+                        phi[t][j * N_THETA + k].to_bits(),
+                        pseudo_factor(t, k, j).to_bits(),
+                        "phi table drift at ({t},{k},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dtheta_projection_matches_merge_chain_rule() {
+        // loss = sum_j W[t][j] * c[t][j] (linear in W) has dL/dW = c, so
+        // dL/dtheta via the projection must equal the finite difference of
+        // the merged loss — exact to f32 roundoff.
+        let (_, mats) = random_model_bufs(6);
+        let base: [&[f32]; 7] = std::array::from_fn(|t| mats[t].as_slice());
+        let mut rng = Pcg64::new(7);
+        let c: [Vec<f32>; 7] = std::array::from_fn(|t| rng.normal_vec(mats[t].len(), 1.0));
+        let loss = |theta: &[f32]| -> f64 {
+            let m = merge_mats(base, theta);
+            (0..7)
+                .map(|t| {
+                    m[t].iter().zip(&c[t]).map(|(&w, &cc)| w as f64 * cc as f64).sum::<f64>()
+                })
+                .sum()
+        };
+        let dtheta = project_dtheta(&c);
+        let mut theta = vec![0.0f32; N_THETA];
+        for k in 0..N_THETA {
+            let eps = 1e-2f32;
+            theta[k] = eps;
+            let lp = loss(&theta);
+            theta[k] = -eps;
+            let lm = loss(&theta);
+            theta[k] = 0.0;
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (numeric - dtheta[k]).abs() <= 1e-3 + 1e-3 * numeric.abs(),
+                "theta[{k}]: finite diff {numeric} vs projected {}",
+                dtheta[k]
+            );
+        }
+    }
+}

@@ -511,6 +511,74 @@ fn starved_adapter_is_served_through_live_pool_under_fair_policies() {
     }
 }
 
+/// Row-parallel execution inside a context is a pure throughput knob:
+/// pooled decode at row-worker counts {1, 2, 4} is byte-identical to
+/// the serial, worker-less reference, and a full GRPO training session
+/// lands on bit-identical adapter theta at 1 vs 4 row workers. This is
+/// the per-context leg of the determinism matrix (the device-pool leg
+/// is `pooled_equals_serial_byte_identical_at_d_1_2_4`).
+#[test]
+fn sim_row_parallel_workers_preserve_byte_identity() {
+    let rt_ref = Runtime::sim(1).unwrap();
+    let engine_ref = InferenceEngine::new(&rt_ref, SIM_TIER, rt_ref.manifest.batch.test).unwrap();
+    let reference =
+        fingerprint(&WorkerPool::serve_serial(&rt_ref, &engine_ref, &mixed_jobs(&rt_ref)).unwrap());
+
+    for row_workers in [1usize, 2, 4] {
+        let rt = Runtime::sim_with(2, SimOptions { row_workers, ..Default::default() }).unwrap();
+        let engine = InferenceEngine::new(&rt, SIM_TIER, rt.manifest.batch.test).unwrap();
+        let pooled =
+            fingerprint(&WorkerPool::new(4).serve(&rt, &engine, mixed_jobs(&rt)).unwrap());
+        assert_eq!(
+            pooled, reference,
+            "row_workers={row_workers}: row-parallel decode diverged from serial"
+        );
+    }
+
+    // training leg: the whole rollout -> grad -> update loop, end to end
+    let theta_at = |row_workers: usize| -> Vec<u32> {
+        let rt =
+            Runtime::sim_with(1, SimOptions { row_workers, ..Default::default() }).unwrap();
+        let b = rt.manifest.batch.test;
+        let base = base_weights(&rt, 3);
+        let ckpt = scratch("row_workers");
+        let cfg =
+            GrpoConfig { group: 2, steps: 3, lr: 5e-3, warmup: 2, seed: 21, ..Default::default() };
+        let policy = Policy::new(&rt, SIM_TIER, SIM_SCHEME, "grpo", base, 21, &ckpt).unwrap();
+        let mut sess = TrainSession::new(
+            GrpoLoop::with_batch(&rt, policy, cfg.clone(), b).unwrap(),
+            grpo_session_cfg(&cfg),
+        );
+        sess.run(&rt, &mut RunLog::null()).unwrap();
+        sess.lp.policy.theta.iter().map(|x| x.to_bits()).collect()
+    };
+    assert_eq!(theta_at(1), theta_at(4), "GRPO theta diverged across row-worker counts");
+}
+
+/// The per-row execute-time budget knob stalls the backend (so latency
+/// shaping is real) without changing a single decoded byte.
+#[test]
+fn sim_row_budget_stalls_execute_without_changing_results() {
+    let rt_ref = Runtime::sim(1).unwrap();
+    let engine_ref = InferenceEngine::new(&rt_ref, SIM_TIER, rt_ref.manifest.batch.test).unwrap();
+    let reference =
+        fingerprint(&WorkerPool::serve_serial(&rt_ref, &engine_ref, &mixed_jobs(&rt_ref)).unwrap());
+
+    let rt =
+        Runtime::sim_with(1, SimOptions { row_budget_us: 2000, ..Default::default() }).unwrap();
+    let engine = InferenceEngine::new(&rt, SIM_TIER, rt.manifest.batch.test).unwrap();
+    let t = std::time::Instant::now();
+    let budgeted =
+        fingerprint(&WorkerPool::serve_serial(&rt, &engine, &mixed_jobs(&rt)).unwrap());
+    let elapsed = t.elapsed();
+    assert_eq!(budgeted, reference, "row budget changed decoded bytes");
+    // 6 jobs x >= 2 rows x 2 ms/row of injected budget: the stall is real
+    assert!(
+        elapsed >= std::time::Duration::from_millis(20),
+        "row budget not applied: drained in {elapsed:?}"
+    );
+}
+
 /// Multi-tenant serving drains identically with and without pool
 /// parallelism (greedy decode: texts must match request for request).
 #[test]
