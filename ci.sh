@@ -91,6 +91,20 @@ if [[ "$FAST" -eq 0 ]]; then
     echo "== BENCH_SIM.json missing — run 'cargo bench --bench bench_sim' and commit it =="
     exit 1
   fi
+
+  # Tiered adapter-store gate: BENCH_store.json is REQUIRED — the bench
+  # is hermetic (sim backend) and carries the million-tenant capacity
+  # claim. `--check` validates the schema, recomputes the packed-record
+  # geometry echo, and enforces the capacity gates (stored bytes ==
+  # 26 B × tenants exactly, ≤ 128 B/tenant with index, hot-hit checkout
+  # cheaper than every merge path).
+  if [[ -f ../BENCH_store.json ]]; then
+    echo "== bench_store --check (tiered adapter-store snapshot) =="
+    cargo bench --bench bench_store -- --check
+  else
+    echo "== BENCH_store.json missing — run 'cargo bench --bench bench_store' and commit it =="
+    exit 1
+  fi
 fi
 
 if cargo clippy --version >/dev/null 2>&1; then

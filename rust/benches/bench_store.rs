@@ -1,0 +1,391 @@
+//! Tiered adapter-store benchmark + the committed capacity/latency
+//! snapshot (`cargo bench --bench bench_store`).
+//!
+//! Emits `../BENCH_store.json` (repo root): the million-tenant plane
+//! measured on the sim backend — registration throughput, resident cold
+//! bytes, per-tier checkout latency (hot hit / warm hit / cold miss) and
+//! the tier-transition profile of a zipf-distributed request trace, at
+//! 10^3 / 10^5 / 10^6 tenants.
+//!
+//! Snapshot schema, like `BENCH_SIM.json`:
+//!   * `record` — deterministic echo of the storage geometry (scheme,
+//!     packed record width, merged-model bytes, tier knobs); `--check`
+//!     recomputes it and fails on drift, so a packing or tier-knob
+//!     change forces a re-measure instead of silently invalidating the
+//!     numbers;
+//!   * `scales` — one row per tenant count, gated by `--check`:
+//!     `stored_bytes == record_bytes × tenants` EXACTLY (the 26-byte
+//!     headline), total (data + index) ≤ 128 B/tenant, hot-hit checkout
+//!     strictly cheaper than both merge paths, and a trace whose
+//!     per-tier hits sum to its accesses with demotions observed.
+//!
+//! Modes:
+//!   cargo bench --bench bench_store              # run + rewrite snapshot
+//!   cargo bench --bench bench_store -- --check   # validate committed
+//!                                                # snapshot (ci.sh gate)
+
+use std::path::Path;
+
+use tinylora_rl::adapters::packing::{pack, Precision};
+use tinylora_rl::runtime::sim::N_THETA;
+use tinylora_rl::runtime::{Runtime, SIM_SCHEME, SIM_TIER};
+use tinylora_rl::serving::AdapterStore;
+use tinylora_rl::util::json::{num, obj, s, Value};
+use tinylora_rl::util::{Pcg64, Timer};
+use tinylora_rl::weights::WeightSet;
+
+/// Committed snapshot path (repo root; cargo bench runs from `rust/`).
+/// Override with TINYLORA_BENCH_STORE for scratch runs.
+fn snapshot_path() -> String {
+    std::env::var("TINYLORA_BENCH_STORE").unwrap_or_else(|_| "../BENCH_store.json".into())
+}
+
+const SCHEMA_VERSION: usize = 1;
+/// Tenant populations swept (the 10^6 point is the paper's claim).
+const SCALES: [usize; 3] = [1_000, 100_000, 1_000_000];
+/// Requests per zipf trace.
+const TRACE_LEN: usize = 4000;
+/// Zipf skew of the trace (a few tenants dominate, like real serving).
+const ZIPF_S: f64 = 1.1;
+/// Hot-tier capacity (merged models resident at once).
+const MAX_RESIDENT: usize = 8;
+/// Warm-tier capacity (unpacked theta vectors).
+const MAX_WARM: usize = 64;
+/// Timed checkouts per latency point.
+const MICRO_OPS: usize = 48;
+/// Documented memory bound: total cold (data + index) bytes per tenant.
+/// 26 B of packed record + a compact interned index must stay under
+/// this at every scale — 128 B × 10^6 tenants = 128 MB worst case.
+const BYTES_PER_TENANT_BOUND: f64 = 128.0;
+
+fn tenant_name(i: usize) -> String {
+    format!("t{i}")
+}
+
+/// Inverse-CDF sample of a (continuous-approximation) zipf(s) rank on
+/// `1..=n`, mapped to a 0-based tenant index.
+fn zipf_idx(rng: &mut Pcg64, n: usize) -> usize {
+    let u = rng.uniform() as f64;
+    let x = (1.0 + u * ((n as f64).powf(1.0 - ZIPF_S) - 1.0)).powf(1.0 / (1.0 - ZIPF_S));
+    (x as usize).saturating_sub(1).min(n - 1)
+}
+
+// ---------------------------------------------------------------------------
+// Measurement
+// ---------------------------------------------------------------------------
+
+/// One tenant-population point: register `n` tenants, measure per-tier
+/// checkout latency under controlled residency, then profile a zipf
+/// trace through the tier machinery.
+fn run_scale(rt: &Runtime, base: &WeightSet, n: usize, dir: &Path) -> Value {
+    let mut store = AdapterStore::with_tiers(SIM_TIER, MAX_RESIDENT, MAX_WARM);
+    let mut rng = Pcg64::new(99);
+    let mut theta = [0.0f32; N_THETA];
+
+    let t = Timer::start();
+    for i in 0..n {
+        theta[i % N_THETA] = rng.uniform() - 0.5;
+        store.register(&tenant_name(i), SIM_SCHEME, &theta, Precision::Bf16).unwrap();
+    }
+    let register_s = t.secs();
+
+    let st0 = store.stats();
+    assert_eq!(
+        st0.stored_bytes,
+        store.recompute_stored_bytes(),
+        "stored_bytes counter drifted from the arena scan"
+    );
+    let bytes_per_tenant = (st0.stored_bytes + st0.cold_index_bytes) as f64 / n as f64;
+
+    // hot hit: resident merged model, checkout is a clone
+    store.activate(rt, base, "t0", dir).unwrap();
+    let t = Timer::start();
+    for _ in 0..MICRO_OPS {
+        std::hint::black_box(store.activate(rt, base, "t0", dir).unwrap());
+    }
+    let us_hot = t.secs() * 1e6 / MICRO_OPS as f64;
+
+    // warm hit: flood the hot tier with MAX_RESIDENT fillers so the
+    // probe adapter demotes to warm, then time its re-merge
+    store.activate(rt, base, "t1", dir).unwrap();
+    let mut warm_secs = 0.0;
+    for _ in 0..MICRO_OPS {
+        for j in 2..2 + MAX_RESIDENT {
+            store.activate(rt, base, &tenant_name(j), dir).unwrap();
+        }
+        let t = Timer::start();
+        std::hint::black_box(store.activate(rt, base, "t1", dir).unwrap());
+        warm_secs += t.secs();
+    }
+    let us_warm = warm_secs * 1e6 / MICRO_OPS as f64;
+
+    // cold miss: never-touched tail tenants, unpack + merge per op
+    let mut cold_secs = 0.0;
+    for k in 0..MICRO_OPS {
+        let name = tenant_name(n - 1 - k);
+        let t = Timer::start();
+        std::hint::black_box(store.activate(rt, base, &name, dir).unwrap());
+        cold_secs += t.secs();
+    }
+    let us_cold = cold_secs * 1e6 / MICRO_OPS as f64;
+
+    // zipf trace through a clean counter window (residency warm-started
+    // by the microbenches above, like a store that has been serving)
+    store.reset_stats();
+    let mut zrng = Pcg64::new(777);
+    for _ in 0..TRACE_LEN {
+        let idx = zipf_idx(&mut zrng, n);
+        store.activate(rt, base, &tenant_name(idx), dir).unwrap();
+    }
+    let ts = store.stats();
+
+    println!(
+        "n={n:<8} register {register_s:>7.3}s  cold {}B (+{}B index, {bytes_per_tenant:.1} B/tenant)",
+        st0.stored_bytes, st0.cold_index_bytes
+    );
+    println!(
+        "          checkout us: hot {us_hot:>8.1}  warm {us_warm:>8.1}  cold {us_cold:>8.1}"
+    );
+    println!(
+        "          trace: hot/warm/cold {}/{}/{}  demotions {}  evictions hot/warm {}/{}",
+        ts.hot_hits, ts.warm_hits, ts.cold_misses, ts.demotions, ts.evictions_hot, ts.evictions_warm
+    );
+
+    obj(vec![
+        ("tenants", num(n as f64)),
+        ("register_s", num(register_s)),
+        ("stored_bytes", num(st0.stored_bytes as f64)),
+        ("cold_index_bytes", num(st0.cold_index_bytes as f64)),
+        ("bytes_per_tenant", num(bytes_per_tenant)),
+        (
+            "checkout_us",
+            obj(vec![
+                ("hot_hit", num(us_hot)),
+                ("warm_hit", num(us_warm)),
+                ("cold_miss", num(us_cold)),
+            ]),
+        ),
+        (
+            "trace",
+            obj(vec![
+                ("accesses", num(TRACE_LEN as f64)),
+                ("zipf_s", num(ZIPF_S)),
+                ("hot_hits", num(ts.hot_hits as f64)),
+                ("warm_hits", num(ts.warm_hits as f64)),
+                ("cold_misses", num(ts.cold_misses as f64)),
+                ("promotions_hot", num(ts.promotions_hot as f64)),
+                ("demotions", num(ts.demotions as f64)),
+                ("evictions_hot", num(ts.evictions_hot as f64)),
+                ("evictions_warm", num(ts.evictions_warm as f64)),
+                ("hot_bytes", num(ts.hot_bytes as f64)),
+                ("warm_bytes", num(ts.warm_bytes as f64)),
+            ]),
+        ),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot schema
+// ---------------------------------------------------------------------------
+
+/// Deterministic echo of the storage geometry the numbers were measured
+/// at. `--check` recomputes this; drift fails the gate so stale numbers
+/// can never masquerade as current after a packing/knob change.
+fn record_section(base: &WeightSet) -> Value {
+    obj(vec![
+        ("scheme", s(SIM_SCHEME)),
+        ("n_theta", num(N_THETA as f64)),
+        ("precision", s("bf16")),
+        ("record_bytes", num(pack(&[0.0f32; N_THETA], Precision::Bf16).len() as f64)),
+        ("model_bytes", num((base.n_params() * 4) as f64)),
+        ("max_resident", num(MAX_RESIDENT as f64)),
+        ("max_warm", num(MAX_WARM as f64)),
+        ("trace_len", num(TRACE_LEN as f64)),
+        ("zipf_s", num(ZIPF_S)),
+        ("scales", Value::Arr(SCALES.iter().map(|&x| num(x as f64)).collect())),
+    ])
+}
+
+fn pos_finite(v: &Value, key: &str) -> Result<f64, String> {
+    let x = v.get(key).and_then(|x| x.f64()).map_err(|e| format!("{key}: {e:#}"))?;
+    if !x.is_finite() || x <= 0.0 {
+        return Err(format!("{key} not positive: {x}"));
+    }
+    Ok(x)
+}
+
+fn validate_schema(v: &Value, record_want: &Value) -> Result<(), String> {
+    let get = |key: &str| v.get(key).map_err(|e| format!("{e:#}"));
+    if get("kind")?.str().map_err(|e| format!("kind: {e:#}"))? != "bench_store" {
+        return Err("kind != bench_store".into());
+    }
+    let version = get("schema_version")?.usize().map_err(|e| format!("schema_version: {e:#}"))?;
+    if version != SCHEMA_VERSION {
+        return Err(format!("schema_version {version} != {SCHEMA_VERSION}"));
+    }
+    let record = get("record")?;
+    if record != record_want {
+        return Err(format!(
+            "record drift: committed {} != recomputed {} — the packed-record \
+             geometry or tier knobs changed; rerun `cargo bench --bench \
+             bench_store` and commit the refreshed snapshot",
+            record.to_string(),
+            record_want.to_string()
+        ));
+    }
+    let record_bytes =
+        record.get("record_bytes").and_then(|x| x.usize()).map_err(|e| format!("{e:#}"))?;
+    let model_bytes =
+        record.get("model_bytes").and_then(|x| x.usize()).map_err(|e| format!("{e:#}"))?;
+    let rows =
+        get("scales")?.arr().map(|a| a.to_vec()).map_err(|e| format!("scales: {e:#}"))?;
+    if rows.len() != SCALES.len() {
+        return Err(format!("scales has {} rows, expected {}", rows.len(), SCALES.len()));
+    }
+    for (row, &n) in rows.iter().zip(&SCALES) {
+        let ctx = |e: String| format!("n={n}: {e}");
+        let tenants =
+            row.get("tenants").and_then(|x| x.usize()).map_err(|e| ctx(format!("{e:#}")))?;
+        if tenants != n {
+            return Err(ctx(format!("tenants {tenants} != {n}")));
+        }
+        pos_finite(row, "register_s").map_err(ctx)?;
+        let stored =
+            row.get("stored_bytes").and_then(|x| x.usize()).map_err(|e| ctx(format!("{e:#}")))?;
+        if stored != record_bytes * n {
+            return Err(ctx(format!(
+                "stored_bytes {stored} != record_bytes {record_bytes} × tenants {n} — \
+                 the cold tier must cost exactly one packed record per tenant"
+            )));
+        }
+        let index = row
+            .get("cold_index_bytes")
+            .and_then(|x| x.usize())
+            .map_err(|e| ctx(format!("{e:#}")))?;
+        if index == 0 {
+            return Err(ctx("cold_index_bytes is 0 (index unaccounted)".into()));
+        }
+        let bpt = pos_finite(row, "bytes_per_tenant").map_err(ctx)?;
+        let want_bpt = (stored + index) as f64 / n as f64;
+        if (bpt - want_bpt).abs() > 0.01 * want_bpt {
+            return Err(ctx(format!(
+                "bytes_per_tenant {bpt:.2} inconsistent with (stored+index)/tenants {want_bpt:.2}"
+            )));
+        }
+        if bpt > BYTES_PER_TENANT_BOUND {
+            return Err(ctx(format!(
+                "bytes_per_tenant {bpt:.1} exceeds the documented {BYTES_PER_TENANT_BOUND} B bound"
+            )));
+        }
+        let us = row.get("checkout_us").map_err(|e| ctx(format!("{e:#}")))?;
+        let hot = pos_finite(us, "hot_hit").map_err(ctx)?;
+        let warm = pos_finite(us, "warm_hit").map_err(ctx)?;
+        let cold = pos_finite(us, "cold_miss").map_err(ctx)?;
+        // hot checkout skips the merge entirely — it must beat both
+        // merge paths. warm-vs-cold is merge-dominated on sim (the
+        // unpack it saves is 13 values), so no ordering gate there.
+        if hot >= warm || hot >= cold {
+            return Err(ctx(format!(
+                "hot-hit checkout {hot:.1}us is not cheaper than warm {warm:.1}us / \
+                 cold {cold:.1}us — the hot tier is not paying for itself"
+            )));
+        }
+        let tr = row.get("trace").map_err(|e| ctx(format!("{e:#}")))?;
+        let tget = |key: &str| {
+            tr.get(key).and_then(|x| x.usize()).map_err(|e| ctx(format!("trace.{key}: {e:#}")))
+        };
+        let accesses = tget("accesses")?;
+        if accesses != TRACE_LEN {
+            return Err(ctx(format!("trace.accesses {accesses} != {TRACE_LEN}")));
+        }
+        let (hot_hits, warm_hits, cold_misses) =
+            (tget("hot_hits")?, tget("warm_hits")?, tget("cold_misses")?);
+        if hot_hits + warm_hits + cold_misses != accesses {
+            return Err(ctx(format!(
+                "trace tier hits {hot_hits}+{warm_hits}+{cold_misses} do not sum to \
+                 accesses {accesses}"
+            )));
+        }
+        if tget("demotions")? == 0 || tget("evictions_hot")? == 0 {
+            return Err(ctx(
+                "trace saw no hot evictions/demotions — the tier machinery was not exercised"
+                    .into(),
+            ));
+        }
+        if tget("hot_bytes")? > MAX_RESIDENT * model_bytes {
+            return Err(ctx(format!(
+                "trace.hot_bytes {} exceeds max_resident × model_bytes {}",
+                tget("hot_bytes")?,
+                MAX_RESIDENT * model_bytes
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// `--check`: committed snapshot must be schema-valid, geometry-current
+/// and inside every capacity/latency gate; prints the committed tally
+/// that ci.sh surfaces in its full-mode report.
+fn check_snapshot(path: &str, record_want: &Value) -> Result<(), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let v = Value::parse(text.trim()).map_err(|e| format!("parsing {path}: {e:#}"))?;
+    validate_schema(&v, record_want)?;
+    let rows = v.get("scales").map_err(|e| format!("{e:#}"))?.arr().unwrap().to_vec();
+    for row in &rows {
+        let n = row.get("tenants").and_then(|x| x.usize()).unwrap();
+        let bpt = row.get("bytes_per_tenant").and_then(|x| x.f64()).unwrap();
+        let us = row.get("checkout_us").unwrap();
+        println!(
+            "store (committed): n={n:<8} {bpt:>5.1} B/tenant  checkout us \
+             hot {:>7.1} warm {:>7.1} cold {:>7.1}",
+            us.get("hot_hit").and_then(|x| x.f64()).unwrap(),
+            us.get("warm_hit").and_then(|x| x.f64()).unwrap(),
+            us.get("cold_miss").and_then(|x| x.f64()).unwrap(),
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// main
+// ---------------------------------------------------------------------------
+
+fn main() {
+    let check = std::env::args().any(|a| a == "--check");
+    let path = snapshot_path();
+    let rt = Runtime::sim(1).expect("sim runtime");
+    let tier = rt.manifest.tier(SIM_TIER).expect("sim tier").clone();
+    let base = WeightSet::init(&tier, 3).expect("sim base weights");
+    let record = record_section(&base);
+    if check {
+        match check_snapshot(&path, &record) {
+            Ok(()) => println!("BENCH_store.json: schema + record + capacity gates OK ({path})"),
+            Err(e) => {
+                eprintln!("BENCH_store.json check failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+
+    println!("== tiered adapter-store benchmarks (sim backend) ==\n");
+    let dir = std::env::temp_dir().join("tlrl_bench_store");
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    let mut rows = Vec::new();
+    for &n in &SCALES {
+        rows.push(run_scale(&rt, &base, n, &dir));
+    }
+
+    let snapshot = obj(vec![
+        ("kind", s("bench_store")),
+        ("schema_version", num(SCHEMA_VERSION as f64)),
+        ("record", record.clone()),
+        ("scales", Value::Arr(rows)),
+    ]);
+    if let Err(e) = validate_schema(&snapshot, &record) {
+        eprintln!("generated snapshot failed its own schema: {e}");
+        std::process::exit(1);
+    }
+    std::fs::write(&path, snapshot.to_string() + "\n").expect("writing snapshot");
+    println!("\nperf snapshot -> {path}");
+}

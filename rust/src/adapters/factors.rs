@@ -24,6 +24,21 @@ pub const MODULES: [(&str, &str); 7] = [
     ("down", "mlp_down"),
 ];
 
+/// Stable fingerprint of the adapted weight tensors — the same hash
+/// [`FactorSet::cached`] keys its disk cache with, exposed so callers
+/// (the serving store) can memoize factor sets in memory per base model
+/// without recomputing or re-reading them.
+pub fn weights_fingerprint(weights: &WeightSet) -> Result<u64> {
+    let mut h = 0u64;
+    for (_, wname) in MODULES {
+        let t = weights.get(wname)?;
+        let bytes =
+            unsafe { std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4) };
+        h ^= fnv1a(bytes);
+    }
+    Ok(h)
+}
+
 #[derive(Clone)]
 pub struct FactorSet {
     pub r: usize,
@@ -67,14 +82,7 @@ impl FactorSet {
         r: usize,
         cache_dir: &Path,
     ) -> Result<Self> {
-        let mut h = 0u64;
-        for (_, wname) in MODULES {
-            let t = weights.get(wname)?;
-            let bytes = unsafe {
-                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
-            };
-            h ^= fnv1a(bytes);
-        }
+        let h = weights_fingerprint(weights)?;
         let path = cache_dir.join(format!("{}_r{}_{:016x}.factors", tier.name, r, h));
         if path.exists() {
             if let Ok(f) = Self::load(&path, tier, r) {

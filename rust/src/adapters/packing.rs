@@ -140,6 +140,15 @@ pub fn roundtrip(xs: &[f32], precision: Precision) -> Vec<f32> {
 /// Serialize to the wire format (what the paper counts as "update bytes").
 pub fn pack(xs: &[f32], precision: Precision) -> Vec<u8> {
     let mut out = Vec::with_capacity(xs.len() * precision.bytes());
+    pack_into(xs, precision, &mut out);
+    out
+}
+
+/// Append the wire format of `xs` to `out` — the allocation-free core of
+/// [`pack`]; the serving cold tier packs records straight into its
+/// contiguous arena through this.
+pub fn pack_into(xs: &[f32], precision: Precision, out: &mut Vec<u8>) {
+    out.reserve(xs.len() * precision.bytes());
     match precision {
         Precision::F32 => {
             for &x in xs {
@@ -157,7 +166,6 @@ pub fn pack(xs: &[f32], precision: Precision) -> Vec<u8> {
             }
         }
     }
-    out
 }
 
 pub fn unpack(bytes: &[u8], precision: Precision) -> Vec<f32> {
@@ -281,6 +289,18 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// `pack_into` appends to existing bytes and matches `pack` exactly.
+    #[test]
+    fn pack_into_appends_and_matches_pack() {
+        let xs = [1.0f32, -2.5, f32::NAN, 0.0];
+        for p in [Precision::F32, Precision::Bf16, Precision::F16] {
+            let mut out = vec![0xAB, 0xCD];
+            pack_into(&xs, p, &mut out);
+            assert_eq!(&out[..2], &[0xAB, 0xCD]);
+            assert_eq!(&out[2..], pack(&xs, p).as_slice());
+        }
     }
 
     /// Regression: max-payload NaNs used to round into ±inf / -0.0 in bf16.

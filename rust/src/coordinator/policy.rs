@@ -139,6 +139,68 @@ impl Policy {
         Ok(p)
     }
 
+    /// Merge a stored adapter's theta into `base` without constructing a
+    /// full `Policy`: no base clone for the frozen copy, no `Theta`
+    /// re-init, exactly one merge execution.  This is the serving
+    /// store's promotion path — the old `activate` built a `Policy`
+    /// (base clone + identity merge) and then re-merged with the real
+    /// theta, i.e. two merges and two base copies per cold activation.
+    ///
+    /// `factors`: pass a cached set to skip the per-call disk/SVD path;
+    /// `None` falls back to [`FactorSet::cached`].  Schemes that need no
+    /// factors ignore the argument.
+    pub fn merge_theta(
+        rt: &Runtime,
+        tier_name: &str,
+        scheme_tag: &str,
+        base: &WeightSet,
+        theta: &[f32],
+        cache_dir: &Path,
+        factors: Option<&FactorSet>,
+    ) -> Result<WeightSet> {
+        if scheme_tag == "full" {
+            bail!("scheme \"full\" has no adapter theta to merge");
+        }
+        if base.tier != tier_name {
+            bail!("checkpoint tier {} != requested {tier_name}", base.tier);
+        }
+        let grad_info = rt.manifest.grad_exe(tier_name, "grpo", scheme_tag)?;
+        let scheme = grad_info.scheme.as_ref().context("adapter artifact missing scheme info")?;
+        if let Some(want) = grad_info.theta_size {
+            if theta.len() != want {
+                bail!("theta has {} params, scheme {scheme_tag} wants {want}", theta.len());
+            }
+        }
+        let computed;
+        let factors = if scheme.kind == "tinylora" || scheme.kind == "lora_xs" {
+            Some(match factors {
+                Some(f) => f,
+                None => {
+                    let tier = rt.manifest.tier(tier_name)?.clone();
+                    computed = FactorSet::cached(&tier, base, scheme.r, cache_dir)?;
+                    &computed
+                }
+            })
+        } else {
+            None
+        };
+        let merge_exe = rt.load(&rt.manifest.merge_exe(tier_name, scheme_tag)?.name)?;
+        let mut args: Vec<Arg> = Vec::with_capacity(ADAPTED.len() + 15);
+        for name in ADAPTED {
+            args.push(Arg::F32(base.get(name)?.clone()));
+        }
+        if let Some(f) = factors {
+            args.extend(f.args());
+        }
+        args.push(Arg::F32(TensorF32::from_vec(&[theta.len()], theta.to_vec())));
+        let out = rt.run(&merge_exe, &args)?;
+        let mut merged = base.clone();
+        for (i, name) in ADAPTED.iter().enumerate() {
+            merged.set(name, out.f32(i)?)?;
+        }
+        Ok(merged)
+    }
+
     /// Number of trained parameters (the paper's x-axis).
     pub fn trainable_params(&self) -> usize {
         if self.is_full {

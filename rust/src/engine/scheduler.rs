@@ -189,6 +189,20 @@ impl Scheduler {
     }
 }
 
+/// The distinct adapters of a formed wave, in first-appearance order —
+/// what the serving store's batch-aware promotion (`begin_wave`) takes:
+/// every adapter of the upcoming wave is promoted/merged exactly once,
+/// up front, off the per-request path.
+pub fn wave_adapters(wave: &[AdapterBatch]) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for b in wave {
+        if !out.iter().any(|a| *a == b.adapter) {
+            out.push(b.adapter.clone());
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -365,6 +379,16 @@ mod tests {
             );
         }
         assert_eq!(a.pending(), b.pending());
+    }
+
+    /// `wave_adapters` dedups while keeping first-appearance order (the
+    /// same adapter can flush several batches in one wave).
+    #[test]
+    fn wave_adapters_dedups_in_first_appearance_order() {
+        let batch = |a: &str| AdapterBatch { adapter: a.into(), requests: vec![] };
+        assert_eq!(wave_adapters(&[]), Vec::<String>::new());
+        let wave = [batch("b"), batch("a"), batch("b"), batch("c"), batch("a")];
+        assert_eq!(wave_adapters(&wave), vec!["b", "a", "c"]);
     }
 
     #[test]

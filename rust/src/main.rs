@@ -74,7 +74,7 @@ COMMANDS
   tenants     --tier micro [--n 4] [--scheme tinylora_r2_u13_all]
               [--steps 40] [--lr 2e-3] [--workers 4] [--devices 1]
               [--precision bf16] [--suite gsm8k-syn] [--seed 0]
-              [--max-resident 4]
+              [--max-resident 4] [--max-warm 32]
   eval        --tier micro [--suite gsm8k-syn | --ladder] [--n 64]
   bench       --tier micro [--suites gsm8k-syn,math500-syn,amc-syn,aime-syn]
               [--k 4] [--n 0] [--workers 4] [--devices 1] [--temperature -1]
@@ -88,7 +88,10 @@ COMMANDS
               adapter on the ladder; shaped by --suites/--bench-n/
               --temperature)
   serve-demo  --tier micro [--tenants 16] [--requests 64] [--workers 1]
-              [--devices 1]
+              [--devices 1] [--max-resident 4] [--max-warm 32]
+              (tiered store: --max-resident bounds hot merged models,
+              --max-warm bounds warm unpacked thetas; every tenant
+              always fits cold at ~26 B packed)
   info        [--tier micro]
 
 Shared: --artifacts DIR --ckpts DIR --results DIR --echo
@@ -312,14 +315,20 @@ fn cmd_tenants(args: &Args) -> Result<()> {
     let outcomes = tt.train(&rt, &mut log, workers > 1)?;
     let wall = t0.secs();
 
-    let mut store = AdapterStore::new(&tier, args.usize("max-resident", 4)?);
+    let mut store = AdapterStore::with_tiers(
+        &tier,
+        args.usize("max-resident", 4)?,
+        args.usize("max-warm", 32)?,
+    );
     tt.register_into(&mut store)?;
+    let st = store.stats();
     println!(
-        "{n} tenants x {} steps in {wall:.1}s ({} workers) — {} adapters in {} bytes",
+        "{n} tenants x {} steps in {wall:.1}s ({} workers) — {} adapters in {} bytes cold (+{} index)",
         proto.steps,
         workers,
         store.len(),
-        store.stored_bytes()
+        st.stored_bytes,
+        st.cold_index_bytes
     );
     for o in &outcomes {
         println!(
@@ -546,16 +555,21 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     let tenants = args.usize("tenants", 16)?;
     let n_requests = args.usize("requests", 64)?;
 
-    let mut store = AdapterStore::new(&tier, args.usize("max-resident", 4)?);
+    let mut store = AdapterStore::with_tiers(
+        &tier,
+        args.usize("max-resident", 4)?,
+        args.usize("max-warm", 32)?,
+    );
     let mut rng = Pcg64::new(11);
     for i in 0..tenants {
         let theta: Vec<f32> = (0..13).map(|_| rng.normal() * 0.01).collect();
         store.register(&format!("tenant-{i}"), "tinylora_r2_u13_all", &theta, Precision::Bf16)?;
     }
     println!(
-        "{} adapters stored in {} bytes (one resident model: {} bytes)",
+        "{} adapters stored in {} bytes cold (+{} index; one resident merged model: {} bytes)",
         store.len(),
         store.stored_bytes(),
+        store.stats().cold_index_bytes,
         store.resident_model_bytes(rt.manifest.tier(&tier)?.n_params)
     );
 
@@ -580,6 +594,17 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
         stats.served, stats.batches, stats.mean_occupancy, stats.mean_latency, stats.p95_latency,
         stats.merge_hit_rate, stats.wall_ms
     );
+    let st = stats.store;
+    println!(
+        "store: hits hot/warm {}/{} cold-misses {} | promos warm/hot {}/{} demotions {} | evictions hot/warm {}/{} | resident warm/hot {}/{} B",
+        st.hot_hits, st.warm_hits, st.cold_misses, st.promotions_warm, st.promotions_hot,
+        st.demotions, st.evictions_hot, st.evictions_warm, st.warm_bytes, st.hot_bytes
+    );
+    let mut log = RunLog::new(
+        Some(&dirs.results.join(format!("serve_{tier}.jsonl"))),
+        args.bool("echo"),
+    );
+    log.log_store(&tier, &st);
     let es = router.engine().stats();
     println!(
         "engine: {} generate calls | {} rows (+{} padding) | {:.0} ms decode",

@@ -157,6 +157,47 @@ impl RunLog {
         ]));
     }
 
+    /// Tiered adapter-store observability snapshot (`serving::StoreStats`):
+    /// per-tier hit/miss counts, promotions/demotions/evictions, and
+    /// resident-byte gauges, one row per snapshot.
+    pub fn log_store(&mut self, tier: &str, st: &crate::serving::store::StoreStats) {
+        if self.echo {
+            println!(
+                "[store {tier}] tenants {} acts {} hits hot/warm {}/{} cold {} evict hot/warm {}/{} bytes cold/warm/hot {}/{}/{}",
+                st.tenants,
+                st.activations,
+                st.hot_hits,
+                st.warm_hits,
+                st.cold_misses,
+                st.evictions_hot,
+                st.evictions_warm,
+                st.stored_bytes,
+                st.warm_bytes,
+                st.hot_bytes,
+            );
+        }
+        self.log(obj(vec![
+            ("kind", s("store")),
+            ("tier", s(tier)),
+            ("tenants", num(st.tenants as f64)),
+            ("activations", num(st.activations as f64)),
+            ("hot_hits", num(st.hot_hits as f64)),
+            ("warm_hits", num(st.warm_hits as f64)),
+            ("cold_misses", num(st.cold_misses as f64)),
+            ("promotions_warm", num(st.promotions_warm as f64)),
+            ("promotions_hot", num(st.promotions_hot as f64)),
+            ("demotions", num(st.demotions as f64)),
+            ("evictions_warm", num(st.evictions_warm as f64)),
+            ("evictions_hot", num(st.evictions_hot as f64)),
+            ("stored_bytes", num(st.stored_bytes as f64)),
+            ("cold_index_bytes", num(st.cold_index_bytes as f64)),
+            ("warm_bytes", num(st.warm_bytes as f64)),
+            ("hot_bytes", num(st.hot_bytes as f64)),
+            ("warm_entries", num(st.warm_entries as f64)),
+            ("hot_entries", num(st.hot_entries as f64)),
+        ]));
+    }
+
     pub fn log_eval(&mut self, tier: &str, scheme: &str, params: usize, suite: &str, acc: f32) {
         if self.echo {
             println!("[eval {tier}/{scheme} p={params}] {suite}: {acc:.3}");
@@ -186,14 +227,28 @@ mod tests {
             let mut log = RunLog::new(Some(&path), false);
             log.log_pretrain("nano", 0, 3.5, 0.1);
             log.log_sweep_point("tinylora_r2_u13_all", 1e-3, 0.7);
+            let st = crate::serving::store::StoreStats {
+                tenants: 1000,
+                activations: 40,
+                hot_hits: 25,
+                warm_hits: 5,
+                cold_misses: 10,
+                stored_bytes: 26_000,
+                ..Default::default()
+            };
+            log.log_store("sim", &st);
         }
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<_> = text.lines().collect();
-        assert_eq!(lines.len(), 2);
-        for l in lines {
+        assert_eq!(lines.len(), 3);
+        for l in &lines {
             let v = Value::parse(l).unwrap();
             assert!(v.get("kind").is_ok());
         }
+        let store_row = Value::parse(lines[2]).unwrap();
+        assert_eq!(store_row.get("kind").unwrap().str().unwrap(), "store");
+        assert_eq!(store_row.get("stored_bytes").unwrap().usize().unwrap(), 26_000);
+        assert_eq!(store_row.get("hot_hits").unwrap().usize().unwrap(), 25);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

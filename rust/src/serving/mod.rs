@@ -1,7 +1,8 @@
 //! Multi-adapter serving plane — the paper's deployment motivation:
-//! TinyLoRA adapters are small enough (26 bytes!) to store thousands of
-//! tenants, with an LRU of activated (merged) models and per-adapter
-//! dynamic batching.
+//! TinyLoRA adapters are small enough (26 bytes!) to store *millions* of
+//! tenants, through a three-tier store (packed cold arena → warm theta
+//! LRU → hot merged-model LRU) with lazy merge-on-first-request,
+//! batch-aware wave promotion, and per-adapter dynamic batching.
 //!
 //! Decode and batch formation live in the shared `engine` subsystem
 //! (`InferenceEngine`, `Scheduler`, `WorkerPool`); this module owns the
@@ -13,7 +14,7 @@ pub mod store;
 
 pub use batcher::{Batch, DynamicBatcher, Request};
 pub use router::{Response, Router, RouterStats};
-pub use store::{AdapterStore, ResidentLru};
+pub use store::{AdapterStore, ColdTier, Residency, ResidentLru, StoreStats};
 
 // convenience re-exports for serving clients
 pub use crate::engine::scheduler::{AdapterBatch, QueuedRequest, SchedPolicy, Scheduler};

@@ -1,6 +1,8 @@
-//! Request router: ties the adapter store and the per-adapter scheduler to
-//! the shared inference engine. One scheduling round = pick a batch,
-//! activate its adapter (LRU-cached merge), decode through
+//! Request router: ties the tiered adapter store and the per-adapter
+//! scheduler to the shared inference engine. One scheduling round = form
+//! a wave, promote+pin the wave's adapters once up front (batch-aware
+//! promotion — merges happen off the per-request path and an in-flight
+//! adapter can never be evicted), decode through
 //! `engine::InferenceEngine`, record latency. This is the
 //! vllm-router-shaped component of L3.
 //!
@@ -21,9 +23,9 @@ use std::path::PathBuf;
 use anyhow::Result;
 
 use crate::engine::pool::{GenJob, WorkerPool};
-use crate::engine::scheduler::{AdapterBatch, QueuedRequest, SchedPolicy, Scheduler};
+use crate::engine::scheduler::{wave_adapters, AdapterBatch, QueuedRequest, SchedPolicy, Scheduler};
 use crate::engine::{GenRow, InferenceEngine};
-use crate::serving::store::AdapterStore;
+use crate::serving::store::{AdapterStore, StoreStats};
 use crate::tasks::generator::Problem;
 use crate::tokenizer::Tokenizer;
 use crate::util::{Pcg64, Timer};
@@ -52,6 +54,8 @@ pub struct RouterStats {
     /// padding rows the engine spent on partial flushes (occupancy-aware
     /// geometry keeps this below the fixed-geometry baseline)
     pub padded_rows: u64,
+    /// tiered-store snapshot (per-tier hits, promotions, resident bytes)
+    pub store: StoreStats,
 }
 
 pub struct Router {
@@ -124,8 +128,14 @@ impl Router {
         let Some(batch) = self.scheduler.next_batch(self.now) else {
             return Ok(0);
         };
-        let n = self.serve_batch(rt, batch)?;
-        Ok(n)
+        // batch-aware promotion: a formed batch is a one-batch wave — its
+        // adapter is merged and pinned before serving, so concurrent
+        // promotion pressure can never evict it mid-flight
+        let wave = wave_adapters(std::slice::from_ref(&batch));
+        self.store.begin_wave(rt, &self.base, &wave, &self.ckpt_dir)?;
+        let n = self.serve_batch(rt, batch);
+        self.store.end_wave(&wave);
+        n
     }
 
     fn batch_problems(batch: &AdapterBatch) -> Vec<Problem> {
@@ -162,7 +172,13 @@ impl Router {
 
     fn serve_batch(&mut self, rt: &crate::runtime::Runtime, batch: AdapterBatch) -> Result<usize> {
         let t = Timer::start();
-        let weights = self.store.activate(rt, &self.base, &batch.adapter, &self.ckpt_dir)?;
+        // the wave promotion in `tick` already merged + pinned this
+        // adapter; checkout is a hot-tier clone. The activate fallback
+        // keeps direct callers (no wave) working.
+        let weights = match self.store.checkout_hot(&batch.adapter) {
+            Some(w) => w,
+            None => self.store.activate(rt, &self.base, &batch.adapter, &self.ckpt_dir)?,
+        };
         let problems = Self::batch_problems(&batch);
         // the engine pads short batches with the explicit sentinel and
         // returns exactly one row per real request. Serving decode is
@@ -219,16 +235,27 @@ impl Router {
                 continue;
             }
             let t = Timer::start();
+            // batch-aware promotion, stage 1: unpack the WHOLE wave's
+            // adapters into the warm tier now, off the per-chunk path —
+            // each chunk then only pays its own merges
+            self.store.prefetch_warm(&wave_adapters(&wave))?;
             // dispatch the wave `workers` batches at a time: only that
             // many merged models are materialized at once (the store's
-            // max_resident bound stays meaningful), and each chunk costs
-            // one virtual service interval — a wave of k batches takes
+            // max_resident bound stays meaningful — pins can exceed it
+            // only by the chunk width), and each chunk costs one virtual
+            // service interval — a wave of k batches takes
             // ceil(k/workers) intervals, same as `drain` when workers==1
             for chunk in wave.chunks(pool.workers) {
+                // stage 2: merge + pin this chunk's adapters once, up
+                // front; per-batch checkout below is a hot-tier clone
+                let chunk_adapters = wave_adapters(chunk);
+                self.store.begin_wave(rt, &self.base, &chunk_adapters, &self.ckpt_dir)?;
                 let mut jobs = Vec::with_capacity(chunk.len());
                 for (k, b) in chunk.iter().enumerate() {
-                    let weights =
-                        self.store.activate(rt, &self.base, &b.adapter, &self.ckpt_dir)?;
+                    let weights = self
+                        .store
+                        .checkout_hot(&b.adapter)
+                        .expect("begin_wave pinned every chunk adapter");
                     jobs.push(GenJob {
                         id: k as u64,
                         weights,
@@ -241,7 +268,9 @@ impl Router {
                         seed: b.requests.first().map(|r| r.id).unwrap_or(0),
                     });
                 }
-                let results = pool.serve(rt, &self.engine, jobs)?;
+                let results = pool.serve(rt, &self.engine, jobs);
+                self.store.end_wave(&chunk_adapters);
+                let results = results?;
                 self.now += self.service_time;
                 for (b, res) in chunk.iter().zip(&results) {
                     self.record(b, &res.rows);
@@ -268,6 +297,7 @@ impl Router {
             wall_ms: self.wall_ms,
             merge_hit_rate: self.store.hit_rate(),
             padded_rows: self.engine.stats().padded_rows,
+            store: self.store.stats(),
         }
     }
 }

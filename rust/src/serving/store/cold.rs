@@ -1,0 +1,317 @@
+//! Cold tier: every registered adapter as a fixed-width packed record in
+//! one contiguous grow-only byte arena — 26 bytes for the headline
+//! 13-param bf16 config — plus a compact id-interned index (name bytes in
+//! a second arena, scheme tags interned to a u16, open-addressing table
+//! of u32 record ids).  No per-tenant heap allocations: a million tenants
+//! cost `record_width × 1M` data bytes (~26 MB) plus tens of bytes of
+//! index per tenant, instead of a `String` + `Vec<u8>` + hash-map entry
+//! each.
+
+use anyhow::{bail, Result};
+
+use crate::adapters::packing::{pack_into, unpack, Precision};
+use crate::util::fnv1a;
+
+/// Empty slot marker in the open-addressing table.
+const EMPTY: u32 = u32::MAX;
+
+/// One adapter's metadata: 20 bytes, offsets into the shared arenas.
+#[derive(Clone, Copy)]
+struct ColdRecord {
+    name_off: u32,
+    name_len: u32,
+    data_off: u32,
+    n_params: u32,
+    scheme: u16,
+    precision: u8,
+}
+
+fn precision_code(p: Precision) -> u8 {
+    match p {
+        Precision::F32 => 0,
+        Precision::Bf16 => 1,
+        Precision::F16 => 2,
+    }
+}
+
+fn code_precision(c: u8) -> Precision {
+    match c {
+        0 => Precision::F32,
+        1 => Precision::Bf16,
+        2 => Precision::F16,
+        _ => unreachable!("invalid precision code {c}"),
+    }
+}
+
+/// The arena store itself.  Ids are dense `u32`s in registration order;
+/// lookup by name goes through a power-of-two open-addressing table kept
+/// under 0.5 load factor (linear probing, fnv1a of the name bytes).
+/// Arena offsets are `u32`, capping each arena at 4 GB — 165 M tenants
+/// of 26-byte records, far past the 1M design point.
+pub struct ColdTier {
+    /// packed theta bytes, records laid end to end
+    data: Vec<u8>,
+    /// adapter name bytes, laid end to end (no per-name String)
+    names: Vec<u8>,
+    records: Vec<ColdRecord>,
+    /// interned scheme tags — a handful of distinct values shared by
+    /// millions of tenants
+    schemes: Vec<String>,
+    /// open-addressing index: slot -> record id (EMPTY = vacant)
+    table: Vec<u32>,
+}
+
+impl Default for ColdTier {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ColdTier {
+    pub fn new() -> Self {
+        Self {
+            data: Vec::new(),
+            names: Vec::new(),
+            records: Vec::new(),
+            schemes: Vec::new(),
+            table: vec![EMPTY; 16],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    fn name_bytes(&self, id: u32) -> &[u8] {
+        let r = &self.records[id as usize];
+        &self.names[r.name_off as usize..(r.name_off + r.name_len) as usize]
+    }
+
+    /// Probe the table for `name`: returns the slot where it lives or
+    /// would go, plus the record id if present.
+    fn probe(&self, name: &[u8]) -> (usize, Option<u32>) {
+        let mask = self.table.len() - 1;
+        let mut i = (fnv1a(name) as usize) & mask;
+        loop {
+            match self.table[i] {
+                EMPTY => return (i, None),
+                id if self.name_bytes(id) == name => return (i, Some(id)),
+                _ => i = (i + 1) & mask,
+            }
+        }
+    }
+
+    fn grow_table(&mut self) {
+        let mask = self.table.len() * 2 - 1;
+        let mut table = vec![EMPTY; self.table.len() * 2];
+        for id in 0..self.records.len() as u32 {
+            let mut i = (fnv1a(self.name_bytes(id)) as usize) & mask;
+            while table[i] != EMPTY {
+                i = (i + 1) & mask;
+            }
+            table[i] = id;
+        }
+        self.table = table;
+    }
+
+    fn intern_scheme(&mut self, tag: &str) -> Result<u16> {
+        if let Some(i) = self.schemes.iter().position(|s| s == tag) {
+            return Ok(i as u16);
+        }
+        if self.schemes.len() > u16::MAX as usize {
+            bail!("too many distinct scheme tags");
+        }
+        self.schemes.push(tag.to_string());
+        Ok((self.schemes.len() - 1) as u16)
+    }
+
+    /// Append a packed record. Duplicate names are an error.
+    pub fn insert(
+        &mut self,
+        name: &str,
+        scheme_tag: &str,
+        theta: &[f32],
+        precision: Precision,
+    ) -> Result<u32> {
+        if self.records.len() >= EMPTY as usize {
+            bail!("cold tier record id space exhausted");
+        }
+        if self.records.len() + 1 > self.table.len() / 2 {
+            self.grow_table();
+        }
+        let (slot, existing) = self.probe(name.as_bytes());
+        if existing.is_some() {
+            bail!("adapter {name:?} already registered");
+        }
+        let width = theta.len() * precision.bytes();
+        if self.data.len() + width > u32::MAX as usize
+            || self.names.len() + name.len() > u32::MAX as usize
+        {
+            bail!("cold tier arena exceeds u32 offset space");
+        }
+        let scheme = self.intern_scheme(scheme_tag)?;
+        let id = self.records.len() as u32;
+        let name_off = self.names.len() as u32;
+        self.names.extend_from_slice(name.as_bytes());
+        let data_off = self.data.len() as u32;
+        pack_into(theta, precision, &mut self.data);
+        self.records.push(ColdRecord {
+            name_off,
+            name_len: name.len() as u32,
+            data_off,
+            n_params: theta.len() as u32,
+            scheme,
+            precision: precision_code(precision),
+        });
+        self.table[slot] = id;
+        Ok(id)
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<u32> {
+        self.probe(name.as_bytes()).1
+    }
+
+    pub fn name(&self, id: u32) -> &str {
+        std::str::from_utf8(self.name_bytes(id)).expect("names are inserted as valid utf8")
+    }
+
+    pub fn scheme_tag(&self, id: u32) -> &str {
+        &self.schemes[self.records[id as usize].scheme as usize]
+    }
+
+    pub fn precision(&self, id: u32) -> Precision {
+        code_precision(self.records[id as usize].precision)
+    }
+
+    pub fn n_params(&self, id: u32) -> usize {
+        self.records[id as usize].n_params as usize
+    }
+
+    /// The record's packed wire bytes (exactly what `packing::pack` of
+    /// the original theta produces).
+    pub fn packed(&self, id: u32) -> &[u8] {
+        let r = &self.records[id as usize];
+        let width = r.n_params as usize * code_precision(r.precision).bytes();
+        &self.data[r.data_off as usize..r.data_off as usize + width]
+    }
+
+    pub fn unpack_theta(&self, id: u32) -> Vec<f32> {
+        unpack(self.packed(id), self.precision(id))
+    }
+
+    /// Bytes of packed adapter data (the paper's 26 B × tenants figure).
+    pub fn data_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Bytes the index costs on top of the data arena: records, name
+    /// arena, probe table and interned scheme tags, at allocated
+    /// capacity (what the process actually holds).
+    pub fn index_bytes(&self) -> usize {
+        self.records.capacity() * std::mem::size_of::<ColdRecord>()
+            + self.names.capacity()
+            + self.table.len() * std::mem::size_of::<u32>()
+            + self.schemes.capacity() * std::mem::size_of::<String>()
+            + self.schemes.iter().map(|s| s.capacity()).sum::<usize>()
+    }
+
+    /// All names, sorted (diagnostic/test walk — O(n log n)).
+    pub fn names_sorted(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            (0..self.records.len() as u32).map(|id| self.name(id).to_string()).collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::packing::pack;
+    use crate::util::Pcg64;
+
+    /// Arena record round-trip against `packing::{pack,unpack}` over
+    /// arbitrary bit patterns at every precision: the stored bytes must
+    /// be exactly `pack(theta)`, and `unpack_theta` must be bitwise equal
+    /// to unpacking those bytes (specials — NaN, ±inf, denormals —
+    /// included by construction).
+    #[test]
+    fn record_roundtrip_matches_pack_unpack_over_bit_patterns() {
+        let mut rng = Pcg64::new(0xC01D);
+        for case in 0..200 {
+            let precision = match case % 3 {
+                0 => Precision::Bf16,
+                1 => Precision::F16,
+                _ => Precision::F32,
+            };
+            let n = 1 + (rng.next_u64() % 32) as usize;
+            let theta: Vec<f32> =
+                (0..n).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+            let mut tier = ColdTier::new();
+            let id = tier.insert("t", "scheme", &theta, precision).unwrap();
+            assert_eq!(tier.packed(id), pack(&theta, precision).as_slice());
+            let via_arena = tier.unpack_theta(id);
+            let via_pack = unpack(&pack(&theta, precision), precision);
+            assert_eq!(via_arena.len(), via_pack.len());
+            for (a, b) in via_arena.iter().zip(&via_pack) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    /// The headline config: 13 bf16 params pack to exactly 26 bytes in
+    /// the arena, metadata intact.
+    #[test]
+    fn headline_13_param_record_is_26_bytes() {
+        let mut tier = ColdTier::new();
+        let theta = [0.25f32; 13];
+        let id = tier.insert("tenant-0", "tinylora_r2_u13_all", &theta, Precision::Bf16).unwrap();
+        assert_eq!(tier.data_bytes(), 26);
+        assert_eq!(tier.packed(id).len(), 26);
+        assert_eq!(tier.n_params(id), 13);
+        assert_eq!(tier.name(id), "tenant-0");
+        assert_eq!(tier.scheme_tag(id), "tinylora_r2_u13_all");
+        assert_eq!(tier.precision(id), Precision::Bf16);
+        assert_eq!(tier.unpack_theta(id), vec![0.25f32; 13]);
+    }
+
+    #[test]
+    fn duplicate_names_rejected_lookups_survive_rehash() {
+        let mut tier = ColdTier::new();
+        for i in 0..10_000 {
+            tier.insert(&format!("t{i}"), "s", &[i as f32; 13], Precision::Bf16).unwrap();
+        }
+        assert!(tier.insert("t42", "s", &[0.0; 13], Precision::Bf16).is_err());
+        assert_eq!(tier.len(), 10_000);
+        // 26 B × tenants, exactly — the bound the bench gate enforces
+        assert_eq!(tier.data_bytes(), 26 * 10_000);
+        // every name still resolves after many table rehashes
+        for i in (0..10_000).step_by(97) {
+            let id = tier.lookup(&format!("t{i}")).unwrap();
+            assert_eq!(tier.name(id), format!("t{i}"));
+        }
+        assert_eq!(tier.lookup("t10000"), None);
+        assert_eq!(tier.lookup(""), None);
+        // one interned scheme string for all 10k tenants: the index stays
+        // tens of bytes per tenant
+        assert!(tier.index_bytes() < 64 * 10_000, "index {} B", tier.index_bytes());
+    }
+
+    #[test]
+    fn mixed_precisions_share_one_arena() {
+        let mut tier = ColdTier::new();
+        let a = tier.insert("a", "s1", &[1.0; 13], Precision::Bf16).unwrap();
+        let b = tier.insert("b", "s2", &[2.0; 13], Precision::F32).unwrap();
+        let c = tier.insert("c", "s1", &[3.0; 4], Precision::F16).unwrap();
+        assert_eq!(tier.data_bytes(), 26 + 52 + 8);
+        assert_eq!(tier.unpack_theta(a), vec![1.0f32; 13]);
+        assert_eq!(tier.unpack_theta(b), vec![2.0f32; 13]);
+        assert_eq!(tier.unpack_theta(c), vec![3.0f32; 4]);
+        assert_eq!(tier.scheme_tag(c), "s1");
+        assert_eq!(tier.names_sorted(), vec!["a", "b", "c"]);
+    }
+}

@@ -1,0 +1,284 @@
+//! Access-ordered LRU map with O(1) touch/insert/evict and an
+//! eviction-*value* path: `trim` hands evicted entries back to the
+//! caller instead of dropping them, so the tiered store can demote a
+//! merged model (hot → warm) rather than throw the merge away.
+
+use std::collections::HashMap;
+
+const NIL: usize = usize::MAX;
+
+struct LruSlot<V> {
+    name: String,
+    /// `None` only while the slot sits on the free list (so an evicted
+    /// value is moved out at eviction time, not at slot reuse).
+    value: Option<V>,
+    prev: usize,
+    next: usize,
+}
+
+/// Access-ordered map with O(1) touch, insert and LRU evict: a `HashMap`
+/// from name to a slot in an index-linked list (LRU at `head`, MRU at
+/// `tail`).  Public only so `benches/bench_trainer.rs` can compare it to
+/// the seed's `Vec`-scan — serving code goes through `AdapterStore`.
+pub struct ResidentLru<V> {
+    map: HashMap<String, usize>,
+    slots: Vec<LruSlot<V>>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+}
+
+impl<V> Default for ResidentLru<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V> ResidentLru<V> {
+    pub fn new() -> Self {
+        Self { map: HashMap::new(), slots: Vec::new(), free: Vec::new(), head: NIL, tail: NIL }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Membership without promoting to MRU (read-only probes).
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.slots[prev].next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.slots[next].prev = prev;
+        }
+        self.slots[i].prev = NIL;
+        self.slots[i].next = NIL;
+    }
+
+    fn push_mru(&mut self, i: usize) {
+        self.slots[i].prev = self.tail;
+        self.slots[i].next = NIL;
+        if self.tail == NIL {
+            self.head = i;
+        } else {
+            self.slots[self.tail].next = i;
+        }
+        self.tail = i;
+    }
+
+    /// Look up and mark as most-recently used. O(1).
+    pub fn touch(&mut self, name: &str) -> Option<&V> {
+        let &i = self.map.get(name)?;
+        if self.tail != i {
+            self.unlink(i);
+            self.push_mru(i);
+        }
+        self.slots[i].value.as_ref()
+    }
+
+    /// Insert as most-recently used with no capacity bound (the caller
+    /// trims separately — the tiered store must insert before it knows
+    /// which entries are pinned). Overwriting an existing name replaces
+    /// its value and promotes it. O(1).
+    pub fn insert_unbounded(&mut self, name: &str, value: V) {
+        if let Some(&i) = self.map.get(name) {
+            // overwrite existing entry and promote to MRU
+            self.slots[i].value = Some(value);
+            if self.tail != i {
+                self.unlink(i);
+                self.push_mru(i);
+            }
+            return;
+        }
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] =
+                    LruSlot { name: name.to_string(), value: Some(value), prev: NIL, next: NIL };
+                i
+            }
+            None => {
+                self.slots.push(LruSlot {
+                    name: name.to_string(),
+                    value: Some(value),
+                    prev: NIL,
+                    next: NIL,
+                });
+                self.slots.len() - 1
+            }
+        };
+        self.map.insert(name.to_string(), i);
+        self.push_mru(i);
+    }
+
+    /// Insert as most-recently used, evicting the LRU entry when above
+    /// `capacity` (clamped to ≥ 1, so the just-inserted entry always
+    /// survives). Returns the evicted entry, if any. O(1).
+    pub fn insert(&mut self, name: &str, value: V, capacity: usize) -> Option<(String, V)> {
+        self.insert_unbounded(name, value);
+        self.trim(capacity.max(1), |_| true).pop()
+    }
+
+    /// Evict least-recently-used entries until `len() <= capacity`
+    /// (exact — capacity 0 empties the map), skipping entries for which
+    /// `evictable` returns false.  Returns the evicted (name, value)
+    /// pairs in eviction (LRU-first) order; this is the demotion path —
+    /// the caller decides what the evicted values become.  If every
+    /// remaining entry is unevictable the map is left over capacity.
+    pub fn trim<F: Fn(&str) -> bool>(&mut self, capacity: usize, evictable: F) -> Vec<(String, V)> {
+        let mut out = Vec::new();
+        while self.map.len() > capacity {
+            // walk LRU→MRU to the first evictable entry
+            let mut i = self.head;
+            while i != NIL && !evictable(&self.slots[i].name) {
+                i = self.slots[i].next;
+            }
+            if i == NIL {
+                break; // everything left is pinned
+            }
+            self.unlink(i);
+            let name = std::mem::take(&mut self.slots[i].name);
+            let value = self.slots[i].value.take().expect("live slot has a value");
+            self.map.remove(&name);
+            self.free.push(i);
+            out.push((name, value));
+        }
+        out
+    }
+
+    /// Names from LRU to MRU (test/diagnostic walk — O(n)).
+    pub fn order(&self) -> Vec<String> {
+        let mut out = Vec::with_capacity(self.map.len());
+        let mut i = self.head;
+        while i != NIL {
+            out.push(self.slots[i].name.clone());
+            i = self.slots[i].next;
+        }
+        out
+    }
+
+    /// All live (name, value) pairs in LRU→MRU order (diagnostics/tests).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &V)> {
+        let mut i = self.head;
+        std::iter::from_fn(move || {
+            if i == NIL {
+                return None;
+            }
+            let s = &self.slots[i];
+            i = s.next;
+            Some((s.name.as_str(), s.value.as_ref().expect("live slot has a value")))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Eviction order must be access order, not insertion order.
+    #[test]
+    fn lru_evicts_in_access_order() {
+        let mut lru: ResidentLru<u32> = ResidentLru::new();
+        assert_eq!(lru.insert("a", 1, 3), None);
+        assert_eq!(lru.insert("b", 2, 3), None);
+        assert_eq!(lru.insert("c", 3, 3), None);
+        assert_eq!(lru.order(), vec!["a", "b", "c"]);
+        // touching "a" promotes it past "b" and "c"
+        assert_eq!(lru.touch("a"), Some(&1));
+        assert_eq!(lru.order(), vec!["b", "c", "a"]);
+        // inserting above capacity evicts the LRU entry: "b", not "a" —
+        // and hands back b's value (the eviction-callback path)
+        assert_eq!(lru.insert("d", 4, 3), Some(("b".to_string(), 2)));
+        assert_eq!(lru.order(), vec!["c", "a", "d"]);
+        assert_eq!(lru.touch("b"), None);
+        // slot reuse: a new insert reuses b's freed slot and keeps order
+        assert_eq!(lru.insert("e", 5, 3), Some(("c".to_string(), 3)));
+        assert_eq!(lru.order(), vec!["a", "d", "e"]);
+        assert_eq!(lru.len(), 3);
+    }
+
+    #[test]
+    fn lru_overwrite_promotes_without_evicting() {
+        let mut lru: ResidentLru<u32> = ResidentLru::new();
+        lru.insert("a", 1, 2);
+        lru.insert("b", 2, 2);
+        assert_eq!(lru.insert("a", 10, 2), None);
+        assert_eq!(lru.order(), vec!["b", "a"]);
+        assert_eq!(lru.touch("a"), Some(&10));
+        assert_eq!(lru.len(), 2);
+    }
+
+    /// Capacity 0 through the bounded path clamps to 1 (the insert must
+    /// survive its own call); through `trim` it is exact and empties.
+    #[test]
+    fn capacity_zero_keeps_exactly_the_newest_then_trims_to_nothing() {
+        let mut lru: ResidentLru<u32> = ResidentLru::new();
+        assert_eq!(lru.insert("a", 1, 0), None);
+        assert_eq!(lru.insert("b", 2, 0), Some(("a".to_string(), 1)));
+        assert_eq!(lru.len(), 1);
+        assert_eq!(lru.order(), vec!["b"]);
+        assert_eq!(lru.trim(0, |_| true), vec![("b".to_string(), 2)]);
+        assert!(lru.is_empty());
+        assert_eq!(lru.order(), Vec::<String>::new());
+        // the emptied map keeps working
+        assert_eq!(lru.insert("c", 3, 0), None);
+        assert_eq!(lru.touch("c"), Some(&3));
+    }
+
+    #[test]
+    fn capacity_one_insert_touch_evict_sequence() {
+        let mut lru: ResidentLru<u32> = ResidentLru::new();
+        assert_eq!(lru.insert("a", 1, 1), None);
+        assert_eq!(lru.touch("a"), Some(&1));
+        assert_eq!(lru.insert("b", 2, 1), Some(("a".to_string(), 1)));
+        assert_eq!(lru.touch("a"), None);
+        assert_eq!(lru.touch("b"), Some(&2));
+        // overwrite at capacity 1 must not evict the entry it replaces
+        assert_eq!(lru.insert("b", 20, 1), None);
+        assert_eq!(lru.touch("b"), Some(&20));
+        assert_eq!(lru.len(), 1);
+    }
+
+    /// `trim` skips unevictable (pinned) names and may leave the map over
+    /// capacity when everything remaining is pinned.
+    #[test]
+    fn trim_respects_pins_and_returns_values_lru_first() {
+        let mut lru: ResidentLru<u32> = ResidentLru::new();
+        lru.insert_unbounded("a", 1);
+        lru.insert_unbounded("b", 2);
+        lru.insert_unbounded("c", 3);
+        lru.insert_unbounded("d", 4);
+        // "a" (the LRU) is pinned: trim to 2 must evict b then c instead
+        let evicted = lru.trim(2, |n| n != "a");
+        assert_eq!(evicted, vec![("b".to_string(), 2), ("c".to_string(), 3)]);
+        assert_eq!(lru.order(), vec!["a", "d"]);
+        // everything pinned: trim gives up, map stays over capacity
+        assert_eq!(lru.trim(0, |_| false), vec![]);
+        assert_eq!(lru.len(), 2);
+        assert!(lru.contains("a") && lru.contains("d"));
+    }
+
+    #[test]
+    fn iter_walks_lru_to_mru_without_promoting() {
+        let mut lru: ResidentLru<u32> = ResidentLru::new();
+        lru.insert_unbounded("a", 1);
+        lru.insert_unbounded("b", 2);
+        lru.touch("a");
+        let pairs: Vec<(String, u32)> = lru.iter().map(|(n, &v)| (n.to_string(), v)).collect();
+        assert_eq!(pairs, vec![("b".to_string(), 2), ("a".to_string(), 1)]);
+        assert_eq!(lru.order(), vec!["b", "a"]); // iter did not reorder
+        assert!(lru.contains("a") && !lru.contains("z"));
+    }
+}

@@ -1,0 +1,604 @@
+//! Million-tenant adapter plane — the paper's serving motivation made
+//! concrete: a trained adapter is 13 params / 26 bytes, so one box holds
+//! *millions* of per-tenant adapters (paper §1, citing Punica).
+//!
+//! Three inclusive tiers, promotion is lazy (merge on first request):
+//!
+//! ```text
+//!   cold  — every tenant, packed bytes in one contiguous arena
+//!           (26 B/tenant headline + tens of bytes of index)
+//!   warm  — LRU of unpacked f32 theta vectors (52 B/tenant at u=13)
+//!   hot   — LRU of fully-merged WeightSets (n_params × 4 B each)
+//! ```
+//!
+//! `activate` walks cold → warm → hot; hot evictions *demote* to warm
+//! (the unpacked theta survives, only the expensive merge is dropped) so
+//! re-promotion skips the cold-tier unpack.  Batch-aware promotion:
+//! `begin_wave` pins and promotes every adapter of a formed wave once,
+//! up front, off the per-request path, and demotion never evicts an
+//! adapter pinned by an in-flight wave (the hot tier may transiently
+//! exceed its capacity by the wave's width — see DESIGN.md §12).
+
+mod cold;
+mod lru;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::adapters::factors::{weights_fingerprint, FactorSet};
+use crate::adapters::packing::Precision;
+use crate::coordinator::policy::Policy;
+use crate::runtime::Runtime;
+use crate::weights::WeightSet;
+
+pub use cold::ColdTier;
+pub use lru::ResidentLru;
+
+/// Which tier currently holds an adapter (highest wins; read-only probe).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Residency {
+    Hot,
+    Warm,
+    Cold,
+    Unknown,
+}
+
+/// Point-in-time observability snapshot: per-tier hit/transition counts
+/// (events since construction or [`AdapterStore::reset_stats`]) and
+/// resident-byte gauges.  Logged to the JSONL metrics stream via
+/// `metrics::RunLog::log_store`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StoreStats {
+    pub tenants: usize,
+    pub activations: u64,
+    pub hot_hits: u64,
+    pub warm_hits: u64,
+    pub cold_misses: u64,
+    pub promotions_warm: u64,
+    pub promotions_hot: u64,
+    /// hot evictions whose merged model was demoted to a warm entry
+    pub demotions: u64,
+    pub evictions_warm: u64,
+    pub evictions_hot: u64,
+    /// packed cold-tier data bytes (maintained counter, not a scan)
+    pub stored_bytes: usize,
+    pub cold_index_bytes: usize,
+    pub warm_bytes: usize,
+    pub hot_bytes: usize,
+    pub warm_entries: usize,
+    pub hot_entries: usize,
+}
+
+#[derive(Clone, Copy, Default)]
+struct Counters {
+    activations: u64,
+    hot_hits: u64,
+    warm_hits: u64,
+    cold_misses: u64,
+    promotions_warm: u64,
+    promotions_hot: u64,
+    demotions: u64,
+    evictions_warm: u64,
+    evictions_hot: u64,
+}
+
+pub struct AdapterStore {
+    pub tier: String,
+    cold: ColdTier,
+    /// unpacked theta vectors, access-ordered
+    warm: ResidentLru<Vec<f32>>,
+    /// fully-merged models, access-ordered
+    hot: ResidentLru<WeightSet>,
+    /// hot-tier capacity (merged models are the expensive resource)
+    pub max_resident: usize,
+    /// warm-tier capacity; 0 disables the warm tier entirely
+    pub max_warm: usize,
+    /// adapters pinned by in-flight waves (name -> pin count); pinned
+    /// entries are never evicted from hot
+    pinned: HashMap<String, usize>,
+    /// per-(scheme, base-fingerprint) factor cache shared across tenants
+    factors: HashMap<(String, u64), Arc<FactorSet>>,
+    stored_bytes: usize,
+    warm_bytes: usize,
+    hot_bytes: usize,
+    c: Counters,
+}
+
+impl AdapterStore {
+    pub fn new(tier: &str, max_resident: usize) -> Self {
+        // default warm tier: one demotion generation per hot slot, ×8
+        Self::with_tiers(tier, max_resident, max_resident.max(1) * 8)
+    }
+
+    pub fn with_tiers(tier: &str, max_resident: usize, max_warm: usize) -> Self {
+        Self {
+            tier: tier.to_string(),
+            cold: ColdTier::new(),
+            warm: ResidentLru::new(),
+            hot: ResidentLru::new(),
+            max_resident: max_resident.max(1),
+            max_warm,
+            pinned: HashMap::new(),
+            factors: HashMap::new(),
+            stored_bytes: 0,
+            warm_bytes: 0,
+            hot_bytes: 0,
+            c: Counters::default(),
+        }
+    }
+
+    /// Register a trained adapter straight into the cold tier (packs
+    /// theta at the given precision). Duplicates are an error.
+    pub fn register(
+        &mut self,
+        name: &str,
+        scheme_tag: &str,
+        theta: &[f32],
+        precision: Precision,
+    ) -> Result<()> {
+        let id = self.cold.insert(name, scheme_tag, theta, precision)?;
+        self.stored_bytes += self.cold.packed(id).len();
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.cold.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cold.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.cold.names_sorted()
+    }
+
+    /// Total packed bytes of all stored adapters (the paper's storage
+    /// argument).  O(1): a counter maintained on register — the cold
+    /// tier is grow-only, so nothing ever subtracts.
+    pub fn stored_bytes(&self) -> usize {
+        self.stored_bytes
+    }
+
+    /// O(n) recomputation of [`Self::stored_bytes`] from the arena
+    /// records — test/diagnostic cross-check for the counter.
+    pub fn recompute_stored_bytes(&self) -> usize {
+        (0..self.cold.len() as u32).map(|id| self.cold.packed(id).len()).sum()
+    }
+
+    /// Bytes one resident merged model costs.
+    pub fn resident_model_bytes(&self, n_params: usize) -> usize {
+        n_params * 4
+    }
+
+    /// Resident merged models from LRU to MRU (diagnostics/tests).
+    pub fn resident_order(&self) -> Vec<String> {
+        self.hot.order()
+    }
+
+    /// Which tier holds `name` right now (no promotion, no recency bump).
+    pub fn residency(&self, name: &str) -> Residency {
+        if self.hot.contains(name) {
+            Residency::Hot
+        } else if self.warm.contains(name) {
+            Residency::Warm
+        } else if self.cold.lookup(name).is_some() {
+            Residency::Cold
+        } else {
+            Residency::Unknown
+        }
+    }
+
+    /// Activate an adapter for one request: return merged weights,
+    /// promoting cold → warm → hot as needed.  `base` is the shared
+    /// frozen base model.
+    pub fn activate(
+        &mut self,
+        rt: &Runtime,
+        base: &WeightSet,
+        name: &str,
+        ckpt_dir: &Path,
+    ) -> Result<WeightSet> {
+        self.promote(rt, base, name, ckpt_dir, true)?;
+        Ok(self.hot.touch(name).expect("promote left the adapter hot").clone())
+    }
+
+    /// Hot-tier checkout without touching hit/activation counters: the
+    /// wave path counts one activation per adapter at `begin_wave`, then
+    /// checks each batch's (already promoted and pinned) weights out
+    /// through this.
+    pub fn checkout_hot(&mut self, name: &str) -> Option<WeightSet> {
+        self.hot.touch(name).cloned()
+    }
+
+    /// Batch-aware promotion: pin every adapter of a formed wave, then
+    /// promote/merge each exactly once, up front — per-request serving
+    /// then only clones hot entries.  Pins nest (waves may overlap) and
+    /// guarantee demotion never evicts an in-flight adapter, at the cost
+    /// of letting the hot tier transiently exceed `max_resident` by the
+    /// wave width.  On error the wave's pins are released.
+    pub fn begin_wave(
+        &mut self,
+        rt: &Runtime,
+        base: &WeightSet,
+        adapters: &[String],
+        ckpt_dir: &Path,
+    ) -> Result<()> {
+        for name in adapters {
+            *self.pinned.entry(name.clone()).or_insert(0) += 1;
+        }
+        for name in adapters {
+            if let Err(e) = self.promote(rt, base, name, ckpt_dir, true) {
+                self.end_wave(adapters);
+                return Err(e).with_context(|| format!("promoting wave adapter {name:?}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Release a wave's pins and trim the hot tier back to capacity
+    /// (deferred demotions happen here).
+    pub fn end_wave(&mut self, adapters: &[String]) {
+        for name in adapters {
+            if let Some(n) = self.pinned.get_mut(name.as_str()) {
+                *n -= 1;
+                if *n == 0 {
+                    self.pinned.remove(name.as_str());
+                }
+            }
+        }
+        self.hot_trim();
+    }
+
+    /// Stage a set of adapters into the warm tier (cold-tier unpack only,
+    /// no merge) — e.g. the whole upcoming wave before its chunks pin and
+    /// merge their slices.  Counts tier transitions but no activations.
+    pub fn prefetch_warm(&mut self, adapters: &[String]) -> Result<()> {
+        if self.max_warm == 0 {
+            return Ok(());
+        }
+        for name in adapters {
+            if self.hot.contains(name) || self.warm.contains(name) {
+                continue;
+            }
+            let id = self
+                .cold
+                .lookup(name)
+                .with_context(|| format!("unknown adapter {name:?}"))?;
+            let theta = self.cold.unpack_theta(id);
+            self.warm_insert(name, theta);
+        }
+        Ok(())
+    }
+
+    /// The tier walk. `request` distinguishes a served activation (counts
+    /// toward activations + per-tier hits) from internal staging.
+    fn promote(
+        &mut self,
+        rt: &Runtime,
+        base: &WeightSet,
+        name: &str,
+        ckpt_dir: &Path,
+        request: bool,
+    ) -> Result<()> {
+        if request {
+            self.c.activations += 1;
+        }
+        if self.hot.touch(name).is_some() {
+            if request {
+                self.c.hot_hits += 1;
+            }
+            return Ok(());
+        }
+        let id = self.cold.lookup(name).with_context(|| format!("unknown adapter {name:?}"))?;
+        let theta = match self.warm.touch(name) {
+            Some(t) => {
+                if request {
+                    self.c.warm_hits += 1;
+                }
+                t.clone()
+            }
+            None => {
+                if request {
+                    self.c.cold_misses += 1;
+                }
+                let t = self.cold.unpack_theta(id);
+                self.warm_insert(name, t.clone());
+                t
+            }
+        };
+        let scheme_tag = self.cold.scheme_tag(id).to_string();
+        let factors = self.factors_for(rt, &scheme_tag, base, ckpt_dir)?;
+        let merged =
+            Policy::merge_theta(rt, &self.tier, &scheme_tag, base, &theta, ckpt_dir, factors.as_deref())?;
+        self.c.promotions_hot += 1;
+        self.hot_bytes += self.resident_model_bytes(merged.n_params());
+        self.hot.insert_unbounded(name, merged);
+        self.hot_trim();
+        Ok(())
+    }
+
+    /// Frozen SVD factors for (scheme, base), shared across every tenant
+    /// of that scheme — memoized in memory by the base fingerprint so a
+    /// million cold activations compute them once.
+    fn factors_for(
+        &mut self,
+        rt: &Runtime,
+        scheme_tag: &str,
+        base: &WeightSet,
+        ckpt_dir: &Path,
+    ) -> Result<Option<Arc<FactorSet>>> {
+        let scheme = rt.manifest.grad_exe(&self.tier, "grpo", scheme_tag)?.scheme.clone();
+        let Some(scheme) = scheme else { return Ok(None) };
+        if scheme.kind != "tinylora" && scheme.kind != "lora_xs" {
+            return Ok(None);
+        }
+        let key = (scheme_tag.to_string(), weights_fingerprint(base)?);
+        if let Some(f) = self.factors.get(&key) {
+            return Ok(Some(f.clone()));
+        }
+        let tier = rt.manifest.tier(&self.tier)?.clone();
+        let f = Arc::new(FactorSet::cached(&tier, base, scheme.r, ckpt_dir)?);
+        self.factors.insert(key, f.clone());
+        Ok(Some(f))
+    }
+
+    fn warm_insert(&mut self, name: &str, theta: Vec<f32>) {
+        if self.max_warm == 0 {
+            return;
+        }
+        debug_assert!(!self.warm.contains(name), "warm_insert would double-count {name:?}");
+        self.c.promotions_warm += 1;
+        self.warm_bytes += theta.len() * 4;
+        self.warm.insert_unbounded(name, theta);
+        // warm eviction ignores pins: a pinned adapter is hot, and losing
+        // its warm copy only costs a cold-tier re-unpack on demotion
+        for (_, t) in self.warm.trim(self.max_warm, |_| true) {
+            self.warm_bytes -= t.len() * 4;
+            self.c.evictions_warm += 1;
+        }
+    }
+
+    /// Trim hot back to capacity, skipping pinned entries; evicted merged
+    /// models are *demoted* — their unpacked theta is re-staged warm (via
+    /// the cold record if the warm copy was evicted meanwhile) so the
+    /// next activation skips the unpack, only redoing the merge.
+    fn hot_trim(&mut self) {
+        let pinned = &self.pinned;
+        let evicted = self.hot.trim(self.max_resident, |n| !pinned.contains_key(n));
+        for (name, w) in evicted {
+            self.hot_bytes -= self.resident_model_bytes(w.n_params());
+            self.c.evictions_hot += 1;
+            self.c.demotions += 1;
+            if self.max_warm > 0 && !self.warm.contains(&name) {
+                if let Some(id) = self.cold.lookup(&name) {
+                    let theta = self.cold.unpack_theta(id);
+                    self.warm_insert(&name, theta);
+                }
+            }
+        }
+    }
+
+    /// Fraction of served activations answered straight from the hot
+    /// tier (no merge) — the router's `merge_hit_rate`.
+    pub fn hit_rate(&self) -> f32 {
+        if self.c.activations == 0 {
+            0.0
+        } else {
+            self.c.hot_hits as f32 / self.c.activations as f32
+        }
+    }
+
+    /// Observability snapshot (counts + byte gauges).
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            tenants: self.cold.len(),
+            activations: self.c.activations,
+            hot_hits: self.c.hot_hits,
+            warm_hits: self.c.warm_hits,
+            cold_misses: self.c.cold_misses,
+            promotions_warm: self.c.promotions_warm,
+            promotions_hot: self.c.promotions_hot,
+            demotions: self.c.demotions,
+            evictions_warm: self.c.evictions_warm,
+            evictions_hot: self.c.evictions_hot,
+            stored_bytes: self.stored_bytes,
+            cold_index_bytes: self.cold.index_bytes(),
+            warm_bytes: self.warm_bytes,
+            hot_bytes: self.hot_bytes,
+            warm_entries: self.warm.len(),
+            hot_entries: self.hot.len(),
+        }
+    }
+
+    /// Zero the event counters (activations, hits, transitions).  Byte
+    /// gauges and residency are untouched — this separates a measurement
+    /// window from its warmup.
+    pub fn reset_stats(&mut self) {
+        self.c = Counters::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{SIM_SCHEME, SIM_TIER};
+
+    fn scratch(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("tlrl_store_{name}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sim_store(max_resident: usize, max_warm: usize, n: usize) -> AdapterStore {
+        let mut store = AdapterStore::with_tiers(SIM_TIER, max_resident, max_warm);
+        for i in 0..n {
+            store
+                .register(&format!("t{i}"), SIM_SCHEME, &[0.01 * (i + 1) as f32; 13], Precision::Bf16)
+                .unwrap();
+        }
+        store
+    }
+
+    #[test]
+    fn register_and_account_bytes() {
+        let mut store = AdapterStore::new("micro", 2);
+        store.register("a", "tinylora_r2_u13_all", &[0.0; 13], Precision::Bf16).unwrap();
+        store.register("b", "tinylora_r2_u13_all", &[0.0; 13], Precision::F32).unwrap();
+        assert_eq!(store.len(), 2);
+        // the paper's headline: 13 bf16 params = 26 bytes
+        assert_eq!(store.stored_bytes(), 26 + 52);
+        assert!(store.register("a", "x", &[0.0], Precision::F32).is_err());
+        // a failed register must not move the counter
+        assert_eq!(store.stored_bytes(), 78);
+        assert_eq!(store.names(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn thousands_of_adapters_fit_in_one_model_budget() {
+        // storage argument: micro tier model = 139k params * 4B ≈ 557KB;
+        // a 26-byte adapter fits > 20_000 times in that budget.
+        let mut store = AdapterStore::new("micro", 1);
+        for i in 0..1000 {
+            store
+                .register(&format!("tenant-{i}"), "tinylora_r2_u13_all", &[0.1; 13], Precision::Bf16)
+                .unwrap();
+        }
+        assert_eq!(store.stored_bytes(), 26_000);
+        assert!(store.stored_bytes() < store.resident_model_bytes(139_000) / 20);
+    }
+
+    /// Satellite: the maintained `stored_bytes` counter must equal the
+    /// O(n) arena recomputation at every point of a mixed-precision
+    /// registration sequence.
+    #[test]
+    fn stored_bytes_counter_matches_recomputed_scan() {
+        let mut store = AdapterStore::new("micro", 2);
+        assert_eq!(store.stored_bytes(), store.recompute_stored_bytes());
+        for i in 0..50 {
+            let precision = match i % 3 {
+                0 => Precision::Bf16,
+                1 => Precision::F16,
+                _ => Precision::F32,
+            };
+            let n = 1 + i % 17;
+            store.register(&format!("t{i}"), "s", &vec![0.5; n], precision).unwrap();
+            assert_eq!(store.stored_bytes(), store.recompute_stored_bytes(), "after insert {i}");
+        }
+        // duplicate failure leaves both in agreement
+        assert!(store.register("t0", "s", &[0.0; 13], Precision::Bf16).is_err());
+        assert_eq!(store.stored_bytes(), store.recompute_stored_bytes());
+    }
+
+    /// The tier state machine end-to-end on the sim backend: cold miss →
+    /// warm+hot promotion; hot eviction → demotion (warm survives); warm
+    /// hit skips the cold tier; stats track every transition.
+    #[test]
+    fn tier_state_machine_promotes_demotes_and_counts() {
+        let rt = Runtime::sim(1).unwrap();
+        let base = WeightSet::init(&rt.manifest.tier(SIM_TIER).unwrap().clone(), 3).unwrap();
+        let dir = scratch("state_machine");
+        let mut store = sim_store(1, 2, 4);
+        assert_eq!(store.residency("t0"), Residency::Cold);
+        assert_eq!(store.residency("nope"), Residency::Unknown);
+
+        // cold miss: t0 becomes warm + hot
+        let w0 = store.activate(&rt, &base, "t0", &dir).unwrap();
+        assert_eq!(store.residency("t0"), Residency::Hot);
+        let st = store.stats();
+        assert_eq!((st.activations, st.cold_misses, st.warm_hits, st.hot_hits), (1, 1, 0, 0));
+        assert_eq!((st.promotions_warm, st.promotions_hot), (1, 1));
+        assert_eq!(st.hot_bytes, store.resident_model_bytes(w0.n_params()));
+        assert_eq!(st.warm_bytes, 13 * 4);
+
+        // hot hit: same weights, no new promotion
+        let w0b = store.activate(&rt, &base, "t0", &dir).unwrap();
+        assert_eq!(w0b.flat(), w0.flat());
+        assert_eq!(store.stats().hot_hits, 1);
+
+        // t1 evicts t0 from hot (capacity 1) — t0 demotes to warm
+        store.activate(&rt, &base, "t1", &dir).unwrap();
+        assert_eq!(store.residency("t1"), Residency::Hot);
+        assert_eq!(store.residency("t0"), Residency::Warm);
+        let st = store.stats();
+        assert_eq!((st.evictions_hot, st.demotions), (1, 1));
+        assert_eq!(st.hot_entries, 1);
+
+        // warm hit: t0 re-merges from its warm theta, no cold miss
+        let w0c = store.activate(&rt, &base, "t0", &dir).unwrap();
+        assert_eq!(w0c.flat(), w0.flat());
+        let st = store.stats();
+        assert_eq!((st.warm_hits, st.cold_misses), (1, 2));
+
+        // flooding warm (capacity 2) evicts the LRU theta
+        store.activate(&rt, &base, "t2", &dir).unwrap();
+        store.activate(&rt, &base, "t3", &dir).unwrap();
+        let st = store.stats();
+        assert!(st.evictions_warm > 0);
+        assert_eq!(st.warm_entries, 2);
+        assert_eq!(st.warm_bytes, 2 * 13 * 4);
+        assert_eq!(st.hot_entries, 1);
+        assert_eq!(store.resident_order(), vec!["t3"]);
+
+        // gauges survive a stats reset, counters do not
+        store.reset_stats();
+        let st = store.stats();
+        assert_eq!(st.activations, 0);
+        assert_eq!(st.warm_entries, 2);
+        assert!(st.hot_bytes > 0 && st.stored_bytes == 4 * 26);
+    }
+
+    /// Pinning: a wave wider than the hot tier keeps every wave adapter
+    /// resident until `end_wave`, then trims with demotion.
+    #[test]
+    fn wave_pins_override_hot_capacity_until_end_wave() {
+        let rt = Runtime::sim(1).unwrap();
+        let base = WeightSet::init(&rt.manifest.tier(SIM_TIER).unwrap().clone(), 3).unwrap();
+        let dir = scratch("wave_pins");
+        let mut store = sim_store(1, 4, 3);
+        let wave: Vec<String> = vec!["t0".into(), "t1".into(), "t2".into()];
+        store.begin_wave(&rt, &base, &wave, &dir).unwrap();
+        // capacity is 1, but all three pinned adapters are hot
+        assert_eq!(store.stats().hot_entries, 3);
+        for name in &wave {
+            assert_eq!(store.residency(name), Residency::Hot, "{name}");
+            assert!(store.checkout_hot(name).is_some(), "{name}");
+        }
+        // wave checkout counts one activation per adapter, not per request
+        assert_eq!(store.stats().activations, 3);
+        store.end_wave(&wave);
+        let st = store.stats();
+        assert_eq!(st.hot_entries, 1);
+        assert_eq!((st.evictions_hot, st.demotions), (2, 2));
+        // demoted adapters stayed warm
+        assert_eq!(store.residency("t0"), Residency::Warm);
+        assert_eq!(store.residency("t1"), Residency::Warm);
+        assert_eq!(store.residency("t2"), Residency::Hot);
+        assert!(store.begin_wave(&rt, &base, &["ghost".to_string()], &dir).is_err());
+        // the failed wave released its pin
+        store.end_wave(&[]); // no-op
+        assert_eq!(store.stats().hot_entries, 1);
+    }
+
+    /// `prefetch_warm` stages cold records without activations; a
+    /// following wave then counts warm hits, not cold misses.
+    #[test]
+    fn prefetch_stages_warm_without_counting_activations() {
+        let rt = Runtime::sim(1).unwrap();
+        let base = WeightSet::init(&rt.manifest.tier(SIM_TIER).unwrap().clone(), 3).unwrap();
+        let dir = scratch("prefetch");
+        let mut store = sim_store(2, 4, 3);
+        store.prefetch_warm(&["t0".into(), "t1".into()]).unwrap();
+        let st = store.stats();
+        assert_eq!(st.activations, 0);
+        assert_eq!(st.promotions_warm, 2);
+        assert_eq!(store.residency("t0"), Residency::Warm);
+        store.activate(&rt, &base, "t0", &dir).unwrap();
+        let st = store.stats();
+        assert_eq!((st.warm_hits, st.cold_misses), (1, 0));
+        assert!(store.prefetch_warm(&["ghost".to_string()]).is_err());
+    }
+}

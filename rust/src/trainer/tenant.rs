@@ -19,8 +19,12 @@
 //! global FFI lock — the job→context map is a pure function of the
 //! tenant, keeping pooled == serial byte-identical at any D.
 //!
-//! Finished tenants register straight into the serving `AdapterStore`,
-//! closing the train→serve loop.
+//! Finished tenants register straight into the serving `AdapterStore`'s
+//! *cold tier* — one packed ~26-byte record appended to a contiguous
+//! arena, no merge, no per-tenant heap allocation — closing the
+//! train→serve loop at a cost that scales to millions of tenants
+//! (serving promotes cold → warm → hot lazily on first request; see
+//! `serving/store/` and DESIGN.md §12).
 //!
 //! Backend-blind: the plane resolves everything through the manifest
 //! (grad/merge/generate entry points), so the same trainer runs on PJRT
