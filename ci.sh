@@ -105,6 +105,22 @@ if [[ "$FAST" -eq 0 ]]; then
     echo "== BENCH_store.json missing — run 'cargo bench --bench bench_store' and commit it =="
     exit 1
   fi
+
+  # Open-loop serving gate: BENCH_serve.json is REQUIRED — the bench is
+  # hermetic (sim backend) and carries the continuous-vs-wave SLO claim.
+  # `--check` validates the schema, recomputes the serving-geometry
+  # echo, and enforces the SLO consistency gates: served + shed ==
+  # offered and goodput == (served − violations)/horizon per section,
+  # zero deadline violations in continuous mode, zero shed at the
+  # underload rate, and under overload both modes shed while continuous
+  # goodput stays at or above the wave-drain floor.
+  if [[ -f ../BENCH_serve.json ]]; then
+    echo "== bench_serve --check (open-loop serving SLO snapshot) =="
+    cargo bench --bench bench_serve -- --check
+  else
+    echo "== BENCH_serve.json missing — run 'cargo bench --bench bench_serve' and commit it =="
+    exit 1
+  fi
 fi
 
 if cargo clippy --version >/dev/null 2>&1; then

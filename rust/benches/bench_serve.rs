@@ -1,0 +1,406 @@
+//! Open-loop serving benchmark + the committed SLO snapshot
+//! (`cargo bench --bench bench_serve`).
+//!
+//! Emits `../BENCH_serve.json` (repo root): the continuous-batching
+//! front-end vs the wave-drain baseline on the sim backend, one seeded
+//! arrival trace per rate, swept across three arrival rates that bracket
+//! the configured capacity (slots × batch / service ≈ 160 rows/s):
+//! underload, near-saturation, and 2× overload. Each point records
+//! p50/p99/mean/max latency, goodput (in-deadline completions per
+//! virtual second), shed and deadline-violation counts, batch count and
+//! refill count, plus real decode wall time.
+//!
+//! Snapshot schema, like `BENCH_store.json`:
+//!   * `record` — deterministic echo of the serving geometry (batch,
+//!     slots, budgets, service model, trace shape); `--check` recomputes
+//!     it and fails on drift, so a config change forces a re-measure
+//!     instead of silently invalidating the numbers;
+//!   * `rates` — one row per arrival rate with a `continuous` and a
+//!     `wave` section, gated by `--check`: served + shed == offered and
+//!     goodput == (served − violations)/horizon per section, refills ==
+//!     batches (one `begin_refill` per scheduled batch), zero violations
+//!     in continuous mode (its dispatches are deadline-bounded by
+//!     construction), zero shed at the underload rate in both modes, and
+//!     under overload both modes shed while continuous goodput stays at
+//!     or above wave-drain goodput — the floor the tentpole must beat.
+//!
+//! All gated quantities except `wall_ms` live on the virtual clock of the
+//! pure `serving::frontend::schedule` loop, so a full run reproduces them
+//! exactly from the seeded trace; wall_ms measures this machine only.
+//!
+//! Modes:
+//!   cargo bench --bench bench_serve              # run + rewrite snapshot
+//!   cargo bench --bench bench_serve -- --check   # validate committed
+//!                                                # snapshot (ci.sh gate)
+
+use tinylora_rl::adapters::packing::Precision;
+use tinylora_rl::engine::InferenceEngine;
+use tinylora_rl::runtime::{Runtime, SIM_SCHEME, SIM_TIER};
+use tinylora_rl::serving::{
+    AdapterStore, ArrivalTrace, Frontend, FrontendConfig, SchedPolicy, SloStats, TraceConfig,
+};
+use tinylora_rl::util::json::{num, obj, s, Value};
+use tinylora_rl::util::Pcg64;
+use tinylora_rl::weights::WeightSet;
+
+/// Committed snapshot path (repo root; cargo bench runs from `rust/`).
+/// Override with TINYLORA_BENCH_SERVE for scratch runs.
+fn snapshot_path() -> String {
+    std::env::var("TINYLORA_BENCH_SERVE").unwrap_or_else(|_| "../BENCH_serve.json".into())
+}
+
+const SCHEMA_VERSION: usize = 1;
+/// Arrival rates swept (requests/s). Capacity of the configured plane is
+/// slots × batch / service_base = 2 × 4 / 0.05 = 160 rows/s, so the
+/// sweep brackets it: comfortable underload, near saturation, 2× over.
+const RATES: [f64; 3] = [40.0, 120.0, 320.0];
+const N_REQUESTS: usize = 400;
+const TENANTS: usize = 24;
+const ZIPF_S: f64 = 1.1;
+const BURST: usize = 1;
+const TRACE_SEED: u64 = 4242;
+const BATCH: usize = 4;
+const SLOTS: usize = 2;
+const DEADLINE: f64 = 0.4;
+const MAX_WAIT: f64 = 0.05;
+const SERVICE_BASE: f64 = 0.05;
+const SERVICE_PER_ROW: f64 = 0.0;
+/// Relative tolerance for committed derived quantities (goodput,
+/// occupancy) against their defining ratios.
+const REL_TOL: f64 = 0.01;
+
+fn frontend_cfg(continuous: bool) -> FrontendConfig {
+    FrontendConfig {
+        batch: BATCH,
+        slots: SLOTS,
+        deadline: DEADLINE,
+        max_wait: MAX_WAIT,
+        service_base: SERVICE_BASE,
+        service_per_row: SERVICE_PER_ROW,
+        policy: SchedPolicy::DeadlineFlush,
+        continuous,
+    }
+}
+
+fn trace_cfg(rate: f64) -> TraceConfig {
+    TraceConfig {
+        seed: TRACE_SEED,
+        n: N_REQUESTS,
+        rate,
+        burst: BURST,
+        tenants: TENANTS,
+        zipf_s: ZIPF_S,
+        suite: "gsm8k-syn".into(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Measurement
+// ---------------------------------------------------------------------------
+
+fn mode_section(slo: &SloStats, refills: u64, wall_ms: f64) -> Value {
+    obj(vec![
+        ("served", num(slo.served as f64)),
+        ("shed", num(slo.shed as f64)),
+        ("violations", num(slo.violations as f64)),
+        ("batches", num(slo.batches as f64)),
+        ("refills", num(refills as f64)),
+        ("p50_latency", num(slo.p50_latency)),
+        ("p99_latency", num(slo.p99_latency)),
+        ("mean_latency", num(slo.mean_latency)),
+        ("max_latency", num(slo.max_latency)),
+        ("goodput", num(slo.goodput)),
+        ("mean_occupancy", num(slo.mean_occupancy)),
+        ("horizon", num(slo.horizon)),
+        ("wall_ms", num(wall_ms)),
+    ])
+}
+
+/// One arrival-rate point: generate the seeded trace once, then serve it
+/// through the continuous front-end and the wave-drain baseline with
+/// identical stores, decoding every batch through the sim backend.
+fn run_rate(rt: &Runtime, base: &WeightSet, rate: f64) -> Value {
+    let trace = ArrivalTrace::generate(&trace_cfg(rate)).expect("trace generation");
+    let dir = std::env::temp_dir().join("tlrl_bench_serve");
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    let mut sections = Vec::new();
+    for continuous in [true, false] {
+        let mut store = AdapterStore::with_tiers(SIM_TIER, 4, 32);
+        let mut rng = Pcg64::new(11);
+        for name in trace.tenant_names() {
+            let theta: Vec<f32> = (0..13).map(|_| rng.normal() * 0.01).collect();
+            store.register(&name, SIM_SCHEME, &theta, Precision::Bf16).expect("register");
+        }
+        let mut fe = Frontend::new(rt, store, base.clone(), frontend_cfg(continuous), dir.clone())
+            .expect("frontend");
+        let plan = fe.serve_trace(rt, &trace).expect("serve");
+        let slo = fe.slo(&plan);
+        println!(
+            "rate {rate:>4.0}/s {}: served {:>3}/{} shed {:>3} p50 {:.3}s p99 {:.3}s goodput {:>6.1}/s occ {:.2} wall {:.0}ms",
+            if continuous { "continuous" } else { "wave      " },
+            slo.served,
+            slo.offered,
+            slo.shed,
+            slo.p50_latency,
+            slo.p99_latency,
+            slo.goodput,
+            slo.mean_occupancy,
+            fe.wall_ms(),
+        );
+        sections.push(mode_section(&slo, fe.store.stats().refills, fe.wall_ms()));
+    }
+    let wave = sections.pop().unwrap();
+    let continuous = sections.pop().unwrap();
+    obj(vec![
+        ("rate", num(rate)),
+        ("offered", num(N_REQUESTS as f64)),
+        ("continuous", continuous),
+        ("wave", wave),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot schema
+// ---------------------------------------------------------------------------
+
+/// Deterministic echo of the serving geometry the numbers were measured
+/// at. `--check` recomputes this; drift fails the gate so stale numbers
+/// can never masquerade as current after a config change.
+fn record_section(engine: &InferenceEngine) -> Value {
+    obj(vec![
+        ("batch", num(BATCH as f64)),
+        ("slots", num(SLOTS as f64)),
+        ("deadline", num(DEADLINE)),
+        ("max_wait", num(MAX_WAIT)),
+        ("service_base", num(SERVICE_BASE)),
+        ("service_per_row", num(SERVICE_PER_ROW)),
+        ("geometries", Value::Arr(engine.geometries().iter().map(|&g| num(g as f64)).collect())),
+        ("requests", num(N_REQUESTS as f64)),
+        ("tenants", num(TENANTS as f64)),
+        ("zipf_s", num(ZIPF_S)),
+        ("burst", num(BURST as f64)),
+        ("seed", num(TRACE_SEED as f64)),
+        ("suite", s("gsm8k-syn")),
+        ("rates", Value::Arr(RATES.iter().map(|&r| num(r)).collect())),
+    ])
+}
+
+fn getf(v: &Value, key: &str) -> Result<f64, String> {
+    v.get(key).and_then(|x| x.f64()).map_err(|e| format!("{key}: {e:#}"))
+}
+
+fn getu(v: &Value, key: &str) -> Result<u64, String> {
+    let x = getf(v, key)?;
+    if x < 0.0 || x.fract() != 0.0 {
+        return Err(format!("{key} not a count: {x}"));
+    }
+    Ok(x as u64)
+}
+
+fn rel_close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= REL_TOL * b.abs().max(1e-12)
+}
+
+/// Gate one mode section. `continuous` switches on the structural
+/// guarantees only the refill loop makes.
+fn check_mode(m: &Value, continuous: bool) -> Result<(), String> {
+    let served = getu(m, "served")?;
+    let shed = getu(m, "shed")?;
+    let violations = getu(m, "violations")?;
+    let batches = getu(m, "batches")?;
+    let refills = getu(m, "refills")?;
+    if served + shed != N_REQUESTS as u64 {
+        return Err(format!("served {served} + shed {shed} != offered {N_REQUESTS}"));
+    }
+    if violations > served {
+        return Err(format!("violations {violations} > served {served}"));
+    }
+    if continuous && violations != 0 {
+        return Err(format!(
+            "continuous mode reported {violations} deadline violations — refill \
+             dispatches are deadline-bounded by construction"
+        ));
+    }
+    if refills != batches {
+        return Err(format!(
+            "refills {refills} != batches {batches} — the front-end pays exactly \
+             one begin_refill per scheduled batch"
+        ));
+    }
+    // every batch holds 1..=BATCH real rows
+    if batches < served.div_ceil(BATCH as u64) || batches > served.max(1) {
+        return Err(format!("batches {batches} impossible for {served} served rows"));
+    }
+    let p50 = getf(m, "p50_latency")?;
+    let p99 = getf(m, "p99_latency")?;
+    let mean = getf(m, "mean_latency")?;
+    let max = getf(m, "max_latency")?;
+    // latency = queue wait + virtual service, so it is floored by the
+    // service model and the quantiles must be ordered
+    if !(SERVICE_BASE <= p50 && p50 <= p99 && p99 <= max) {
+        return Err(format!("latency quantiles broken: p50 {p50} p99 {p99} max {max}"));
+    }
+    if !(SERVICE_BASE <= mean && mean <= max) {
+        return Err(format!("mean latency {mean} outside [{SERVICE_BASE}, {max}]"));
+    }
+    if continuous {
+        // refill dispatch wait < deadline, so latency < deadline + service
+        let bound = DEADLINE + SERVICE_BASE + SERVICE_PER_ROW * BATCH as f64 + 1e-9;
+        if max >= bound {
+            return Err(format!(
+                "continuous max latency {max} >= deadline-bounded ceiling {bound}"
+            ));
+        }
+    }
+    let horizon = getf(m, "horizon")?;
+    if !(horizon > 0.0 && horizon.is_finite()) {
+        return Err(format!("horizon not positive: {horizon}"));
+    }
+    let goodput = getf(m, "goodput")?;
+    let want = (served - violations) as f64 / horizon;
+    if !rel_close(goodput, want) {
+        return Err(format!(
+            "goodput {goodput} != (served − violations)/horizon = {want:.4}"
+        ));
+    }
+    let occ = getf(m, "mean_occupancy")?;
+    let want_occ = served as f64 / (batches * BATCH as u64) as f64;
+    if !(occ > 0.0 && occ <= 1.0) || !rel_close(occ, want_occ) {
+        return Err(format!("mean_occupancy {occ} != served/(batches×batch) = {want_occ:.4}"));
+    }
+    let wall = getf(m, "wall_ms")?;
+    if !(wall > 0.0 && wall.is_finite()) {
+        return Err(format!("wall_ms not positive: {wall}"));
+    }
+    Ok(())
+}
+
+fn validate_schema(v: &Value, record_want: &Value) -> Result<(), String> {
+    let get = |key: &str| v.get(key).map_err(|e| format!("{e:#}"));
+    if get("kind")?.str().map_err(|e| format!("kind: {e:#}"))? != "bench_serve" {
+        return Err("kind != bench_serve".into());
+    }
+    let version = get("schema_version")?.usize().map_err(|e| format!("schema_version: {e:#}"))?;
+    if version != SCHEMA_VERSION {
+        return Err(format!("schema_version {version} != {SCHEMA_VERSION}"));
+    }
+    let record = get("record")?;
+    if record != record_want {
+        return Err(format!(
+            "record drift: committed {} != recomputed {} — the serving geometry \
+             or trace shape changed; rerun `cargo bench --bench bench_serve` \
+             and commit the refreshed snapshot",
+            record.to_string(),
+            record_want.to_string()
+        ));
+    }
+    let rows = get("rates")?.arr().map(|a| a.to_vec()).map_err(|e| format!("rates: {e:#}"))?;
+    if rows.len() != RATES.len() {
+        return Err(format!("rates has {} rows, expected {}", rows.len(), RATES.len()));
+    }
+    for (i, (row, &rate)) in rows.iter().zip(&RATES).enumerate() {
+        let ctx = |e: String| format!("rate={rate}: {e}");
+        if getf(row, "rate").map_err(&ctx)? != rate {
+            return Err(ctx("rate echo mismatch".into()));
+        }
+        if getu(row, "offered").map_err(&ctx)? != N_REQUESTS as u64 {
+            return Err(ctx(format!("offered != {N_REQUESTS}")));
+        }
+        let cont = row.get("continuous").map_err(|e| ctx(format!("{e:#}")))?;
+        let wave = row.get("wave").map_err(|e| ctx(format!("{e:#}")))?;
+        check_mode(cont, true).map_err(|e| ctx(format!("continuous: {e}")))?;
+        check_mode(wave, false).map_err(|e| ctx(format!("wave: {e}")))?;
+        let (c_shed, w_shed) = (getu(cont, "shed").unwrap(), getu(wave, "shed").unwrap());
+        if i == 0 && (c_shed != 0 || w_shed != 0) {
+            return Err(ctx(format!(
+                "underload rate shed requests (continuous {c_shed}, wave {w_shed}) — \
+                 shedding must only trigger past the deadline budget"
+            )));
+        }
+        if i == RATES.len() - 1 {
+            if c_shed == 0 || w_shed == 0 {
+                return Err(ctx(format!(
+                    "overload rate shed nothing (continuous {c_shed}, wave {w_shed}) — \
+                     the sweep no longer exercises admission control"
+                )));
+            }
+            let (c_good, w_good) = (getf(cont, "goodput").unwrap(), getf(wave, "goodput").unwrap());
+            if c_good < w_good {
+                return Err(ctx(format!(
+                    "continuous goodput {c_good:.1}/s fell below wave-drain {w_good:.1}/s \
+                     under overload — the refill loop must dominate the barrier"
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `--check`: committed snapshot must be schema-valid, geometry-current
+/// and inside every SLO consistency gate; prints the committed tally that
+/// ci.sh surfaces in its full-mode report.
+fn check_snapshot(path: &str, record_want: &Value) -> Result<(), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let v = Value::parse(text.trim()).map_err(|e| format!("parsing {path}: {e:#}"))?;
+    validate_schema(&v, record_want)?;
+    let rows = v.get("rates").map_err(|e| format!("{e:#}"))?.arr().unwrap().to_vec();
+    for row in &rows {
+        let rate = getf(row, "rate").unwrap();
+        for mode in ["continuous", "wave"] {
+            let m = row.get(mode).unwrap();
+            println!(
+                "serve (committed): rate {rate:>4.0}/s {mode:<10} served {:>3} shed {:>3} \
+                 p50 {:.3}s p99 {:.3}s goodput {:>6.1}/s",
+                getu(m, "served").unwrap(),
+                getu(m, "shed").unwrap(),
+                getf(m, "p50_latency").unwrap(),
+                getf(m, "p99_latency").unwrap(),
+                getf(m, "goodput").unwrap(),
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// main
+// ---------------------------------------------------------------------------
+
+fn main() {
+    let check = std::env::args().any(|a| a == "--check");
+    let path = snapshot_path();
+    let rt = Runtime::sim(1).expect("sim runtime");
+    let tier = rt.manifest.tier(SIM_TIER).expect("sim tier").clone();
+    let base = WeightSet::init(&tier, 3).expect("sim base weights");
+    let engine = InferenceEngine::new(&rt, SIM_TIER, BATCH).expect("engine");
+    let record = record_section(&engine);
+    if check {
+        match check_snapshot(&path, &record) {
+            Ok(()) => println!("BENCH_serve.json: schema + record + SLO gates OK ({path})"),
+            Err(e) => {
+                eprintln!("BENCH_serve.json check failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+
+    println!("== open-loop serving benchmarks (sim backend) ==\n");
+    let mut rows = Vec::new();
+    for &rate in &RATES {
+        rows.push(run_rate(&rt, &base, rate));
+    }
+
+    let snapshot = obj(vec![
+        ("kind", s("bench_serve")),
+        ("schema_version", num(SCHEMA_VERSION as f64)),
+        ("record", record.clone()),
+        ("rates", Value::Arr(rows)),
+    ]);
+    if let Err(e) = validate_schema(&snapshot, &record) {
+        eprintln!("generated snapshot failed its own schema: {e}");
+        std::process::exit(1);
+    }
+    std::fs::write(&path, snapshot.to_string() + "\n").expect("writing snapshot");
+    println!("\nperf snapshot -> {path}");
+}

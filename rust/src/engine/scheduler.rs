@@ -175,6 +175,54 @@ impl Scheduler {
         Some(self.take(pick))
     }
 
+    /// Arrival time of the globally oldest queued request — the serving
+    /// front-end derives its next flush/expiry event instants from this.
+    pub fn oldest_arrival(&self) -> Option<f64> {
+        self.oldest().map(|i| self.queues[&self.order[i]].front().unwrap().arrival)
+    }
+
+    /// Admission-control hook: remove and return every queued request
+    /// whose wait has reached `budget` (`now - arrival >= budget`), in
+    /// deterministic order (adapter first-appearance order, FIFO within
+    /// an adapter). This is the ONLY path that drops requests — batch
+    /// formation never does — so callers own the shedding policy
+    /// entirely through when they sweep.
+    pub fn shed_expired(&mut self, now: f64, budget: f64) -> Vec<QueuedRequest> {
+        let mut shed = Vec::new();
+        let mut idx = 0;
+        while idx < self.order.len() {
+            let adapter = self.order[idx].clone();
+            let q = self.queues.get_mut(&adapter).unwrap();
+            let mut kept = VecDeque::with_capacity(q.len());
+            for r in q.drain(..) {
+                if now - r.arrival >= budget {
+                    shed.push(r);
+                } else {
+                    kept.push_back(r);
+                }
+            }
+            *q = kept;
+            if q.is_empty() {
+                // same invariant maintenance as `take`: adapter leaves
+                // `order` with its queue, cursor shifts left past it
+                self.queues.remove(&adapter);
+                self.order.remove(idx);
+                if self.cursor > idx {
+                    self.cursor -= 1;
+                }
+            } else {
+                idx += 1;
+            }
+        }
+        self.pending -= shed.len();
+        if self.order.is_empty() {
+            self.cursor = 0;
+        } else {
+            self.cursor %= self.order.len();
+        }
+        shed
+    }
+
     /// Every batch flushable at `now`, in policy order — one serving
     /// "wave". Callers that fan waves across a `WorkerPool` (and, with a
     /// device-parallel runtime, across execution contexts) collect the
@@ -389,6 +437,74 @@ mod tests {
         assert_eq!(wave_adapters(&[]), Vec::<String>::new());
         let wave = [batch("b"), batch("a"), batch("b"), batch("c"), batch("a")];
         assert_eq!(wave_adapters(&wave), vec!["b", "a", "c"]);
+    }
+
+    /// Property: `shed_expired` removes exactly the requests whose wait
+    /// reached the budget — nothing younger, nothing left behind — and
+    /// the scheduler's invariants (pending count, order membership,
+    /// exactly-once drain of the survivors) hold afterwards.
+    #[test]
+    fn prop_shed_expired_removes_exactly_the_expired_set() {
+        check("shed expired exact", 200, |rng| {
+            let batch = 1 + rng.below(5) as usize;
+            let mut s = Scheduler::new(batch, 0.05, random_policy(rng));
+            let n = 1 + rng.below(60);
+            let mut arrivals = std::collections::HashMap::new();
+            for id in 0..n {
+                let a = format!("t{}", rng.below(6));
+                let at = rng.uniform() as f64;
+                arrivals.insert(id, at);
+                s.push(req(id, &a, at));
+            }
+            let now = rng.uniform() as f64 * 1.5;
+            let budget = rng.uniform() as f64 * 0.5;
+            let shed = s.shed_expired(now, budget);
+            let mut shed_ids = std::collections::HashSet::new();
+            for r in &shed {
+                if now - r.arrival < budget {
+                    return Err(format!("shed {} at wait {:.4} < budget {budget:.4}", r.id, now - r.arrival));
+                }
+                if !shed_ids.insert(r.id) {
+                    return Err(format!("request {} shed twice", r.id));
+                }
+            }
+            if s.pending() + shed.len() != n as usize {
+                return Err(format!("pending {} + shed {} != {n}", s.pending(), shed.len()));
+            }
+            // survivors drain exactly once and are exactly the young set
+            let mut survivors = std::collections::HashSet::new();
+            for b in drain_all(&mut s, now) {
+                for r in &b.requests {
+                    if !survivors.insert(r.id) {
+                        return Err(format!("request {} served twice after shed", r.id));
+                    }
+                }
+            }
+            for id in 0..n {
+                let expired = now - arrivals[&id] >= budget;
+                if expired != shed_ids.contains(&id) {
+                    return Err(format!("request {id}: expired={expired} but shed={}", !expired));
+                }
+                if expired == survivors.contains(&id) {
+                    return Err(format!("request {id}: expired={expired} but drained={expired}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn oldest_arrival_tracks_global_front() {
+        let mut s = Scheduler::new(4, 1.0, SchedPolicy::DeadlineFlush);
+        assert_eq!(s.oldest_arrival(), None);
+        s.push(req(0, "a", 0.5));
+        s.push(req(1, "b", 0.2));
+        s.push(req(2, "a", 0.9));
+        assert_eq!(s.oldest_arrival(), Some(0.2));
+        let shed = s.shed_expired(1.5, 1.0);
+        assert_eq!(shed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(s.oldest_arrival(), Some(0.9));
+        assert_eq!(s.pending(), 1);
     }
 
     #[test]

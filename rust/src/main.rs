@@ -18,6 +18,10 @@
 //!   sweep      — the paper's LR-sweep protocol for one scheme (runs as a
 //!                lrs × seeds tenant grid for GRPO); --bench-k K benches
 //!                the winning adapter on the ladder afterwards
+//!   serve      — open-loop continuous-batching front-end: replay or
+//!                generate a seeded arrival trace, serve it with row
+//!                refill + deadline shedding (or the wave-drain
+//!                baseline), log SLO rows to JSONL
 //!   serve-demo — multi-adapter serving simulation
 //!   info       — manifest summary + the paper's Table 1 per tier
 
@@ -50,6 +54,7 @@ fn main() -> Result<()> {
         "bench" => cmd_bench(&args),
         "report" => cmd_report(&args),
         "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
         "serve-demo" => cmd_serve_demo(&args),
         "info" => cmd_info(&args),
         _ => {
@@ -87,6 +92,16 @@ COMMANDS
               [--bench-k 0]   (--bench-k K benches base + the winning
               adapter on the ladder; shaped by --suites/--bench-n/
               --temperature)
+  serve       --tier micro [--trace FILE] [--rate 40] [--requests 64]
+              [--deadline-ms 400] [--slots 2] [--mode continuous|wave|both]
+              [--tenants 16] [--burst 1] [--zipf 1.1] [--max-wait-ms 50]
+              [--service-ms 50] [--service-row-us 0] [--policy deadline]
+              [--max-resident 4] [--max-warm 32] [--seed 0]
+              (open-loop continuous-batching front-end: replays --trace
+              if the file exists, else generates a seeded arrival trace —
+              and saves it to --trace when given — then serves it with
+              row refill and deadline shedding; SLO rows land in
+              results/serve_<tier>.jsonl)
   serve-demo  --tier micro [--tenants 16] [--requests 64] [--workers 1]
               [--devices 1] [--max-resident 4] [--max-warm 32]
               (tiered store: --max-resident bounds hot merged models,
@@ -539,6 +554,114 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         println!("{}", adapter_run.to_markdown());
         println!("bench: {} + {}", base_path.display(), adapter_path.display());
     }
+    Ok(())
+}
+
+/// Open-loop serving: generate (or replay) a deterministic arrival trace
+/// and push it through the continuous-batching front-end, the wave-drain
+/// baseline, or both. All admission/SLO numbers are computed on the
+/// virtual clock by the pure schedule, so replaying the same trace file
+/// reproduces them exactly — only `wall_ms` measures this machine.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use tinylora_rl::adapters::packing::Precision;
+    use tinylora_rl::serving::{
+        AdapterStore, ArrivalTrace, Frontend, FrontendConfig, SchedPolicy, TraceConfig,
+    };
+    use tinylora_rl::util::Pcg64;
+
+    let dirs = Dirs::from_args(args);
+    let rt = runtime(args, &dirs)?;
+    let tier = args.str("tier", "micro");
+    let base = Policy::load_base(&rt, &tier, &dirs.ckpts)?;
+
+    let trace_path = args.str("trace", "");
+    let trace = if !trace_path.is_empty() && Path::new(&trace_path).exists() {
+        let t = ArrivalTrace::load(Path::new(&trace_path))?;
+        println!("replaying trace {trace_path} ({} requests, rate {}/s)", t.events.len(), t.config.rate);
+        t
+    } else {
+        let tcfg = TraceConfig {
+            seed: args.u64("seed", 0)?,
+            n: args.usize("requests", 64)?,
+            rate: args.f32("rate", 40.0)? as f64,
+            burst: args.usize("burst", 1)?,
+            tenants: args.usize("tenants", 16)?,
+            zipf_s: args.f32("zipf", 1.1)? as f64,
+            suite: args.str("suite", "gsm8k-syn"),
+        };
+        let t = ArrivalTrace::generate(&tcfg)?;
+        if !trace_path.is_empty() {
+            t.save(Path::new(&trace_path))?;
+            println!("saved generated trace -> {trace_path}");
+        }
+        t
+    };
+    let rate = trace.config.rate;
+
+    let policy = match args.str("policy", "deadline").as_str() {
+        "occupancy" => SchedPolicy::OccupancyFirst,
+        "roundrobin" | "rr" => SchedPolicy::RoundRobin,
+        _ => SchedPolicy::DeadlineFlush,
+    };
+    let fcfg = FrontendConfig {
+        batch: rt.manifest.batch.serve,
+        slots: args.usize("slots", 2)?,
+        deadline: args.f32("deadline-ms", 400.0)? as f64 / 1e3,
+        max_wait: args.f32("max-wait-ms", 50.0)? as f64 / 1e3,
+        service_base: args.f32("service-ms", 50.0)? as f64 / 1e3,
+        service_per_row: args.f32("service-row-us", 0.0)? as f64 / 1e6,
+        policy,
+        continuous: true,
+    };
+
+    // one store per mode: each run gets identical tier state, so the
+    // continuous-vs-wave comparison is apples to apples
+    let tenants = trace.tenant_names();
+    let build_store = || -> Result<AdapterStore> {
+        let mut store = AdapterStore::with_tiers(
+            &tier,
+            args.usize("max-resident", 4)?,
+            args.usize("max-warm", 32)?,
+        );
+        let mut rng = Pcg64::new(11);
+        for name in &tenants {
+            let theta: Vec<f32> = (0..13).map(|_| rng.normal() * 0.01).collect();
+            store.register(name, "tinylora_r2_u13_all", &theta, Precision::Bf16)?;
+        }
+        Ok(store)
+    };
+
+    let mut log = RunLog::new(
+        Some(&dirs.results.join(format!("serve_{tier}.jsonl"))),
+        args.bool("echo"),
+    );
+    let modes: &[&str] = match args.str("mode", "continuous").as_str() {
+        "wave" => &["wave"],
+        "both" => &["continuous", "wave"],
+        _ => &["continuous"],
+    };
+    for mode in modes {
+        let cfg = FrontendConfig { continuous: *mode == "continuous", ..fcfg.clone() };
+        let mut fe = Frontend::new(&rt, build_store()?, base.clone(), cfg, dirs.ckpts.clone())?;
+        let plan = fe.serve_trace(&rt, &trace)?;
+        let slo = fe.slo(&plan);
+        println!(
+            "[{mode}] served {}/{} shed {} | p50 {:.3}s p99 {:.3}s | goodput {:.1}/s occ {:.2} | {} batches, {} refills | wall {:.0} ms",
+            slo.served,
+            slo.offered,
+            slo.shed,
+            slo.p50_latency,
+            slo.p99_latency,
+            slo.goodput,
+            slo.mean_occupancy,
+            slo.batches,
+            fe.store.stats().refills,
+            fe.wall_ms(),
+        );
+        log.log_serve(&tier, mode, rate, &slo, fe.wall_ms());
+        log.log_store(&tier, &fe.store.stats());
+    }
+    print_context_stats(&rt);
     Ok(())
 }
 

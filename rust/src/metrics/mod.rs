@@ -195,6 +195,52 @@ impl RunLog {
             ("hot_bytes", num(st.hot_bytes as f64)),
             ("warm_entries", num(st.warm_entries as f64)),
             ("hot_entries", num(st.hot_entries as f64)),
+            ("refills", num(st.refills as f64)),
+        ]));
+    }
+
+    /// One SLO row of the open-loop serving front-end: the full
+    /// latency/goodput/shedding profile of a (trace, mode, rate) run.
+    /// Every field except `wall_ms` is computed on the virtual clock and
+    /// is bit-reproducible across replays of the same trace.
+    pub fn log_serve(
+        &mut self,
+        tier: &str,
+        mode: &str,
+        rate: f64,
+        slo: &crate::serving::SloStats,
+        wall_ms: f64,
+    ) {
+        if self.echo {
+            println!(
+                "[serve {tier}/{mode} rate {rate:.0}/s] served {}/{} shed {} p50 {:.3}s p99 {:.3}s goodput {:.1}/s occ {:.2}",
+                slo.served,
+                slo.offered,
+                slo.shed,
+                slo.p50_latency,
+                slo.p99_latency,
+                slo.goodput,
+                slo.mean_occupancy,
+            );
+        }
+        self.log(obj(vec![
+            ("kind", s("serve")),
+            ("tier", s(tier)),
+            ("mode", s(mode)),
+            ("rate", num(rate)),
+            ("offered", num(slo.offered as f64)),
+            ("served", num(slo.served as f64)),
+            ("shed", num(slo.shed as f64)),
+            ("violations", num(slo.violations as f64)),
+            ("batches", num(slo.batches as f64)),
+            ("p50_latency", num(slo.p50_latency)),
+            ("p99_latency", num(slo.p99_latency)),
+            ("mean_latency", num(slo.mean_latency)),
+            ("max_latency", num(slo.max_latency)),
+            ("goodput", num(slo.goodput)),
+            ("mean_occupancy", num(slo.mean_occupancy)),
+            ("horizon", num(slo.horizon)),
+            ("wall_ms", num(wall_ms)),
         ]));
     }
 
@@ -237,10 +283,22 @@ mod tests {
                 ..Default::default()
             };
             log.log_store("sim", &st);
+            let slo = crate::serving::SloStats {
+                offered: 100,
+                served: 90,
+                shed: 10,
+                batches: 30,
+                p50_latency: 0.08,
+                p99_latency: 0.35,
+                goodput: 45.0,
+                horizon: 2.0,
+                ..Default::default()
+            };
+            log.log_serve("sim", "continuous", 50.0, &slo, 12.5);
         }
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<_> = text.lines().collect();
-        assert_eq!(lines.len(), 3);
+        assert_eq!(lines.len(), 4);
         for l in &lines {
             let v = Value::parse(l).unwrap();
             assert!(v.get("kind").is_ok());
@@ -249,6 +307,11 @@ mod tests {
         assert_eq!(store_row.get("kind").unwrap().str().unwrap(), "store");
         assert_eq!(store_row.get("stored_bytes").unwrap().usize().unwrap(), 26_000);
         assert_eq!(store_row.get("hot_hits").unwrap().usize().unwrap(), 25);
+        let serve_row = Value::parse(lines[3]).unwrap();
+        assert_eq!(serve_row.get("kind").unwrap().str().unwrap(), "serve");
+        assert_eq!(serve_row.get("mode").unwrap().str().unwrap(), "continuous");
+        assert_eq!(serve_row.get("served").unwrap().usize().unwrap(), 90);
+        assert_eq!(serve_row.get("goodput").unwrap().f64().unwrap(), 45.0);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,630 @@
+//! Open-loop continuous-batching serving front-end.
+//!
+//! `Router::drain_parallel` drains in synchronous waves: a wave of k
+//! batches costs ceil(k/workers) service intervals and a worker that
+//! finishes early idles until the wave boundary. This front-end replaces
+//! the wave barrier with *row refill*: the event loop keeps `slots`
+//! decode slots busy and refills a slot the instant its batch completes,
+//! forming the next batch from whatever is queued *at that instant* —
+//! mid-decode with respect to the other slots, no barrier.
+//!
+//! The loop is split in two halves, and the split carries the
+//! determinism argument (DESIGN.md §13):
+//!
+//!   * [`schedule`] — a PURE discrete-event simulation on the virtual
+//!     clock. Arrivals, deadline sheds, batch formation and slot
+//!     assignment are a function of (trace, config) alone: no RNG, no
+//!     wall time, no decode feedback (service time is a config-declared
+//!     model, `base + per_row × rows`). Replaying a saved trace
+//!     therefore reproduces every admission decision bit for bit, on
+//!     any backend, at any device/worker count.
+//!   * [`Frontend::serve_trace`] — decodes the scheduled batches through
+//!     the shared engine with per-refill store pinning
+//!     (`begin_refill`/`end_refill`, the one-adapter wave of PR 7's
+//!     batch-aware promotion protocol). Serving decode is greedy
+//!     (temperature 0) and strictly per-row, so decoded *content* is
+//!     batch-packing-invariant — continuous refill and wave draining
+//!     produce byte-identical per-request texts, which
+//!     `tests/e2e_sim.rs` proves against `Router::drain_parallel`.
+//!
+//! Admission/shedding semantics: every request carries one deadline
+//! budget (seconds from arrival). At every event instant the loop sheds
+//! queued requests whose wait has reached the budget — shedding can
+//! *only* trigger past the deadline (property-tested), so a zero-overload
+//! trace is served in full. A dispatched request always had wait <
+//! deadline at formation time; in continuous mode that bounds dispatch
+//! lag by the budget for every tenant (the fairness bound: by
+//! `arrival + deadline` each request has either reached a slot or been
+//! shed). The wave-drain baseline (`continuous: false`) reproduces
+//! `drain_parallel`'s chunked barriers under the same admission control;
+//! requests already captured in a wave can dispatch past their deadline
+//! there — counted as `violations` and excluded from goodput, which is
+//! exactly the tail-latency cost the refill loop removes.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+
+use anyhow::{ensure, Result};
+
+use crate::engine::scheduler::{AdapterBatch, QueuedRequest, SchedPolicy, Scheduler};
+use crate::engine::InferenceEngine;
+use crate::runtime::Runtime;
+use crate::serving::router::Response;
+use crate::serving::store::AdapterStore;
+use crate::serving::trace::ArrivalTrace;
+use crate::tokenizer::Tokenizer;
+use crate::util::{Pcg64, Timer};
+use crate::weights::WeightSet;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrontendConfig {
+    /// rows per formed batch; must be one of the engine's baked
+    /// geometries (validated by [`Frontend::new`])
+    pub batch: usize,
+    /// concurrent decode slots (device capacity on the virtual clock)
+    pub slots: usize,
+    /// per-request deadline budget, virtual seconds from arrival; a
+    /// request not dispatched within it is shed
+    pub deadline: f64,
+    /// flush a partial batch once its oldest request waited this long
+    pub max_wait: f64,
+    /// virtual service time per dispatched batch: base + per_row × rows
+    pub service_base: f64,
+    pub service_per_row: f64,
+    pub policy: SchedPolicy,
+    /// true = row refill (continuous batching); false = the wave-drain
+    /// baseline (`drain_parallel` barrier semantics)
+    pub continuous: bool,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        Self {
+            batch: 4,
+            slots: 2,
+            deadline: 0.4,
+            max_wait: 0.05,
+            service_base: 0.05,
+            service_per_row: 0.0,
+            policy: SchedPolicy::DeadlineFlush,
+            continuous: true,
+        }
+    }
+}
+
+impl FrontendConfig {
+    /// Virtual service seconds for a batch of `rows` real rows.
+    pub fn service(&self, rows: usize) -> f64 {
+        self.service_base + self.service_per_row * rows as f64
+    }
+}
+
+/// One dispatch decision of the pure event loop.
+#[derive(Clone, Debug)]
+pub struct ScheduledBatch {
+    pub batch: AdapterBatch,
+    /// decode slot the batch occupied
+    pub slot: usize,
+    /// virtual dispatch / completion instants
+    pub start: f64,
+    pub done: f64,
+}
+
+/// A load-shed decision: the request waited out its deadline budget.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShedEvent {
+    pub id: u64,
+    pub tenant: String,
+    pub arrival: f64,
+    pub at: f64,
+}
+
+/// Full outcome of the pure event loop over one trace.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    /// dispatches in dispatch order
+    pub batches: Vec<ScheduledBatch>,
+    pub sheds: Vec<ShedEvent>,
+    /// virtual end of the run (last completion or shed)
+    pub horizon: f64,
+}
+
+/// SLO profile of a schedule on the virtual clock. Pure data — two runs
+/// of the same (trace, config) compare bit-equal.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SloStats {
+    pub offered: u64,
+    pub served: u64,
+    pub shed: u64,
+    /// served requests whose *dispatch* exceeded the deadline budget
+    /// (possible only in wave mode; excluded from goodput)
+    pub violations: u64,
+    pub batches: u64,
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    pub mean_latency: f64,
+    pub max_latency: f64,
+    /// in-deadline completions per virtual second
+    pub goodput: f64,
+    pub mean_occupancy: f64,
+    pub horizon: f64,
+}
+
+impl Schedule {
+    /// SLO stats under the config the schedule was computed with.
+    pub fn slo(&self, cfg: &FrontendConfig) -> SloStats {
+        let mut lat: Vec<f64> = Vec::new();
+        let mut rows = 0usize;
+        let mut violations = 0u64;
+        for sb in &self.batches {
+            rows += sb.batch.requests.len();
+            for r in &sb.batch.requests {
+                lat.push(sb.done - r.arrival);
+                if sb.start - r.arrival >= cfg.deadline {
+                    violations += 1;
+                }
+            }
+        }
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: usize| {
+            if lat.is_empty() {
+                0.0
+            } else {
+                lat[(lat.len() * p / 100).min(lat.len() - 1)]
+            }
+        };
+        let served = lat.len() as u64;
+        let shed = self.sheds.len() as u64;
+        SloStats {
+            offered: served + shed,
+            served,
+            shed,
+            violations,
+            batches: self.batches.len() as u64,
+            p50_latency: q(50),
+            p99_latency: q(99),
+            mean_latency: if lat.is_empty() {
+                0.0
+            } else {
+                lat.iter().sum::<f64>() / lat.len() as f64
+            },
+            max_latency: lat.last().copied().unwrap_or(0.0),
+            goodput: if self.horizon > 0.0 {
+                (served - violations) as f64 / self.horizon
+            } else {
+                0.0
+            },
+            mean_occupancy: if self.batches.is_empty() {
+                0.0
+            } else {
+                rows as f64 / (self.batches.len() * cfg.batch) as f64
+            },
+            horizon: self.horizon,
+        }
+    }
+}
+
+/// The pure open-loop event loop: replay `trace` against `cfg` and
+/// return every dispatch and shed decision. Deterministic — see the
+/// module docs for why this carries the whole determinism argument.
+pub fn schedule(trace: &ArrivalTrace, cfg: &FrontendConfig) -> Schedule {
+    let mut sched = Scheduler::new(cfg.batch, cfg.max_wait, cfg.policy);
+    let n_slots = cfg.slots.max(1);
+    // per-slot completion time; None = idle
+    let mut slots: Vec<Option<f64>> = vec![None; n_slots];
+    let mut wave_queue: VecDeque<AdapterBatch> = VecDeque::new();
+    let events = &trace.events;
+    let mut i = 0usize;
+    let mut now = 0.0f64;
+    let mut batches: Vec<ScheduledBatch> = Vec::new();
+    let mut sheds: Vec<ShedEvent> = Vec::new();
+    loop {
+        // 1. retire completions due by `now` (slot-id order)
+        for s in slots.iter_mut() {
+            if s.map(|done| done <= now).unwrap_or(false) {
+                *s = None;
+            }
+        }
+        // 2. admit arrivals due by `now`
+        while i < events.len() && events[i].at <= now {
+            let e = &events[i];
+            sched.push(QueuedRequest {
+                id: e.id,
+                adapter: e.tenant.clone(),
+                prompt: e.prompt.clone(),
+                arrival: e.at,
+            });
+            i += 1;
+        }
+        // 3. deadline sweep: shed every queued request whose wait has
+        //    reached the budget — the ONLY shedding trigger
+        for r in sched.shed_expired(now, cfg.deadline) {
+            sheds.push(ShedEvent { id: r.id, tenant: r.adapter, arrival: r.arrival, at: now });
+        }
+        // 4. dispatch
+        if cfg.continuous {
+            // row refill: every idle slot takes the next formable batch
+            // at this instant, regardless of what other slots are doing
+            while let Some(k) = slots.iter().position(|s| s.is_none()) {
+                let Some(b) = sched.next_batch(now) else { break };
+                let done = now + cfg.service(b.requests.len());
+                slots[k] = Some(done);
+                batches.push(ScheduledBatch { batch: b, slot: k, start: now, done });
+            }
+        } else if slots.iter().all(|s| s.is_none()) {
+            // wave-drain baseline: batches form only at wave boundaries
+            // (all slots idle) and a wave dispatches in chunks of
+            // `slots`, each chunk a barrier — `drain_parallel` semantics
+            if wave_queue.is_empty() {
+                wave_queue.extend(sched.flush_wave(now));
+            }
+            for (k, s) in slots.iter_mut().enumerate() {
+                let Some(b) = wave_queue.pop_front() else { break };
+                let done = now + cfg.service(b.requests.len());
+                *s = Some(done);
+                batches.push(ScheduledBatch { batch: b, slot: k, start: now, done });
+            }
+        }
+        // 5. advance to the next actionable instant. Everything at or
+        //    before `now` already fired above, so only strictly-future
+        //    candidates count; all candidate values live in the finite
+        //    set {arrival, arrival+max_wait, arrival+deadline,
+        //    completion times}, so the loop terminates.
+        let mut next = f64::INFINITY;
+        if i < events.len() && events[i].at > now {
+            next = next.min(events[i].at);
+        }
+        for done in slots.iter().flatten() {
+            if *done > now {
+                next = next.min(*done);
+            }
+        }
+        if let Some(oldest) = sched.oldest_arrival() {
+            // partial-batch flush instant and deadline-expiry instant of
+            // the oldest queued request
+            for t in [oldest + cfg.max_wait, oldest + cfg.deadline] {
+                if t > now {
+                    next = next.min(t);
+                }
+            }
+        }
+        if !next.is_finite() {
+            break;
+        }
+        now = next;
+    }
+    let mut horizon = 0.0f64;
+    for sb in &batches {
+        horizon = horizon.max(sb.done);
+    }
+    for x in &sheds {
+        horizon = horizon.max(x.at);
+    }
+    Schedule { batches, sheds, horizon }
+}
+
+/// The decode driver: owns the serving store, the shared engine and the
+/// response log; executes pure schedules against a runtime.
+pub struct Frontend {
+    pub store: AdapterStore,
+    engine: InferenceEngine,
+    base: WeightSet,
+    tok: Tokenizer,
+    ckpt_dir: PathBuf,
+    pub cfg: FrontendConfig,
+    pub responses: Vec<Response>,
+    rng: Pcg64,
+    wall_ms: f64,
+}
+
+impl Frontend {
+    pub fn new(
+        rt: &Runtime,
+        store: AdapterStore,
+        base: WeightSet,
+        cfg: FrontendConfig,
+        ckpt_dir: PathBuf,
+    ) -> Result<Self> {
+        let engine = InferenceEngine::new(rt, &store.tier, cfg.batch)?;
+        let geometries = engine.geometries();
+        ensure!(
+            geometries.contains(&cfg.batch),
+            "frontend batch {} is not a baked geometry {:?} — refill batches must \
+             decode without re-chunking",
+            cfg.batch,
+            geometries
+        );
+        ensure!(cfg.slots >= 1, "frontend needs at least one decode slot");
+        ensure!(
+            cfg.deadline > cfg.max_wait,
+            "deadline budget {} must exceed the flush wait {} or every partial \
+             batch would shed before it could flush",
+            cfg.deadline,
+            cfg.max_wait
+        );
+        ensure!(
+            cfg.service(cfg.batch) > 0.0,
+            "virtual service time must be positive"
+        );
+        Ok(Self {
+            store,
+            engine,
+            base,
+            tok: Tokenizer::new(),
+            ckpt_dir,
+            cfg,
+            responses: Vec::new(),
+            rng: Pcg64::new(0),
+            wall_ms: 0.0,
+        })
+    }
+
+    pub fn engine(&self) -> &InferenceEngine {
+        &self.engine
+    }
+
+    /// Real wall time spent in decode + merge across `serve_trace` calls.
+    pub fn wall_ms(&self) -> f64 {
+        self.wall_ms
+    }
+
+    /// SLO profile of a schedule under this frontend's config.
+    pub fn slo(&self, plan: &Schedule) -> SloStats {
+        plan.slo(&self.cfg)
+    }
+
+    /// Serve one trace end to end: compute the pure schedule, stage the
+    /// trace's adapters warm once, then decode each scheduled batch with
+    /// a per-refill pin (`begin_refill`/`end_refill`). Responses carry
+    /// virtual-clock latencies from the schedule; returns the schedule
+    /// so callers can compute SLO stats or inspect sheds.
+    pub fn serve_trace(&mut self, rt: &Runtime, trace: &ArrivalTrace) -> Result<Schedule> {
+        let plan = schedule(trace, &self.cfg);
+        let t = Timer::start();
+        // stage every adapter the plan will touch into the warm tier up
+        // front (cold unpack off the refill path); refills then pay at
+        // most one merge each
+        let mut plan_adapters: Vec<String> = Vec::new();
+        for sb in &plan.batches {
+            if !plan_adapters.contains(&sb.batch.adapter) {
+                plan_adapters.push(sb.batch.adapter.clone());
+            }
+        }
+        self.store.prefetch_warm(&plan_adapters)?;
+        for sb in &plan.batches {
+            let weights = self.store.begin_refill(rt, &self.base, &sb.batch.adapter, &self.ckpt_dir)?;
+            let problems = crate::serving::serving_problems(&sb.batch);
+            // greedy decode is content-invariant to context choice, so
+            // the least-loaded checkout is safe (same as Router)
+            let ctx = rt.checkout(self.engine.default_ctx());
+            let rows = self.engine.generate_problems_on(
+                rt,
+                ctx,
+                &weights,
+                &problems,
+                &self.tok,
+                0.0,
+                &mut self.rng,
+            );
+            self.store.end_refill(&sb.batch.adapter);
+            let rows = rows?;
+            debug_assert_eq!(rows.len(), sb.batch.requests.len());
+            let occ = rows.len() as f32 / self.engine.batch as f32;
+            for (req, row) in sb.batch.requests.iter().zip(&rows) {
+                self.responses.push(Response {
+                    id: req.id,
+                    adapter: req.adapter.clone(),
+                    text: row.text.clone(),
+                    latency: sb.done - req.arrival,
+                    batch_occupancy: occ,
+                });
+            }
+        }
+        self.wall_ms += t.millis();
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::trace::TraceConfig;
+    use crate::testing::check;
+
+    fn random_trace(rng: &mut Pcg64) -> ArrivalTrace {
+        let cfg = TraceConfig {
+            seed: rng.below(1 << 20),
+            n: 1 + rng.below(60) as usize,
+            rate: 20.0 + rng.uniform() as f64 * 300.0,
+            burst: 1 + rng.below(3) as usize,
+            tenants: 1 + rng.below(6) as usize,
+            zipf_s: *rng.choice(&[0.0, 1.1]),
+            ..Default::default()
+        };
+        ArrivalTrace::generate(&cfg).unwrap()
+    }
+
+    fn random_cfg(rng: &mut Pcg64, continuous: bool) -> FrontendConfig {
+        let max_wait = 0.01 + rng.uniform() as f64 * 0.08;
+        FrontendConfig {
+            batch: *rng.choice(&[1usize, 2, 4, 8]),
+            slots: 1 + rng.below(3) as usize,
+            deadline: max_wait * (2.0 + rng.uniform() as f64 * 8.0),
+            max_wait,
+            service_base: 0.005 + rng.uniform() as f64 * 0.05,
+            service_per_row: *rng.choice(&[0.0, 0.002]),
+            policy: *rng.choice(&[
+                SchedPolicy::OccupancyFirst,
+                SchedPolicy::DeadlineFlush,
+                SchedPolicy::RoundRobin,
+            ]),
+            continuous,
+        }
+    }
+
+    /// The admission/fairness invariant of the refill loop: every offered
+    /// request is resolved EXACTLY once, a shed can only trigger once the
+    /// wait reached the deadline budget, and in continuous mode every
+    /// dispatch happened strictly inside the budget — so no tenant with
+    /// pending work is starved beyond `deadline` (the fairness bound).
+    #[test]
+    fn prop_resolved_exactly_once_and_sheds_only_past_deadline() {
+        check("resolved exactly once", 150, |rng| {
+            let trace = random_trace(rng);
+            let continuous = rng.below(2) == 0;
+            let cfg = random_cfg(rng, continuous);
+            let plan = schedule(&trace, &cfg);
+            let mut seen = std::collections::HashMap::new();
+            for sb in &plan.batches {
+                for r in &sb.batch.requests {
+                    *seen.entry(r.id).or_insert(0u32) += 1;
+                    if sb.start < r.arrival {
+                        return Err(format!("request {} dispatched before arrival", r.id));
+                    }
+                    if continuous && sb.start - r.arrival >= cfg.deadline {
+                        return Err(format!(
+                            "continuous dispatch of {} violated the deadline: wait {:.4} >= {:.4}",
+                            r.id,
+                            sb.start - r.arrival,
+                            cfg.deadline
+                        ));
+                    }
+                }
+            }
+            for x in &plan.sheds {
+                *seen.entry(x.id).or_insert(0) += 1;
+                if x.at - x.arrival < cfg.deadline {
+                    return Err(format!(
+                        "request {} shed at wait {:.4} < deadline {:.4}",
+                        x.id,
+                        x.at - x.arrival,
+                        cfg.deadline
+                    ));
+                }
+            }
+            for e in &trace.events {
+                match seen.get(&e.id) {
+                    Some(1) => {}
+                    Some(k) => return Err(format!("request {} resolved {k} times", e.id)),
+                    None => return Err(format!("request {} dropped", e.id)),
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Row-refill batch formation never emits a batch exceeding the
+    /// configured geometry, never mixes adapters, and never oversubscribes
+    /// the slots (at most `slots` batches in flight at any instant).
+    #[test]
+    fn prop_batches_bounded_by_geometry_and_slots() {
+        check("batches bounded", 150, |rng| {
+            let trace = random_trace(rng);
+            let cfg = random_cfg(rng, rng.below(2) == 0);
+            let plan = schedule(&trace, &cfg);
+            for sb in &plan.batches {
+                let n = sb.batch.requests.len();
+                if n == 0 || n > cfg.batch {
+                    return Err(format!("batch of {n} rows vs geometry {}", cfg.batch));
+                }
+                if sb.batch.requests.iter().any(|r| r.adapter != sb.batch.adapter) {
+                    return Err("mixed-adapter batch".into());
+                }
+                if sb.slot >= cfg.slots {
+                    return Err(format!("slot {} out of range {}", sb.slot, cfg.slots));
+                }
+                let overlapping = plan
+                    .batches
+                    .iter()
+                    .filter(|o| o.start < sb.done && o.done > sb.start)
+                    .count();
+                if overlapping > cfg.slots {
+                    return Err(format!(
+                        "{overlapping} batches in flight with only {} slots",
+                        cfg.slots
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Zero overload (effectively infinite budget): nothing sheds, every
+    /// request is served, and FIFO order within each tenant survives the
+    /// refill loop.
+    #[test]
+    fn prop_zero_overload_serves_everything_in_tenant_order() {
+        check("zero overload", 100, |rng| {
+            let trace = random_trace(rng);
+            let cfg = FrontendConfig { deadline: 1e9, ..random_cfg(rng, rng.below(2) == 0) };
+            let plan = schedule(&trace, &cfg);
+            if !plan.sheds.is_empty() {
+                return Err(format!("{} sheds with an infinite budget", plan.sheds.len()));
+            }
+            let slo = plan.slo(&cfg);
+            if slo.served as usize != trace.events.len() {
+                return Err(format!("served {} of {}", slo.served, trace.events.len()));
+            }
+            if slo.violations != 0 {
+                return Err("violations with an infinite budget".into());
+            }
+            // FIFO within tenant: dispatch instants non-decreasing in id
+            let mut last: std::collections::HashMap<&str, (u64, f64)> = Default::default();
+            for sb in &plan.batches {
+                for r in &sb.batch.requests {
+                    if let Some(&(pid, pstart)) = last.get(r.adapter.as_str()) {
+                        if pid < r.id && pstart > sb.start {
+                            return Err(format!(
+                                "tenant {} served {} (t={}) after {} (t={})",
+                                r.adapter, pid, pstart, r.id, sb.start
+                            ));
+                        }
+                    }
+                    last.insert(r.adapter.as_str(), (r.id, sb.start));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The refill loop strictly dominates the wave barrier on completion
+    /// time: with identical (trace, config), the continuous schedule's
+    /// last completion is never later than wave-drain's.
+    #[test]
+    fn prop_continuous_finishes_no_later_than_wave_drain() {
+        check("continuous dominates", 100, |rng| {
+            let trace = random_trace(rng);
+            // infinite budget isolates the refill-vs-barrier comparison
+            // from shedding differences
+            let base = FrontendConfig { deadline: 1e9, ..random_cfg(rng, true) };
+            let cont = schedule(&trace, &FrontendConfig { continuous: true, ..base.clone() });
+            let wave = schedule(&trace, &FrontendConfig { continuous: false, ..base });
+            if cont.horizon > wave.horizon + 1e-9 {
+                return Err(format!(
+                    "continuous finished at {:.4} after wave-drain {:.4}",
+                    cont.horizon, wave.horizon
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn config_validation_rejects_broken_geometry_and_budgets() {
+        let rt = Runtime::sim(1).unwrap();
+        let tier = rt.manifest.tier("sim").unwrap().clone();
+        let base = WeightSet::init(&tier, 0).unwrap();
+        let dir = std::env::temp_dir().join("tlrl_frontend_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let store = || AdapterStore::new("sim", 2);
+        // batch 3 is not in the baked geometry set {1,2,4,8}
+        let bad_geo = FrontendConfig { batch: 3, ..Default::default() };
+        assert!(Frontend::new(&rt, store(), base.clone(), bad_geo, dir.clone()).is_err());
+        let bad_budget =
+            FrontendConfig { deadline: 0.01, max_wait: 0.05, ..Default::default() };
+        assert!(Frontend::new(&rt, store(), base.clone(), bad_budget, dir.clone()).is_err());
+        let ok = Frontend::new(&rt, store(), base, FrontendConfig::default(), dir.clone());
+        assert!(ok.is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

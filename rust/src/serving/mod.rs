@@ -6,15 +6,39 @@
 //!
 //! Decode and batch formation live in the shared `engine` subsystem
 //! (`InferenceEngine`, `Scheduler`, `WorkerPool`); this module owns the
-//! serving-specific pieces: the adapter store and the router.
+//! serving-specific pieces: the adapter store, the wave-drain router,
+//! and the open-loop continuous-batching front-end (`frontend` +
+//! `trace`).
 
 pub mod batcher;
+pub mod frontend;
 pub mod router;
 pub mod store;
+pub mod trace;
 
 pub use batcher::{Batch, DynamicBatcher, Request};
+pub use frontend::{schedule, Frontend, FrontendConfig, Schedule, ShedEvent, SloStats};
 pub use router::{Response, Router, RouterStats};
 pub use store::{AdapterStore, ColdTier, Residency, ResidentLru, StoreStats};
+pub use trace::{ArrivalTrace, TraceConfig, TraceEvent};
 
 // convenience re-exports for serving clients
 pub use crate::engine::scheduler::{AdapterBatch, QueuedRequest, SchedPolicy, Scheduler};
+
+/// A formed batch as decode problems. Serving prompts are free-form (no
+/// gold/answer), so suite is a fixed marker — shared by the router's wave
+/// path and the front-end's refill path so both decode the exact same
+/// `Problem` rows for the same batch (part of the byte-identity
+/// argument, DESIGN.md §13).
+pub(crate) fn serving_problems(batch: &AdapterBatch) -> Vec<crate::tasks::generator::Problem> {
+    batch
+        .requests
+        .iter()
+        .map(|r| crate::tasks::generator::Problem {
+            prompt: r.prompt.clone(),
+            gold: String::new(),
+            answer: 0,
+            suite: "serving",
+        })
+        .collect()
+}

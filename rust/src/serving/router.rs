@@ -138,19 +138,6 @@ impl Router {
         n
     }
 
-    fn batch_problems(batch: &AdapterBatch) -> Vec<Problem> {
-        batch
-            .requests
-            .iter()
-            .map(|r| Problem {
-                prompt: r.prompt.clone(),
-                gold: String::new(),
-                answer: 0,
-                suite: "serving",
-            })
-            .collect()
-    }
-
     /// Record completions for one served batch (virtual clock already
     /// advanced to the completion time).
     fn record(&mut self, batch: &AdapterBatch, rows: &[GenRow]) {
@@ -179,7 +166,7 @@ impl Router {
             Some(w) => w,
             None => self.store.activate(rt, &self.base, &batch.adapter, &self.ckpt_dir)?,
         };
-        let problems = Self::batch_problems(&batch);
+        let problems = crate::serving::serving_problems(&batch);
         // the engine pads short batches with the explicit sentinel and
         // returns exactly one row per real request. Serving decode is
         // greedy (temp 0) and per-row, so its *content* is
@@ -259,7 +246,7 @@ impl Router {
                     jobs.push(GenJob {
                         id: k as u64,
                         weights,
-                        problems: Self::batch_problems(b),
+                        problems: crate::serving::serving_problems(b),
                         group: 1,
                         pb: None,
                         temperature: 0.0,

@@ -70,6 +70,9 @@ pub struct StoreStats {
     pub hot_bytes: usize,
     pub warm_entries: usize,
     pub hot_entries: usize,
+    /// mid-decode row refills served by the continuous-batching
+    /// front-end (`begin_refill` calls)
+    pub refills: u64,
 }
 
 #[derive(Clone, Copy, Default)]
@@ -83,6 +86,7 @@ struct Counters {
     demotions: u64,
     evictions_warm: u64,
     evictions_hot: u64,
+    refills: u64,
 }
 
 pub struct AdapterStore {
@@ -253,6 +257,32 @@ impl AdapterStore {
         self.hot_trim();
     }
 
+    /// One mid-decode row refill of the continuous-batching front-end: a
+    /// single-adapter wave (pin → promote/merge → checkout), used each
+    /// time a freed decode slot is refilled with a new batch while other
+    /// slots are still mid-decode.  Pins nest with any surrounding wave,
+    /// so a refill can never evict an adapter another slot is serving.
+    /// Balance with [`AdapterStore::end_refill`].
+    pub fn begin_refill(
+        &mut self,
+        rt: &Runtime,
+        base: &WeightSet,
+        name: &str,
+        ckpt_dir: &Path,
+    ) -> Result<WeightSet> {
+        let wave = [name.to_string()];
+        self.begin_wave(rt, base, &wave, ckpt_dir)?;
+        self.c.refills += 1;
+        Ok(self
+            .checkout_hot(name)
+            .expect("begin_wave promoted and pinned the refill adapter"))
+    }
+
+    /// Release a refill's pin (deferred hot-tier trim happens here).
+    pub fn end_refill(&mut self, name: &str) {
+        self.end_wave(&[name.to_string()]);
+    }
+
     /// Stage a set of adapters into the warm tier (cold-tier unpack only,
     /// no merge) — e.g. the whole upcoming wave before its chunks pin and
     /// merge their slices.  Counts tier transitions but no activations.
@@ -411,6 +441,7 @@ impl AdapterStore {
             hot_bytes: self.hot_bytes,
             warm_entries: self.warm.len(),
             hot_entries: self.hot.len(),
+            refills: self.c.refills,
         }
     }
 
@@ -581,6 +612,42 @@ mod tests {
         // the failed wave released its pin
         store.end_wave(&[]); // no-op
         assert_eq!(store.stats().hot_entries, 1);
+    }
+
+    /// A row refill is a one-adapter wave: it pins across the checkout
+    /// (so concurrent slots can't evict it), counts one refill + one
+    /// activation, and nests with a surrounding wave's pins.
+    #[test]
+    fn refill_pins_nest_and_count() {
+        let rt = Runtime::sim(1).unwrap();
+        let base = WeightSet::init(&rt.manifest.tier(SIM_TIER).unwrap().clone(), 3).unwrap();
+        let dir = scratch("refill");
+        let mut store = sim_store(1, 4, 3);
+        // an in-flight wave holds t0 hot; refills of t1/t2 must not evict it
+        let wave: Vec<String> = vec!["t0".into()];
+        store.begin_wave(&rt, &base, &wave, &dir).unwrap();
+        let w1 = store.begin_refill(&rt, &base, "t1", &dir).unwrap();
+        let w2 = store.begin_refill(&rt, &base, "t2", &dir).unwrap();
+        assert!(w1.n_params() > 0 && w2.n_params() > 0);
+        assert_eq!(store.residency("t0"), Residency::Hot);
+        assert_eq!(store.stats().hot_entries, 3);
+        store.end_refill("t1");
+        store.end_refill("t2");
+        // refill pins released: hot trims back around the still-pinned wave
+        assert_eq!(store.residency("t0"), Residency::Hot);
+        assert_eq!(store.stats().hot_entries, 1);
+        store.end_wave(&wave);
+        let st = store.stats();
+        assert_eq!(st.refills, 2);
+        assert_eq!(st.activations, 3);
+        // a nested refill of the SAME adapter keeps it pinned until both ends
+        store.begin_refill(&rt, &base, "t0", &dir).unwrap();
+        store.begin_refill(&rt, &base, "t0", &dir).unwrap();
+        store.end_refill("t0");
+        assert_eq!(store.residency("t0"), Residency::Hot);
+        store.end_refill("t0");
+        assert!(store.begin_refill(&rt, &base, "ghost", &dir).is_err());
+        assert_eq!(store.stats().refills, 4, "failed refill does not count");
     }
 
     /// `prefetch_warm` stages cold records without activations; a

@@ -1,0 +1,388 @@
+//! Seeded open-loop arrival traces — the load model of the serving
+//! front-end (`serving::frontend`).
+//!
+//! An open-loop generator decouples arrivals from service: requests land
+//! at times drawn from the model regardless of whether the plane keeps
+//! up, which is what exposes queueing collapse and makes shedding
+//! meaningful (a closed loop self-throttles and can never overload).
+//!
+//! The generator is deterministic: one `TraceConfig` (seed + Poisson
+//! rate + burst width + zipf tenant skew + problem suite) always yields
+//! the same `ArrivalTrace`, and a trace serializes to *canonical* JSON
+//! through `util::json` (BTreeMap-backed objects, shortest-round-trip
+//! float formatting), so `save` → `load` → `schedule` replays to
+//! identical admission decisions bit for bit. Traces are therefore
+//! committable artifacts: a load test is a (trace, config) pair, not a
+//! random process.
+//!
+//! Arrival model: inter-arrival gaps between burst events are
+//! exponential with mean `burst / rate` (so the long-run arrival rate is
+//! `rate` requests per virtual second independent of burst width), each
+//! event drops `burst` requests at the same instant, and every request
+//! picks its tenant by an inverse-CDF zipf(`zipf_s`) draw (`zipf_s = 0`
+//! is uniform) — the same skew model as `bench_store`'s trace.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tasks::generator::{Suite, SUITES};
+use crate::util::json::{num, obj, s, Value};
+use crate::util::Pcg64;
+
+/// RNG stream tag for trace generation (decoupled from training/pool
+/// streams so trace seeds never collide with job seeds).
+const TRACE_STREAM: u64 = 0x74726163;
+
+const SCHEMA_VERSION: usize = 1;
+
+/// Everything that determines a generated trace (echoed into the JSON so
+/// a committed trace documents its own provenance).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceConfig {
+    pub seed: u64,
+    /// total requests
+    pub n: usize,
+    /// long-run arrival rate, requests per virtual second
+    pub rate: f64,
+    /// requests per arrival event (1 = pure Poisson)
+    pub burst: usize,
+    /// tenant population (`tenant-0` .. `tenant-{tenants-1}`)
+    pub tenants: usize,
+    /// zipf skew of tenant popularity; 0.0 = uniform
+    pub zipf_s: f64,
+    /// problem suite prompts are drawn from (`tasks::generator::SUITES`)
+    pub suite: String,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            n: 64,
+            rate: 40.0,
+            burst: 1,
+            tenants: 8,
+            zipf_s: 1.1,
+            suite: "gsm8k-syn".into(),
+        }
+    }
+}
+
+/// One request arrival: id, virtual arrival time, tenant, prompt.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub id: u64,
+    pub at: f64,
+    pub tenant: String,
+    pub prompt: String,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrivalTrace {
+    pub config: TraceConfig,
+    /// arrivals in non-decreasing `at` order, ids contiguous from 0
+    pub events: Vec<TraceEvent>,
+}
+
+fn suite_by_name(name: &str) -> Result<&'static Suite> {
+    SUITES
+        .iter()
+        .find(|s| s.name == name)
+        .with_context(|| format!("unknown problem suite {name:?}"))
+}
+
+/// Inverse-CDF sample of a continuous-approximation zipf(s) rank on
+/// `1..=n`, mapped to a 0-based tenant index; s = 0 degrades to uniform.
+fn zipf_pick(rng: &mut Pcg64, n: usize, zipf_s: f64) -> usize {
+    if n <= 1 || zipf_s <= 0.0 {
+        return rng.below(n as u64) as usize;
+    }
+    // the closed form divides by (1 - s); nudge the singular s = 1 case
+    let s = if (zipf_s - 1.0).abs() < 1e-9 { 1.0 + 1e-9 } else { zipf_s };
+    let u = rng.uniform() as f64;
+    let x = (1.0 + u * ((n as f64).powf(1.0 - s) - 1.0)).powf(1.0 / (1.0 - s));
+    (x as usize).saturating_sub(1).min(n - 1)
+}
+
+impl ArrivalTrace {
+    /// Deterministically generate a trace from its config.
+    pub fn generate(cfg: &TraceConfig) -> Result<ArrivalTrace> {
+        if cfg.rate <= 0.0 || !cfg.rate.is_finite() {
+            bail!("trace rate must be positive, got {}", cfg.rate);
+        }
+        if cfg.burst == 0 {
+            bail!("trace burst width must be >= 1");
+        }
+        if cfg.tenants == 0 {
+            bail!("trace needs at least one tenant");
+        }
+        let suite = suite_by_name(&cfg.suite)?;
+        let mut rng = Pcg64::with_stream(cfg.seed, TRACE_STREAM);
+        let mut events = Vec::with_capacity(cfg.n);
+        let mut t = 0.0f64;
+        let mut id = 0u64;
+        while (id as usize) < cfg.n {
+            // exponential gap between burst events, mean burst/rate
+            let u = rng.uniform() as f64;
+            t += -(1.0 - u).ln() * cfg.burst as f64 / cfg.rate;
+            for _ in 0..cfg.burst {
+                if id as usize >= cfg.n {
+                    break;
+                }
+                let tenant = zipf_pick(&mut rng, cfg.tenants, cfg.zipf_s);
+                let p = suite.generate(&mut rng);
+                events.push(TraceEvent {
+                    id,
+                    at: t,
+                    tenant: format!("tenant-{tenant}"),
+                    prompt: p.prompt,
+                });
+                id += 1;
+            }
+        }
+        Ok(ArrivalTrace { config: cfg.clone(), events })
+    }
+
+    /// Distinct tenant names appearing in the trace, sorted — what a
+    /// serving plane must register before replaying it.
+    pub fn tenant_names(&self) -> Vec<String> {
+        let mut set: Vec<String> = Vec::new();
+        for e in &self.events {
+            if !set.contains(&e.tenant) {
+                set.push(e.tenant.clone());
+            }
+        }
+        set.sort();
+        set
+    }
+
+    /// Canonical JSON form (BTreeMap key order + shortest-round-trip
+    /// floats: serialize → parse → serialize is byte-stable).
+    pub fn to_json(&self) -> Value {
+        let c = &self.config;
+        obj(vec![
+            ("kind", s("arrival_trace")),
+            ("schema_version", num(SCHEMA_VERSION as f64)),
+            (
+                "config",
+                obj(vec![
+                    ("seed", num(c.seed as f64)),
+                    ("n", num(c.n as f64)),
+                    ("rate", num(c.rate)),
+                    ("burst", num(c.burst as f64)),
+                    ("tenants", num(c.tenants as f64)),
+                    ("zipf_s", num(c.zipf_s)),
+                    ("suite", s(&c.suite)),
+                ]),
+            ),
+            (
+                "events",
+                Value::Arr(
+                    self.events
+                        .iter()
+                        .map(|e| {
+                            obj(vec![
+                                ("id", num(e.id as f64)),
+                                ("at", num(e.at)),
+                                ("tenant", s(&e.tenant)),
+                                ("prompt", s(&e.prompt)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<ArrivalTrace> {
+        if v.get("kind")?.str()? != "arrival_trace" {
+            bail!("not an arrival trace (kind mismatch)");
+        }
+        let version = v.get("schema_version")?.usize()?;
+        if version != SCHEMA_VERSION {
+            bail!("arrival trace schema {version} != {SCHEMA_VERSION}");
+        }
+        let c = v.get("config")?;
+        let config = TraceConfig {
+            seed: c.get("seed")?.f64()? as u64,
+            n: c.get("n")?.usize()?,
+            rate: c.get("rate")?.f64()?,
+            burst: c.get("burst")?.usize()?,
+            tenants: c.get("tenants")?.usize()?,
+            zipf_s: c.get("zipf_s")?.f64()?,
+            suite: c.get("suite")?.str()?.to_string(),
+        };
+        let mut events = Vec::new();
+        let mut last_at = f64::NEG_INFINITY;
+        for (k, e) in v.get("events")?.arr()?.iter().enumerate() {
+            let ev = TraceEvent {
+                id: e.get("id")?.f64()? as u64,
+                at: e.get("at")?.f64()?,
+                tenant: e.get("tenant")?.str()?.to_string(),
+                prompt: e.get("prompt")?.str()?.to_string(),
+            };
+            if ev.id != k as u64 {
+                bail!("trace event {k} has id {} (ids must be contiguous from 0)", ev.id);
+            }
+            if ev.at < last_at {
+                bail!("trace event {k} arrives at {} before its predecessor {last_at}", ev.at);
+            }
+            last_at = ev.at;
+            events.push(ev);
+        }
+        Ok(ArrivalTrace { config, events })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path, self.to_json().to_string() + "\n")
+            .with_context(|| format!("writing trace {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<ArrivalTrace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        Self::from_json(&Value::parse(text.trim())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::scheduler::SchedPolicy;
+    use crate::serving::frontend::{schedule, FrontendConfig};
+
+    fn small_cfg() -> TraceConfig {
+        TraceConfig { seed: 7, n: 18, rate: 50.0, burst: 3, tenants: 4, zipf_s: 1.1, ..Default::default() }
+    }
+
+    /// Golden determinism: the same config always serializes to the same
+    /// canonical JSON string, parse → re-serialize is byte-stable, and
+    /// the file round-trip preserves every event exactly.
+    #[test]
+    fn golden_canonical_json_round_trips_byte_identical() {
+        let a = ArrivalTrace::generate(&small_cfg()).unwrap();
+        let b = ArrivalTrace::generate(&small_cfg()).unwrap();
+        let text = a.to_json().to_string();
+        assert_eq!(text, b.to_json().to_string(), "generation is not deterministic");
+        // canonical: parse → re-serialize must reproduce the exact bytes
+        let reparsed = ArrivalTrace::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(reparsed, a);
+        assert_eq!(reparsed.to_json().to_string(), text, "serialization is not canonical");
+        // file round-trip
+        let dir = std::env::temp_dir().join("tlrl_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("golden.json");
+        a.save(&path).unwrap();
+        let loaded = ArrivalTrace::load(&path).unwrap();
+        assert_eq!(loaded, a, "save/load changed the trace");
+        std::fs::remove_dir_all(&dir).ok();
+        // a different seed must actually move the trace
+        let other =
+            ArrivalTrace::generate(&TraceConfig { seed: 8, ..small_cfg() }).unwrap();
+        assert_ne!(other.to_json().to_string(), text);
+    }
+
+    /// Replay: a loaded trace drives the frontend's pure schedule to the
+    /// same admission decisions as the in-memory original — same batches
+    /// (ids, slots, times to the bit) and same sheds.
+    #[test]
+    fn replayed_trace_yields_identical_admission_decisions() {
+        let trace = ArrivalTrace::generate(&TraceConfig {
+            n: 40,
+            rate: 300.0, // overload the tiny config below so sheds occur
+            ..small_cfg()
+        })
+        .unwrap();
+        let dir = std::env::temp_dir().join("tlrl_trace_replay_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        trace.save(&path).unwrap();
+        let loaded = ArrivalTrace::load(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+
+        let cfg = FrontendConfig {
+            batch: 4,
+            slots: 1,
+            deadline: 0.08,
+            max_wait: 0.02,
+            service_base: 0.03,
+            service_per_row: 0.0,
+            policy: SchedPolicy::DeadlineFlush,
+            continuous: true,
+        };
+        let a = schedule(&trace, &cfg);
+        let b = schedule(&loaded, &cfg);
+        assert!(!a.sheds.is_empty(), "overload config produced no sheds — test is vacuous");
+        let key = |s: &crate::serving::frontend::Schedule| {
+            let batches: Vec<(Vec<u64>, usize, u64, u64)> = s
+                .batches
+                .iter()
+                .map(|sb| {
+                    (
+                        sb.batch.requests.iter().map(|r| r.id).collect(),
+                        sb.slot,
+                        sb.start.to_bits(),
+                        sb.done.to_bits(),
+                    )
+                })
+                .collect();
+            let sheds: Vec<(u64, u64)> =
+                s.sheds.iter().map(|x| (x.id, x.at.to_bits())).collect();
+            (batches, sheds)
+        };
+        assert_eq!(key(&a), key(&b), "replay diverged from the original trace");
+    }
+
+    /// Structural invariants: monotone times, contiguous ids, burst
+    /// grouping, tenant names in range, and a sane long-run rate.
+    #[test]
+    fn structure_rate_and_burst_grouping() {
+        let cfg = TraceConfig {
+            seed: 3,
+            n: 600,
+            rate: 80.0,
+            burst: 3,
+            tenants: 6,
+            zipf_s: 1.1,
+            ..Default::default()
+        };
+        let tr = ArrivalTrace::generate(&cfg).unwrap();
+        assert_eq!(tr.events.len(), 600);
+        for (k, e) in tr.events.iter().enumerate() {
+            assert_eq!(e.id, k as u64);
+            if k > 0 {
+                assert!(e.at >= tr.events[k - 1].at, "arrivals not monotone");
+            }
+            assert!(e.tenant.starts_with("tenant-"));
+            assert!(!e.prompt.is_empty());
+        }
+        // bursts share a timestamp in groups of `burst`
+        for chunk in tr.events.chunks(3) {
+            assert!(chunk.iter().all(|e| e.at == chunk[0].at), "burst split across instants");
+        }
+        // long-run rate within 25% of nominal over 600 arrivals
+        let span = tr.events.last().unwrap().at;
+        let measured = 600.0 / span;
+        assert!(
+            (measured - 80.0).abs() < 20.0,
+            "measured rate {measured:.1}/s too far from nominal 80/s"
+        );
+        // zipf skew: the head tenant dominates a uniform share
+        let head = tr.events.iter().filter(|e| e.tenant == "tenant-0").count();
+        assert!(head > 600 / 6, "zipf head tenant not over-represented ({head}/600)");
+        assert!(tr.tenant_names().len() <= 6);
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected() {
+        assert!(ArrivalTrace::generate(&TraceConfig { rate: 0.0, ..small_cfg() }).is_err());
+        assert!(ArrivalTrace::generate(&TraceConfig { burst: 0, ..small_cfg() }).is_err());
+        assert!(ArrivalTrace::generate(&TraceConfig { tenants: 0, ..small_cfg() }).is_err());
+        assert!(ArrivalTrace::generate(&TraceConfig { suite: "nope".into(), ..small_cfg() })
+            .is_err());
+    }
+}

@@ -32,7 +32,11 @@ use tinylora_rl::eval::bench::{run_ladder_with, BenchConfig};
 use tinylora_rl::eval::evaluate;
 use tinylora_rl::metrics::RunLog;
 use tinylora_rl::runtime::{SimOptions, SIM_SCHEME, SIM_TIER};
-use tinylora_rl::serving::{AdapterStore, Router, StoreStats};
+use tinylora_rl::serving::{
+    AdapterStore, ArrivalTrace, Frontend, FrontendConfig, Router, SloStats, StoreStats,
+    TraceConfig,
+};
+use tinylora_rl::util::json::Value;
 use tinylora_rl::tasks::generator::{Problem, SUITES};
 use tinylora_rl::trainer::{TenantSpec, TenantTrainer, TrainSession, TrainState};
 use tinylora_rl::util::Pcg64;
@@ -627,6 +631,240 @@ fn router_parallel_drain_matches_sequential_on_sim() {
     assert_eq!(texts(&sequential), texts(&parallel), "parallel drain changed served texts");
     assert_eq!(sequential.stats().served, 22);
     assert_eq!(parallel.stats().served, 22);
+}
+
+/// Register the same 26-byte tenants with the same thetas — serving
+/// byte-identity claims only hold when every run sees identical adapters.
+fn serving_tenants(store: &mut AdapterStore, n: usize) {
+    let mut rng = Pcg64::new(11);
+    for i in 0..n {
+        let theta: Vec<f32> = (0..13).map(|_| rng.normal() * 0.1).collect();
+        store.register(&format!("tenant-{i}"), SIM_SCHEME, &theta, Precision::Bf16).unwrap();
+    }
+}
+
+/// ISSUE 8 acceptance: the continuous-batching front-end is proven
+/// byte-identical to wave draining on the full open-loop path. One
+/// seeded arrival trace at zero overload is served by (a) the PR 6
+/// `Router::drain_parallel` reference, (b) the continuous refill
+/// front-end and (c) its wave-drain mode, across devices {1,2} ×
+/// row-workers {1,4} — every run must produce the same per-request
+/// texts. Replaying the trace must also reproduce the SLO metrics
+/// exactly, all the way through the JSONL row.
+#[test]
+fn continuous_frontend_matches_wave_drain_byte_identical_at_zero_overload() {
+    let tcfg = TraceConfig {
+        seed: 41,
+        n: 26,
+        rate: 30.0,
+        burst: 2,
+        tenants: 5,
+        zipf_s: 1.1,
+        ..Default::default()
+    };
+    let trace = ArrivalTrace::generate(&tcfg).unwrap();
+    let cfg = FrontendConfig {
+        batch: 4,
+        slots: 2,
+        // effectively infinite budget: zero overload must shed nothing
+        deadline: 1e6,
+        max_wait: 0.2,
+        service_base: 0.05,
+        service_per_row: 0.0,
+        policy: SchedPolicy::DeadlineFlush,
+        continuous: true,
+    };
+
+    // (a) reference: the wave-drain router on the identical trace
+    let rt = Runtime::sim(1).unwrap();
+    let mut store = AdapterStore::new(SIM_TIER, 2);
+    serving_tenants(&mut store, 5);
+    let mut router = Router::new(
+        &rt,
+        store,
+        base_weights(&rt, 3),
+        rt.manifest.batch.serve,
+        0.2,
+        scratch("fe_ref"),
+    )
+    .unwrap();
+    for e in &trace.events {
+        router.now = e.at;
+        let p = Problem {
+            prompt: e.prompt.clone(),
+            gold: String::new(),
+            answer: 0,
+            suite: "serving",
+        };
+        router.submit(e.id, &e.tenant, &p);
+    }
+    router.drain_parallel(&rt, 4).unwrap();
+    let mut reference: Vec<(u64, String, String)> =
+        router.responses.iter().map(|r| (r.id, r.adapter.clone(), r.text.clone())).collect();
+    reference.sort();
+    assert_eq!(reference.len(), 26);
+
+    // (b)+(c): both front-end modes across the device/worker matrix
+    for (devices, row_workers) in [(1, 1), (2, 1), (1, 4), (2, 4)] {
+        let rt =
+            Runtime::sim_with(devices, SimOptions { row_workers, ..Default::default() }).unwrap();
+        for continuous in [true, false] {
+            let mut store = AdapterStore::new(SIM_TIER, 2);
+            serving_tenants(&mut store, 5);
+            let mut fe = Frontend::new(
+                &rt,
+                store,
+                base_weights(&rt, 3),
+                FrontendConfig { continuous, ..cfg.clone() },
+                scratch("fe_run"),
+            )
+            .unwrap();
+            let plan = fe.serve_trace(&rt, &trace).unwrap();
+            assert!(plan.sheds.is_empty(), "zero overload must not shed");
+            let mut triples: Vec<(u64, String, String)> =
+                fe.responses.iter().map(|r| (r.id, r.adapter.clone(), r.text.clone())).collect();
+            triples.sort();
+            assert_eq!(
+                triples, reference,
+                "front-end texts diverged from drain_parallel \
+                 (devices={devices} row_workers={row_workers} continuous={continuous})"
+            );
+        }
+    }
+
+    // trace replay: two fresh runs reproduce the SLO metrics exactly,
+    // including the serialized JSONL row (wall time pinned — it is the
+    // one field measuring this machine rather than the schedule)
+    let run_slo = |tag: &str| -> (SloStats, Value) {
+        let rt = Runtime::sim(1).unwrap();
+        let mut store = AdapterStore::new(SIM_TIER, 2);
+        serving_tenants(&mut store, 5);
+        let mut fe =
+            Frontend::new(&rt, store, base_weights(&rt, 3), cfg.clone(), scratch("fe_slo"))
+                .unwrap();
+        let plan = fe.serve_trace(&rt, &trace).unwrap();
+        let slo = fe.slo(&plan);
+        let path = scratch("fe_slo").join(format!("slo_{tag}.jsonl"));
+        std::fs::remove_file(&path).ok();
+        {
+            let mut log = RunLog::new(Some(&path), false);
+            log.log_serve(SIM_TIER, "continuous", trace.config.rate, &slo, 1.0);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        (slo, Value::parse(text.trim()).unwrap())
+    };
+    let (slo_a, row_a) = run_slo("a");
+    let (slo_b, row_b) = run_slo("b");
+    assert_eq!(slo_a, slo_b, "trace replay changed the SLO stats");
+    assert_eq!(row_a, row_b, "trace replay changed the serialized JSONL row");
+    assert_eq!((slo_a.served, slo_a.shed, slo_a.violations), (26, 0, 0));
+}
+
+/// ISSUE 8 acceptance: deterministic shedding under injected delays.
+/// The sim backend's `row_budget_us` fault knob stalls every execute
+/// call on the real wall clock while the front-end's virtual service
+/// model (`service_per_row` = the same 20ms/row) pushes the plane past
+/// capacity — p99, goodput and shed counts must reflect the stalls, land
+/// identically in the JSONL stream on every run, and leave decoded
+/// content untouched.
+#[test]
+fn frontend_injected_stalls_shape_tail_latency_and_shedding_deterministically() {
+    let tcfg = TraceConfig {
+        seed: 97,
+        n: 60,
+        rate: 300.0,
+        burst: 1,
+        tenants: 6,
+        zipf_s: 1.1,
+        ..Default::default()
+    };
+    let trace = ArrivalTrace::generate(&tcfg).unwrap();
+    // calm capacity: 2 slots × 4 rows / 5ms = 1600 rows/s — even an
+    // all-at-once burst of 60 drains in ~40ms, far inside the 200ms
+    // budget, so zero shed is guaranteed. Stalled capacity: service(4) =
+    // 5ms + 4 × 20ms = 85ms → ≈ 94 rows/s, and 60 arrivals in 200ms
+    // cannot all dispatch within deadline → shedding is guaranteed.
+    let cfg = |per_row: f64| FrontendConfig {
+        batch: 4,
+        slots: 2,
+        deadline: 0.2,
+        max_wait: 0.02,
+        service_base: 0.005,
+        service_per_row: per_row,
+        policy: SchedPolicy::DeadlineFlush,
+        continuous: true,
+    };
+    type Run = (SloStats, Vec<(u64, u64)>, Vec<(u64, String)>, Value, f64);
+    let run = |row_budget_us: u64, per_row: f64, tag: &str| -> Run {
+        let rt =
+            Runtime::sim_with(1, SimOptions { row_budget_us, ..Default::default() }).unwrap();
+        let mut store = AdapterStore::new(SIM_TIER, 2);
+        serving_tenants(&mut store, 6);
+        let mut fe =
+            Frontend::new(&rt, store, base_weights(&rt, 3), cfg(per_row), scratch("fe_stall"))
+                .unwrap();
+        let t = std::time::Instant::now();
+        let plan = fe.serve_trace(&rt, &trace).unwrap();
+        let elapsed_ms = t.elapsed().as_secs_f64() * 1e3;
+        let slo = fe.slo(&plan);
+        // shed decisions down to the bit pattern of their timestamps
+        let sheds: Vec<(u64, u64)> = plan.sheds.iter().map(|x| (x.id, x.at.to_bits())).collect();
+        let mut texts: Vec<(u64, String)> =
+            fe.responses.iter().map(|r| (r.id, r.text.clone())).collect();
+        texts.sort();
+        let path = scratch("fe_stall").join(format!("slo_{tag}.jsonl"));
+        std::fs::remove_file(&path).ok();
+        {
+            let mut log = RunLog::new(Some(&path), false);
+            log.log_serve(SIM_TIER, "continuous", trace.config.rate, &slo, 1.0);
+        }
+        let row = Value::parse(std::fs::read_to_string(&path).unwrap().trim()).unwrap();
+        (slo, sheds, texts, row, elapsed_ms)
+    };
+
+    let (calm, calm_sheds, calm_texts, _, _) = run(0, 0.0, "calm");
+    let (stalled, sheds1, texts1, row1, elapsed_ms) = run(20_000, 0.02, "stall_a");
+    let (stalled2, sheds2, texts2, row2, _) = run(20_000, 0.02, "stall_b");
+
+    // injected stalls are exactly reproducible: same SLO stats, same shed
+    // decisions (ids AND timestamps), same texts, same JSONL row
+    assert_eq!(stalled, stalled2, "stalled SLO stats not deterministic");
+    assert_eq!(sheds1, sheds2, "shed decisions not deterministic");
+    assert_eq!(texts1, texts2, "stalled decode texts not deterministic");
+    assert_eq!(row1, row2, "stalled JSONL serve row not deterministic");
+
+    // the stall profile: calm serves everything, stalled sheds and pays
+    // tail latency, goodput collapses accordingly
+    assert!(calm_sheds.is_empty());
+    assert_eq!((calm.served, calm.shed), (60, 0));
+    assert!(stalled.shed > 0, "overloaded stalled run must shed");
+    assert_eq!(stalled.served + stalled.shed, 60);
+    assert!(
+        stalled.p99_latency > calm.p99_latency,
+        "injected stalls must surface in p99: stalled {} vs calm {}",
+        stalled.p99_latency,
+        calm.p99_latency
+    );
+    assert!(stalled.goodput < calm.goodput);
+
+    // the fault knob stalls the REAL clock: ≥ 10 batches × ≥ 20ms each
+    assert!(
+        elapsed_ms >= 100.0,
+        "row_budget_us stalls must hit the wall clock (elapsed {elapsed_ms:.0}ms)"
+    );
+
+    // stalls shape timing only — any request served in both runs decoded
+    // byte-identical content
+    let calm_map: std::collections::HashMap<u64, &String> =
+        calm_texts.iter().map(|(id, t)| (*id, t)).collect();
+    let mut common = 0;
+    for (id, text) in &texts1 {
+        if let Some(t) = calm_map.get(id) {
+            assert_eq!(*t, text, "request {id} decoded differently under stalls");
+            common += 1;
+        }
+    }
+    assert!(common > 0, "no overlap between calm and stalled served sets");
 }
 
 /// The whole CLI-shaped lifecycle in one process, zero artifacts:
