@@ -60,6 +60,11 @@ report_skips() {
 # and --fast modes — no artifacts needed, zero skips tolerated.
 echo "== cargo test --test e2e_sim (hermetic sim backend) =="
 report_skips "e2e_sim" cargo test --test e2e_sim -- --nocapture
+# Chaos gate (ISSUE 9): scripted context death / hangs / transient faults
+# through the supervision plane, byte-identity + counter assertions. Also
+# hermetic — the e2e_sim* label prefix means zero skips tolerated.
+echo "== cargo test --test chaos_sim (deterministic chaos suite) =="
+report_skips "e2e_sim_chaos" cargo test --test chaos_sim -- --nocapture
 echo "== cargo test --test integration (per-backend, PJRT variants skip without artifacts) =="
 report_skips "integration" cargo test --test integration -- --nocapture
 

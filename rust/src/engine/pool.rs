@@ -20,6 +20,7 @@
 //! delays — in `tests/e2e_sim.rs`).
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Mutex;
 
 use anyhow::{bail, Result};
@@ -60,6 +61,17 @@ pub struct GenJob {
 pub struct GenJobResult {
     pub id: u64,
     pub rows: Vec<GenRow>,
+}
+
+/// Human-readable payload of a caught worker panic.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
 }
 
 pub struct WorkerPool {
@@ -126,11 +138,23 @@ impl WorkerPool {
                 s.spawn(|| loop {
                     let job = queue.lock().unwrap().pop_front();
                     let Some(job) = job else { break };
-                    match Self::run_job(rt, engine, &job) {
-                        Ok(rows) => {
+                    // a panicking job must surface as THAT JOB's error —
+                    // an uncaught panic would propagate through the scope
+                    // and tear down every caller waiting on results
+                    // (nothing pool-shared is held across this call, so
+                    // no lock can be poisoned by the unwind)
+                    match catch_unwind(AssertUnwindSafe(|| Self::run_job(rt, engine, &job))) {
+                        Ok(Ok(rows)) => {
                             results.lock().unwrap().push(GenJobResult { id: job.id, rows })
                         }
-                        Err(e) => errors.lock().unwrap().push(format!("job {}: {e:#}", job.id)),
+                        Ok(Err(e)) => {
+                            errors.lock().unwrap().push(format!("job {}: {e:#}", job.id))
+                        }
+                        Err(panic) => errors.lock().unwrap().push(format!(
+                            "job {}: worker panicked: {}",
+                            job.id,
+                            panic_message(panic.as_ref())
+                        )),
                     }
                 });
             }
@@ -180,10 +204,48 @@ impl WorkerPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::{SimOptions, SIM_TIER};
+    use crate::tasks::generator::SUITES;
 
     #[test]
     fn pool_clamps_to_at_least_one_worker() {
         assert_eq!(WorkerPool::new(0).workers, 1);
         assert_eq!(WorkerPool::new(4).workers, 4);
+    }
+
+    /// Regression (ISSUE 9 satellite): before the catch_unwind a
+    /// panicking worker unwound through `std::thread::scope` and took the
+    /// whole calling thread down — the job was silently dropped and every
+    /// caller waiting on the batch died with it. Now the panic is THAT
+    /// job's error and the pool finishes the rest of the batch.
+    #[test]
+    fn worker_panic_surfaces_as_job_error_and_pool_survives() {
+        let opts = SimOptions { panic_execs: 1, ..Default::default() };
+        let rt = Runtime::sim_with(1, opts).unwrap();
+        let engine = InferenceEngine::new(&rt, SIM_TIER, rt.manifest.batch.test).unwrap();
+        let tier = rt.manifest.tier(SIM_TIER).unwrap().clone();
+        let weights = WeightSet::init(&tier, 0).unwrap();
+        let jobs = |n: u64| -> Vec<GenJob> {
+            (0..n)
+                .map(|id| GenJob {
+                    id,
+                    weights: weights.clone(),
+                    problems: vec![SUITES[0].generate(&mut Pcg64::with_stream(90 + id, 7))],
+                    group: 1,
+                    pb: None,
+                    temperature: 0.0,
+                    seed: id,
+                })
+                .collect()
+        };
+        let err = WorkerPool::new(2).serve(&rt, &engine, jobs(2)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("1 job(s) failed"), "exactly the panicked job fails: {msg}");
+        assert!(msg.contains("worker panicked"), "panic must be labelled: {msg}");
+        assert!(msg.contains("injected sim execute panic"), "payload must survive: {msg}");
+        // the pool is not wedged: the injected panic was consumed, a
+        // fresh batch on the same runtime serves clean
+        let ok = WorkerPool::new(2).serve(&rt, &engine, jobs(2)).unwrap();
+        assert_eq!(ok.len(), 2);
     }
 }

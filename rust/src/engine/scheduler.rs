@@ -223,6 +223,30 @@ impl Scheduler {
         shed
     }
 
+    /// Requeue a formed batch whose dispatch was lost (context death
+    /// detected before completion — the supervision plane, DESIGN.md
+    /// §14). The requests return to the FRONT of their adapter's queue in
+    /// their original order, so the next `take` re-forms the same batch
+    /// and per-tenant FIFO is preserved: loss detection is synchronous
+    /// (the dispatching caller observes the failure before forming more
+    /// batches for that adapter), so nothing newer can overtake. Sheds
+    /// keep applying — a requeued request that then overstays its budget
+    /// is dropped by `shed_expired` like any other.
+    pub fn requeue(&mut self, batch: AdapterBatch) {
+        if batch.requests.is_empty() {
+            return;
+        }
+        let q = self.queues.entry(batch.adapter.clone()).or_default();
+        if q.is_empty() && !self.order.contains(&batch.adapter) {
+            self.order.push(batch.adapter.clone());
+        }
+        let n = batch.requests.len();
+        for r in batch.requests.into_iter().rev() {
+            q.push_front(r);
+        }
+        self.pending += n;
+    }
+
     /// Every batch flushable at `now`, in policy order — one serving
     /// "wave". Callers that fan waves across a `WorkerPool` (and, with a
     /// device-parallel runtime, across execution contexts) collect the
@@ -505,6 +529,117 @@ mod tests {
         assert_eq!(shed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
         assert_eq!(s.oldest_arrival(), Some(0.9));
         assert_eq!(s.pending(), 1);
+    }
+
+    #[test]
+    fn requeue_restores_front_order_membership_and_pending() {
+        let mut s = Scheduler::new(2, 1e9, SchedPolicy::OccupancyFirst);
+        for id in 0..4u64 {
+            s.push(req(id, "a", id as f64 * 0.01));
+        }
+        s.push(req(9, "b", 0.001));
+        let b = s.next_batch(0.1).unwrap(); // a: [0, 1]
+        assert_eq!(b.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(s.pending(), 3);
+        s.requeue(b);
+        assert_eq!(s.pending(), 5);
+        // the re-formed batch is the same one, in the same order
+        let again = s.next_batch(0.1).unwrap();
+        assert_eq!(again.adapter, "a");
+        assert_eq!(again.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        // requeue of an adapter whose queue fully drained restores its
+        // `order` membership so it can flush again
+        let rest = s.next_batch(1e18).unwrap();
+        assert_eq!(rest.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        let b9 = s.next_batch(1e18).unwrap();
+        assert_eq!(b9.adapter, "b");
+        assert_eq!(s.pending(), 0);
+        s.requeue(b9);
+        assert!(s.waiting_adapters().contains(&"b".to_string()));
+        assert_eq!(s.next_batch(1e18).unwrap().requests[0].id, 9);
+    }
+
+    /// Property (ISSUE 9 satellite, composing PR 8's exactly-once drain
+    /// property with requeue-on-context-loss): when any formed batch can
+    /// be lost and requeued — synchronously, before further batches form,
+    /// which is how the supervised dispatch loop behaves — per-tenant
+    /// FIFO still holds over the SERVED order and every request resolves
+    /// exactly once (served or shed, never both, never twice, none lost).
+    #[test]
+    fn prop_requeue_on_loss_preserves_fifo_and_exactly_once() {
+        check("requeue on loss", 200, |rng| {
+            let batch = 1 + rng.below(5) as usize;
+            let mut s = Scheduler::new(batch, 0.05, random_policy(rng));
+            let n = 1 + rng.below(70);
+            // ids pushed in order (so per-adapter push order == id order,
+            // making FIFO checkable by id), adapters random, arrivals bursty
+            for id in 0..n {
+                let a = format!("t{}", rng.below(6));
+                s.push(req(id, &a, (id / 4) as f64 * 0.02));
+            }
+            // each request may be lost at most twice (bounded chaos —
+            // guarantees termination without weakening the property)
+            let mut losses: std::collections::HashMap<u64, u32> = Default::default();
+            let mut seen = std::collections::HashSet::new();
+            let mut shed_ids = std::collections::HashSet::new();
+            let mut last_seen: std::collections::HashMap<String, u64> = Default::default();
+            let mut now = 0.0;
+            while s.pending() > 0 {
+                // occasional shed sweep: requeued requests age like any
+                // other, so expiry keeps applying after a loss
+                if rng.below(8) == 0 {
+                    for r in s.shed_expired(now, 0.5) {
+                        if !shed_ids.insert(r.id) {
+                            return Err(format!("request {} shed twice", r.id));
+                        }
+                    }
+                    continue;
+                }
+                let Some(b) = s.next_batch(now) else {
+                    now += s.max_wait.max(1e-3) + 1e-6;
+                    continue;
+                };
+                let lossable = b.requests.iter().all(|r| losses.get(&r.id).copied().unwrap_or(0) < 2);
+                if lossable && rng.below(3) == 0 {
+                    // context died mid-dispatch: the supervised caller
+                    // observes the loss and requeues before forming any
+                    // further batch for this adapter
+                    for r in &b.requests {
+                        *losses.entry(r.id).or_insert(0) += 1;
+                    }
+                    s.requeue(b);
+                    continue;
+                }
+                if b.requests.len() > batch {
+                    return Err(format!("oversized batch {}", b.requests.len()));
+                }
+                for r in &b.requests {
+                    if shed_ids.contains(&r.id) {
+                        return Err(format!("request {} served after shed", r.id));
+                    }
+                    if !seen.insert(r.id) {
+                        return Err(format!("request {} served twice", r.id));
+                    }
+                    if let Some(&prev) = last_seen.get(&b.adapter) {
+                        if prev >= r.id {
+                            return Err(format!(
+                                "adapter {} served {} after {} (FIFO broken by requeue)",
+                                b.adapter, r.id, prev
+                            ));
+                        }
+                    }
+                    last_seen.insert(b.adapter.clone(), r.id);
+                }
+            }
+            if seen.len() + shed_ids.len() != n as usize {
+                return Err(format!(
+                    "served {} + shed {} != {n} (requests lost)",
+                    seen.len(),
+                    shed_ids.len()
+                ));
+            }
+            Ok(())
+        });
     }
 
     #[test]

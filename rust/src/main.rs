@@ -115,7 +115,13 @@ Shared: --artifacts DIR --ckpts DIR --results DIR --echo
         --backend pjrt|sim  (sim = hermetic pure-rust backend, zero
         artifacts needed; use --tier sim. Env: TINYLORA_BACKEND)
         --sim-workers W  (sim only: row workers per execute call,
-        0 = serial; byte-identical at any W. Env: TINYLORA_SIM_WORKERS)"
+        0 = serial; byte-identical at any W. Env: TINYLORA_SIM_WORKERS)
+        --sim-faults SPEC  (sim only: scripted chaos, e.g.
+        \"die@ctx1:after=3,slow@ctx0:us=500,compile-fail=2\". Clauses:
+        die@ctxN:after=K | slow@ctxN:us=K|ms=K | hang@ctxN:us=K|ms=K |
+        exec-fail@ctxN:n=K | compile-fail=K | panic=K. The supervisor
+        retries/requeues around the faults; decoded bytes stay identical
+        to the fault-free run. Env: TINYLORA_SIM_FAULTS)"
     );
 }
 
@@ -140,8 +146,19 @@ fn runtime(args: &Args, dirs: &Dirs) -> Result<Runtime> {
         "pjrt" => Runtime::with_devices(&dirs.artifacts, devices),
         "sim" => {
             let workers = args.usize("sim-workers", 0)?;
-            let opts =
-                tinylora_rl::runtime::SimOptions { row_workers: workers, ..Default::default() };
+            // scripted fault injection for chaos runs: --sim-faults wins,
+            // TINYLORA_SIM_FAULTS is the env fallback; a malformed spec
+            // fails loudly here instead of silently running fault-free
+            let spec = args.str(
+                "sim-faults",
+                &std::env::var("TINYLORA_SIM_FAULTS").unwrap_or_default(),
+            );
+            let mut opts = if spec.trim().is_empty() {
+                tinylora_rl::runtime::SimOptions::default()
+            } else {
+                tinylora_rl::runtime::SimOptions::parse_faults(&spec)?
+            };
+            opts.row_workers = workers;
             Runtime::sim_with(devices, opts)
         }
         other => anyhow::bail!("--backend {other:?} is not a backend (pjrt|sim)"),
@@ -361,14 +378,34 @@ fn cmd_tenants(args: &Args) -> Result<()> {
 }
 
 /// Per-context runtime counters — shows how device-parallel work spread
-/// across the execution-context pool (one line per `--devices` context).
+/// across the execution-context pool (one line per `--devices` context),
+/// plus the supervision plane's fault counters whenever anything fired.
 fn print_context_stats(rt: &Runtime) {
+    use tinylora_rl::runtime::Health;
+    let sv = rt.supervisor().stats();
+    if sv.retries + sv.requeues + sv.quarantines + sv.deaths + sv.hangs > 0 {
+        println!(
+            "  supervisor: live {}/{} | {} retries | {} requeues | {} quarantines | {} deaths | {} hangs",
+            rt.supervisor().live_count(),
+            rt.devices(),
+            sv.retries,
+            sv.requeues,
+            sv.quarantines,
+            sv.deaths,
+            sv.hangs,
+        );
+    }
     if rt.devices() <= 1 {
         return;
     }
     for (i, cs) in rt.per_context_stats().iter().enumerate() {
+        let health = match rt.supervisor().health(i) {
+            Health::Live => "",
+            Health::Suspect => " | SUSPECT",
+            Health::Quarantined => " | QUARANTINED",
+        };
         println!(
-            "  ctx {i}: {} compiles ({:.0} ms) | {} runs ({:.0} ms)",
+            "  ctx {i}: {} compiles ({:.0} ms) | {} runs ({:.0} ms){health}",
             cs.compiles, cs.compile_ms, cs.runs, cs.run_ms
         );
     }
@@ -661,6 +698,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         log.log_serve(&tier, mode, rate, &slo, fe.wall_ms());
         log.log_store(&tier, &fe.store.stats());
     }
+    log.log_supervisor(&tier, &rt.supervisor().stats(), rt.devices(), rt.supervisor().live_count());
     print_context_stats(&rt);
     Ok(())
 }

@@ -244,6 +244,35 @@ impl RunLog {
         ]));
     }
 
+    /// Supervision-plane counters (`runtime::SupervisorStats`): retries,
+    /// requeues, quarantines, deaths and hang strikes observed by the
+    /// fault-tolerant dispatch loop, plus the live/total context split.
+    pub fn log_supervisor(
+        &mut self,
+        tier: &str,
+        st: &crate::runtime::SupervisorStats,
+        contexts: usize,
+        live: usize,
+    ) {
+        if self.echo {
+            println!(
+                "[supervisor {tier}] live {live}/{contexts} retries {} requeues {} quarantines {} deaths {} hangs {}",
+                st.retries, st.requeues, st.quarantines, st.deaths, st.hangs,
+            );
+        }
+        self.log(obj(vec![
+            ("kind", s("supervisor")),
+            ("tier", s(tier)),
+            ("contexts", num(contexts as f64)),
+            ("live", num(live as f64)),
+            ("retries", num(st.retries as f64)),
+            ("requeues", num(st.requeues as f64)),
+            ("quarantines", num(st.quarantines as f64)),
+            ("deaths", num(st.deaths as f64)),
+            ("hangs", num(st.hangs as f64)),
+        ]));
+    }
+
     pub fn log_eval(&mut self, tier: &str, scheme: &str, params: usize, suite: &str, acc: f32) {
         if self.echo {
             println!("[eval {tier}/{scheme} p={params}] {suite}: {acc:.3}");
@@ -295,10 +324,18 @@ mod tests {
                 ..Default::default()
             };
             log.log_serve("sim", "continuous", 50.0, &slo, 12.5);
+            let sv = crate::runtime::SupervisorStats {
+                retries: 3,
+                requeues: 2,
+                quarantines: 1,
+                deaths: 1,
+                hangs: 4,
+            };
+            log.log_supervisor("sim", &sv, 4, 3);
         }
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<_> = text.lines().collect();
-        assert_eq!(lines.len(), 4);
+        assert_eq!(lines.len(), 5);
         for l in &lines {
             let v = Value::parse(l).unwrap();
             assert!(v.get("kind").is_ok());
@@ -312,6 +349,14 @@ mod tests {
         assert_eq!(serve_row.get("mode").unwrap().str().unwrap(), "continuous");
         assert_eq!(serve_row.get("served").unwrap().usize().unwrap(), 90);
         assert_eq!(serve_row.get("goodput").unwrap().f64().unwrap(), 45.0);
+        let sv_row = Value::parse(lines[4]).unwrap();
+        assert_eq!(sv_row.get("kind").unwrap().str().unwrap(), "supervisor");
+        assert_eq!(sv_row.get("live").unwrap().usize().unwrap(), 3);
+        assert_eq!(sv_row.get("contexts").unwrap().usize().unwrap(), 4);
+        assert_eq!(sv_row.get("requeues").unwrap().usize().unwrap(), 2);
+        assert_eq!(sv_row.get("quarantines").unwrap().usize().unwrap(), 1);
+        assert_eq!(sv_row.get("deaths").unwrap().usize().unwrap(), 1);
+        assert_eq!(sv_row.get("hangs").unwrap().usize().unwrap(), 4);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -25,6 +25,7 @@
 //! requires `make artifacts`) and [`super::sim::SimBackend`] (hermetic,
 //! deterministic, zero artifacts — see DESIGN.md §10).
 
+use std::fmt;
 use std::path::Path;
 use std::sync::Mutex;
 
@@ -34,6 +35,42 @@ use crate::manifest::ExeInfo;
 use crate::tensor::{Arg, TensorF32, TensorI32};
 
 pub use super::sim::SimOptions;
+
+/// Typed execute fault: the executing context is gone for good (device
+/// lost, process died, connection severed). The supervisor quarantines
+/// the context and requeues the work onto a survivor — never retried in
+/// place. Backends signal it by returning an error whose chain contains
+/// this value; [`super::supervisor::classify`] walks the chain.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ContextLost {
+    pub ctx: usize,
+    pub reason: String,
+}
+
+impl fmt::Display for ContextLost {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "context {} lost: {}", self.ctx, self.reason)
+    }
+}
+
+impl std::error::Error for ContextLost {}
+
+/// Typed execute fault: the call failed but the context survives (a
+/// flaky transfer, a transient allocator hiccup). Safe to retry in place
+/// with backoff — the supervisor does, up to its retry budget.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TransientExecError {
+    pub ctx: usize,
+    pub reason: String,
+}
+
+impl fmt::Display for TransientExecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "transient execute error on context {}: {}", self.ctx, self.reason)
+    }
+}
+
+impl std::error::Error for TransientExecError {}
 
 /// One output of an execution, already on host. Backends produce these in
 /// manifest output order; `Outputs` hands them to callers per dtype.
@@ -78,8 +115,9 @@ pub enum BackendSpec {
     Pjrt,
     /// The hermetic pure-rust simulator: a synthetic manifest, a tiny
     /// deterministic toy model, zero artifacts. `SimOptions` injects
-    /// faults (compile failures, per-context execute delays) for the
-    /// e2e suite.
+    /// faults (compile failures, per-context execute delays, scripted
+    /// context death, hung and transiently-failing executes) for the
+    /// e2e and chaos suites.
     Sim(SimOptions),
 }
 

@@ -30,13 +30,24 @@ use crate::runtime::backend::{Backend, CompiledExe, HostTensor};
 use crate::tensor::{Arg, TensorF32, TensorI32};
 
 /// Cumulative perf counters of one context (or, via `Runtime::stats`,
-/// summed over all contexts).
+/// summed over all contexts). The supervision counters (retries,
+/// requeues, quarantines, deaths — DESIGN.md §14) are runtime-wide:
+/// `Runtime::stats` overlays them from the supervisor, per-context
+/// snapshots leave them 0.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RuntimeStats {
     pub compile_ms: f64,
     pub run_ms: f64,
     pub runs: u64,
     pub compiles: u64,
+    /// In-place retries of transient execute errors.
+    pub retries: u64,
+    /// Dispatches re-pinned from a quarantined context to a survivor.
+    pub requeues: u64,
+    /// Contexts quarantined (lost or struck out on deadlines).
+    pub quarantines: u64,
+    /// Contexts lost outright.
+    pub deaths: u64,
 }
 
 impl RuntimeStats {
@@ -46,6 +57,10 @@ impl RuntimeStats {
         self.run_ms += other.run_ms;
         self.runs += other.runs;
         self.compiles += other.compiles;
+        self.retries += other.retries;
+        self.requeues += other.requeues;
+        self.quarantines += other.quarantines;
+        self.deaths += other.deaths;
     }
 }
 
@@ -350,6 +365,7 @@ impl ExecContext {
             run_ms: ms_of(&self.perf.run_ms_bits),
             runs: self.perf.runs.load(Ordering::Relaxed),
             compiles: self.perf.compiles.load(Ordering::Relaxed),
+            ..Default::default()
         }
     }
 
@@ -428,11 +444,31 @@ mod tests {
     #[test]
     fn runtime_stats_aggregation() {
         let mut agg = RuntimeStats::default();
-        agg.add(&RuntimeStats { compile_ms: 1.5, run_ms: 2.0, runs: 3, compiles: 1 });
-        agg.add(&RuntimeStats { compile_ms: 0.5, run_ms: 1.0, runs: 2, compiles: 1 });
+        agg.add(&RuntimeStats {
+            compile_ms: 1.5,
+            run_ms: 2.0,
+            runs: 3,
+            compiles: 1,
+            ..Default::default()
+        });
+        agg.add(&RuntimeStats {
+            compile_ms: 0.5,
+            run_ms: 1.0,
+            runs: 2,
+            compiles: 1,
+            retries: 2,
+            requeues: 1,
+            quarantines: 1,
+            deaths: 1,
+        });
         assert_eq!(agg.compile_ms, 2.0);
         assert_eq!(agg.run_ms, 3.0);
         assert_eq!(agg.runs, 5);
         assert_eq!(agg.compiles, 2);
+        assert_eq!(
+            (agg.retries, agg.requeues, agg.quarantines, agg.deaths),
+            (2, 1, 1, 1),
+            "supervision counters aggregate too"
+        );
     }
 }

@@ -29,18 +29,24 @@ pub mod backend;
 pub mod context;
 pub mod pjrt;
 pub mod sim;
+pub mod supervisor;
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::Result;
 
-pub use backend::{Backend, BackendSpec, CompiledExe, HostTensor, SimOptions};
+pub use backend::{
+    Backend, BackendSpec, CompiledExe, ContextLost, HostTensor, SimOptions, TransientExecError,
+};
 pub use context::{ExecContext, Executable, Outputs, RuntimeStats, SingleFlight};
 pub use sim::{sim_manifest, SIM_SCHEME, SIM_TIER};
+pub use supervisor::{
+    classify, FaultKind, Health, SupervisionError, Supervisor, SupervisorPolicy, SupervisorStats,
+};
 
-use crate::manifest::Manifest;
-use crate::tensor::Arg;
+use crate::manifest::{DType, Manifest};
+use crate::tensor::{Arg, TensorF32, TensorI32};
 use crate::util::fnv1a;
 
 pub struct Runtime {
@@ -48,6 +54,7 @@ pub struct Runtime {
     pub manifest: Manifest,
     art_dir: PathBuf,
     backend_name: &'static str,
+    supervisor: Supervisor,
 }
 
 impl Runtime {
@@ -94,9 +101,9 @@ impl Runtime {
             }
             BackendSpec::Sim(opts) => {
                 // fault state is runtime-wide (an injected compile failure
-                // hits whichever context compiles next); delays are
-                // per-context by id
-                let faults = Arc::new(sim::SimFaults::new(&opts));
+                // hits whichever context compiles next); delays, scripted
+                // deaths, hangs and transient failures are per-context by id
+                let faults = Arc::new(sim::SimFaults::new(&opts, d));
                 for id in 0..d {
                     contexts.push(ExecContext::new(
                         id,
@@ -105,16 +112,27 @@ impl Runtime {
                 }
             }
         }
-        Ok(Self { contexts, manifest, art_dir: art_dir.to_path_buf(), backend_name })
+        let supervisor = Supervisor::new(d, SupervisorPolicy::default());
+        Ok(Self { contexts, manifest, art_dir: art_dir.to_path_buf(), backend_name, supervisor })
+    }
+
+    /// Replace the supervision policy (builder-style; resets health state
+    /// and counters). Chaos scenarios use this to enable execute
+    /// deadlines or shrink retry budgets.
+    pub fn with_supervisor_policy(mut self, policy: SupervisorPolicy) -> Self {
+        self.supervisor = Supervisor::new(self.contexts.len(), policy);
+        self
     }
 
     /// Backend + artifact dir + context count from the environment:
     /// `TINYLORA_BACKEND` ("pjrt" default | "sim"), `TINYLORA_ARTIFACTS`
     /// (default ./artifacts; ignored by sim), `TINYLORA_DEVICES`
     /// (default 1), `TINYLORA_SIM_WORKERS` (sim only: row workers per
-    /// execute call, default 0 = serial). A set-but-unparseable value is
-    /// an error, not a silent fall-back (the operator asked for
-    /// something; failing fast beats quietly not delivering it).
+    /// execute call, default 0 = serial), `TINYLORA_SIM_FAULTS` (sim
+    /// only: fault-injection spec, see [`SimOptions::parse_faults`]). A
+    /// set-but-unparseable value is an error, not a silent fall-back
+    /// (the operator asked for something; failing fast beats quietly not
+    /// delivering it).
     pub fn from_env() -> Result<Self> {
         let dir = std::env::var("TINYLORA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
         let devices = match std::env::var("TINYLORA_DEVICES") {
@@ -129,10 +147,17 @@ impl Runtime {
                 anyhow::anyhow!("TINYLORA_SIM_WORKERS {v:?} is not a worker count")
             })?,
         };
+        // parsed eagerly so a malformed spec fails fast on any backend
+        let sim_faults = match std::env::var("TINYLORA_SIM_FAULTS") {
+            Err(_) => None,
+            Ok(v) if v.trim().is_empty() => None,
+            Ok(v) => Some(SimOptions::parse_faults(&v)?),
+        };
         match std::env::var("TINYLORA_BACKEND").as_deref() {
             Err(_) | Ok("pjrt") => Self::with_devices(Path::new(&dir), devices),
             Ok("sim") => {
-                let opts = SimOptions { row_workers: sim_workers, ..Default::default() };
+                let mut opts = sim_faults.unwrap_or_default();
+                opts.row_workers = sim_workers;
                 Self::sim_with(devices, opts)
             }
             Ok(other) => anyhow::bail!("TINYLORA_BACKEND {other:?} is not a backend (pjrt|sim)"),
@@ -179,14 +204,24 @@ impl Runtime {
     /// results cannot depend on the context — greedy serving decode,
     /// occupancy probes — NOT for anything whose bytes must be
     /// reproducible under a pinned schedule.
+    /// Quarantined contexts are skipped (graceful degradation: the
+    /// surviving pool absorbs the load); if everything is quarantined the
+    /// preferred index is returned and the subsequent `run` surfaces the
+    /// typed `NoLiveContexts` error.
     pub fn checkout(&self, preferred: usize) -> usize {
         let n = self.contexts.len();
         if n == 1 {
             return 0;
         }
         let mut best = preferred % n;
-        let mut best_load = self.contexts[best].in_flight();
+        let mut best_load = usize::MAX;
+        if self.supervisor.health(best) != Health::Quarantined {
+            best_load = self.contexts[best].in_flight();
+        }
         for (i, c) in self.contexts.iter().enumerate() {
+            if self.supervisor.health(i) == Health::Quarantined {
+                continue;
+            }
             let load = c.in_flight();
             if load < best_load {
                 best = i;
@@ -204,9 +239,15 @@ impl Runtime {
     }
 
     /// Load on an explicit context (engine decode paths pin per-job
-    /// contexts and need the executable resident there).
+    /// contexts and need the executable resident there). A quarantined
+    /// `ctx` resolves to its surviving stand-in (same ascending probe the
+    /// dispatch path uses), so callers holding a dead pin keep working.
+    /// Compile errors surface unchanged — loads are routed, never
+    /// retried here (`SingleFlight` already gives failed compiles a
+    /// clean retry on the next load).
     pub fn load_on(&self, ctx: usize, name: &str) -> Result<Arc<Executable>> {
-        self.context(ctx).load(&self.manifest, &self.art_dir, name)
+        let target = self.supervisor.resolve(ctx % self.contexts.len())?;
+        self.context(target).load(&self.manifest, &self.art_dir, name)
     }
 
     /// Execute with shape-checked args; routed to the context that owns
@@ -214,16 +255,131 @@ impl Runtime {
     /// context's backend). Routing goes through `context` (wrapping) so
     /// an executable from a differently-sized runtime hits
     /// `ExecContext::run`'s id check — a clean error, not an index panic.
+    ///
+    /// This is the supervised dispatch loop (DESIGN.md §14): quarantined
+    /// owners divert to a survivor (the executable is re-loaded there
+    /// through the single-flight cache — a requeue), typed transient
+    /// errors retry in place with bounded exponential backoff, and typed
+    /// context losses quarantine the context and requeue. Result bytes
+    /// cannot change under any of it: every entry point is a pure
+    /// function of its args, so the survivor computes exactly what the
+    /// owner would have.
     pub fn run(&self, exe: &Executable, args: &[Arg]) -> Result<Outputs> {
-        self.context(exe.ctx).run(exe, args)
+        let n = self.contexts.len();
+        let owner = exe.ctx % n;
+        let mut attempts = 0u32;
+        let mut dispatched: Option<usize> = None;
+        loop {
+            let target = self.supervisor.resolve(owner)?;
+            if target != owner && dispatched != Some(target) {
+                // the owner is quarantined: this dispatch re-pins the
+                // orphaned call onto a survivor
+                self.supervisor.note_requeue();
+            }
+            dispatched = Some(target);
+            let reloaded;
+            let exe_ref = if target == owner {
+                exe
+            } else {
+                reloaded = self.context(target).load(&self.manifest, &self.art_dir, &exe.info.name)?;
+                &*reloaded
+            };
+            let t0 = std::time::Instant::now();
+            match self.context(target).run(exe_ref, args) {
+                Ok(out) => {
+                    self.supervisor.observe_success(target, t0.elapsed().as_secs_f64() * 1e3);
+                    return Ok(out);
+                }
+                Err(err) => match self.supervisor.observe_error(target, &err) {
+                    // the target just got quarantined; loop re-resolves
+                    // onto a survivor (or NoLiveContexts when none is left)
+                    FaultKind::ContextLost => continue,
+                    FaultKind::Transient => {
+                        if attempts >= self.supervisor.policy().max_retries {
+                            return Err(anyhow::Error::new(SupervisionError::RetriesExhausted {
+                                ctx: target,
+                                attempts: attempts + 1,
+                                last: format!("{err:#}"),
+                            }));
+                        }
+                        attempts += 1;
+                        self.supervisor.note_retry();
+                        let ms = self.supervisor.policy().backoff_ms(attempts);
+                        if ms > 0 {
+                            std::thread::sleep(std::time::Duration::from_millis(ms));
+                        }
+                    }
+                    FaultKind::Fatal => return Err(err),
+                },
+            }
+        }
     }
 
-    /// Cumulative counters aggregated over every context.
+    /// The supervision plane: health state, fault counters, dispatch
+    /// resolution (see [`Supervisor`]).
+    pub fn supervisor(&self) -> &Supervisor {
+        &self.supervisor
+    }
+
+    /// Actively probe every non-quarantined context with a minimal
+    /// generate execute (zero-filled args — the output is discarded, only
+    /// liveness and latency matter) and fold the observations into the
+    /// health state: losses quarantine, deadline overruns strike.
+    /// Returns the post-probe health vector. Probes hit each context
+    /// DIRECTLY (no supervised routing — a probe that silently diverted
+    /// to a healthy context would hide the fault it exists to find).
+    pub fn health_check(&self) -> Result<Vec<Health>> {
+        let info = self
+            .manifest
+            .executables
+            .values()
+            .filter(|e| e.fn_kind == "generate")
+            .min_by_key(|e| e.batch)
+            .ok_or_else(|| anyhow::anyhow!("health check needs a generate entry point"))?
+            .clone();
+        let args: Vec<Arg> = info
+            .inputs
+            .iter()
+            .map(|spec| {
+                let numel: usize = spec.shape.iter().product();
+                match spec.dtype {
+                    // prompt_len rows are clamped to ≥1 by the entry
+                    // points, so all-zeros is a valid minimal input
+                    DType::F32 => Arg::F32(TensorF32::from_vec(&spec.shape, vec![0.0; numel])),
+                    DType::S32 => Arg::I32(TensorI32::from_vec(&spec.shape, vec![0; numel])),
+                }
+            })
+            .collect();
+        for ctx in 0..self.contexts.len() {
+            if self.supervisor.health(ctx) == Health::Quarantined {
+                continue;
+            }
+            let probe = || -> Result<()> {
+                let exe = self.context(ctx).load(&self.manifest, &self.art_dir, &info.name)?;
+                let t0 = std::time::Instant::now();
+                self.context(ctx).run(&exe, &args)?;
+                self.supervisor.observe_success(ctx, t0.elapsed().as_secs_f64() * 1e3);
+                Ok(())
+            };
+            if let Err(err) = probe() {
+                self.supervisor.observe_error(ctx, &err);
+            }
+        }
+        Ok(self.supervisor.healths())
+    }
+
+    /// Cumulative counters aggregated over every context, with the
+    /// runtime-wide supervision counters overlaid.
     pub fn stats(&self) -> RuntimeStats {
         let mut agg = RuntimeStats::default();
         for c in &self.contexts {
             agg.add(&c.stats());
         }
+        let sv = self.supervisor.stats();
+        agg.retries = sv.retries;
+        agg.requeues = sv.requeues;
+        agg.quarantines = sv.quarantines;
+        agg.deaths = sv.deaths;
         agg
     }
 

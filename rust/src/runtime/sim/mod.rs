@@ -46,12 +46,16 @@
 //! Fault injection ([`SimOptions`]): transient compile failures (to
 //! exercise `SingleFlight`'s no-poison retry), per-context execute
 //! delays (to prove worker/context timing skew cannot change results),
-//! and a per-row execute-time budget (tail-latency scenarios for
-//! continuous-batching work, scaling with batch size).
+//! a per-row execute-time budget (tail-latency scenarios for
+//! continuous-batching work, scaling with batch size), and — for the
+//! chaos suite (`tests/chaos_sim.rs`, DESIGN.md §14) — scripted context
+//! death (`die@ctxN:after=K`), hung executes, transient execute errors
+//! and worker panics, all expressible as a compact CLI/env spec via
+//! [`SimOptions::parse_faults`].
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
@@ -60,7 +64,7 @@ use crate::manifest::{
     ArgSpec, BatchGeometry, DType, ExeInfo, InitSpec, Manifest, SchemeInfo, ThetaSegment,
     TierInfo, Vocab, WeightSpec,
 };
-use crate::runtime::backend::{Backend, CompiledExe, HostTensor};
+use crate::runtime::backend::{Backend, CompiledExe, ContextLost, HostTensor, TransientExecError};
 use crate::tensor::{Arg, TensorF32, TensorI32};
 use crate::tokenizer::{BOS, CHARS, EOS, PAD, VOCAB_SIZE};
 
@@ -395,35 +399,178 @@ pub fn sim_manifest() -> Manifest {
 
 /// Sim-only execution options, set at runtime construction
 /// (`Runtime::sim_with`). All fields default to "no faults, serial rows".
-#[derive(Clone, Debug, Default)]
+/// Every fault field is also expressible as a compact spec string
+/// (`--sim-faults` / `TINYLORA_SIM_FAULTS`, see [`SimOptions::parse_faults`])
+/// so any chaos scenario is reproducible from the command line.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct SimOptions {
     /// Fail the next N compiles (runtime-wide) with a transient error —
     /// exercises `SingleFlight`'s failure-is-not-cached retry path.
     pub fail_compiles: u32,
-    /// Artificial per-execute delay in ms, keyed by context id (contexts
+    /// Artificial per-execute delay in µs, keyed by context id (contexts
     /// beyond the vec's length get 0) — models a slow device and proves
     /// timing skew cannot change pooled results.
-    pub ctx_delay_ms: Vec<u64>,
+    pub ctx_delay_us: Vec<u64>,
     /// Row workers per execute call (0 or 1 = serial). A pure throughput
     /// knob: results are byte-identical at every value (`exec` module
     /// docs give the construction), so it is safe to turn up anywhere.
     pub row_workers: usize,
     /// Artificial per-ROW execute-time budget in microseconds: each call
-    /// stalls `batch × budget` before computing, on top of `ctx_delay_ms`.
+    /// stalls `batch × budget` before computing, on top of `ctx_delay_us`.
     /// Models per-row tail latency (a slow sample, a long row) so
     /// continuous-batching scenarios can shape realistic latency
     /// distributions against the fast engine. Never changes results.
     pub row_budget_us: u64,
+    /// Scripted context death: context `ctx` serves exactly `after`
+    /// successful executes, then every later execute fails with the typed
+    /// [`ContextLost`] marker forever (`after = 0` = dead on arrival).
+    /// The supervisor quarantines the context and requeues the work.
+    pub die_after_execs: BTreeMap<usize, u64>,
+    /// Hung executes: every execute on context `ctx` stalls an extra
+    /// `us` microseconds before returning a CORRECT result — a slow-to-
+    /// pathological device the supervisor's exec deadline must catch.
+    pub hang_execs_us: BTreeMap<usize, u64>,
+    /// Fail the next N executes on context `ctx` with the typed
+    /// [`TransientExecError`] marker (consumed per call) — exercises the
+    /// supervisor's bounded retry-with-backoff.
+    pub exec_failures: BTreeMap<usize, u32>,
+    /// Panic the next N executes (runtime-wide) — exercises the worker
+    /// pool's catch_unwind path: a panicking job must surface as that
+    /// job's error, never stall the pool.
+    pub panic_execs: u32,
+}
+
+impl SimOptions {
+    /// Parse a `--sim-faults` / `TINYLORA_SIM_FAULTS` spec into options
+    /// (non-fault fields stay default). Grammar: comma-separated clauses
+    ///
+    /// - `die@ctxN:after=K` — context N dies after K successful executes
+    /// - `slow@ctxN:us=K` (or `ms=K`) — per-execute delay on context N
+    /// - `hang@ctxN:us=K` (or `ms=K`) — hung executes on context N
+    /// - `exec-fail@ctxN:n=K` — next K executes on context N fail transiently
+    /// - `compile-fail=K` — next K compiles fail transiently (runtime-wide)
+    /// - `panic=K` — next K executes panic (runtime-wide)
+    ///
+    /// Example: `die@ctx1:after=3,slow@ctx0:us=500,compile-fail=2`.
+    /// Malformed specs are rejected with a clause-level error.
+    pub fn parse_faults(spec: &str) -> Result<SimOptions> {
+        let mut o = SimOptions::default();
+        for raw in spec.split(',') {
+            let clause = raw.trim();
+            if clause.is_empty() {
+                bail!("sim fault spec {spec:?}: empty clause");
+            }
+            if let Some((kind, rest)) = clause.split_once('@') {
+                let Some((ctx_str, kv)) = rest.split_once(':') else {
+                    bail!("sim fault clause {clause:?}: want kind@ctxN:key=value");
+                };
+                let ctx: usize = ctx_str
+                    .strip_prefix("ctx")
+                    .and_then(|n| n.parse().ok())
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("sim fault clause {clause:?}: bad context {ctx_str:?} (want ctxN)")
+                    })?;
+                let Some((key, val)) = kv.split_once('=') else {
+                    bail!("sim fault clause {clause:?}: want key=value after the context");
+                };
+                let v: u64 = val.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("sim fault clause {clause:?}: bad value {val:?}")
+                })?;
+                match (kind, key) {
+                    ("die", "after") => {
+                        o.die_after_execs.insert(ctx, v);
+                    }
+                    ("slow", "us") | ("slow", "ms") => {
+                        let us = if key == "ms" { v.saturating_mul(1000) } else { v };
+                        if o.ctx_delay_us.len() <= ctx {
+                            o.ctx_delay_us.resize(ctx + 1, 0);
+                        }
+                        o.ctx_delay_us[ctx] = us;
+                    }
+                    ("hang", "us") | ("hang", "ms") => {
+                        let us = if key == "ms" { v.saturating_mul(1000) } else { v };
+                        o.hang_execs_us.insert(ctx, us);
+                    }
+                    ("exec-fail", "n") => {
+                        let n = u32::try_from(v).map_err(|_| {
+                            anyhow::anyhow!("sim fault clause {clause:?}: count too large")
+                        })?;
+                        o.exec_failures.insert(ctx, n);
+                    }
+                    _ => bail!("sim fault clause {clause:?}: unknown fault {kind:?} with key {key:?}"),
+                }
+            } else {
+                let Some((key, val)) = clause.split_once('=') else {
+                    bail!("sim fault clause {clause:?}: want key=value or kind@ctxN:key=value");
+                };
+                let v: u64 = val.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("sim fault clause {clause:?}: bad value {val:?}")
+                })?;
+                let n = u32::try_from(v).map_err(|_| {
+                    anyhow::anyhow!("sim fault clause {clause:?}: count too large")
+                })?;
+                match key.trim() {
+                    "compile-fail" => o.fail_compiles = n,
+                    "panic" => o.panic_execs = n,
+                    other => bail!("sim fault clause {clause:?}: unknown fault {other:?}"),
+                }
+            }
+        }
+        Ok(o)
+    }
+
+    /// Canonical spec string for the fault fields — `parse_faults`
+    /// round-trips it exactly (for options with default non-fault
+    /// fields). Empty when no faults are set.
+    pub fn fault_spec(&self) -> String {
+        let mut clauses: Vec<String> = Vec::new();
+        for (ctx, after) in &self.die_after_execs {
+            clauses.push(format!("die@ctx{ctx}:after={after}"));
+        }
+        for (ctx, us) in self.ctx_delay_us.iter().enumerate() {
+            if *us > 0 {
+                clauses.push(format!("slow@ctx{ctx}:us={us}"));
+            }
+        }
+        for (ctx, us) in &self.hang_execs_us {
+            clauses.push(format!("hang@ctx{ctx}:us={us}"));
+        }
+        for (ctx, n) in &self.exec_failures {
+            clauses.push(format!("exec-fail@ctx{ctx}:n={n}"));
+        }
+        if self.fail_compiles > 0 {
+            clauses.push(format!("compile-fail={}", self.fail_compiles));
+        }
+        if self.panic_execs > 0 {
+            clauses.push(format!("panic={}", self.panic_execs));
+        }
+        clauses.join(",")
+    }
 }
 
 /// Shared mutable fault state (one per runtime, shared by its contexts).
 pub struct SimFaults {
     compile_failures: AtomicU32,
+    panic_execs: AtomicU32,
+    /// Successful executes per context — the clock scripted death reads.
+    execs: Vec<AtomicU64>,
+    /// Remaining injected transient execute failures per context.
+    exec_failures: Vec<AtomicU32>,
 }
 
 impl SimFaults {
-    pub fn new(opts: &SimOptions) -> Self {
-        Self { compile_failures: AtomicU32::new(opts.fail_compiles) }
+    /// `devices` sizes the per-context counters (one slot per context in
+    /// the owning runtime).
+    pub fn new(opts: &SimOptions, devices: usize) -> Self {
+        let d = devices.max(1);
+        Self {
+            compile_failures: AtomicU32::new(opts.fail_compiles),
+            panic_execs: AtomicU32::new(opts.panic_execs),
+            execs: (0..d).map(|_| AtomicU64::new(0)).collect(),
+            exec_failures: (0..d)
+                .map(|i| AtomicU32::new(opts.exec_failures.get(&i).copied().unwrap_or(0)))
+                .collect(),
+        }
     }
 
     /// Consume one injected compile failure, if any remain.
@@ -437,6 +584,33 @@ impl SimFaults {
     pub fn pending_compile_failures(&self) -> u32 {
         self.compile_failures.load(Ordering::Relaxed)
     }
+
+    /// Consume one injected execute panic, if any remain.
+    fn take_panic(&self) -> bool {
+        self.panic_execs
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1))
+            .is_ok()
+    }
+
+    /// Consume one injected transient execute failure on `ctx`, if any.
+    fn take_exec_failure(&self, ctx: usize) -> bool {
+        self.exec_failures
+            .get(ctx)
+            .map(|c| c.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1)).is_ok())
+            .unwrap_or(false)
+    }
+
+    fn record_exec(&self, ctx: usize) {
+        if let Some(c) = self.execs.get(ctx) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Successful executes served by `ctx` so far (test introspection and
+    /// the scripted-death clock).
+    pub fn execs_on(&self, ctx: usize) -> u64 {
+        self.execs.get(ctx).map(|c| c.load(Ordering::Relaxed)).unwrap_or(0)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -445,18 +619,24 @@ impl SimFaults {
 
 pub struct SimBackend {
     faults: Arc<SimFaults>,
-    delay_ms: u64,
+    ctx_id: usize,
+    delay_us: u64,
+    hang_us: u64,
+    die_after: Option<u64>,
     row_budget_us: u64,
     workers: usize,
 }
 
 impl SimBackend {
     /// One backend per execution context: `ctx_id` selects this context's
-    /// injected delay from `opts.ctx_delay_ms`.
+    /// per-ctx faults (delay, hang, scripted death) from `opts`.
     pub fn new(faults: Arc<SimFaults>, ctx_id: usize, opts: &SimOptions) -> Self {
         Self {
             faults,
-            delay_ms: opts.ctx_delay_ms.get(ctx_id).copied().unwrap_or(0),
+            ctx_id,
+            delay_us: opts.ctx_delay_us.get(ctx_id).copied().unwrap_or(0),
+            hang_us: opts.hang_execs_us.get(&ctx_id).copied().unwrap_or(0),
+            die_after: opts.die_after_execs.get(&ctx_id).copied(),
             row_budget_us: opts.row_budget_us,
             workers: opts.row_workers,
         }
@@ -484,7 +664,11 @@ impl Backend for SimBackend {
         match info.fn_kind.as_str() {
             "generate" | "logprobs" | "pretrain" | "sft" | "grpo" | "merge" => {
                 Ok(Box::new(SimExe {
-                    delay_ms: self.delay_ms,
+                    faults: self.faults.clone(),
+                    ctx_id: self.ctx_id,
+                    delay_us: self.delay_us,
+                    hang_us: self.hang_us,
+                    die_after: self.die_after,
                     row_budget_us: self.row_budget_us,
                     workers: self.workers,
                 }))
@@ -495,22 +679,51 @@ impl Backend for SimBackend {
 }
 
 struct SimExe {
-    delay_ms: u64,
+    faults: Arc<SimFaults>,
+    ctx_id: usize,
+    delay_us: u64,
+    hang_us: u64,
+    die_after: Option<u64>,
     row_budget_us: u64,
     workers: usize,
 }
 
 impl CompiledExe for SimExe {
     fn execute(&self, info: &ExeInfo, args: &[Arg], _ffi: &Mutex<()>) -> Result<Vec<HostTensor>> {
-        // fault injection: a slow context and/or per-row latency (never a
-        // different result) — outputs are a pure function of args, so
-        // skew cannot change them
-        let stall_us = self.delay_ms * 1000 + info.batch as u64 * self.row_budget_us;
+        let ctx = self.ctx_id;
+        // scripted death: once this context's budget of successful
+        // executes is spent the context is gone for good — every later
+        // call fails with the typed loss marker the supervisor
+        // quarantines on. Checked first so a dead context cannot consume
+        // transient-failure or panic budgets.
+        if matches!(self.die_after, Some(after) if self.faults.execs_on(ctx) >= after) {
+            return Err(anyhow::Error::new(ContextLost {
+                ctx,
+                reason: format!("injected sim context death before {}", info.name),
+            }));
+        }
+        // injected transient execute failure (consumed per call): the
+        // context survives, a bounded retry should succeed
+        if self.faults.take_exec_failure(ctx) {
+            return Err(anyhow::Error::new(TransientExecError {
+                ctx,
+                reason: format!("injected sim execute failure for {} (transient)", info.name),
+            }));
+        }
+        // injected worker panic: must surface as the job's error via the
+        // pool's catch_unwind, never stall the callers
+        if self.faults.take_panic() {
+            panic!("injected sim execute panic for {}", info.name);
+        }
+        // fault injection: a slow context, a hung execute, and/or per-row
+        // latency (never a different result) — outputs are a pure
+        // function of args, so skew cannot change them
+        let stall_us = self.delay_us + self.hang_us + info.batch as u64 * self.row_budget_us;
         if stall_us > 0 {
             std::thread::sleep(std::time::Duration::from_micros(stall_us));
         }
         let w = self.workers;
-        match info.fn_kind.as_str() {
+        let out = match info.fn_kind.as_str() {
             "generate" => run_generate(info, args, w),
             "logprobs" => run_logprobs(info, args, w),
             "pretrain" => run_pretrain(info, args, w),
@@ -518,7 +731,9 @@ impl CompiledExe for SimExe {
             "grpo" => run_adapter_grad(info, args, true, w),
             "merge" => run_merge(info, args),
             other => bail!("sim backend has no entry point kind {other:?}"),
-        }
+        }?;
+        self.faults.record_exec(ctx);
+        Ok(out)
     }
 }
 
@@ -790,7 +1005,7 @@ mod tests {
     #[test]
     fn fault_injection_consumes_compile_failures() {
         let opts = SimOptions { fail_compiles: 1, ..Default::default() };
-        let faults = Arc::new(SimFaults::new(&opts));
+        let faults = Arc::new(SimFaults::new(&opts, 1));
         let backend = SimBackend::new(faults.clone(), 0, &opts);
         let m = sim_manifest();
         let info = m.generate_exe(SIM_TIER, 1).unwrap();
@@ -811,7 +1026,7 @@ mod tests {
         let args = gen_args(b, 51);
         let run_with = |budget_us: u64| -> (Vec<HostTensor>, f64) {
             let opts = SimOptions { row_budget_us: budget_us, ..Default::default() };
-            let faults = Arc::new(SimFaults::new(&opts));
+            let faults = Arc::new(SimFaults::new(&opts, 1));
             let backend = SimBackend::new(faults, 0, &opts);
             let ffi = Mutex::new(());
             let exe = backend.compile(Path::new("<sim>"), &info, &ffi).unwrap();
@@ -823,5 +1038,120 @@ mod tests {
         let (slow, secs) = run_with(2000);
         assert!(secs >= 0.008, "4 rows × 2ms budget must stall ≥ 8ms (got {secs}s)");
         assert!(tensors_bits_eq(&fast, &slow), "row budget must never change results");
+    }
+
+    /// Compile + execute on context `ctx` of a backend built from `opts`.
+    fn exec_on(opts: &SimOptions, devices: usize, ctx: usize, args: &[Arg]) -> Result<Vec<HostTensor>> {
+        let m = sim_manifest();
+        let info = m.generate_exe(SIM_TIER, 4).unwrap().clone();
+        let faults = Arc::new(SimFaults::new(opts, devices));
+        let backend = SimBackend::new(faults, ctx, opts);
+        let ffi = Mutex::new(());
+        let exe = backend.compile(Path::new("<sim>"), &info, &ffi).unwrap();
+        exe.execute(&info, args, &ffi)
+    }
+
+    #[test]
+    fn scripted_death_kills_context_after_budgeted_execs() {
+        let mut die = BTreeMap::new();
+        die.insert(1usize, 2u64);
+        let opts = SimOptions { die_after_execs: die, ..Default::default() };
+        let m = sim_manifest();
+        let info = m.generate_exe(SIM_TIER, 4).unwrap().clone();
+        let args = gen_args(4, 33);
+        let faults = Arc::new(SimFaults::new(&opts, 2));
+        let ffi = Mutex::new(());
+        // ctx 0 has no death scripted: executes forever
+        let b0 = SimBackend::new(faults.clone(), 0, &opts);
+        let e0 = b0.compile(Path::new("<sim>"), &info, &ffi).unwrap();
+        for _ in 0..4 {
+            e0.execute(&info, &args, &ffi).unwrap();
+        }
+        // ctx 1 serves exactly 2 executes, then is lost — permanently
+        let b1 = SimBackend::new(faults.clone(), 1, &opts);
+        let e1 = b1.compile(Path::new("<sim>"), &info, &ffi).unwrap();
+        e1.execute(&info, &args, &ffi).unwrap();
+        e1.execute(&info, &args, &ffi).unwrap();
+        for _ in 0..2 {
+            let err = e1.execute(&info, &args, &ffi).unwrap_err();
+            let lost = err
+                .chain()
+                .any(|c| matches!(c.downcast_ref::<ContextLost>(), Some(l) if l.ctx == 1));
+            assert!(lost, "death must carry the typed ContextLost marker: {err:#}");
+        }
+        assert_eq!(faults.execs_on(1), 2, "a dead context serves no more executes");
+    }
+
+    #[test]
+    fn transient_exec_failures_are_consumed_then_results_match_clean_run() {
+        let args = gen_args(4, 34);
+        let clean = exec_on(&SimOptions::default(), 1, 0, &args).unwrap();
+        let mut fail = BTreeMap::new();
+        fail.insert(0usize, 1u32);
+        let opts = SimOptions { exec_failures: fail, ..Default::default() };
+        let m = sim_manifest();
+        let info = m.generate_exe(SIM_TIER, 4).unwrap().clone();
+        let faults = Arc::new(SimFaults::new(&opts, 1));
+        let backend = SimBackend::new(faults, 0, &opts);
+        let ffi = Mutex::new(());
+        let exe = backend.compile(Path::new("<sim>"), &info, &ffi).unwrap();
+        let err = exe.execute(&info, &args, &ffi).unwrap_err();
+        assert!(
+            err.chain().any(|c| c.downcast_ref::<TransientExecError>().is_some()),
+            "injected failure must carry the typed transient marker: {err:#}"
+        );
+        let retried = exe.execute(&info, &args, &ffi).unwrap();
+        assert!(tensors_bits_eq(&clean, &retried), "a retried execute must match the clean run");
+    }
+
+    #[test]
+    fn fault_spec_round_trips_and_parses_the_documented_example() {
+        // the README/ISSUE example spec parses into exactly these fields
+        let o = SimOptions::parse_faults("die@ctx1:after=3,slow@ctx0:us=500,compile-fail=2").unwrap();
+        assert_eq!(o.die_after_execs.get(&1), Some(&3));
+        assert_eq!(o.ctx_delay_us, vec![500]);
+        assert_eq!(o.fail_compiles, 2);
+
+        // canonical form round-trips exactly
+        let full = SimOptions {
+            fail_compiles: 2,
+            ctx_delay_us: vec![500, 0, 250],
+            die_after_execs: BTreeMap::from([(1, 3), (2, 0)]),
+            hang_execs_us: BTreeMap::from([(0, 30_000)]),
+            exec_failures: BTreeMap::from([(3, 7)]),
+            panic_execs: 1,
+            ..Default::default()
+        };
+        let spec = full.fault_spec();
+        assert_eq!(SimOptions::parse_faults(&spec).unwrap(), full, "round trip of {spec:?}");
+
+        // ms sugar scales into µs
+        let o = SimOptions::parse_faults("slow@ctx1:ms=2,hang@ctx0:ms=5").unwrap();
+        assert_eq!(o.ctx_delay_us, vec![0, 2000]);
+        assert_eq!(o.hang_execs_us.get(&0), Some(&5000));
+
+        // no faults → empty spec
+        assert_eq!(SimOptions::default().fault_spec(), "");
+    }
+
+    #[test]
+    fn malformed_fault_specs_are_rejected() {
+        for bad in [
+            "",
+            "die@ctx1",              // no key=value
+            "die@one:after=3",       // bad context
+            "die@ctx1:after=x",      // bad value
+            "die@ctx1:n=3",          // wrong key for die
+            "warp@ctx1:n=3",         // unknown per-ctx fault
+            "compile-fail",          // no value
+            "panics=1",              // unknown global fault
+            "die@ctx1:after=3,,",    // empty trailing clause
+            "exec-fail@ctx0:n=5000000000", // u32 overflow
+        ] {
+            assert!(
+                SimOptions::parse_faults(bad).is_err(),
+                "spec {bad:?} must be rejected"
+            );
+        }
     }
 }

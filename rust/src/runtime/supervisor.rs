@@ -1,0 +1,419 @@
+//! The runtime supervision plane (DESIGN.md §14) — fault-tolerant
+//! execution over the device-parallel context pool.
+//!
+//! Every context carries a health state:
+//!
+//! ```text
+//!   Live ──deadline strike──▶ Suspect ──strikes ≥ limit──▶ Quarantined
+//!    ▲                           │
+//!    └──heal_successes in-deadline successes──┘
+//!   any ──ContextLost──────────────────────────▶ Quarantined (final)
+//! ```
+//!
+//! `Runtime::run` consults the supervisor on every dispatch: quarantined
+//! contexts are skipped (ascending probe from the owning context),
+//! typed [`TransientExecError`]s retry in place with bounded exponential
+//! backoff, and typed [`ContextLost`] errors quarantine the context and
+//! requeue the call onto a survivor. Requeue preserves byte-identity by
+//! construction: every sim entry point is a pure function of its args
+//! and jobs are seeded by `job_id`, not context identity, so re-running
+//! an orphaned job on any surviving context yields the exact bytes the
+//! dead context would have produced (the chaos suite asserts this at
+//! D∈{2,4}, decode fingerprints and GRPO theta bits included).
+//!
+//! Hang detection is deadline-based and post-hoc: a successful execute
+//! that overran `exec_deadline_ms` counts as a strike (the sim models a
+//! hang as a long-but-finite stall; a true never-returns hang needs the
+//! process boundary the ROADMAP's multi-process item adds on top of this
+//! contract). Deadlines are off by default (`exec_deadline_ms = 0`) so
+//! timing-sensitive policies are always opt-in — CI boxes are noisy.
+//!
+//! The supervisor never un-quarantines: context recovery means
+//! constructing a fresh runtime. This is deliberately conservative — a
+//! context that lied once about being alive cannot be trusted by a plane
+//! whose whole guarantee is determinism.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::backend::{ContextLost, TransientExecError};
+
+/// Per-context health state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    /// Serving normally.
+    Live,
+    /// Overran the execute deadline recently; still dispatched, healed by
+    /// consecutive in-deadline successes.
+    Suspect,
+    /// Dead or struck out. Never dispatched again; work re-pins to
+    /// survivors. Terminal.
+    Quarantined,
+}
+
+/// Supervision policy knobs. `Default` is production-shaped: a couple of
+/// in-place retries with millisecond backoff, deadlines off.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorPolicy {
+    /// In-place retries per call for transient execute errors (on top of
+    /// the initial attempt). Exhaustion surfaces
+    /// [`SupervisionError::RetriesExhausted`].
+    pub max_retries: u32,
+    /// First retry backoff; doubles per attempt (see [`Self::backoff_ms`]).
+    pub backoff_base_ms: u64,
+    /// Backoff ceiling.
+    pub backoff_cap_ms: u64,
+    /// Execute wall-clock deadline in ms; an overrun is a hang strike.
+    /// 0 disables hang detection (the default — CI wall clocks are noisy,
+    /// so deadline policies are opt-in per runtime).
+    pub exec_deadline_ms: u64,
+    /// Strikes until a Suspect context is quarantined.
+    pub suspect_strikes: u32,
+    /// Consecutive in-deadline successes that heal Suspect → Live.
+    pub heal_successes: u32,
+}
+
+impl Default for SupervisorPolicy {
+    fn default() -> Self {
+        Self {
+            max_retries: 2,
+            backoff_base_ms: 1,
+            backoff_cap_ms: 50,
+            exec_deadline_ms: 0,
+            suspect_strikes: 2,
+            heal_successes: 2,
+        }
+    }
+}
+
+impl SupervisorPolicy {
+    /// Backoff before retry `attempt` (1-based): `base × 2^(attempt−1)`,
+    /// capped. The policy table in DESIGN.md §14 is this function.
+    pub fn backoff_ms(&self, attempt: u32) -> u64 {
+        let shift = attempt.saturating_sub(1).min(16);
+        self.backoff_base_ms.saturating_mul(1u64 << shift).min(self.backoff_cap_ms)
+    }
+}
+
+/// Monotonic supervision counters (runtime-wide), snapshotted by
+/// [`Supervisor::stats`] and logged via `metrics::RunLog::log_supervisor`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SupervisorStats {
+    /// In-place retries taken for transient execute errors.
+    pub retries: u64,
+    /// Dispatches re-pinned from a quarantined owner to a survivor.
+    pub requeues: u64,
+    /// Contexts quarantined (by loss or by striking out).
+    pub quarantines: u64,
+    /// Contexts lost outright (`ContextLost` observed).
+    pub deaths: u64,
+    /// Execute-deadline overruns observed (hang strikes).
+    pub hangs: u64,
+}
+
+/// How an observed error should be handled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The context is gone: quarantine it and requeue on a survivor.
+    ContextLost,
+    /// The context survives: retry in place with backoff.
+    Transient,
+    /// Neither marker present: a real error — surface it unchanged.
+    Fatal,
+}
+
+/// Classify an error by walking its chain for the typed fault markers
+/// (backends may wrap them in arbitrary context layers).
+pub fn classify(err: &anyhow::Error) -> FaultKind {
+    for cause in err.chain() {
+        if cause.downcast_ref::<ContextLost>().is_some() {
+            return FaultKind::ContextLost;
+        }
+        if cause.downcast_ref::<TransientExecError>().is_some() {
+            return FaultKind::Transient;
+        }
+    }
+    FaultKind::Fatal
+}
+
+/// Typed terminal supervision errors — what callers see when recovery is
+/// impossible, distinguishable from backend errors by downcast.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SupervisionError {
+    /// A transient execute error persisted past the retry budget.
+    RetriesExhausted { ctx: usize, attempts: u32, last: String },
+    /// Every context is quarantined; nothing can serve the call.
+    NoLiveContexts { quarantined: usize },
+}
+
+impl fmt::Display for SupervisionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SupervisionError::RetriesExhausted { ctx, attempts, last } => write!(
+                f,
+                "context {ctx}: transient execute error persisted after {attempts} attempts: {last}"
+            ),
+            SupervisionError::NoLiveContexts { quarantined } => {
+                write!(f, "no live execution contexts ({quarantined} quarantined)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SupervisionError {}
+
+struct CtxHealth {
+    health: Health,
+    /// Deadline strikes since the last heal.
+    strikes: u32,
+    /// Consecutive in-deadline successes (heals Suspect).
+    streak: u32,
+}
+
+/// Health state + counters for one runtime's context pool. All methods
+/// take `&self` (per-context mutexes + atomics), matching the runtime's
+/// share-everywhere concurrency model.
+pub struct Supervisor {
+    policy: SupervisorPolicy,
+    states: Vec<Mutex<CtxHealth>>,
+    retries: AtomicU64,
+    requeues: AtomicU64,
+    quarantines: AtomicU64,
+    deaths: AtomicU64,
+    hangs: AtomicU64,
+}
+
+impl Supervisor {
+    pub fn new(contexts: usize, policy: SupervisorPolicy) -> Self {
+        let n = contexts.max(1);
+        Self {
+            policy,
+            states: (0..n)
+                .map(|_| Mutex::new(CtxHealth { health: Health::Live, strikes: 0, streak: 0 }))
+                .collect(),
+            retries: AtomicU64::new(0),
+            requeues: AtomicU64::new(0),
+            quarantines: AtomicU64::new(0),
+            deaths: AtomicU64::new(0),
+            hangs: AtomicU64::new(0),
+        }
+    }
+
+    pub fn policy(&self) -> &SupervisorPolicy {
+        &self.policy
+    }
+
+    /// Dispatch target for work owned by `preferred`: the owner when it
+    /// is not quarantined, else the first non-quarantined context probing
+    /// upward (wrapping) — deterministic, so re-pinned work lands
+    /// identically across reruns with the same quarantine set.
+    pub fn resolve(&self, preferred: usize) -> anyhow::Result<usize> {
+        let n = self.states.len();
+        let start = preferred % n;
+        for k in 0..n {
+            let i = (start + k) % n;
+            if self.health(i) != Health::Quarantined {
+                return Ok(i);
+            }
+        }
+        Err(anyhow::Error::new(SupervisionError::NoLiveContexts { quarantined: n }))
+    }
+
+    /// Record a successful execute on `ctx` that took `elapsed_ms`.
+    /// With deadlines enabled, an overrun is a hang strike (Suspect, then
+    /// Quarantined at `suspect_strikes`); in-deadline successes heal a
+    /// Suspect context after `heal_successes` in a row.
+    pub fn observe_success(&self, ctx: usize, elapsed_ms: f64) {
+        if self.policy.exec_deadline_ms == 0 {
+            return;
+        }
+        let mut st = self.states[ctx % self.states.len()].lock().unwrap();
+        if st.health == Health::Quarantined {
+            return; // a pre-quarantine straggler finishing late
+        }
+        if elapsed_ms > self.policy.exec_deadline_ms as f64 {
+            self.hangs.fetch_add(1, Ordering::Relaxed);
+            st.streak = 0;
+            st.strikes += 1;
+            if st.strikes >= self.policy.suspect_strikes {
+                st.health = Health::Quarantined;
+                self.quarantines.fetch_add(1, Ordering::Relaxed);
+            } else {
+                st.health = Health::Suspect;
+            }
+        } else {
+            st.streak += 1;
+            if st.health == Health::Suspect && st.streak >= self.policy.heal_successes {
+                st.health = Health::Live;
+                st.strikes = 0;
+            }
+        }
+    }
+
+    /// Record a failed execute on `ctx` and classify it. A loss
+    /// quarantines the context (once — concurrent observers race benignly
+    /// under the state lock).
+    pub fn observe_error(&self, ctx: usize, err: &anyhow::Error) -> FaultKind {
+        let kind = classify(err);
+        if kind == FaultKind::ContextLost {
+            let mut st = self.states[ctx % self.states.len()].lock().unwrap();
+            if st.health != Health::Quarantined {
+                st.health = Health::Quarantined;
+                self.deaths.fetch_add(1, Ordering::Relaxed);
+                self.quarantines.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        kind
+    }
+
+    /// Manually quarantine `ctx` (operator action / tests).
+    pub fn quarantine(&self, ctx: usize) {
+        let mut st = self.states[ctx % self.states.len()].lock().unwrap();
+        if st.health != Health::Quarantined {
+            st.health = Health::Quarantined;
+            self.quarantines.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one in-place transient retry.
+    pub fn note_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one dispatch re-pinned off a quarantined owner.
+    pub fn note_requeue(&self) {
+        self.requeues.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn health(&self, ctx: usize) -> Health {
+        self.states[ctx % self.states.len()].lock().unwrap().health
+    }
+
+    pub fn healths(&self) -> Vec<Health> {
+        (0..self.states.len()).map(|i| self.health(i)).collect()
+    }
+
+    pub fn quarantined_count(&self) -> usize {
+        self.healths().iter().filter(|h| **h == Health::Quarantined).count()
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.states.len() - self.quarantined_count()
+    }
+
+    pub fn stats(&self) -> SupervisorStats {
+        SupervisorStats {
+            retries: self.retries.load(Ordering::Relaxed),
+            requeues: self.requeues.load(Ordering::Relaxed),
+            quarantines: self.quarantines.load(Ordering::Relaxed),
+            deaths: self.deaths.load(Ordering::Relaxed),
+            hangs: self.hangs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn deadline_policy() -> SupervisorPolicy {
+        SupervisorPolicy { exec_deadline_ms: 10, ..Default::default() }
+    }
+
+    #[test]
+    fn health_state_machine_strikes_suspects_heals_and_quarantines() {
+        let s = Supervisor::new(2, deadline_policy());
+        assert_eq!(s.health(0), Health::Live);
+        // one overrun: Suspect, one hang counted
+        s.observe_success(0, 25.0);
+        assert_eq!(s.health(0), Health::Suspect);
+        assert_eq!(s.stats().hangs, 1);
+        // two in-deadline successes heal it
+        s.observe_success(0, 1.0);
+        s.observe_success(0, 1.0);
+        assert_eq!(s.health(0), Health::Live);
+        // strikes reset on heal: two fresh overruns quarantine
+        s.observe_success(0, 25.0);
+        s.observe_success(0, 25.0);
+        assert_eq!(s.health(0), Health::Quarantined);
+        let st = s.stats();
+        assert_eq!(st.hangs, 3);
+        assert_eq!(st.quarantines, 1);
+        assert_eq!(st.deaths, 0, "striking out is not a death");
+        // quarantine is terminal: later successes do not resurrect
+        s.observe_success(0, 1.0);
+        assert_eq!(s.health(0), Health::Quarantined);
+        // the other context is untouched
+        assert_eq!(s.health(1), Health::Live);
+        assert_eq!(s.live_count(), 1);
+    }
+
+    #[test]
+    fn deadline_off_means_no_strikes() {
+        let s = Supervisor::new(1, SupervisorPolicy::default());
+        s.observe_success(0, 1e9);
+        assert_eq!(s.health(0), Health::Live);
+        assert_eq!(s.stats().hangs, 0);
+    }
+
+    #[test]
+    fn context_loss_quarantines_once_and_counts_a_death() {
+        let s = Supervisor::new(4, SupervisorPolicy::default());
+        let err = anyhow::Error::new(super::ContextLost { ctx: 2, reason: "gone".into() })
+            .context("wrapped by a caller");
+        assert_eq!(s.observe_error(2, &err), FaultKind::ContextLost);
+        assert_eq!(s.observe_error(2, &err), FaultKind::ContextLost);
+        assert_eq!(s.health(2), Health::Quarantined);
+        let st = s.stats();
+        assert_eq!((st.deaths, st.quarantines), (1, 1), "double observation counts once");
+    }
+
+    #[test]
+    fn resolve_probes_ascending_and_errors_when_all_dead() {
+        let s = Supervisor::new(3, SupervisorPolicy::default());
+        assert_eq!(s.resolve(1).unwrap(), 1);
+        s.quarantine(1);
+        assert_eq!(s.resolve(1).unwrap(), 2, "probe ascends from the owner");
+        s.quarantine(2);
+        assert_eq!(s.resolve(1).unwrap(), 0, "probe wraps");
+        s.quarantine(0);
+        let err = s.resolve(1).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<SupervisionError>(),
+                Some(SupervisionError::NoLiveContexts { quarantined: 3 })
+            ),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn classify_walks_wrapped_chains() {
+        let lost = anyhow::Error::new(super::ContextLost { ctx: 0, reason: "x".into() })
+            .context("layer 1")
+            .context("layer 2");
+        assert_eq!(classify(&lost), FaultKind::ContextLost);
+        let transient =
+            anyhow::Error::new(super::TransientExecError { ctx: 0, reason: "y".into() })
+                .context("wrapped");
+        assert_eq!(classify(&transient), FaultKind::Transient);
+        assert_eq!(classify(&anyhow::anyhow!("plain")), FaultKind::Fatal);
+    }
+
+    #[test]
+    fn backoff_doubles_from_base_and_caps() {
+        let p = SupervisorPolicy {
+            backoff_base_ms: 2,
+            backoff_cap_ms: 12,
+            ..Default::default()
+        };
+        assert_eq!(p.backoff_ms(1), 2);
+        assert_eq!(p.backoff_ms(2), 4);
+        assert_eq!(p.backoff_ms(3), 8);
+        assert_eq!(p.backoff_ms(4), 12, "capped");
+        assert_eq!(p.backoff_ms(60), 12, "shift is clamped, no overflow");
+        let zero = SupervisorPolicy { backoff_base_ms: 0, ..Default::default() };
+        assert_eq!(zero.backoff_ms(1), 0, "base 0 disables sleeping");
+    }
+}

@@ -378,8 +378,19 @@ impl Frontend {
     /// a per-refill pin (`begin_refill`/`end_refill`). Responses carry
     /// virtual-clock latencies from the schedule; returns the schedule
     /// so callers can compute SLO stats or inspect sheds.
+    ///
+    /// Graceful degradation (DESIGN.md §14): a quarantined execution
+    /// context is lost decode capacity, so the pure schedule is computed
+    /// with correspondingly fewer slots — goodput and horizon degrade,
+    /// but admission control is otherwise unchanged: nothing extra is
+    /// shed, deadlines keep applying, and the served/shed partition stays
+    /// exactly the deadline-driven one. With zero quarantined contexts
+    /// the effective config equals `self.cfg` and this path is
+    /// byte-identical to the healthy one.
     pub fn serve_trace(&mut self, rt: &Runtime, trace: &ArrivalTrace) -> Result<Schedule> {
-        let plan = schedule(trace, &self.cfg);
+        let lost = rt.supervisor().quarantined_count().min(self.cfg.slots.saturating_sub(1));
+        let cfg = FrontendConfig { slots: self.cfg.slots - lost, ..self.cfg.clone() };
+        let plan = schedule(trace, &cfg);
         let t = Timer::start();
         // stage every adapter the plan will touch into the warm tier up
         // front (cold unpack off the refill path); refills then pay at

@@ -1,0 +1,428 @@
+//! Deterministic chaos suite over the hermetic sim backend — the ISSUE 9
+//! acceptance tests. Zero artifacts, zero skips, every CI invocation.
+//!
+//! Every scenario scripts faults through `SimOptions` (context death,
+//! hangs, transient execute errors) and drives them through the REAL
+//! stack — `Runtime::run`'s supervised dispatch loop, the worker pool,
+//! the tenant trainer, the serving front-end — then asserts the two
+//! properties the supervision plane promises (DESIGN.md §14):
+//!
+//!   1. **Byte-identity under recovery.** Jobs are seeded by job id, not
+//!      by context identity, so requeue-on-context-loss re-executes on a
+//!      survivor and produces the same bytes as the fault-free run:
+//!      decode fingerprints AND trained GRPO theta bit patterns are
+//!      compared against clean references at D ∈ {2, 4}.
+//!   2. **Typed, counted degradation.** Deaths quarantine, hangs strike,
+//!      transients retry with backoff, exhaustion surfaces a typed
+//!      `SupervisionError` — and every event lands in the supervisor
+//!      counters, checked here all the way through the logged JSONL row.
+
+use std::collections::{BTreeMap, HashSet};
+
+use tinylora_rl::adapters::packing::Precision;
+use tinylora_rl::coordinator::grpo::GrpoConfig;
+use tinylora_rl::engine::pool::{GenJob, WorkerPool};
+use tinylora_rl::engine::InferenceEngine;
+use tinylora_rl::metrics::RunLog;
+use tinylora_rl::runtime::{
+    Health, SimOptions, SupervisionError, SupervisorPolicy, SIM_SCHEME, SIM_TIER,
+};
+use tinylora_rl::serving::{AdapterStore, ArrivalTrace, Frontend, FrontendConfig, SchedPolicy, TraceConfig};
+use tinylora_rl::tasks::generator::SUITES;
+use tinylora_rl::tokenizer::Tokenizer;
+use tinylora_rl::trainer::{TenantSpec, TenantTrainer};
+use tinylora_rl::util::json::Value;
+use tinylora_rl::util::Pcg64;
+use tinylora_rl::weights::WeightSet;
+use tinylora_rl::Runtime;
+
+fn scratch(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("tlrl_chaos_sim_{name}"));
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+fn base_weights(rt: &Runtime, seed: u64) -> WeightSet {
+    WeightSet::init(&rt.manifest.tier(SIM_TIER).unwrap().clone(), seed).unwrap()
+}
+
+/// Same mixed decode workload as `tests/e2e_sim.rs`: padded single-row
+/// jobs and grouped GRPO-style jobs, two adapters, per-job RNG streams.
+fn mixed_jobs(rt: &Runtime) -> Vec<GenJob> {
+    let weights = base_weights(rt, 0);
+    let adapters = [weights, base_weights(rt, 3)];
+    (0..6u64)
+        .map(|id| {
+            let mut rng = Pcg64::with_stream(500 + id, 0x6a6f6273);
+            let grouped = id % 3 == 2;
+            GenJob {
+                id,
+                weights: adapters[(id % 2) as usize].clone(),
+                problems: (0..if grouped { 2 } else { 3 })
+                    .map(|_| SUITES[(id % 2) as usize].generate(&mut rng))
+                    .collect(),
+                group: if grouped { 2 } else { 1 },
+                pb: None,
+                temperature: 1.0,
+                seed: 70 + id,
+            }
+        })
+        .collect()
+}
+
+/// Token streams + behavior log-prob bit patterns per job — the
+/// byte-identity currency of the determinism matrix.
+fn fingerprint(
+    results: &[tinylora_rl::engine::pool::GenJobResult],
+) -> Vec<(u64, Vec<i32>, Vec<u32>)> {
+    results
+        .iter()
+        .map(|r| {
+            let mut toks = Vec::new();
+            let mut bits = Vec::new();
+            for row in &r.rows {
+                toks.extend_from_slice(&row.response);
+                bits.extend(row.behavior.iter().map(|x| x.to_bits()));
+            }
+            (r.id, toks, bits)
+        })
+        .collect()
+}
+
+/// Tentpole acceptance, decode leg: kill a context mid-wave at D ∈ {2, 4}
+/// — the lost slots requeue onto survivors and the pooled results stay
+/// byte-identical to the fault-free serial reference, while the requeue /
+/// quarantine / death counters fire and survive the trip through the
+/// logged metrics JSONL row.
+#[test]
+fn context_death_mid_wave_is_byte_identical_at_d_2_4() {
+    let rt_ref = Runtime::sim(1).unwrap();
+    let engine_ref = InferenceEngine::new(&rt_ref, SIM_TIER, rt_ref.manifest.batch.test).unwrap();
+    let reference =
+        fingerprint(&WorkerPool::serve_serial(&rt_ref, &engine_ref, &mixed_jobs(&rt_ref)).unwrap());
+    assert_eq!(reference.len(), 6);
+
+    for d in [2usize, 4] {
+        // ctx 1 serves exactly one execute, then every later dispatch to
+        // it observes an injected ContextLost
+        let opts = SimOptions {
+            die_after_execs: BTreeMap::from([(1usize, 1u64)]),
+            ..Default::default()
+        };
+        let rt = Runtime::sim_with(d, opts).unwrap();
+        let engine = InferenceEngine::new(&rt, SIM_TIER, rt.manifest.batch.test).unwrap();
+        let survived =
+            fingerprint(&WorkerPool::new(4).serve(&rt, &engine, mixed_jobs(&rt)).unwrap());
+        assert_eq!(
+            survived, reference,
+            "D={d}: decode under context death diverged from the fault-free reference"
+        );
+        assert_eq!(rt.supervisor().health(1), Health::Quarantined, "D={d}: dead ctx not quarantined");
+        let sv = rt.supervisor().stats();
+        assert!(sv.deaths >= 1, "D={d}: no death counted: {sv:?}");
+        assert!(sv.quarantines >= 1, "D={d}: no quarantine counted: {sv:?}");
+        assert!(sv.requeues >= 1, "D={d}: no requeue counted — loss never re-pinned: {sv:?}");
+        assert_eq!(rt.supervisor().live_count(), d - 1);
+
+        // acceptance: the counters are visible in LOGGED metrics, not
+        // just in-process — write the supervisor row and parse it back
+        let path = scratch("counters").join(format!("supervisor_d{d}.jsonl"));
+        std::fs::remove_file(&path).ok();
+        {
+            let mut log = RunLog::new(Some(&path), false);
+            log.log_supervisor(SIM_TIER, &sv, rt.devices(), rt.supervisor().live_count());
+        }
+        let row = Value::parse(std::fs::read_to_string(&path).unwrap().trim()).unwrap();
+        assert_eq!(row.get("kind").unwrap().str().unwrap(), "supervisor");
+        assert!(row.get("requeues").unwrap().usize().unwrap() >= 1);
+        assert!(row.get("quarantines").unwrap().usize().unwrap() >= 1);
+        assert!(row.get("deaths").unwrap().usize().unwrap() >= 1);
+        assert_eq!(row.get("live").unwrap().usize().unwrap(), d - 1);
+    }
+}
+
+/// Tentpole acceptance, training leg: GRPO tenant waves trained across a
+/// context pool where every non-zero context dies after one execute land
+/// on bit-identical adapter theta vs the fault-free single-context run,
+/// at D ∈ {2, 4}.
+#[test]
+fn grpo_theta_is_bit_identical_under_context_death_at_d_2_4() {
+    let specs = || -> Vec<TenantSpec> {
+        (0..3u64)
+            .map(|i| TenantSpec {
+                name: format!("tenant-{i}"),
+                scheme_tag: SIM_SCHEME.into(),
+                cfg: GrpoConfig {
+                    group: 2,
+                    steps: 3,
+                    lr: 2e-3 + i as f32 * 1e-3,
+                    warmup: 2,
+                    seed: 40 + i,
+                    ..Default::default()
+                },
+                precision: Precision::Bf16,
+            })
+            .collect()
+    };
+    let thetas = |rt: &Runtime| -> Vec<Vec<u32>> {
+        let b = rt.manifest.batch.test;
+        let base = base_weights(rt, 3);
+        let mut tt =
+            TenantTrainer::with_batch(rt, &base, specs(), 2, &scratch("grpo"), b).unwrap();
+        tt.train(rt, &mut RunLog::null(), true).unwrap();
+        tt.sessions
+            .iter()
+            .map(|s| s.lp.policy.theta.iter().map(|x| x.to_bits()).collect())
+            .collect()
+    };
+
+    let clean = thetas(&Runtime::sim(1).unwrap());
+    for d in [2usize, 4] {
+        let opts = SimOptions {
+            die_after_execs: (1..d).map(|c| (c, 1u64)).collect(),
+            ..Default::default()
+        };
+        let rt = Runtime::sim_with(d, opts).unwrap();
+        let faulty = thetas(&rt);
+        assert_eq!(
+            faulty, clean,
+            "D={d}: GRPO theta diverged when training survived context death"
+        );
+        let sv = rt.supervisor().stats();
+        assert!(sv.deaths >= 1, "D={d}: faults never fired: {sv:?}");
+        assert!(sv.requeues >= 1, "D={d}: no training work was re-pinned: {sv:?}");
+    }
+}
+
+/// Tentpole acceptance, serving leg: a context quarantined by the health
+/// check degrades the front-end to the surviving capacity — horizon
+/// stretches and goodput drops, but NOTHING extra is shed at a generous
+/// deadline (the exact request set is served, byte-identical), and under
+/// a tight deadline the served/shed sets still partition the trace
+/// exactly once.
+#[test]
+fn quarantined_context_degrades_goodput_but_sheds_nothing_extra() {
+    let tcfg = TraceConfig {
+        seed: 5,
+        n: 48,
+        rate: 400.0,
+        burst: 1,
+        tenants: 4,
+        zipf_s: 0.0,
+        ..Default::default()
+    };
+    let trace = ArrivalTrace::generate(&tcfg).unwrap();
+    let cfg_a = FrontendConfig {
+        batch: 4,
+        slots: 2,
+        deadline: 30.0,
+        max_wait: 0.02,
+        service_base: 0.05,
+        service_per_row: 0.0,
+        policy: SchedPolicy::DeadlineFlush,
+        continuous: true,
+    };
+
+    type Served = (tinylora_rl::serving::SloStats, Vec<(u64, String)>, Vec<u64>);
+    let run = |faulty: bool, cfg: &FrontendConfig| -> Served {
+        let opts = if faulty {
+            SimOptions { die_after_execs: BTreeMap::from([(1usize, 0u64)]), ..Default::default() }
+        } else {
+            SimOptions::default()
+        };
+        let rt = Runtime::sim_with(2, opts).unwrap();
+        // the health check is what converts a scripted death into a
+        // quarantine BEFORE the serve plans its capacity
+        let healths = rt.health_check().unwrap();
+        if faulty {
+            assert_eq!(healths[1], Health::Quarantined, "probe must catch the dead context");
+            assert_eq!(rt.supervisor().live_count(), 1);
+        } else {
+            assert!(healths.iter().all(|h| *h == Health::Live));
+        }
+        let mut store = AdapterStore::with_tiers(SIM_TIER, 4, 32);
+        let mut rng = Pcg64::new(11);
+        for name in &trace.tenant_names() {
+            let theta: Vec<f32> = (0..13).map(|_| rng.normal() * 0.01).collect();
+            store.register(name, SIM_SCHEME, &theta, Precision::Bf16).unwrap();
+        }
+        let mut fe =
+            Frontend::new(&rt, store, base_weights(&rt, 3), cfg.clone(), scratch("frontend"))
+                .unwrap();
+        let plan = fe.serve_trace(&rt, &trace).unwrap();
+        let slo = fe.slo(&plan);
+        let mut texts: Vec<(u64, String)> =
+            fe.responses.iter().map(|r| (r.id, r.text.clone())).collect();
+        texts.sort();
+        let shed_ids: Vec<u64> = plan.sheds.iter().map(|x| x.id).collect();
+        let sv = rt.supervisor().stats();
+        if faulty {
+            assert!(sv.deaths >= 1 && sv.quarantines >= 1, "faulty run recorded nothing: {sv:?}");
+        }
+        (slo, texts, shed_ids)
+    };
+
+    // generous deadline: degraded capacity stretches the horizon and
+    // drops goodput but serves the EXACT same set, byte-identical
+    let (slo_h, texts_h, sheds_h) = run(false, &cfg_a);
+    let (slo_d, texts_d, sheds_d) = run(true, &cfg_a);
+    assert_eq!((slo_h.served, slo_h.shed), (48, 0));
+    assert_eq!((slo_d.served, slo_d.shed), (48, 0), "degradation must not shed at a generous deadline");
+    assert!(sheds_h.is_empty() && sheds_d.is_empty());
+    assert_eq!(texts_d, texts_h, "degraded serving changed decoded bytes");
+    assert!(
+        slo_d.horizon > slo_h.horizon,
+        "lost slot must stretch the horizon: {} vs {}",
+        slo_d.horizon,
+        slo_h.horizon
+    );
+    assert!(
+        slo_d.goodput < slo_h.goodput,
+        "lost slot must cost goodput: {} vs {}",
+        slo_d.goodput,
+        slo_h.goodput
+    );
+
+    // tight deadline on the degraded plane: 12 batches × 50ms on one
+    // surviving slot cannot all dispatch within 150ms — shedding must
+    // trigger, and served ∪ shed must still partition the trace exactly
+    let cfg_b = FrontendConfig { deadline: 0.15, ..cfg_a };
+    let (slo_t, texts_t, sheds_t) = run(true, &cfg_b);
+    assert!(slo_t.shed > 0, "tight deadline on degraded capacity must shed");
+    let served: HashSet<u64> = texts_t.iter().map(|(id, _)| *id).collect();
+    let shed: HashSet<u64> = sheds_t.iter().copied().collect();
+    assert_eq!(served.len() + shed.len(), 48, "request lost or double-resolved");
+    assert!(served.is_disjoint(&shed), "a request was both served and shed");
+    let all: HashSet<u64> = trace.events.iter().map(|e| e.id).collect();
+    let mut union = served.clone();
+    union.extend(&shed);
+    assert_eq!(union, all, "served ∪ shed must be exactly the trace");
+}
+
+/// Transient execute errors retry in place with backoff and then succeed
+/// — consumed faults leave the decoded rows byte-equal to a clean run,
+/// with exactly the scripted number of retries counted.
+#[test]
+fn transient_exec_errors_retry_then_match_clean_run() {
+    let tok = Tokenizer::new();
+    let run = |opts: SimOptions| -> (Vec<(Vec<i32>, Vec<u32>)>, u64) {
+        let rt = Runtime::sim_with(1, opts).unwrap();
+        let engine = InferenceEngine::new(&rt, SIM_TIER, rt.manifest.batch.test).unwrap();
+        let weights = base_weights(&rt, 0);
+        let mut prng = Pcg64::new(17);
+        let problems: Vec<_> = (0..3).map(|_| SUITES[0].generate(&mut prng)).collect();
+        let mut rng = Pcg64::with_stream(9, 0x72657472);
+        let rows = engine
+            .generate_problems_on(&rt, 0, &weights, &problems, &tok, 0.0, &mut rng)
+            .unwrap();
+        let fp = rows
+            .iter()
+            .map(|r| (r.response.clone(), r.behavior.iter().map(|x| x.to_bits()).collect()))
+            .collect();
+        (fp, rt.supervisor().stats().retries)
+    };
+
+    let (clean, clean_retries) = run(SimOptions::default());
+    assert_eq!(clean_retries, 0);
+    let faulty_opts = SimOptions {
+        exec_failures: BTreeMap::from([(0usize, 2u32)]),
+        ..Default::default()
+    };
+    let (healed, retries) = run(faulty_opts);
+    assert_eq!(retries, 2, "two injected failures must cost exactly two retries");
+    assert_eq!(healed, clean, "retried decode diverged from the clean run");
+}
+
+/// A transient error that outlives the retry budget surfaces as a clean,
+/// typed `SupervisionError::RetriesExhausted` — not a hang, not a panic.
+#[test]
+fn exhausted_retries_surface_a_typed_error() {
+    let opts = SimOptions {
+        exec_failures: BTreeMap::from([(0usize, 100u32)]),
+        ..Default::default()
+    };
+    let rt = Runtime::sim_with(1, opts).unwrap().with_supervisor_policy(SupervisorPolicy {
+        max_retries: 1,
+        backoff_base_ms: 0,
+        ..Default::default()
+    });
+    let engine = InferenceEngine::new(&rt, SIM_TIER, rt.manifest.batch.test).unwrap();
+    let weights = base_weights(&rt, 0);
+    let mut prng = Pcg64::new(17);
+    let problems: Vec<_> = (0..2).map(|_| SUITES[0].generate(&mut prng)).collect();
+    let tok = Tokenizer::new();
+    let mut rng = Pcg64::with_stream(9, 0x72657472);
+    let err = engine
+        .generate_problems_on(&rt, 0, &weights, &problems, &tok, 0.0, &mut rng)
+        .unwrap_err();
+    let exhausted = err.chain().any(|c| {
+        matches!(
+            c.downcast_ref::<SupervisionError>(),
+            Some(SupervisionError::RetriesExhausted { attempts: 2, .. })
+        )
+    });
+    assert!(exhausted, "expected RetriesExhausted in the chain, got: {err:#}");
+    assert_eq!(rt.supervisor().stats().retries, 1, "exactly the budgeted retry was taken");
+}
+
+/// Hang detection: a context stalling far past the execute deadline
+/// collects strikes, goes Suspect → Quarantined, and the pool's results
+/// remain byte-identical (the hang model returns correct bytes late; the
+/// deadline policy is what converts lateness into quarantine).
+#[test]
+fn hung_context_strikes_out_and_is_quarantined_without_changing_bytes() {
+    let rt_ref = Runtime::sim(1).unwrap();
+    let engine_ref = InferenceEngine::new(&rt_ref, SIM_TIER, rt_ref.manifest.batch.test).unwrap();
+    let reference =
+        fingerprint(&WorkerPool::serve_serial(&rt_ref, &engine_ref, &mixed_jobs(&rt_ref)).unwrap());
+
+    let opts = SimOptions {
+        hang_execs_us: BTreeMap::from([(1usize, 200_000u64)]),
+        ..Default::default()
+    };
+    // 200ms injected stall vs a 50ms deadline: every ctx-1 execute is a
+    // strike; ctx 0 computes in well under 50ms, so no spurious strikes
+    let rt = Runtime::sim_with(2, opts).unwrap().with_supervisor_policy(SupervisorPolicy {
+        exec_deadline_ms: 50,
+        ..Default::default()
+    });
+    let engine = InferenceEngine::new(&rt, SIM_TIER, rt.manifest.batch.test).unwrap();
+    let survived =
+        fingerprint(&WorkerPool::new(4).serve(&rt, &engine, mixed_jobs(&rt)).unwrap());
+    assert_eq!(survived, reference, "hang recovery changed decoded bytes");
+    assert_eq!(rt.supervisor().health(1), Health::Quarantined, "hung context must strike out");
+    let sv = rt.supervisor().stats();
+    assert!(sv.hangs >= 2, "quarantine needs at least suspect_strikes hang strikes: {sv:?}");
+    assert!(sv.quarantines >= 1, "{sv:?}");
+    assert_eq!(rt.supervisor().health(0), Health::Live, "healthy context struck spuriously");
+}
+
+/// Losing every context is not recoverable — the caller gets the typed
+/// `NoLiveContexts` error, with one counted death per context.
+#[test]
+fn all_contexts_dead_is_a_clean_typed_error() {
+    let opts = SimOptions {
+        die_after_execs: BTreeMap::from([(0usize, 0u64), (1usize, 0u64)]),
+        ..Default::default()
+    };
+    let rt = Runtime::sim_with(2, opts).unwrap();
+    let engine = InferenceEngine::new(&rt, SIM_TIER, rt.manifest.batch.test).unwrap();
+    let weights = base_weights(&rt, 0);
+    let mut prng = Pcg64::new(17);
+    let problems: Vec<_> = (0..2).map(|_| SUITES[0].generate(&mut prng)).collect();
+    let tok = Tokenizer::new();
+    let mut rng = Pcg64::with_stream(9, 0x72657472);
+    let err = engine
+        .generate_problems_on(&rt, 0, &weights, &problems, &tok, 0.0, &mut rng)
+        .unwrap_err();
+    let no_live = err.chain().any(|c| {
+        matches!(
+            c.downcast_ref::<SupervisionError>(),
+            Some(SupervisionError::NoLiveContexts { quarantined: 2 })
+        )
+    });
+    assert!(no_live, "expected NoLiveContexts in the chain, got: {err:#}");
+    let sv = rt.supervisor().stats();
+    assert_eq!(sv.deaths, 2, "one death per context: {sv:?}");
+    assert_eq!(rt.supervisor().live_count(), 0);
+}

@@ -180,7 +180,7 @@ fn slow_context_skew_does_not_change_results() {
 
     let rt = Runtime::sim_with(
         2,
-        SimOptions { ctx_delay_ms: vec![0, 30], ..Default::default() },
+        SimOptions { ctx_delay_us: vec![0, 30_000], ..Default::default() },
     )
     .unwrap();
     let engine = InferenceEngine::new(&rt, SIM_TIER, rt.manifest.batch.test).unwrap();
