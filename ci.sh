@@ -126,6 +126,21 @@ if [[ "$FAST" -eq 0 ]]; then
     echo "== BENCH_serve.json missing — run 'cargo bench --bench bench_serve' and commit it =="
     exit 1
   fi
+
+  # Async-pipeline gate: BENCH_pipeline.json is REQUIRED — the bench is
+  # hermetic (sim backend) and carries the population-scale training
+  # claim. `--check` validates the schema, recomputes the run-shape
+  # echo, and enforces the pipeline's exact accounting: speedup ==
+  # async/sync, consumed == tenants × steps, and zero stale drops at
+  # window = staleness + 1. It also prints the snapshot's provenance
+  # ("measured" vs "estimate"), as every bench --check now does.
+  if [[ -f ../BENCH_pipeline.json ]]; then
+    echo "== bench_pipeline --check (async-pipeline steps/s snapshot) =="
+    cargo bench --bench bench_pipeline -- --check
+  else
+    echo "== BENCH_pipeline.json missing — run 'cargo bench --bench bench_pipeline' and commit it =="
+    exit 1
+  fi
 fi
 
 if cargo clippy --version >/dev/null 2>&1; then

@@ -1,0 +1,280 @@
+//! Async-pipeline benchmark + the committed steps/s snapshot
+//! (`cargo bench --bench bench_pipeline`).
+//!
+//! Emits `../BENCH_pipeline.json` (repo root): optimizer steps/s of the
+//! synchronous wave trainer (`TenantTrainer::train`) vs the async
+//! off-policy pipeline (`trainer::pipeline::train_async`) at 10 / 100 /
+//! 1000 tenants on the hermetic sim backend — the population-scale claim
+//! of the training plane, measurable on every machine with zero
+//! artifacts.
+//!
+//! Snapshot schema, like `BENCH_SIM.json`:
+//!   * `config` — deterministic echo of the run shape (tier, steps,
+//!     group, staleness, threads, scales); `--check` recomputes it and
+//!     fails on drift;
+//!   * `measured` — per-scale steps/s plus the pipeline's own exact
+//!     accounting, cross-checked by `--check`: `speedup` must equal
+//!     async/sync, `consumed` must equal tenants × steps, and the
+//!     window = staleness + 1 configuration must report ZERO stale
+//!     drops (the replay queue can only overproduce past the window);
+//!   * `provenance` — "measured" when this binary wrote the numbers on
+//!     a live run, "estimate" when they were projected without one;
+//!     `--check` accepts either and prints which.
+//!
+//! Modes:
+//!   cargo bench --bench bench_pipeline              # run + rewrite snapshot
+//!   cargo bench --bench bench_pipeline -- --check   # validate committed
+//!                                                   # snapshot (ci.sh gate)
+
+use tinylora_rl::adapters::packing::Precision;
+use tinylora_rl::coordinator::grpo::GrpoConfig;
+use tinylora_rl::metrics::RunLog;
+use tinylora_rl::runtime::{SIM_SCHEME, SIM_TIER};
+use tinylora_rl::trainer::pipeline::train_async;
+use tinylora_rl::trainer::{PipelineConfig, TenantSpec, TenantTrainer};
+use tinylora_rl::util::json::{num, obj, s, Value};
+use tinylora_rl::util::Timer;
+use tinylora_rl::weights::WeightSet;
+use tinylora_rl::Runtime;
+
+/// Committed snapshot path (repo root; cargo bench runs from `rust/`).
+/// Override with TINYLORA_BENCH_PIPELINE for scratch runs.
+fn snapshot_path() -> String {
+    std::env::var("TINYLORA_BENCH_PIPELINE").unwrap_or_else(|_| "../BENCH_pipeline.json".into())
+}
+
+const SCHEMA_VERSION: usize = 1;
+/// Tenant-population scales swept (the 10^1..10^3 trajectory).
+const SCALES: [usize; 3] = [10, 100, 1000];
+/// Optimizer steps per tenant at every scale.
+const STEPS: usize = 4;
+const GROUP: usize = 2;
+/// Async shape: window = STALENESS + 1, so the pipeline can never drop —
+/// `--check` asserts `dropped_stale == 0` on exactly that ground.
+const STALENESS: u64 = 1;
+const OPT_THREADS: usize = 4;
+const WORKERS: usize = 4;
+const DEVICES: usize = 2;
+
+fn config_section() -> Value {
+    obj(vec![
+        ("tier", s(SIM_TIER)),
+        ("scheme", s(SIM_SCHEME)),
+        ("devices", num(DEVICES as f64)),
+        ("workers", num(WORKERS as f64)),
+        ("steps", num(STEPS as f64)),
+        ("group", num(GROUP as f64)),
+        ("staleness", num(STALENESS as f64)),
+        ("optimizer_threads", num(OPT_THREADS as f64)),
+        ("scales", Value::Arr(SCALES.iter().map(|&x| num(x as f64)).collect())),
+    ])
+}
+
+fn build_trainer(rt: &Runtime, base: &WeightSet, tenants: usize) -> TenantTrainer {
+    let specs: Vec<TenantSpec> = (0..tenants)
+        .map(|i| TenantSpec {
+            name: format!("bench-{i}"),
+            scheme_tag: SIM_SCHEME.into(),
+            cfg: GrpoConfig { group: GROUP, steps: STEPS, seed: i as u64, ..Default::default() },
+            precision: Precision::Bf16,
+        })
+        .collect();
+    let ckpt = std::env::temp_dir().join("tlrl_bench_pipeline");
+    std::fs::create_dir_all(&ckpt).ok();
+    let batch = rt.manifest.batch.test;
+    TenantTrainer::with_batch(rt, base, specs, WORKERS, &ckpt, batch).expect("tenant trainer")
+}
+
+struct ScalePoint {
+    tenants: usize,
+    sync_sps: f64,
+    async_sps: f64,
+    produced: u64,
+    consumed: u64,
+    dropped: u64,
+}
+
+fn measure_scale(tenants: usize) -> ScalePoint {
+    let rt = Runtime::sim(DEVICES).expect("sim runtime");
+    let tier = rt.manifest.tier(SIM_TIER).expect("sim tier").clone();
+    let base = WeightSet::init(&tier, 0).unwrap();
+    let total = (tenants * STEPS) as f64;
+
+    let mut tt = build_trainer(&rt, &base, tenants);
+    let mut log = RunLog::null();
+    let t = Timer::start();
+    tt.train(&rt, &mut log, true).expect("sync train");
+    let sync_sps = total / t.secs();
+
+    let mut tt = build_trainer(&rt, &base, tenants);
+    let pcfg = PipelineConfig {
+        max_staleness: STALENESS,
+        optimizer_threads: OPT_THREADS,
+        queue_cap: 0,
+    };
+    let t = Timer::start();
+    let (_, st) = train_async(&rt, &mut tt, &pcfg, &mut log, true).expect("async train");
+    let async_sps = total / t.secs();
+    println!(
+        "tenants {tenants:>5}: sync {sync_sps:>8.1} steps/s | async {async_sps:>8.1} steps/s \
+         ({:.2}x) | produced {} consumed {} dropped {}",
+        async_sps / sync_sps,
+        st.produced,
+        st.consumed,
+        st.dropped_stale,
+    );
+    ScalePoint {
+        tenants,
+        sync_sps,
+        async_sps,
+        produced: st.produced,
+        consumed: st.consumed,
+        dropped: st.dropped_stale,
+    }
+}
+
+fn measured_section(points: &[ScalePoint]) -> Value {
+    Value::Arr(
+        points
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("tenants", num(p.tenants as f64)),
+                    ("sync_steps_per_s", num(p.sync_sps)),
+                    ("async_steps_per_s", num(p.async_sps)),
+                    ("speedup", num(p.async_sps / p.sync_sps)),
+                    ("produced", num(p.produced as f64)),
+                    ("consumed", num(p.consumed as f64)),
+                    ("dropped_stale", num(p.dropped as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn validate_schema(v: &Value) -> Result<(), String> {
+    let get = |key: &str| v.get(key).map_err(|e| format!("{e:#}"));
+    if get("kind")?.str().map_err(|e| format!("kind: {e:#}"))? != "bench_pipeline" {
+        return Err("kind != bench_pipeline".into());
+    }
+    let version = get("schema_version")?.usize().map_err(|e| format!("schema_version: {e:#}"))?;
+    if version != SCHEMA_VERSION {
+        return Err(format!("schema_version {version} != {SCHEMA_VERSION}"));
+    }
+    let provenance = get("provenance")?.str().map_err(|e| format!("provenance: {e:#}"))?;
+    if provenance != "estimate" && provenance != "measured" {
+        return Err(format!("provenance {provenance:?} not in {{estimate, measured}}"));
+    }
+    let config = get("config")?;
+    let want = config_section();
+    if *config != want {
+        return Err(format!(
+            "config drift: committed {} != recomputed {} — the bench shape \
+             changed; rerun `cargo bench --bench bench_pipeline` and commit \
+             the refreshed snapshot",
+            config.to_string(),
+            want.to_string()
+        ));
+    }
+    let measured = get("measured")?
+        .arr()
+        .map(|a| a.to_vec())
+        .map_err(|e| format!("measured: {e:#}"))?;
+    if measured.len() != SCALES.len() {
+        return Err(format!("measured has {} entries, expected {}", measured.len(), SCALES.len()));
+    }
+    for (entry, &scale) in measured.iter().zip(&SCALES) {
+        let f = |key: &str| -> Result<f64, String> {
+            entry.get(key).and_then(|x| x.f64()).map_err(|e| format!("{key} @ {scale}: {e:#}"))
+        };
+        if f("tenants")? as usize != scale {
+            return Err(format!("scale order drift: expected tenants {scale}"));
+        }
+        let sync = f("sync_steps_per_s")?;
+        let a = f("async_steps_per_s")?;
+        let speedup = f("speedup")?;
+        for (name, x) in [("sync_steps_per_s", sync), ("async_steps_per_s", a)] {
+            if !x.is_finite() || x <= 0.0 {
+                return Err(format!("{name} @ {scale} not positive: {x}"));
+            }
+        }
+        let ratio = a / sync;
+        if (speedup - ratio).abs() > 0.01 * ratio {
+            return Err(format!(
+                "speedup {speedup:.4} @ {scale} inconsistent with async/sync = {ratio:.4}"
+            ));
+        }
+        let consumed = f("consumed")? as u64;
+        let produced = f("produced")? as u64;
+        let dropped = f("dropped_stale")? as u64;
+        let want_steps = (scale * STEPS) as u64;
+        if consumed != want_steps {
+            return Err(format!(
+                "consumed {consumed} @ {scale} != tenants x steps = {want_steps}"
+            ));
+        }
+        if dropped != 0 || produced != consumed {
+            return Err(format!(
+                "window = staleness + 1 must never drop: produced {produced} \
+                 consumed {consumed} dropped {dropped} @ {scale}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// `--check`: committed snapshot must be schema-valid, shape-current and
+/// internally consistent; prints the committed steps/s tally (and the
+/// snapshot's provenance) that ci.sh surfaces in its full-mode report.
+fn check_snapshot(path: &str) -> Result<(), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let v = Value::parse(text.trim()).map_err(|e| format!("parsing {path}: {e:#}"))?;
+    validate_schema(&v)?;
+    let provenance = v.get("provenance").and_then(|x| x.str().map(String::from)).unwrap();
+    println!("pipeline snapshot provenance: {provenance}");
+    let measured = v.get("measured").and_then(|x| x.arr().map(|a| a.to_vec())).unwrap();
+    for entry in &measured {
+        let f = |key: &str| entry.get(key).and_then(|x| x.f64()).unwrap();
+        println!(
+            "pipeline steps/s (committed): {:>5.0} tenants  sync {:>8.1}  async {:>8.1}  \
+             ({:.2}x)  dropped {}",
+            f("tenants"),
+            f("sync_steps_per_s"),
+            f("async_steps_per_s"),
+            f("speedup"),
+            f("dropped_stale"),
+        );
+    }
+    Ok(())
+}
+
+fn main() {
+    let check = std::env::args().any(|a| a == "--check");
+    let path = snapshot_path();
+    if check {
+        match check_snapshot(&path) {
+            Ok(()) => println!("BENCH_pipeline.json: schema + config + accounting OK ({path})"),
+            Err(e) => {
+                eprintln!("BENCH_pipeline.json check failed: {e}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+
+    println!("== async-pipeline benchmarks (sync vs async steps/s) ==\n");
+    let points: Vec<ScalePoint> = SCALES.iter().map(|&t| measure_scale(t)).collect();
+    let snapshot = obj(vec![
+        ("kind", s("bench_pipeline")),
+        ("schema_version", num(SCHEMA_VERSION as f64)),
+        ("provenance", s("measured")),
+        ("config", config_section()),
+        ("measured", measured_section(&points)),
+    ]);
+    if let Err(e) = validate_schema(&snapshot) {
+        eprintln!("generated snapshot failed its own schema: {e}");
+        std::process::exit(1);
+    }
+    std::fs::write(&path, snapshot.to_string() + "\n").expect("writing snapshot");
+    println!("perf snapshot -> {path}");
+}

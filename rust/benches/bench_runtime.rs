@@ -97,6 +97,7 @@ fn device_section() -> Value {
                     pb: None,
                     temperature: 1.0,
                     seed: id,
+                    policy_version: 0,
                 })
                 .collect()
         };
@@ -140,6 +141,7 @@ fn build_snapshot(device: Value) -> Value {
     obj(vec![
         ("kind", s("bench_runtime")),
         ("schema_version", num(SCHEMA_VERSION as f64)),
+        ("provenance", s("measured")),
         ("geometry", geometry_section()),
         ("padding", padding_section()),
         ("device_parallel", device),
@@ -172,6 +174,10 @@ fn validate_schema(v: &Value) -> Result<(), String> {
     let version = get("schema_version")?.usize().map_err(|e| format!("schema_version: {e:#}"))?;
     if version != SCHEMA_VERSION {
         return Err(format!("schema_version {version} != {SCHEMA_VERSION}"));
+    }
+    let provenance = get("provenance")?.str().map_err(|e| format!("provenance: {e:#}"))?;
+    if provenance != "estimate" && provenance != "measured" {
+        return Err(format!("provenance {provenance:?} not in {{estimate, measured}}"));
     }
     let geo = get("geometry")?;
     ascending_usizes(geo.get("fixed").map_err(|e| format!("{e:#}"))?, "geometry.fixed")?;
@@ -238,6 +244,8 @@ fn check_snapshot(path: &str) -> Result<(), String> {
     let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
     let v = Value::parse(text.trim()).map_err(|e| format!("parsing {path}: {e:#}"))?;
     validate_schema(&v)?;
+    let provenance = v.get("provenance").and_then(|x| x.str().map(String::from)).unwrap();
+    println!("runtime snapshot provenance: {provenance}");
     let want = geometry_section();
     let got = v.get("geometry").map_err(|e| format!("{e:#}"))?;
     if *got != want {

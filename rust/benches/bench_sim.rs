@@ -474,6 +474,10 @@ fn validate_schema(v: &Value) -> Result<(), String> {
     if version != SCHEMA_VERSION {
         return Err(format!("schema_version {version} != {SCHEMA_VERSION}"));
     }
+    let provenance = get("provenance")?.str().map_err(|e| format!("provenance: {e:#}"))?;
+    if provenance != "estimate" && provenance != "measured" {
+        return Err(format!("provenance {provenance:?} not in {{estimate, measured}}"));
+    }
     let engine = get("engine")?;
     let want = engine_section();
     if *engine != want {
@@ -548,6 +552,8 @@ fn check_snapshot(path: &str) -> Result<(), String> {
     let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
     let v = Value::parse(text.trim()).map_err(|e| format!("parsing {path}: {e:#}"))?;
     validate_schema(&v)?;
+    let provenance = v.get("provenance").and_then(|x| x.str().map(String::from)).unwrap();
+    println!("sim snapshot provenance: {provenance}");
     let measured = v.get("measured").map_err(|e| format!("{e:#}"))?;
     for op in OPS {
         let sec = measured.get(op).map_err(|e| format!("{e:#}"))?;
@@ -673,6 +679,7 @@ fn main() {
     let snapshot = obj(vec![
         ("kind", s("bench_sim")),
         ("schema_version", num(SCHEMA_VERSION as f64)),
+        ("provenance", s("measured")),
         ("engine", engine_section()),
         (
             "measured",

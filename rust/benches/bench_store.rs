@@ -223,6 +223,10 @@ fn validate_schema(v: &Value, record_want: &Value) -> Result<(), String> {
     if version != SCHEMA_VERSION {
         return Err(format!("schema_version {version} != {SCHEMA_VERSION}"));
     }
+    let provenance = get("provenance")?.str().map_err(|e| format!("provenance: {e:#}"))?;
+    if provenance != "estimate" && provenance != "measured" {
+        return Err(format!("provenance {provenance:?} not in {{estimate, measured}}"));
+    }
     let record = get("record")?;
     if record != record_want {
         return Err(format!(
@@ -330,6 +334,8 @@ fn check_snapshot(path: &str, record_want: &Value) -> Result<(), String> {
     let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
     let v = Value::parse(text.trim()).map_err(|e| format!("parsing {path}: {e:#}"))?;
     validate_schema(&v, record_want)?;
+    let provenance = v.get("provenance").and_then(|x| x.str().map(String::from)).unwrap();
+    println!("store snapshot provenance: {provenance}");
     let rows = v.get("scales").map_err(|e| format!("{e:#}"))?.arr().unwrap().to_vec();
     for row in &rows {
         let n = row.get("tenants").and_then(|x| x.usize()).unwrap();
@@ -379,6 +385,7 @@ fn main() {
     let snapshot = obj(vec![
         ("kind", s("bench_store")),
         ("schema_version", num(SCHEMA_VERSION as f64)),
+        ("provenance", s("measured")),
         ("record", record.clone()),
         ("scales", Value::Arr(rows)),
     ]);

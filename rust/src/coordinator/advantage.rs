@@ -26,7 +26,13 @@ pub fn group_advantages(rewards: &[f32], group: usize) -> Vec<f32> {
 }
 
 /// Fraction of groups that produce any learning signal (non-degenerate).
+///
+/// Like [`group_advantages`], `rewards.len()` must be a multiple of
+/// `group`. (It used to floor the divisor while still counting a trailing
+/// short chunk as a live group, silently overstating the fraction on
+/// ragged input — now ragged input is rejected up front.)
 pub fn frac_informative_groups(rewards: &[f32], group: usize) -> f32 {
+    assert!(group > 0 && rewards.len() % group == 0);
     let n = rewards.len() / group;
     if n == 0 {
         return 0.0;
@@ -88,5 +94,21 @@ mod tests {
     fn informative_fraction() {
         let r = [1.0, 0.0, 1.0, 1.0, 0.0, 0.0, 1.0, 0.0];
         assert_eq!(frac_informative_groups(&r, 2), 0.5);
+    }
+
+    /// Regression (ISSUE 10 satellite): a trailing short chunk used to be
+    /// counted as a live group while the divisor floored — 5 rewards at
+    /// group 2 reported 2 live / 2 groups = 1.0 even though the "third
+    /// group" was a single sample. Ragged input is now rejected exactly
+    /// like `group_advantages` rejects it.
+    #[test]
+    #[should_panic]
+    fn informative_fraction_rejects_ragged_input() {
+        frac_informative_groups(&[1.0, 0.0, 1.0, 0.0, 1.0], 2);
+    }
+
+    #[test]
+    fn informative_fraction_empty_is_zero() {
+        assert_eq!(frac_informative_groups(&[], 4), 0.0);
     }
 }

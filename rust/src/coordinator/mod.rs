@@ -20,3 +20,7 @@ pub use policy::{GradStats, GrpoHp, Policy, TrainBatch};
 pub use pretrain::{pretrain, pretrain_session, PretrainConfig, PretrainLoop};
 pub use rollout::{Rollout, RolloutEngine};
 pub use sft::{sft_session, SftConfig, SftLoop};
+pub use sweep::{
+    sweep_population, sweep_scheme, sweep_scheme_full, HalvingConfig, PopulationOutcome,
+    SweepConfig, SweepOutcome,
+};

@@ -59,6 +59,16 @@ impl Adam {
     }
 
     /// One update step; returns the pre-clip grad norm.
+    ///
+    /// Weight decay is *decoupled* (AdamW): it is applied directly to the
+    /// parameters, scaled by the LR, and never enters the moments, the
+    /// clip scaling, or the returned norm. Semantics change (ISSUE 10
+    /// bugfix): decay used to be folded into the gradient AFTER clip
+    /// scaling — coupled L2 that silently bypassed `grad_clip`, polluted
+    /// `m`/`v`, and moved parameters without showing up in the logged
+    /// grad norm. With decay enabled the two formulations differ; all
+    /// in-repo trainers default `weight_decay` to 0, where they are
+    /// identical.
     pub fn step(&mut self, params: &mut [f32], grad: &[f32]) -> f32 {
         assert_eq!(params.len(), self.m.len());
         assert_eq!(grad.len(), params.len());
@@ -74,12 +84,13 @@ impl Adam {
         let bc1 = 1.0 - b1.powi(self.t as i32);
         let bc2 = 1.0 - b2.powi(self.t as i32);
         for i in 0..params.len() {
-            let g = grad[i] * scale + self.cfg.weight_decay * params[i];
+            let g = grad[i] * scale;
             self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
             self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
             let mhat = self.m[i] / bc1;
             let vhat = self.v[i] / bc2;
-            params[i] -= self.cfg.lr * mhat / (vhat.sqrt() + self.cfg.eps);
+            params[i] -= self.cfg.lr
+                * (mhat / (vhat.sqrt() + self.cfg.eps) + self.cfg.weight_decay * params[i]);
         }
         norm
     }
@@ -201,6 +212,42 @@ mod tests {
         assert_eq!(lr_at(1.0, 10, 9), 1.0);
         assert_eq!(lr_at(1.0, 10, 100), 1.0);
         assert_eq!(lr_at(1.0, 0, 0), 1.0);
+    }
+
+    /// Regression (ISSUE 10 satellite): decay alone must never inflate the
+    /// reported grad norm — the returned norm is a pure function of the
+    /// incoming gradient, with decay applied to the parameters outside it.
+    #[test]
+    fn weight_decay_never_inflates_reported_norm() {
+        let cfg = AdamConfig { lr: 0.1, weight_decay: 10.0, grad_clip: 1.0, ..Default::default() };
+        let grad = [3e-3f32, -4e-3];
+        let mut p = vec![100.0f32, -250.0];
+        let mut opt = Adam::new(2, cfg);
+        let norm = opt.step(&mut p, &grad);
+        // exact: norm(grad) only, no decay term (huge params would dwarf it)
+        let want =
+            (grad.iter().map(|g| (g * g) as f64).sum::<f64>()).sqrt() as f32;
+        assert_eq!(norm.to_bits(), want.to_bits());
+        // and a pure-decay step (zero grad) reports exactly zero norm
+        let mut opt0 = Adam::new(2, cfg);
+        let mut p0 = vec![100.0f32, -250.0];
+        assert_eq!(opt0.step(&mut p0, &[0.0, 0.0]), 0.0);
+    }
+
+    /// With zero gradient the moments stay zero, so k decoupled-decay
+    /// steps shrink each parameter by exactly (1 - lr*wd)^k — the moments
+    /// never see the decay term (they would otherwise bend this curve).
+    #[test]
+    fn weight_decay_is_decoupled_from_moments() {
+        let cfg = AdamConfig { lr: 0.1, weight_decay: 0.5, ..Default::default() };
+        let mut p = vec![8.0f32];
+        let mut opt = Adam::new(1, cfg);
+        let mut want = 8.0f32;
+        for _ in 0..6 {
+            opt.step(&mut p, &[0.0]);
+            want -= 0.1 * (0.5 * want);
+            assert_eq!(p[0].to_bits(), want.to_bits());
+        }
     }
 
     #[test]

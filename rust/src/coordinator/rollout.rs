@@ -125,7 +125,7 @@ mod tests {
                 }
             })
             .collect();
-        let roll = Rollout { rows, group: 2 };
+        let roll = Rollout { rows, group: 2, policy_version: 0 };
         let tb = build_train_batch(&pb, &roll, 64, 128);
         for i in 0..4 {
             let plen = pb.prompt_len.data[i] as usize;

@@ -25,7 +25,8 @@ use crate::engine::InferenceEngine;
 use crate::eval::{evaluate_with, EvalResult};
 use crate::metrics::RunLog;
 use crate::runtime::Runtime;
-use crate::trainer::{TenantSpec, TenantTrainer};
+use crate::trainer::pipeline::run_async;
+use crate::trainer::{PipelineConfig, PipelineStats, TenantSpec, TenantTrainer};
 use crate::util::json::{num, obj, s, Value};
 use crate::weights::WeightSet;
 
@@ -268,4 +269,275 @@ pub fn sweep_scheme_full(
         },
         best_merged,
     ))
+}
+
+/// Successive-halving schedule for population-scale sweeps.
+#[derive(Clone, Copy, Debug)]
+pub struct HalvingConfig {
+    /// number of rungs; every member trains `steps_per_rung` more steps
+    /// per rung it survives
+    pub rungs: usize,
+    pub steps_per_rung: usize,
+    /// survivor fraction per rung (ceil, never below 1)
+    pub keep: f32,
+    /// async-pipeline knobs the rungs train through
+    pub pipeline: PipelineConfig,
+}
+
+impl Default for HalvingConfig {
+    fn default() -> Self {
+        Self { rungs: 3, steps_per_rung: 4, keep: 0.5, pipeline: PipelineConfig::default() }
+    }
+}
+
+/// One population member's final standing.
+#[derive(Clone, Debug)]
+pub struct PopulationMember {
+    pub name: String,
+    pub lr: f32,
+    pub seed: u64,
+    /// optimizer steps actually applied before the member was frozen (or
+    /// finished)
+    pub steps: usize,
+    /// rungs survived (rungs trained = survived + 1, capped at `rungs`)
+    pub rungs_survived: usize,
+    /// tail-5 mean reward of the member's last trained rung
+    pub score: f32,
+}
+
+/// Per-rung accounting of one population sweep.
+#[derive(Clone, Debug)]
+pub struct RungSummary {
+    pub rung: usize,
+    /// members that trained this rung
+    pub active: usize,
+    /// members promoted to the next rung
+    pub survivors: usize,
+    /// mean score across the rung's active members
+    pub mean_score: f32,
+}
+
+/// What [`sweep_population`] produced. `to_json` is deterministic (no
+/// wall-clock fields) — asserted in `tests/e2e_sim.rs`.
+#[derive(Clone, Debug)]
+pub struct PopulationOutcome {
+    pub tier: String,
+    pub scheme_tag: String,
+    pub population: usize,
+    pub rungs: Vec<RungSummary>,
+    pub members: Vec<PopulationMember>,
+    /// index into `members` of the winner (highest final-rung score,
+    /// first index on ties)
+    pub best: usize,
+    /// pipeline counters summed over rungs (`mean_ratio` consumed-weighted;
+    /// `steps_per_s` from the last rung, excluded from `to_json`)
+    pub stats: PipelineStats,
+}
+
+impl PopulationOutcome {
+    pub fn to_json(&self) -> Value {
+        let b = &self.members[self.best];
+        obj(vec![
+            ("kind", s("population_sweep")),
+            ("tier", s(&self.tier)),
+            ("scheme", s(&self.scheme_tag)),
+            ("population", num(self.population as f64)),
+            (
+                "rungs",
+                Value::Arr(
+                    self.rungs
+                        .iter()
+                        .map(|r| {
+                            obj(vec![
+                                ("rung", num(r.rung as f64)),
+                                ("active", num(r.active as f64)),
+                                ("survivors", num(r.survivors as f64)),
+                                ("mean_score", num(r.mean_score as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "best",
+                obj(vec![
+                    ("name", s(&b.name)),
+                    ("lr", num(b.lr as f64)),
+                    ("seed", num(b.seed as f64)),
+                    ("steps", num(b.steps as f64)),
+                    ("score", num(b.score as f64)),
+                ]),
+            ),
+            ("produced", num(self.stats.produced as f64)),
+            ("consumed", num(self.stats.consumed as f64)),
+            ("dropped_stale", num(self.stats.dropped_stale as f64)),
+            ("max_version_gap", num(self.stats.max_version_gap as f64)),
+            ("mean_ratio", num(self.stats.mean_ratio)),
+        ])
+    }
+}
+
+/// Population-scale sweep: the whole lrs × seeds grid trains as ONE
+/// tenant set through the async pipeline, with successive-halving early
+/// stopping — every rung trains the surviving members `steps_per_rung`
+/// more optimizer steps, ranks them by tail-5 training reward (ties break
+/// toward the earlier grid index, so the ranking is fully deterministic),
+/// and freezes the rest. Frozen members simply keep their per-tenant
+/// target where it is: the pipeline's produce gate stops planning rollouts
+/// for them, so a 10× population costs ~`keep`× per extra rung instead of
+/// 10×. Ranking uses training reward, not eval accuracy — at thousands of
+/// members an eval per member per rung would dwarf the training itself;
+/// run `sweep_scheme_full` on the surviving handful when accuracy-based
+/// selection matters.
+pub fn sweep_population(
+    rt: &Runtime,
+    base: &WeightSet,
+    cfg: &SweepConfig,
+    hcfg: &HalvingConfig,
+    ckpt_dir: &Path,
+    log: &mut RunLog,
+) -> Result<PopulationOutcome> {
+    if cfg.lrs.is_empty() || cfg.seeds.is_empty() {
+        anyhow::bail!("population sweep needs at least one lr and one seed");
+    }
+    if hcfg.rungs == 0 || hcfg.steps_per_rung == 0 {
+        anyhow::bail!("population sweep needs rungs >= 1 and steps_per_rung >= 1");
+    }
+    if !(hcfg.keep > 0.0 && hcfg.keep <= 1.0) {
+        anyhow::bail!("population keep fraction must be in (0, 1]");
+    }
+    let batch = if cfg.batch > 0 { cfg.batch } else { rt.manifest.batch.roll };
+    let total_steps = hcfg.rungs * hcfg.steps_per_rung;
+    let mut specs = Vec::with_capacity(cfg.lrs.len() * cfg.seeds.len());
+    for &lr in &cfg.lrs {
+        for &seed in &cfg.seeds {
+            specs.push(TenantSpec {
+                name: format!("{}_lr{lr:.1e}_s{seed}", cfg.scheme_tag),
+                scheme_tag: cfg.scheme_tag.clone(),
+                cfg: GrpoConfig {
+                    suite: cfg.suite.clone(),
+                    steps: total_steps,
+                    lr,
+                    seed,
+                    ..Default::default()
+                },
+                precision: Precision::F32,
+            });
+        }
+    }
+    let g = specs.len();
+    let workers = cfg.workers.max(1);
+    let mut tt = TenantTrainer::with_batch(rt, base, specs, workers, ckpt_dir, batch)?;
+
+    let mut members: Vec<PopulationMember> = tt
+        .specs
+        .iter()
+        .map(|sp| PopulationMember {
+            name: sp.name.clone(),
+            lr: sp.cfg.lr,
+            seed: sp.cfg.seed,
+            steps: 0,
+            rungs_survived: 0,
+            score: f32::NEG_INFINITY,
+        })
+        .collect();
+    let mut active: Vec<usize> = (0..g).collect();
+    let mut targets = vec![0usize; g];
+    let mut rungs = Vec::with_capacity(hcfg.rungs);
+    let mut stats = PipelineStats::default();
+
+    for rung in 0..hcfg.rungs {
+        for &i in &active {
+            targets[i] += hcfg.steps_per_rung;
+        }
+        let out = run_async(rt, &mut tt, &hcfg.pipeline, &targets, log, workers > 1)?;
+        // deterministic merge of the rung's pipeline counters
+        let w_old = stats.consumed as f64;
+        let w_new = out.stats.consumed as f64;
+        if w_old + w_new > 0.0 {
+            stats.mean_ratio =
+                (stats.mean_ratio * w_old + out.stats.mean_ratio * w_new) / (w_old + w_new);
+            stats.frac_clipped = (stats.frac_clipped * w_old + out.stats.frac_clipped * w_new)
+                / (w_old + w_new);
+        }
+        stats.produced += out.stats.produced;
+        stats.consumed += out.stats.consumed;
+        stats.dropped_stale += out.stats.dropped_stale;
+        stats.max_version_gap = stats.max_version_gap.max(out.stats.max_version_gap);
+        stats.waves += out.stats.waves;
+        stats.steps_per_s = out.stats.steps_per_s;
+
+        // score active members on THIS rung's records (tail-5 mean reward)
+        for &i in &active {
+            let recs = &out.records[i];
+            let tail: Vec<_> = recs.iter().rev().take(5.min(recs.len())).collect();
+            let n = tail.len().max(1) as f32;
+            members[i].score = tail.iter().map(|r| r.reward).sum::<f32>() / n;
+            members[i].steps += recs.len();
+        }
+        let mean_score = if active.is_empty() {
+            0.0
+        } else {
+            active.iter().map(|&i| members[i].score).sum::<f32>() / active.len() as f32
+        };
+
+        // rank and halve (skip after the final rung — everyone finished)
+        let survivors = if rung + 1 < hcfg.rungs {
+            let mut ranked = active.clone();
+            ranked.sort_by(|&a, &b| {
+                members[b]
+                    .score
+                    .partial_cmp(&members[a].score)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            let keep = ((active.len() as f32 * hcfg.keep).ceil() as usize).max(1);
+            ranked.truncate(keep);
+            ranked.sort_unstable();
+            ranked
+        } else {
+            active.clone()
+        };
+        for &i in &survivors {
+            members[i].rungs_survived += 1;
+        }
+        rungs.push(RungSummary {
+            rung,
+            active: active.len(),
+            survivors: survivors.len(),
+            mean_score,
+        });
+        if log.echo {
+            println!(
+                "[population {} rung {rung}] active {} -> survivors {} mean score {mean_score:.3}",
+                cfg.scheme_tag,
+                active.len(),
+                survivors.len(),
+            );
+        }
+        active = survivors;
+    }
+
+    // winner: best final-rung score among the members that reached the
+    // last rung; ties break toward the earlier grid index
+    let best = active
+        .iter()
+        .copied()
+        .min_by(|&a, &b| {
+            members[b]
+                .score
+                .partial_cmp(&members[a].score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        })
+        .unwrap_or(0);
+    Ok(PopulationOutcome {
+        tier: tt.tier.clone(),
+        scheme_tag: cfg.scheme_tag.clone(),
+        population: g,
+        rungs,
+        members,
+        best,
+        stats,
+    })
 }

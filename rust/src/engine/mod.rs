@@ -121,6 +121,11 @@ pub struct GenRow {
 pub struct Generation {
     pub rows: Vec<GenRow>,
     pub group: usize,
+    /// Policy version of the weights these rows were sampled from (copied
+    /// from the producing `GenJob`; 0 for serving/eval decodes). Lets an
+    /// off-policy consumer compute the version gap — and so the staleness
+    /// rule and the importance correction — without extra bookkeeping.
+    pub policy_version: u64,
 }
 
 impl Generation {
@@ -352,7 +357,7 @@ impl InferenceEngine {
             });
         }
         self.stats.record(1, b as u64 - padded, padded, gen_ms);
-        Ok(Generation { rows, group: pb.group })
+        Ok(Generation { rows, group: pb.group, policy_version: 0 })
     }
 
     /// Group-structured decode for GRPO-style training: each problem is

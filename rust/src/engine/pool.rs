@@ -56,6 +56,11 @@ pub struct GenJob {
     /// per-job RNG seed (derive it from stable request data, NOT from a
     /// shared mutable counter, to keep parallel == serial)
     pub seed: u64,
+    /// Policy version of `weights` (number of optimizer steps applied to
+    /// the owning adapter when this job was planned). The async pipeline
+    /// reads it back at consume time to enforce its staleness bound;
+    /// serving/eval traffic leaves it at 0.
+    pub policy_version: u64,
 }
 
 pub struct GenJobResult {
@@ -235,6 +240,7 @@ mod tests {
                     pb: None,
                     temperature: 0.0,
                     seed: id,
+                    policy_version: 0,
                 })
                 .collect()
         };

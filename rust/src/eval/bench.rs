@@ -420,6 +420,7 @@ pub fn run_ladder_with(
                 pb: None,
                 temperature,
                 seed: job_seed(cfg.seed, bs.suite, ci),
+                policy_version: 0,
             });
             meta.push((si, job_problems));
         }

@@ -80,6 +80,11 @@ COMMANDS
               [--steps 40] [--lr 2e-3] [--workers 4] [--devices 1]
               [--precision bf16] [--suite gsm8k-syn] [--seed 0]
               [--max-resident 4] [--max-warm 32]
+              [--pipeline] [--staleness 0] [--optimizer-threads 1]
+              [--queue-cap 0]   (--pipeline = async off-policy trainer:
+              rollouts stream through bounded per-tenant replay queues;
+              --staleness S drops groups older than S versions; at S=0
+              byte-identical to the synchronous path)
   eval        --tier micro [--suite gsm8k-syn | --ladder] [--n 64]
   bench       --tier micro [--suites gsm8k-syn,math500-syn,amc-syn,aime-syn]
               [--k 4] [--n 0] [--workers 4] [--devices 1] [--temperature -1]
@@ -92,6 +97,11 @@ COMMANDS
               [--bench-k 0]   (--bench-k K benches base + the winning
               adapter on the ladder; shaped by --suites/--bench-n/
               --temperature)
+              [--population] [--rungs 3] [--steps-per-rung 4] [--keep 0.5]
+              [--staleness 0] [--optimizer-threads 1] [--queue-cap 0]
+              (--population = lrs x seeds grid as ONE tenant set through
+              the async pipeline with successive-halving early stopping;
+              deterministic JSON to results/population_<tier>_<scheme>.json)
   serve       --tier micro [--trace FILE] [--rate 40] [--requests 64]
               [--deadline-ms 400] [--slots 2] [--mode continuous|wave|both]
               [--tenants 16] [--burst 1] [--zipf 1.1] [--max-wait-ms 50]
@@ -344,7 +354,27 @@ fn cmd_tenants(args: &Args) -> Result<()> {
     );
     let mut tt = TenantTrainer::new(&rt, &base, specs, workers, &dirs.ckpts)?;
     let t0 = tinylora_rl::util::Timer::start();
-    let outcomes = tt.train(&rt, &mut log, workers > 1)?;
+    // --pipeline decouples rollout production from optimizer consumption
+    // behind bounded per-tenant replay queues (trainer::pipeline); at
+    // --staleness 0 it is byte-identical to the synchronous wave path
+    let pstats = if args.bool("pipeline") {
+        let pcfg = tinylora_rl::trainer::PipelineConfig {
+            max_staleness: args.u64("staleness", 0)?,
+            optimizer_threads: args.usize("optimizer-threads", 1)?,
+            queue_cap: args.usize("queue-cap", 0)?,
+        };
+        Some(pcfg)
+    } else {
+        None
+    };
+    let (outcomes, pipe) = match pstats {
+        Some(pcfg) => {
+            let (o, st) =
+                tinylora_rl::trainer::pipeline::train_async(&rt, &mut tt, &pcfg, &mut log, workers > 1)?;
+            (o, Some((pcfg, st)))
+        }
+        None => (tt.train(&rt, &mut log, workers > 1)?, None),
+    };
     let wall = t0.secs();
 
     let mut store = AdapterStore::with_tiers(
@@ -373,6 +403,21 @@ fn cmd_tenants(args: &Args) -> Result<()> {
         "engine: {} generate calls | {} rows (+{} padding) | {:.0} ms decode",
         es.batches, es.rows, es.padded_rows, es.gen_ms
     );
+    if let Some((pcfg, st)) = pipe {
+        println!(
+            "pipeline: S={} q={} opt={} | produced {} consumed {} dropped {} (gap {}) | ratio {:.4} clip {:.4} | {:.1} steps/s",
+            pcfg.max_staleness,
+            pcfg.window(),
+            pcfg.optimizer_threads.max(1),
+            st.produced,
+            st.consumed,
+            st.dropped_stale,
+            st.max_version_gap,
+            st.mean_ratio,
+            st.frac_clipped,
+            st.steps_per_s,
+        );
+    }
     print_context_stats(&rt);
     Ok(())
 }
@@ -540,6 +585,57 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         workers: args.usize("workers", 1)?,
         batch: args.usize("batch", 0)?,
     };
+    // --population: the whole lrs × seeds grid trains as one tenant set
+    // through the async pipeline with successive-halving early stopping —
+    // the losers freeze after each rung, so populations of thousands cost
+    // ~keep^rungs of the naive grid. Ranks by training reward (no per-rung
+    // evals); run a plain sweep on the survivors when accuracy matters.
+    if args.bool("population") {
+        use tinylora_rl::coordinator::sweep::{sweep_population, HalvingConfig};
+        let hcfg = HalvingConfig {
+            rungs: args.usize("rungs", 3)?.max(1),
+            steps_per_rung: args.usize("steps-per-rung", 4)?.max(1),
+            keep: args.f32("keep", 0.5)?,
+            pipeline: tinylora_rl::trainer::PipelineConfig {
+                max_staleness: args.u64("staleness", 0)?,
+                optimizer_threads: args.usize("optimizer-threads", 1)?,
+                queue_cap: args.usize("queue-cap", 0)?,
+            },
+        };
+        let mut log = RunLog::new(
+            Some(&dirs.results.join(format!("population_{tier}_{scheme}.jsonl"))),
+            args.bool("echo"),
+        );
+        let out = sweep_population(&rt, &base, &cfg, &hcfg, &dirs.ckpts, &mut log)?;
+        let best = &out.members[out.best];
+        println!(
+            "population {} of {} | {} rungs x {} steps | winner {} (lr {:.1e} seed {}) score {:.3}",
+            out.scheme_tag,
+            out.population,
+            hcfg.rungs,
+            hcfg.steps_per_rung,
+            best.name,
+            best.lr,
+            best.seed,
+            best.score,
+        );
+        for r in &out.rungs {
+            println!(
+                "  rung {}: {} active -> {} survivors | mean score {:.3}",
+                r.rung, r.active, r.survivors, r.mean_score
+            );
+        }
+        println!(
+            "  pipeline: produced {} consumed {} dropped {} | ratio {:.4}",
+            out.stats.produced, out.stats.consumed, out.stats.dropped_stale, out.stats.mean_ratio
+        );
+        let path = dirs.results.join(format!("population_{tier}_{scheme}.json"));
+        std::fs::write(&path, out.to_json().to_string() + "\n")?;
+        println!("saved {}", path.display());
+        print_context_stats(&rt);
+        return Ok(());
+    }
+
     // validate the post-training bench config BEFORE spending minutes on
     // the sweep: a k that doesn't divide the decode batch, or a typo'd
     // suite name, fails in ms here instead of after training

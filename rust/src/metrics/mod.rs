@@ -273,6 +273,50 @@ impl RunLog {
         ]));
     }
 
+    /// Async-pipeline run summary (`trainer::pipeline`): queue/staleness
+    /// accounting plus the aggregate importance-ratio health of the run.
+    /// Everything except `steps_per_s`/`wall_ms` is deterministic.
+    pub fn log_pipeline(
+        &mut self,
+        tier: &str,
+        tenants: usize,
+        staleness: u64,
+        queue_cap: usize,
+        optimizer_threads: usize,
+        st: &crate::trainer::PipelineStats,
+        wall_ms: f64,
+    ) {
+        if self.echo {
+            println!(
+                "[pipeline {tier} g={tenants} S={staleness} q={queue_cap} opt={optimizer_threads}] produced {} consumed {} dropped {} gap {} waves {} ratio {:.4} ({:.1} steps/s)",
+                st.produced,
+                st.consumed,
+                st.dropped_stale,
+                st.max_version_gap,
+                st.waves,
+                st.mean_ratio,
+                st.steps_per_s,
+            );
+        }
+        self.log(obj(vec![
+            ("kind", s("pipeline")),
+            ("tier", s(tier)),
+            ("tenants", num(tenants as f64)),
+            ("staleness", num(staleness as f64)),
+            ("queue_cap", num(queue_cap as f64)),
+            ("optimizer_threads", num(optimizer_threads as f64)),
+            ("produced", num(st.produced as f64)),
+            ("consumed", num(st.consumed as f64)),
+            ("dropped_stale", num(st.dropped_stale as f64)),
+            ("max_version_gap", num(st.max_version_gap as f64)),
+            ("waves", num(st.waves as f64)),
+            ("mean_ratio", num(st.mean_ratio)),
+            ("frac_clipped", num(st.frac_clipped)),
+            ("steps_per_s", num(st.steps_per_s)),
+            ("wall_ms", num(wall_ms)),
+        ]));
+    }
+
     pub fn log_eval(&mut self, tier: &str, scheme: &str, params: usize, suite: &str, acc: f32) {
         if self.echo {
             println!("[eval {tier}/{scheme} p={params}] {suite}: {acc:.3}");
@@ -332,10 +376,21 @@ mod tests {
                 hangs: 4,
             };
             log.log_supervisor("sim", &sv, 4, 3);
+            let ps = crate::trainer::PipelineStats {
+                produced: 120,
+                consumed: 100,
+                dropped_stale: 20,
+                max_version_gap: 2,
+                waves: 25,
+                mean_ratio: 1.0,
+                frac_clipped: 0.0,
+                steps_per_s: 80.0,
+            };
+            log.log_pipeline("sim", 10, 2, 4, 2, &ps, 1250.0);
         }
         let text = std::fs::read_to_string(&path).unwrap();
         let lines: Vec<_> = text.lines().collect();
-        assert_eq!(lines.len(), 5);
+        assert_eq!(lines.len(), 6);
         for l in &lines {
             let v = Value::parse(l).unwrap();
             assert!(v.get("kind").is_ok());
@@ -357,6 +412,13 @@ mod tests {
         assert_eq!(sv_row.get("quarantines").unwrap().usize().unwrap(), 1);
         assert_eq!(sv_row.get("deaths").unwrap().usize().unwrap(), 1);
         assert_eq!(sv_row.get("hangs").unwrap().usize().unwrap(), 4);
+        let pipe_row = Value::parse(lines[5]).unwrap();
+        assert_eq!(pipe_row.get("kind").unwrap().str().unwrap(), "pipeline");
+        assert_eq!(pipe_row.get("produced").unwrap().usize().unwrap(), 120);
+        assert_eq!(pipe_row.get("consumed").unwrap().usize().unwrap(), 100);
+        assert_eq!(pipe_row.get("dropped_stale").unwrap().usize().unwrap(), 20);
+        assert_eq!(pipe_row.get("max_version_gap").unwrap().usize().unwrap(), 2);
+        assert_eq!(pipe_row.get("mean_ratio").unwrap().f64().unwrap(), 1.0);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

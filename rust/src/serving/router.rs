@@ -253,6 +253,7 @@ impl Router {
                         // stable per-batch seed (greedy decode ignores it,
                         // but keep parallel == serial regardless)
                         seed: b.requests.first().map(|r| r.id).unwrap_or(0),
+                        policy_version: 0,
                     });
                 }
                 let results = pool.serve(rt, &self.engine, jobs);

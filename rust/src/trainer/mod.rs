@@ -22,6 +22,7 @@
 //! Ownership rule: the trainer owns *how* a step runs; loops own *what*
 //! the loss means.
 
+pub mod pipeline;
 pub mod session;
 pub mod state;
 pub mod tenant;
@@ -33,6 +34,7 @@ use crate::metrics::RunLog;
 use crate::runtime::Runtime;
 use crate::util::Pcg64;
 
+pub use pipeline::{PipelineConfig, PipelineOutcome, PipelineStats, ReplayQueue};
 pub use session::{SessionConfig, TrainSession};
 pub use state::{TrainState, TRAIN_STATE_VERSION};
 pub use tenant::{TenantOutcome, TenantSpec, TenantTrainer};

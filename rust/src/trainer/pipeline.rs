@@ -1,0 +1,565 @@
+//! Async off-policy GRPO pipeline (DESIGN.md §15): rollout production and
+//! optimizer consumption split around bounded per-tenant replay queues.
+//!
+//! The synchronous `TenantTrainer::step_wave` alternates rollout and
+//! optimize per wave. Here the two halves are decoupled: a produce phase
+//! plans rollouts for every tenant with queue room (up to its *window*,
+//! see below) and decodes them as ONE pooled wave, tagging each job with
+//! the tenant's policy version at plan time; a consume phase drains every
+//! queue through the tenants' sessions on `optimizer_threads` threads,
+//! enforcing the staleness bound and applying the gradient through the
+//! same `TrainSession::apply` skeleton as the synchronous path.
+//!
+//! Staleness rule: a trajectory produced at policy version `v` may be
+//! consumed at version `<= v + max_staleness`; anything older is dropped
+//! and counted (`PipelineStats::dropped_stale`), never trained on.
+//!
+//! Importance correction: the GRPO loss is already truncated importance
+//! sampling — the gradient executable weights each token by
+//! `min(exp(logp_now − logp_rollout), clip_c)`, with the behavior
+//! log-probs carried inside the rollout rows. The pipeline therefore
+//! needs no extra math at consume time, only the version bookkeeping that
+//! decides *whether* the correction is within the trust window. On the
+//! sim backend rollout log-probs equal trainer log-probs at equal
+//! weights, so at `max_staleness = 0` every computed ratio is exactly
+//! 1.0 — asserted bit-for-bit in `tests/e2e_sim.rs`.
+//!
+//! Determinism contract (the point of the design): with
+//! `max_staleness = 0` the window is 1, so each round degenerates to
+//! exactly one plan → decode → apply per tenant, in tenant order — the
+//! same call sequence as `step_wave`. Plans are always drawn on the
+//! coordinating thread in tenant order (session RNGs are sequential
+//! state), decode bytes are independent of job id and worker/device count
+//! (engine invariant, e2e-asserted), and consume-phase records are
+//! re-logged in tenant order regardless of how optimizer threads were
+//! scheduled. Hence the async pipeline at staleness 0 is byte-identical
+//! to the synchronous trainer — theta bits and RunLog rows (modulo wall
+//! times) — at ANY `optimizer_threads`/worker/device count.
+//!
+//! With `queue_cap > max_staleness + 1` the producer runs ahead of the
+//! consumer on purpose: each fill of the window yields `max_staleness + 1`
+//! consumable groups and deterministically drops the rest — the mode the
+//! staleness-accounting tests and the drop-rate column of
+//! `BENCH_pipeline.json` exercise.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::grpo::{RolloutPlan, StepRecord};
+use crate::engine::pool::GenJob;
+use crate::engine::Generation;
+use crate::metrics::RunLog;
+use crate::runtime::Runtime;
+use crate::trainer::{TenantOutcome, TenantTrainer};
+use crate::util::json::Value;
+use crate::util::Timer;
+
+/// Pipeline knobs (`tenants --pipeline` flags).
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    /// Max allowed version gap S: consume at version `<= produced + S`.
+    pub max_staleness: u64,
+    /// Threads draining the per-tenant queues (grad + optimizer step).
+    pub optimizer_threads: usize,
+    /// Per-tenant replay-queue capacity; 0 = `max_staleness + 1`, the
+    /// largest window that can never produce a stale drop fault-free.
+    /// Larger values deliberately overproduce (see module docs).
+    pub queue_cap: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self { max_staleness: 0, optimizer_threads: 1, queue_cap: 0 }
+    }
+}
+
+impl PipelineConfig {
+    /// Effective per-tenant producer window.
+    pub fn window(&self) -> usize {
+        if self.queue_cap == 0 {
+            (self.max_staleness as usize).saturating_add(1)
+        } else {
+            self.queue_cap
+        }
+    }
+}
+
+/// Bounded FIFO of version-tagged items — the per-tenant replay queue.
+/// Backpressure by rejection: a full queue returns the item to the
+/// producer instead of overwriting unconsumed work.
+pub struct ReplayQueue<T> {
+    cap: usize,
+    items: VecDeque<(u64, T)>,
+}
+
+impl<T> ReplayQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        Self { cap: cap.max(1), items: VecDeque::new() }
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Push a group produced at `version`. Full queue ⇒ `Err(item)` — the
+    /// producer keeps it; nothing queued is ever overwritten.
+    pub fn push(&mut self, version: u64, item: T) -> std::result::Result<(), T> {
+        if self.items.len() >= self.cap {
+            return Err(item);
+        }
+        self.items.push_back((version, item));
+        Ok(())
+    }
+
+    /// Pop the next group fresh enough to train on at `version`: leading
+    /// entries with `version - produced > max_staleness` are dropped (and
+    /// counted in the returned tally); the first fresh entry comes back
+    /// with its production version. FIFO among survivors.
+    pub fn pop_fresh(
+        &mut self,
+        version: u64,
+        max_staleness: u64,
+    ) -> (Option<(u64, T)>, u64) {
+        let mut dropped = 0u64;
+        while let Some(&(v, _)) = self.items.front() {
+            if version.saturating_sub(v) > max_staleness {
+                self.items.pop_front();
+                dropped += 1;
+            } else {
+                return (self.items.pop_front(), dropped);
+            }
+        }
+        (None, dropped)
+    }
+}
+
+/// One queued trajectory group: the plan it came from, the decoded
+/// rollout (version-tagged), and its share of the decode wave's wall time.
+pub struct ReplayItem {
+    pub plan: RolloutPlan,
+    pub gen: Generation,
+    pub rollout_ms: f64,
+}
+
+/// Pipeline-level counters for one `run_async` call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PipelineStats {
+    /// trajectory groups decoded and queued
+    pub produced: u64,
+    /// groups trained on (== total optimizer steps applied)
+    pub consumed: u64,
+    /// groups dropped by the staleness rule (never trained on)
+    pub dropped_stale: u64,
+    /// largest consume-time version gap among CONSUMED groups
+    pub max_version_gap: u64,
+    /// pooled decode waves dispatched
+    pub waves: u64,
+    /// mean of the per-step mean importance ratios (exactly 1.0 on sim at
+    /// staleness 0 — asserted in e2e)
+    pub mean_ratio: f64,
+    /// mean of the per-step clipped-token fractions
+    pub frac_clipped: f64,
+    /// consumed steps per wall second
+    pub steps_per_s: f64,
+}
+
+/// What one pipeline run produced: per-tenant step records (tenant order)
+/// plus the pipeline counters.
+pub struct PipelineOutcome {
+    pub records: Vec<Vec<StepRecord>>,
+    pub stats: PipelineStats,
+}
+
+/// Per-tenant result of one consume phase (scratch-logged rows are
+/// re-logged by the coordinator in tenant order).
+#[derive(Default)]
+struct TenantConsume {
+    records: Vec<StepRecord>,
+    rows: Vec<Value>,
+    consumed: u64,
+    dropped: u64,
+    max_gap: u64,
+}
+
+/// Drain one chunk of tenants: pop fresh groups FIFO, compute the grad
+/// (`GrpoLoop::finish`), and apply it through the session skeleton. Runs
+/// on an optimizer thread; rows land in a scratch log so the coordinator
+/// can serialize them deterministically.
+fn consume_chunk(
+    rt: &Runtime,
+    sessions: &mut [crate::trainer::TrainSession<crate::coordinator::grpo::GrpoLoop>],
+    queues: &mut [ReplayQueue<ReplayItem>],
+    cfg: &PipelineConfig,
+) -> Result<Vec<TenantConsume>> {
+    let mut out = Vec::with_capacity(sessions.len());
+    for (sess, q) in sessions.iter_mut().zip(queues.iter_mut()) {
+        let mut tc = TenantConsume::default();
+        let mut scratch = RunLog::null();
+        loop {
+            let version = sess.completed_steps() as u64;
+            let (item, dropped) = q.pop_fresh(version, cfg.max_staleness);
+            tc.dropped += dropped;
+            let Some((produced_at, item)) = item else { break };
+            debug_assert_eq!(produced_at, item.gen.policy_version);
+            tc.max_gap = tc.max_gap.max(version - produced_at);
+            let grad = sess.lp.finish(rt, &item.plan, &item.gen, item.rollout_ms)?;
+            tc.records.push(sess.apply(rt, grad, &mut scratch)?);
+            tc.consumed += 1;
+        }
+        tc.rows = std::mem::take(&mut scratch.rows);
+        out.push(tc);
+    }
+    Ok(out)
+}
+
+/// Run the async pipeline until every tenant has applied `targets[i]`
+/// optimizer steps (a tenant already at or past its target produces
+/// nothing — that's how successive halving freezes losers). Returns the
+/// per-tenant records and the pipeline counters, and logs one `pipeline`
+/// JSONL row.
+pub fn run_async(
+    rt: &Runtime,
+    tt: &mut TenantTrainer,
+    cfg: &PipelineConfig,
+    targets: &[usize],
+    log: &mut RunLog,
+    parallel: bool,
+) -> Result<PipelineOutcome> {
+    let g = tt.sessions.len();
+    if targets.len() != g {
+        bail!("pipeline targets: {} entries for {} tenants", targets.len(), g);
+    }
+    let window = cfg.window();
+    let t0 = Timer::start();
+    let mut queues: Vec<ReplayQueue<ReplayItem>> =
+        (0..g).map(|_| ReplayQueue::new(window)).collect();
+    let mut records: Vec<Vec<StepRecord>> = vec![Vec::new(); g];
+    let mut stats = PipelineStats::default();
+
+    loop {
+        let done = tt
+            .sessions
+            .iter()
+            .zip(targets)
+            .all(|(sess, &t)| sess.completed_steps() >= t);
+        if done {
+            break;
+        }
+
+        // ---- produce: plans are drawn HERE, on the coordinating thread,
+        // in tenant order (session RNGs are sequential state) — each
+        // tenant fills its window, gated so in-flight + applied never
+        // exceeds its target
+        let mut jobs: Vec<GenJob> = Vec::new();
+        let mut meta: Vec<(usize, RolloutPlan, u64)> = Vec::new();
+        for (i, sess) in tt.sessions.iter_mut().enumerate() {
+            let version = sess.completed_steps() as u64;
+            while queues[i].len() + (jobs_for(&meta, i)) < window
+                && sess.completed_steps() + queues[i].len() + jobs_for(&meta, i) < targets[i]
+            {
+                let plan = sess.lp.plan(&mut sess.rng);
+                jobs.push(GenJob {
+                    id: jobs.len() as u64,
+                    weights: sess.lp.policy.merged.clone(),
+                    problems: Vec::new(),
+                    group: sess.lp.cfg.group,
+                    pb: Some(plan.pb.clone()),
+                    temperature: sess.lp.cfg.temperature,
+                    seed: plan.seed,
+                    policy_version: version,
+                });
+                meta.push((i, plan, version));
+            }
+        }
+        if jobs.is_empty() {
+            // every unfinished tenant has a full queue; consume below
+            if queues.iter().all(|q| q.is_empty()) {
+                bail!("pipeline stalled: no jobs to produce and nothing queued");
+            }
+        } else {
+            let n_jobs = jobs.len();
+            let tw = Timer::start();
+            let results = tt.pool.serve_maybe(rt, &tt.engine, jobs, parallel)?;
+            let per_job_ms = tw.millis() / n_jobs as f64;
+            stats.waves += 1;
+            // results come back sorted by id == production order == meta order
+            for (res, (i, plan, version)) in results.into_iter().zip(meta) {
+                let gen = Generation {
+                    rows: res.rows,
+                    group: tt.sessions[i].lp.cfg.group,
+                    policy_version: version,
+                };
+                let item = ReplayItem { plan, gen, rollout_ms: per_job_ms };
+                if queues[i].push(version, item).is_err() {
+                    // can't happen: production was gated on queue room
+                    bail!("pipeline invariant: queue {i} overflowed its window");
+                }
+                stats.produced += 1;
+            }
+        }
+
+        // ---- consume: optimizer threads drain static tenant chunks; the
+        // partition (and therefore every session's step sequence) is a
+        // pure function of (g, optimizer_threads), never of scheduling
+        let threads = cfg.optimizer_threads.max(1).min(g);
+        let chunk = g.div_ceil(threads);
+        let consumed: Vec<Result<Vec<TenantConsume>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = tt
+                .sessions
+                .chunks_mut(chunk)
+                .zip(queues.chunks_mut(chunk))
+                .map(|(sc, qc)| s.spawn(move || consume_chunk(rt, sc, qc, cfg)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("optimizer thread panicked"))
+                .collect()
+        });
+        let mut i = 0usize;
+        for chunk_res in consumed {
+            for tc in chunk_res.with_context(|| "pipeline consume phase")? {
+                stats.consumed += tc.consumed;
+                stats.dropped_stale += tc.dropped;
+                stats.max_version_gap = stats.max_version_gap.max(tc.max_gap);
+                for row in tc.rows {
+                    log.log(row);
+                }
+                records[i].extend(tc.records);
+                i += 1;
+            }
+        }
+    }
+
+    let wall = t0.secs();
+    let all: Vec<&StepRecord> = records.iter().flatten().collect();
+    let n = all.len().max(1) as f64;
+    stats.mean_ratio = all.iter().map(|r| r.stats.mean_ratio as f64).sum::<f64>() / n;
+    stats.frac_clipped = all.iter().map(|r| r.stats.frac_clipped as f64).sum::<f64>() / n;
+    stats.steps_per_s = if wall > 0.0 { stats.consumed as f64 / wall } else { 0.0 };
+    log.log_pipeline(
+        &tt.tier,
+        g,
+        cfg.max_staleness,
+        window,
+        cfg.optimizer_threads.max(1),
+        &stats,
+        wall * 1e3,
+    );
+    Ok(PipelineOutcome { records, stats })
+}
+
+/// Jobs already planned for tenant `i` in the current produce phase.
+fn jobs_for(meta: &[(usize, RolloutPlan, u64)], i: usize) -> usize {
+    meta.iter().filter(|(t, _, _)| *t == i).count()
+}
+
+/// [`TenantTrainer::train`], pipelined: every tenant runs to its
+/// configured step count through the async pipeline, with the same
+/// tail-5 outcome aggregation as the synchronous path.
+pub fn train_async(
+    rt: &Runtime,
+    tt: &mut TenantTrainer,
+    cfg: &PipelineConfig,
+    log: &mut RunLog,
+    parallel: bool,
+) -> Result<(Vec<TenantOutcome>, PipelineStats)> {
+    let targets: Vec<usize> = tt.sessions.iter().map(|s| s.cfg.steps).collect();
+    let out = run_async(rt, tt, cfg, &targets, log, parallel)?;
+    let outcomes = tt
+        .specs
+        .iter()
+        .zip(&tt.sessions)
+        .zip(out.records)
+        .map(|((spec, sess), steps)| {
+            let tail: Vec<&StepRecord> = steps.iter().rev().take(5.min(steps.len())).collect();
+            let n = tail.len().max(1) as f32;
+            TenantOutcome {
+                name: spec.name.clone(),
+                scheme_tag: spec.scheme_tag.clone(),
+                lr: spec.cfg.lr,
+                seed: spec.cfg.seed,
+                trainable_params: sess.lp.policy.trainable_params(),
+                final_reward: tail.iter().map(|r| r.reward).sum::<f32>() / n,
+                final_format_rate: tail.iter().map(|r| r.format_rate).sum::<f32>() / n,
+                steps,
+            }
+        })
+        .collect();
+    Ok((outcomes, out.stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::scheduler::{AdapterBatch, QueuedRequest, SchedPolicy, Scheduler};
+    use crate::testing::check;
+
+    #[test]
+    fn window_is_staleness_plus_one_by_default() {
+        let cfg = PipelineConfig::default();
+        assert_eq!(cfg.window(), 1);
+        let cfg = PipelineConfig { max_staleness: 3, ..Default::default() };
+        assert_eq!(cfg.window(), 4);
+        let cfg = PipelineConfig { max_staleness: 0, queue_cap: 5, ..Default::default() };
+        assert_eq!(cfg.window(), 5);
+    }
+
+    /// Property (ISSUE 10 satellite): bounded-queue backpressure — a full
+    /// queue rejects the push and hands the item back; nothing already
+    /// queued is ever overwritten or reordered.
+    #[test]
+    fn replay_queue_backpressure_never_overwrites() {
+        check("replay queue backpressure", 200, |rng| {
+            let cap = rng.range_i64(1, 6) as usize;
+            let mut q: ReplayQueue<u64> = ReplayQueue::new(cap);
+            let mut expect: Vec<u64> = Vec::new();
+            for k in 0..(rng.range_i64(1, 20) as u64) {
+                match q.push(0, k) {
+                    Ok(()) => expect.push(k),
+                    Err(item) => {
+                        if item != k {
+                            return Err(format!("rejected item mangled: {item} != {k}"));
+                        }
+                        if expect.len() != cap {
+                            return Err(format!(
+                                "rejected below cap: len {} cap {cap}",
+                                expect.len()
+                            ));
+                        }
+                    }
+                }
+                if q.len() > cap {
+                    return Err(format!("queue over cap: {} > {cap}", q.len()));
+                }
+            }
+            // drain: FIFO, exactly the accepted items
+            let mut got = Vec::new();
+            while let (Some((_, item)), 0) = q.pop_fresh(0, u64::MAX) {
+                got.push(item);
+            }
+            if got != expect {
+                return Err(format!("drain {got:?} != accepted {expect:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// Property (ISSUE 10 satellite): staleness-drop exactness — an item
+    /// produced at version v is dropped iff `consume_version - v > S`,
+    /// and survivors come out in FIFO order.
+    #[test]
+    fn staleness_drop_is_exact() {
+        check("staleness drop exactness", 300, |rng| {
+            let s = rng.range_i64(0, 4) as u64;
+            let n = rng.range_i64(1, 12) as usize;
+            // non-decreasing production versions, like a real queue
+            let mut versions = Vec::with_capacity(n);
+            let mut v = 0u64;
+            for _ in 0..n {
+                v += rng.range_i64(0, 3) as u64;
+                versions.push(v);
+            }
+            let consume_v = v + rng.range_i64(0, 6) as u64;
+            let mut q: ReplayQueue<usize> = ReplayQueue::new(n);
+            for (k, &ver) in versions.iter().enumerate() {
+                q.push(ver, k).map_err(|_| "push rejected below cap".to_string())?;
+            }
+            let mut survivors = Vec::new();
+            let mut dropped = 0u64;
+            loop {
+                let (item, d) = q.pop_fresh(consume_v, s);
+                dropped += d;
+                match item {
+                    Some((ver, k)) => survivors.push((ver, k)),
+                    None => break,
+                }
+            }
+            let want: Vec<(u64, usize)> = versions
+                .iter()
+                .enumerate()
+                .filter(|(_, &ver)| consume_v - ver <= s)
+                .map(|(k, &ver)| (ver, k))
+                .collect();
+            let want_dropped = (n - want.len()) as u64;
+            if survivors != want {
+                return Err(format!("survivors {survivors:?} != {want:?} (S={s})"));
+            }
+            if dropped != want_dropped {
+                return Err(format!("dropped {dropped} != {want_dropped}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// Property (ISSUE 10 satellite): FIFO-per-tenant consume order
+    /// composes with PR 9's `Scheduler::requeue` — a batch bounced back by
+    /// a lost context re-enters at the queue FRONT, so groups flow into
+    /// the replay queue (and out of it) in original per-tenant submit
+    /// order even across a requeue.
+    #[test]
+    fn replay_fifo_composes_with_scheduler_requeue() {
+        check("replay FIFO x requeue", 100, |rng| {
+            let tenants = rng.range_i64(1, 4) as usize;
+            let per = rng.range_i64(2, 6) as usize;
+            let mut sched = Scheduler::new(2, 0.0, SchedPolicy::RoundRobin);
+            for k in 0..per {
+                for t in 0..tenants {
+                    sched.push(QueuedRequest {
+                        id: (k * tenants + t) as u64,
+                        adapter: format!("tenant-{t}"),
+                        prompt: String::new(),
+                        arrival: k as f64,
+                    });
+                }
+            }
+            // drain through next_batch, bouncing a random batch once via
+            // requeue (a simulated context loss mid-wave)
+            let bounce_at = rng.range_i64(0, 3) as usize;
+            let mut bounced = false;
+            let mut queues: Vec<ReplayQueue<u64>> =
+                (0..tenants).map(|_| ReplayQueue::new(per)).collect();
+            let mut waves = 0usize;
+            while let Some(batch) = sched.next_batch(1e9) {
+                if !bounced && waves == bounce_at {
+                    bounced = true;
+                    waves += 1;
+                    sched.requeue(AdapterBatch {
+                        adapter: batch.adapter.clone(),
+                        requests: batch.requests.clone(),
+                    });
+                    continue;
+                }
+                waves += 1;
+                let t: usize =
+                    batch.adapter.trim_start_matches("tenant-").parse().unwrap();
+                for req in batch.requests {
+                    queues[t]
+                        .push(0, req.id)
+                        .map_err(|_| "replay queue overflow".to_string())?;
+                }
+            }
+            // per tenant, consumed ids must be the original submit order
+            for (t, q) in queues.iter_mut().enumerate() {
+                let mut got = Vec::new();
+                while let (Some((_, id)), 0) = q.pop_fresh(0, u64::MAX) {
+                    got.push(id);
+                }
+                let want: Vec<u64> =
+                    (0..per).map(|k| (k * tenants + t) as u64).collect();
+                if got != want {
+                    return Err(format!("tenant {t}: {got:?} != {want:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -84,10 +84,10 @@ pub struct TenantTrainer {
     pub tier: String,
     /// Shared decode engine for the pooled rollout waves (same executable
     /// geometry as every tenant's in-loop engine).
-    engine: InferenceEngine,
-    pool: WorkerPool,
+    pub(crate) engine: InferenceEngine,
+    pub(crate) pool: WorkerPool,
     pub sessions: Vec<TrainSession<GrpoLoop>>,
-    specs: Vec<TenantSpec>,
+    pub(crate) specs: Vec<TenantSpec>,
 }
 
 impl TenantTrainer {
@@ -183,6 +183,7 @@ impl TenantTrainer {
                 pb: Some(plan.pb.clone()),
                 temperature: sess.lp.cfg.temperature,
                 seed: plan.seed,
+                policy_version: sess.completed_steps() as u64,
             });
             plans.push(plan);
         }
@@ -193,8 +194,12 @@ impl TenantTrainer {
         let per_tenant_ms = wave_ms / g as f64;
         let mut records = Vec::with_capacity(g);
         for ((sess, plan), res) in self.sessions.iter_mut().zip(&plans).zip(results) {
-            let roll =
-                crate::engine::Generation { rows: res.rows, group: sess.lp.cfg.group };
+            // synchronous consume: the rollout is always exactly on-policy
+            let roll = crate::engine::Generation {
+                rows: res.rows,
+                group: sess.lp.cfg.group,
+                policy_version: sess.completed_steps() as u64,
+            };
             let out = sess.lp.finish(rt, plan, &roll, per_tenant_ms)?;
             records.push(sess.apply(rt, out, log)?);
         }

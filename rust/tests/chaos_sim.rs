@@ -30,7 +30,8 @@ use tinylora_rl::runtime::{
 use tinylora_rl::serving::{AdapterStore, ArrivalTrace, Frontend, FrontendConfig, SchedPolicy, TraceConfig};
 use tinylora_rl::tasks::generator::SUITES;
 use tinylora_rl::tokenizer::Tokenizer;
-use tinylora_rl::trainer::{TenantSpec, TenantTrainer};
+use tinylora_rl::trainer::pipeline::train_async;
+use tinylora_rl::trainer::{PipelineConfig, TenantSpec, TenantTrainer};
 use tinylora_rl::util::json::Value;
 use tinylora_rl::util::Pcg64;
 use tinylora_rl::weights::WeightSet;
@@ -65,6 +66,7 @@ fn mixed_jobs(rt: &Runtime) -> Vec<GenJob> {
                 pb: None,
                 temperature: 1.0,
                 seed: 70 + id,
+                policy_version: 0,
             }
         })
         .collect()
@@ -191,6 +193,89 @@ fn grpo_theta_is_bit_identical_under_context_death_at_d_2_4() {
         let sv = rt.supervisor().stats();
         assert!(sv.deaths >= 1, "D={d}: faults never fired: {sv:?}");
         assert!(sv.requeues >= 1, "D={d}: no training work was re-pinned: {sv:?}");
+    }
+}
+
+/// ISSUE 10 acceptance, chaos leg: the async pipeline's staleness-0
+/// identity survives mid-pipeline context death. Every non-zero context
+/// dies after one execute while `train_async` streams rollout waves at
+/// D ∈ {2, 4} — the supervised dispatch requeues the lost decodes onto
+/// survivors, so the pipeline still lands on adapter theta bit-identical
+/// to the fault-free synchronous run, with exact staleness accounting
+/// (nothing produced is lost to the fault, nothing is dropped as stale)
+/// and the death/requeue counters proving the chaos actually fired.
+#[test]
+fn pipeline_staleness_zero_identity_survives_context_death_at_d_2_4() {
+    let specs = || -> Vec<TenantSpec> {
+        (0..3u64)
+            .map(|i| TenantSpec {
+                name: format!("tenant-{i}"),
+                scheme_tag: SIM_SCHEME.into(),
+                cfg: GrpoConfig {
+                    group: 2,
+                    steps: 3,
+                    lr: 2e-3 + i as f32 * 1e-3,
+                    warmup: 2,
+                    seed: 40 + i,
+                    ..Default::default()
+                },
+                precision: Precision::Bf16,
+            })
+            .collect()
+    };
+    let theta_bits = |tt: &TenantTrainer| -> Vec<Vec<u32>> {
+        tt.sessions
+            .iter()
+            .map(|s| s.lp.policy.theta.iter().map(|x| x.to_bits()).collect())
+            .collect()
+    };
+
+    // fault-free synchronous reference
+    let rt_ref = Runtime::sim(1).unwrap();
+    let mut tt_ref = TenantTrainer::with_batch(
+        &rt_ref,
+        &base_weights(&rt_ref, 3),
+        specs(),
+        2,
+        &scratch("pipe_chaos"),
+        rt_ref.manifest.batch.test,
+    )
+    .unwrap();
+    tt_ref.train(&rt_ref, &mut RunLog::null(), true).unwrap();
+    let clean = theta_bits(&tt_ref);
+
+    for d in [2usize, 4] {
+        let opts = SimOptions {
+            die_after_execs: (1..d).map(|c| (c, 1u64)).collect(),
+            ..Default::default()
+        };
+        let rt = Runtime::sim_with(d, opts).unwrap();
+        let mut tt = TenantTrainer::with_batch(
+            &rt,
+            &base_weights(&rt, 3),
+            specs(),
+            2,
+            &scratch("pipe_chaos"),
+            rt.manifest.batch.test,
+        )
+        .unwrap();
+        let pcfg = PipelineConfig { max_staleness: 0, optimizer_threads: 2, queue_cap: 0 };
+        let (_, stats) = train_async(&rt, &mut tt, &pcfg, &mut RunLog::null(), true).unwrap();
+        assert_eq!(
+            theta_bits(&tt),
+            clean,
+            "D={d}: pipeline theta diverged when training survived context death"
+        );
+        // the staleness ledger is untouched by the fault: a requeued decode
+        // re-executes at the SAME policy version, so nothing ages out
+        assert_eq!(
+            (stats.produced, stats.consumed, stats.dropped_stale, stats.max_version_gap),
+            (9, 9, 0, 0),
+            "D={d}: context death leaked into the staleness accounting"
+        );
+        let sv = rt.supervisor().stats();
+        assert!(sv.deaths >= 1, "D={d}: faults never fired: {sv:?}");
+        assert!(sv.requeues >= 1, "D={d}: no pipeline work was re-pinned: {sv:?}");
     }
 }
 

@@ -23,8 +23,11 @@ use std::collections::HashSet;
 
 use tinylora_rl::adapters::packing::Precision;
 use tinylora_rl::coordinator::grpo::{grpo_session, grpo_session_cfg, GrpoConfig, GrpoLoop};
+use tinylora_rl::coordinator::optimizer::lr_at;
 use tinylora_rl::coordinator::policy::Policy;
 use tinylora_rl::coordinator::pretrain::{pretrain, PretrainConfig};
+use tinylora_rl::coordinator::{sweep_population, HalvingConfig, SweepConfig};
+use tinylora_rl::experiments::{rl_vs_sft_budget, BudgetConfig};
 use tinylora_rl::engine::pool::{GenJob, WorkerPool};
 use tinylora_rl::engine::scheduler::{QueuedRequest, SchedPolicy, Scheduler};
 use tinylora_rl::engine::InferenceEngine;
@@ -38,7 +41,8 @@ use tinylora_rl::serving::{
 };
 use tinylora_rl::util::json::Value;
 use tinylora_rl::tasks::generator::{Problem, SUITES};
-use tinylora_rl::trainer::{TenantSpec, TenantTrainer, TrainSession, TrainState};
+use tinylora_rl::trainer::pipeline::train_async;
+use tinylora_rl::trainer::{PipelineConfig, TenantSpec, TenantTrainer, TrainSession, TrainState};
 use tinylora_rl::util::Pcg64;
 use tinylora_rl::weights::WeightSet;
 use tinylora_rl::Runtime;
@@ -72,6 +76,7 @@ fn mixed_jobs(rt: &Runtime) -> Vec<GenJob> {
                 pb: None,
                 temperature: 1.0,
                 seed: 70 + id,
+                policy_version: 0,
             }
         })
         .collect()
@@ -424,6 +429,7 @@ fn scheduler_policies_drive_live_worker_pool() {
                     pb: None,
                     temperature: 0.0,
                     seed: batch.requests[0].id,
+                    policy_version: 0,
                 })
                 .collect();
             let results = pool.serve(&rt, &engine, jobs).unwrap();
@@ -501,6 +507,7 @@ fn starved_adapter_is_served_through_live_pool_under_fair_policies() {
                         pb: None,
                         temperature: 0.0,
                         seed: k as u64,
+                        policy_version: 0,
                     })
                     .collect();
                 pool.serve(&rt, &engine, jobs).unwrap();
@@ -1026,5 +1033,363 @@ fn tiered_store_serves_large_population_byte_identical_to_oracle() {
     assert!(
         tiered_runs.windows(2).all(|w| w[0] == w[1]),
         "tiered serving diverged across device/row-worker/parallelism configs"
+    );
+}
+
+/// Shared tenant grid for the async-pipeline determinism tests.
+fn pipeline_specs(n: u64) -> Vec<TenantSpec> {
+    (0..n)
+        .map(|i| TenantSpec {
+            name: format!("pipe-{i}"),
+            scheme_tag: SIM_SCHEME.into(),
+            cfg: GrpoConfig {
+                group: 2,
+                steps: 3,
+                lr: 2e-3 + i as f32 * 5e-4,
+                warmup: 2,
+                seed: 60 + i,
+                ..Default::default()
+            },
+            precision: Precision::Bf16,
+        })
+        .collect()
+}
+
+/// Every StepRecord field except the two wall-clock ones, as bit patterns.
+fn record_bits(r: &tinylora_rl::coordinator::grpo::StepRecord) -> Vec<u32> {
+    vec![
+        r.step as u32,
+        r.reward.to_bits(),
+        r.response_len.to_bits(),
+        r.format_rate.to_bits(),
+        r.eos_rate.to_bits(),
+        r.lr.to_bits(),
+        r.stats.loss.to_bits(),
+        r.stats.aux1.to_bits(),
+        r.stats.kl_k1.to_bits(),
+        r.stats.kl_k3.to_bits(),
+        r.stats.mean_ratio.to_bits(),
+        r.stats.frac_clipped.to_bits(),
+        r.stats.entropy.to_bits(),
+        r.stats.mean_logp.to_bits(),
+        r.stats.grad_norm.to_bits(),
+    ]
+}
+
+/// JSONL rows with the wall-time fields stripped and the pipeline summary
+/// row removed — "RunLog modulo wall times", the byte-identity currency
+/// of the pipeline determinism contract.
+fn rows_modulo_wall(rows: Vec<Value>) -> Vec<Value> {
+    rows.into_iter()
+        .filter(|r| r.get("kind").unwrap().str().unwrap() != "pipeline")
+        .map(|mut r| {
+            if let Value::Obj(m) = &mut r {
+                for key in ["rollout_ms", "grad_ms", "wall_ms", "steps_per_s"] {
+                    m.remove(key);
+                }
+            }
+            r
+        })
+        .collect()
+}
+
+/// ISSUE 10 acceptance, determinism leg: at `max_staleness = 0` the async
+/// pipeline is byte-identical to the synchronous `TenantTrainer` — final
+/// theta bits, every StepRecord field, and the RunLog rows modulo wall
+/// times — at every (devices, workers, optimizer_threads) combination.
+/// Along the way every importance ratio is exactly 1.0 and nothing is
+/// ever clipped: at staleness 0 the behavior policy IS the current
+/// policy, and the sim guarantees rollout log-probs equal trainer
+/// log-probs bit for bit.
+#[test]
+fn pipeline_staleness_zero_is_byte_identical_to_sync_trainer() {
+    const TENANTS: u64 = 4;
+    const STEPS: u64 = 3;
+    let rt_ref = Runtime::sim(1).unwrap();
+    let b = rt_ref.manifest.batch.test;
+    let ckpt = scratch("pipeline_sync");
+    let mut tt_ref =
+        TenantTrainer::with_batch(&rt_ref, &base_weights(&rt_ref, 3), pipeline_specs(TENANTS), 2, &ckpt, b)
+            .unwrap();
+    let mut log_ref = RunLog::null();
+    let ref_out = tt_ref.train(&rt_ref, &mut log_ref, true).unwrap();
+    let ref_theta: Vec<Vec<u32>> = tt_ref
+        .sessions
+        .iter()
+        .map(|s| s.lp.policy.theta.iter().map(|x| x.to_bits()).collect())
+        .collect();
+    let ref_rows = rows_modulo_wall(log_ref.rows);
+    assert_eq!(ref_rows.len(), (TENANTS * STEPS) as usize);
+
+    for (devices, workers, opt_threads) in [(1usize, 1usize, 1usize), (2, 4, 2), (2, 3, 8), (1, 2, 3)] {
+        let rt = Runtime::sim(devices).unwrap();
+        let mut tt =
+            TenantTrainer::with_batch(&rt, &base_weights(&rt, 3), pipeline_specs(TENANTS), workers, &ckpt, b)
+                .unwrap();
+        let mut log = RunLog::null();
+        let pcfg =
+            PipelineConfig { max_staleness: 0, optimizer_threads: opt_threads, queue_cap: 0 };
+        let (outcomes, stats) = train_async(&rt, &mut tt, &pcfg, &mut log, true).unwrap();
+        let tag = format!("D={devices} workers={workers} opt={opt_threads}");
+
+        // exact accounting: window 1 means on-policy everywhere
+        assert_eq!(
+            (stats.produced, stats.consumed, stats.dropped_stale, stats.max_version_gap),
+            (TENANTS * STEPS, TENANTS * STEPS, 0, 0),
+            "{tag}: staleness-0 accounting broken"
+        );
+
+        // theta bits
+        for (i, sess) in tt.sessions.iter().enumerate() {
+            let theta: Vec<u32> = sess.lp.policy.theta.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(theta, ref_theta[i], "{tag}: tenant {i} theta diverged from sync");
+        }
+
+        // StepRecord bits (minus wall times) + the exact-1.0 ratio claim
+        for (i, (sync_o, async_o)) in ref_out.iter().zip(&outcomes).enumerate() {
+            assert_eq!(sync_o.steps.len(), async_o.steps.len(), "{tag}: tenant {i} step count");
+            for (a, x) in sync_o.steps.iter().zip(&async_o.steps) {
+                assert_eq!(
+                    record_bits(a),
+                    record_bits(x),
+                    "{tag}: tenant {i} step {} diverged from sync",
+                    a.step
+                );
+                assert_eq!(
+                    x.stats.mean_ratio.to_bits(),
+                    1.0f32.to_bits(),
+                    "{tag}: tenant {i} step {}: importance ratio not exactly 1.0",
+                    x.step
+                );
+                assert_eq!(
+                    x.stats.frac_clipped, 0.0,
+                    "{tag}: tenant {i} step {}: on-policy step clipped tokens",
+                    x.step
+                );
+            }
+        }
+        assert_eq!(stats.mean_ratio, 1.0, "{tag}: pooled mean ratio not exactly 1.0");
+
+        // RunLog rows modulo wall times
+        assert_eq!(rows_modulo_wall(log.rows), ref_rows, "{tag}: RunLog rows diverged from sync");
+    }
+}
+
+/// ISSUE 10 acceptance, staleness leg: `queue_cap > max_staleness + 1`
+/// deliberately overproduces — every group beyond the staleness window is
+/// dropped at consume time, exactly accounted (`produced == consumed +
+/// dropped_stale`), every tenant still lands precisely on its step
+/// target with contiguous step numbers, and the whole drop pattern is
+/// deterministic (two runs bit-identical).
+#[test]
+fn pipeline_overproduce_drops_are_exactly_accounted() {
+    const TENANTS: u64 = 3;
+    const STEPS: u64 = 4;
+    let run = || {
+        let rt = Runtime::sim(2).unwrap();
+        let b = rt.manifest.batch.test;
+        let mut specs = pipeline_specs(TENANTS);
+        for s in &mut specs {
+            s.cfg.steps = STEPS as usize;
+        }
+        let mut tt =
+            TenantTrainer::with_batch(&rt, &base_weights(&rt, 3), specs, 2, &scratch("pipeline_drop"), b)
+                .unwrap();
+        let pcfg = PipelineConfig { max_staleness: 0, optimizer_threads: 2, queue_cap: 3 };
+        let (outcomes, stats) =
+            train_async(&rt, &mut tt, &pcfg, &mut RunLog::null(), true).unwrap();
+        let theta: Vec<Vec<u32>> = tt
+            .sessions
+            .iter()
+            .map(|s| s.lp.policy.theta.iter().map(|x| x.to_bits()).collect())
+            .collect();
+        (outcomes, stats, theta)
+    };
+
+    let (outcomes, stats, theta_a) = run();
+    assert_eq!(stats.consumed, TENANTS * STEPS, "every tenant must reach its target");
+    assert!(stats.dropped_stale > 0, "queue_cap 3 at staleness 0 must overproduce and drop");
+    assert_eq!(
+        stats.produced,
+        stats.consumed + stats.dropped_stale,
+        "a produced group is either trained on or counted as dropped — never lost"
+    );
+    for (i, o) in outcomes.iter().enumerate() {
+        assert_eq!(o.steps.len(), STEPS as usize, "tenant {i} missed steps under drops");
+        for (k, r) in o.steps.iter().enumerate() {
+            assert_eq!(r.step, k, "tenant {i}: non-contiguous step numbers under drops");
+        }
+    }
+
+    let (_, stats_b, theta_b) = run();
+    assert_eq!(theta_a, theta_b, "overproduce drop pattern is not deterministic");
+    assert_eq!(stats.dropped_stale, stats_b.dropped_stale, "drop counts differ across runs");
+}
+
+/// ISSUE 10 satellite: killing a session strictly MID-warmup and resuming
+/// must replay the warmup LR ramp from the restored step counter, not
+/// restart it — every post-resume record (LR included) and the final
+/// theta are bit-identical to the uninterrupted run, and the resumed LRs
+/// match `lr_at` evaluated at the true global step.
+#[test]
+fn resume_mid_warmup_replays_lr_schedule_bit_identical() {
+    let rt = Runtime::sim(1).unwrap();
+    let b = rt.manifest.batch.test;
+    let base = base_weights(&rt, 3);
+    let ckpt = scratch("resume_warmup");
+    const WARMUP: u64 = 4;
+    const KILL_AT: usize = 2; // strictly inside the ramp: 2 < 4
+    let cfg = || GrpoConfig {
+        group: 2,
+        steps: 6,
+        lr: 5e-3,
+        warmup: WARMUP,
+        seed: 33,
+        ..Default::default()
+    };
+    let mk = |steps: usize| -> TrainSession<GrpoLoop> {
+        let policy = Policy::new(&rt, SIM_TIER, SIM_SCHEME, "grpo", base.clone(), 33, &ckpt).unwrap();
+        let mut c = cfg();
+        c.steps = steps;
+        let scfg = grpo_session_cfg(&c);
+        TrainSession::new(GrpoLoop::with_batch(&rt, policy, c, b).unwrap(), scfg)
+    };
+
+    let mut full = mk(6);
+    let full_recs = full.run(&rt, &mut RunLog::null()).unwrap();
+    let full_theta: Vec<u32> = full.lp.policy.theta.iter().map(|x| x.to_bits()).collect();
+    // the scenario is real: the kill point sits strictly inside the ramp
+    assert!(full_recs[KILL_AT].lr < cfg().lr, "step {KILL_AT} must still be warming up");
+
+    let mut half = mk(KILL_AT);
+    half.run(&rt, &mut RunLog::null()).unwrap();
+    let state_path = ckpt.join("grpo_warmup.trainstate");
+    half.state().save(&state_path).unwrap();
+    drop(half);
+
+    let st = TrainState::load(&state_path).unwrap();
+    assert_eq!(st.step, KILL_AT as u64);
+    let policy = Policy::new(&rt, SIM_TIER, SIM_SCHEME, "grpo", base.clone(), 33, &ckpt).unwrap();
+    let lp = GrpoLoop::with_batch(&rt, policy, cfg(), b).unwrap();
+    let mut resumed = TrainSession::resume(&rt, lp, grpo_session_cfg(&cfg()), &st).unwrap();
+    let resumed_recs = resumed.run(&rt, &mut RunLog::null()).unwrap();
+    assert_eq!(resumed_recs.len(), 6 - KILL_AT);
+
+    for (a, x) in full_recs[KILL_AT..].iter().zip(&resumed_recs) {
+        assert_eq!(record_bits(a), record_bits(x), "post-resume step {} diverged", a.step);
+        // the regression this test pins: the replayed LR is the schedule
+        // at the GLOBAL step, not a ramp restarted from zero
+        assert_eq!(
+            x.lr.to_bits(),
+            lr_at(cfg().lr, WARMUP, x.step as u64).to_bits(),
+            "resumed step {} did not replay the warmup schedule",
+            x.step
+        );
+    }
+    let resumed_theta: Vec<u32> = resumed.lp.policy.theta.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(full_theta, resumed_theta, "final theta diverged after mid-warmup resume");
+}
+
+/// ISSUE 10 satellite: `experiments::rl_vs_sft_budget` is a first-class,
+/// deterministic experiment — two fresh runs serialize byte-identical
+/// JSON, rows come back in (scheme × [grpo, sft]) order, and recovery is
+/// anchored on one shared reference accuracy.
+#[test]
+fn rl_vs_sft_budget_experiment_is_deterministic() {
+    let run = || -> (String, f32) {
+        let rt = Runtime::sim(1).unwrap();
+        let base = base_weights(&rt, 3);
+        let cfg = BudgetConfig {
+            tier: SIM_TIER.into(),
+            schemes: vec![SIM_SCHEME.into()],
+            suite: "gsm8k-syn".into(),
+            eval_suite: "gsm8k-syn".into(),
+            steps: 2,
+            eval_n: 4,
+            seed: 5,
+            reference_acc: 0.0,
+        };
+        let out =
+            rl_vs_sft_budget(&rt, &base, &cfg, &scratch("budget"), &mut RunLog::null()).unwrap();
+        assert_eq!(out.rows.len(), 2, "one grpo row + one sft row per scheme");
+        assert_eq!(out.rows[0].algo, "grpo");
+        assert_eq!(out.rows[1].algo, "sft");
+        for row in &out.rows {
+            assert!((0.0..=1.0).contains(&row.final_acc), "accuracy out of range: {row:?}");
+            assert!(row.recovery.is_finite(), "recovery must be finite: {row:?}");
+            assert_eq!(row.trainable_params, 13, "the paper's 13-parameter scheme");
+            assert_eq!(row.update_bytes, 52, "13 f32 params at the experiment default precision");
+        }
+        (out.to_json().to_string(), out.reference_acc)
+    };
+    let (a, ref_a) = run();
+    let (b, ref_b) = run();
+    assert_eq!(a, b, "rl_vs_sft_budget JSON not byte-identical across runs");
+    assert_eq!(ref_a.to_bits(), ref_b.to_bits());
+    assert!(a.contains("\"kind\":\"rl_vs_sft_budget\""));
+}
+
+/// ISSUE 10 tentpole, population leg: successive halving over an
+/// lr × seed grid runs THROUGH the async pipeline — rung populations
+/// shrink by the keep fraction, frozen losers stop exactly at their cut
+/// step (the pipeline's per-tenant targets freeze them), the winner
+/// finishes every rung, and the whole outcome is deterministic.
+#[test]
+fn population_sweep_halves_and_freezes_losers_deterministically() {
+    const RUNGS: usize = 3;
+    const STEPS_PER_RUNG: usize = 2;
+    let run = || {
+        let rt = Runtime::sim(2).unwrap();
+        let base = base_weights(&rt, 3);
+        let cfg = SweepConfig {
+            tier: SIM_TIER.into(),
+            scheme_tag: SIM_SCHEME.into(),
+            algo: "grpo".into(),
+            suite: "gsm8k-syn".into(),
+            steps: RUNGS * STEPS_PER_RUNG,
+            lrs: vec![1e-3, 3e-3],
+            seeds: vec![0, 1, 2],
+            eval_suite: "gsm8k-syn".into(),
+            eval_n: 0,
+            workers: 2,
+            batch: rt.manifest.batch.test,
+        };
+        let hcfg = HalvingConfig {
+            rungs: RUNGS,
+            steps_per_rung: STEPS_PER_RUNG,
+            keep: 0.5,
+            pipeline: PipelineConfig { max_staleness: 0, optimizer_threads: 2, queue_cap: 0 },
+        };
+        sweep_population(&rt, &base, &cfg, &hcfg, &scratch("population"), &mut RunLog::null())
+            .unwrap()
+    };
+
+    let out = run();
+    assert_eq!(out.population, 6);
+    assert_eq!(out.rungs.len(), RUNGS);
+    let actives: Vec<usize> = out.rungs.iter().map(|r| r.active).collect();
+    let survivors: Vec<usize> = out.rungs.iter().map(|r| r.survivors).collect();
+    assert_eq!(actives, vec![6, 3, 2], "keep=0.5 halving trajectory (ceil, min 1)");
+    // the final rung never cuts — everyone who reached it finishes
+    assert_eq!(survivors, vec![3, 2, 2]);
+    // frozen losers stopped exactly at their cut; the winner ran them all
+    let winner = &out.members[out.best];
+    assert_eq!(winner.steps, RUNGS * STEPS_PER_RUNG, "winner must finish every rung");
+    assert_eq!(winner.rungs_survived, RUNGS);
+    for m in &out.members {
+        assert_eq!(
+            m.steps,
+            (m.rungs_survived + usize::from(m.rungs_survived < RUNGS)) * STEPS_PER_RUNG,
+            "member {} trained past its freeze point",
+            m.name
+        );
+    }
+    assert!(out.stats.consumed > 0 && out.stats.dropped_stale == 0);
+
+    let again = run();
+    assert_eq!(
+        out.to_json().to_string(),
+        again.to_json().to_string(),
+        "population sweep JSON not byte-identical across runs"
     );
 }

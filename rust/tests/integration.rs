@@ -114,6 +114,7 @@ fn worker_pool_parallel_matches_serial(rt: &Runtime, tier_name: &str) {
                     pb: None,
                     temperature: 1.0,
                     seed: 40 + id,
+                    policy_version: 0,
                 }
             })
             .collect()
@@ -925,6 +926,7 @@ fn multi_context_pool_matches_single_context_serial(rt1: &Runtime, rt2: &Runtime
                     pb: None,
                     temperature: 1.0,
                     seed: 90 + id,
+                    policy_version: 0,
                 }
             })
             .collect()
